@@ -1,0 +1,60 @@
+//! Clustering service demo: start the TCP job server, fire a burst of
+//! concurrent clustering requests at it, and report latency /
+//! throughput / backpressure behaviour.
+//!
+//! Run: `cargo run --release --example server`
+
+use obpam::server::{request, serve, ServerConfig};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let handle = serve(ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, queue_cap: 8 })?;
+    println!("server on {}", handle.addr);
+    assert_eq!(request(handle.addr, "ping")?.split_whitespace().next(), Some("pong"));
+
+    // a burst of mixed jobs
+    let jobs: Vec<String> = (0..6)
+        .map(|i| {
+            format!(
+                "cluster dataset=blobs_{}_8_4 k=4 sampler={} seed={i}",
+                1_000 + 500 * i,
+                if i % 2 == 0 { "nniw" } else { "unif" }
+            )
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for job in jobs.clone() {
+        let addr = handle.addr;
+        handles.push(std::thread::spawn(move || {
+            let t = Instant::now();
+            let reply = request(addr, &job).unwrap_or_else(|e| format!("err {e}"));
+            (job, reply, t.elapsed().as_secs_f64())
+        }));
+    }
+    let mut ok = 0;
+    let mut latencies = Vec::new();
+    for h in handles {
+        let (job, reply, lat) = h.join().unwrap();
+        let status = reply.split_whitespace().next().unwrap_or("?").to_string();
+        println!("[{lat:7.3}s] {status:<4} <- {job}");
+        if status == "ok" {
+            ok += 1;
+            latencies.push(lat);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "\n{ok}/{} ok | wall {wall:.2}s | throughput {:.2} jobs/s | p50 latency {:.3}s | p max {:.3}s",
+        jobs.len(),
+        ok as f64 / wall,
+        latencies.get(latencies.len() / 2).copied().unwrap_or(f64::NAN),
+        latencies.last().copied().unwrap_or(f64::NAN),
+    );
+
+    handle.shutdown();
+    println!("server stopped");
+    Ok(())
+}

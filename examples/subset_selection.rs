@@ -1,0 +1,68 @@
+//! Subset selection / active learning — the use case the paper's intro
+//! motivates (Kaushal et al. 2019; de Mathelin et al. 2021): pick k
+//! representative exemplars from a large unlabeled pool of embeddings,
+//! then measure coverage (mean distance from every pool point to its
+//! nearest exemplar) and per-cluster balance.
+//!
+//! Run: `cargo run --release --example subset_selection`
+
+use obpam::backend::NativeBackend;
+use obpam::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
+use obpam::data::synth;
+use obpam::dissim::{DissimCounter, Metric};
+use obpam::eval;
+use obpam::baselines;
+
+fn main() -> anyhow::Result<()> {
+    // an "embedding pool": mnist-like sparse vectors, 6k x 784
+    let pool = synth::generate("mnist", 0.1, 11);
+    let budget = 25; // labeling budget
+    println!(
+        "pool: n={} p={} | selecting {budget} exemplars (l1 metric)\n",
+        pool.n(),
+        pool.p()
+    );
+
+    let eval_d = DissimCounter::new(Metric::L1);
+
+    // OneBatchPAM selection
+    let backend = NativeBackend::new(Metric::L1);
+    let cfg = OneBatchConfig { k: budget, sampler: SamplerKind::Nniw, seed: 3, ..Default::default() };
+    let sel = one_batch_pam(&pool.x, &cfg, &backend)?;
+    let coverage = eval::objective(&pool.x, &sel.medoids, &eval_d);
+
+    // naive alternatives a practitioner would try first
+    let rand = baselines::random_select(&pool.x, budget, 3);
+    let rand_cov = eval::objective(&pool.x, &rand.medoids, &eval_d);
+    let kpp_d = DissimCounter::new(Metric::L1);
+    let kpp = baselines::kmeanspp(&pool.x, budget, 3, &kpp_d);
+    let kpp_cov = eval::objective(&pool.x, &kpp.medoids, &eval_d);
+
+    println!("{:<14} {:>10} {:>10}", "selector", "coverage", "time");
+    println!("{:<14} {coverage:>10.4} {:>9.3}s", "OneBatchPAM", sel.stats.seconds);
+    println!("{:<14} {kpp_cov:>10.4} {:>9.3}s", "k-means++", kpp.stats.seconds);
+    println!("{:<14} {rand_cov:>10.4} {:>9.3}s", "random", rand.stats.seconds);
+
+    // balance: how many pool points each exemplar represents
+    let mut counts = vec![0usize; budget];
+    for i in 0..pool.n() {
+        let mut best = (0usize, f32::INFINITY);
+        for (j, &m) in sel.medoids.iter().enumerate() {
+            let v = Metric::L1.eval(pool.x.row(i), pool.x.row(m));
+            if v < best.1 {
+                best = (j, v);
+            }
+        }
+        counts[best.0] += 1;
+    }
+    counts.sort_unstable();
+    println!(
+        "\nexemplar cluster sizes: min={} median={} max={} (of {} points)",
+        counts[0],
+        counts[budget / 2],
+        counts[budget - 1],
+        pool.n()
+    );
+    println!("selected exemplar rows: {:?}", sel.medoids);
+    Ok(())
+}

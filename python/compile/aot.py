@@ -1,0 +1,113 @@
+"""AOT lowering: L2 model functions -> HLO text artifacts + manifest.
+
+Emits HLO *text* (never ``.serialize()``): the image's xla_extension 0.5.1
+rejects jax>=0.5 protos with 64-bit instruction ids; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest is a whitespace table (one artifact per line) because the Rust
+side has no serde offline:
+
+    name kind metric n p m k file
+
+Unused dims are 0 and unused metric is "-".  Usage:
+
+    cd python && python -m compile.aot --out ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape-bucket grid (see DESIGN.md §L2).  The Rust runtime pads up to the
+# nearest bucket.  N_TILE is the fixed row-tile the coordinator streams.
+N_TILE = 2048
+P_BUCKETS = [16, 64, 128, 784, 3072]
+M_BUCKETS = [256, 512, 1024, 1536, 2048]
+K_BUCKETS = [10, 50, 100]
+
+# --quick: minimal grid for fast iteration (covers tests + quickstart).
+P_QUICK = [16, 64]
+M_QUICK = [256]
+K_QUICK = [10]
+
+
+def to_hlo_text(fn, args) -> str:
+    """Lower a jax function to HLO text via stablehlo -> XlaComputation."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_configs(quick: bool):
+    """Yield (name, kind, metric, n, p, m, k) artifact configs."""
+    ps = P_QUICK if quick else P_BUCKETS
+    ms = M_QUICK if quick else M_BUCKETS
+    ks = K_QUICK if quick else K_BUCKETS
+    cfgs = []
+    for kind in ("pairwise", "pairwise_dense"):
+        for metric in ("l1", "sqeuclidean"):
+            for p in ps:
+                for m in ms:
+                    name = f"{kind}_{metric}_n{N_TILE}_p{p}_m{m}"
+                    cfgs.append((name, kind, metric, N_TILE, p, m, 0))
+    for m in ms:
+        for k in ks:
+            cfgs.append((f"gains_n{N_TILE}_m{m}_k{k}", "gains", "-", N_TILE, 0, m, k))
+    for k in ks:
+        cfgs.append((f"top2_n{N_TILE}_k{k}", "top2", "-", N_TILE, 0, 0, k))
+    for m in ms:
+        cfgs.append((f"argmin_n{N_TILE}_m{m}", "argmin", "-", N_TILE, 0, m, 0))
+        cfgs.append((f"objective_m{m}", "objective", "-", 0, 0, m, 0))
+    return cfgs
+
+
+def make_fn(kind, metric, n, p, m, k):
+    if kind in ("pairwise", "pairwise_dense"):
+        return model.FACTORIES[kind](metric, n, p, m)
+    if kind == "gains":
+        return model.make_gains(n, m, k)
+    if kind == "top2":
+        return model.make_top2(n, k)
+    if kind == "argmin":
+        return model.make_argmin(n, m)
+    if kind == "objective":
+        return model.make_objective(m)
+    raise ValueError(kind)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--quick", action="store_true", help="minimal bucket grid")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfgs = build_configs(args.quick)
+    manifest_lines = []
+    for i, (name, kind, metric, n, p, m, k) in enumerate(cfgs):
+        fn, specs = make_fn(kind, metric, n, p, m, k)
+        text = to_hlo_text(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {kind} {metric} {n} {p} {m} {k} {fname}")
+        print(f"[{i + 1}/{len(cfgs)}] {name} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("# name kind metric n p m k file\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(cfgs)} artifacts + manifest to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

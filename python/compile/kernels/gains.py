@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: FasterPAM swap-gain evaluation over the batch.
+
+Computes, for a tile of candidate rows i, the two gain components of the
+FasterPAM decomposition (see kernels/ref.py:swap_gains for the math and the
+note on the paper's Algorithm-2 line-14 typo):
+
+    shared[i]       = sum_j w_j max(0, dnear_j - d[i, j])
+    permedoid[i, l] = sum_j corr[i, j] * onehot[j, l]
+
+TPU mapping: the per-medoid scatter ``G^i_{near(j)}`` is branch-heavy on
+CPU; here it is a dense (bn, m) @ (m, k) matmul against the one-hot matrix
+of nearest-medoid assignments — MXU work instead of a gather/scatter.  The
+grid tiles candidates only; dnear/dsec/onehot/w (O(m k)) stay VMEM-resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import pairwise as _pw
+
+
+def _gains_kernel(d_ref, dnear_ref, dsec_ref, onehot_ref, w_ref, sh_ref, pm_ref):
+    d = d_ref[...]          # (bn, m)
+    dn = dnear_ref[...]     # (m,)
+    ds = dsec_ref[...]      # (m,)
+    w = w_ref[...]          # (m,)
+    sh_ref[...] = (w[None, :] * jnp.maximum(dn[None, :] - d, 0.0)).sum(axis=1)
+    corr = w[None, :] * jnp.where(
+        d < dn[None, :],
+        (ds - dn)[None, :] * jnp.ones_like(d),
+        jnp.where(d < ds[None, :], ds[None, :] - d, 0.0),
+    )
+    pm_ref[...] = jax.lax.dot_general(
+        corr, onehot_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def swap_gains(d, dnear, dsec, onehot, w, *, bn: int = 256):
+    """Swap-gain components for all n candidates.
+
+    Args:
+      d:      (n, m) candidate-to-batch distances.
+      dnear:  (m,) nearest-medoid distance per batch point.
+      dsec:   (m,) second-nearest-medoid distance per batch point.
+      onehot: (m, k) one-hot nearest-medoid assignment.
+      w:      (m,) batch weights.
+    Returns:
+      (shared (n,), permedoid (n, k)) float32.
+    """
+    n, m = d.shape
+    k = onehot.shape[1]
+    bn = _pw.largest_divisor_at_most(n, bn)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _gains_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+        ),
+        interpret=True,
+    )(
+        d.astype(jnp.float32),
+        dnear.astype(jnp.float32),
+        dsec.astype(jnp.float32),
+        onehot.astype(jnp.float32),
+        w.astype(jnp.float32),
+    )

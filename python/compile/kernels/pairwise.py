@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: tiled pairwise dissimilarity matrix.
+
+This is the paper's one-time ``O(n m p)`` hot spot: the distance matrix
+between the full dataset (tiled to ``n`` rows at AOT time) and the single
+batch of ``m`` points.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * grid = (n/bn, m/bm, p/bp); the (bn, bp) data tile and (bm, bp) batch
+    tile stream HBM -> VMEM via BlockSpec, the (bn, bm) output tile stays
+    VMEM-resident across the p-axis of the grid (accumulator pattern).
+  * L1 has no matmul form, so it runs on the VPU (broadcast |x - b| then
+    reduce over the feature chunk).
+  * squared-L2 uses the MXU form ``|x|^2 + |b|^2 - 2 x.b^T`` per chunk.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT client cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO the Rust runtime
+executes (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Supported metrics (shared with the Rust side's artifact manifest).
+METRICS = ("l1", "sqeuclidean")
+
+
+def _l1_kernel(x_ref, b_ref, o_ref):
+    """One (bn, bm) output tile, accumulating over the p-chunk grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (bn, bp)
+    b = b_ref[...]  # (bm, bp)
+    o_ref[...] += jnp.abs(x[:, None, :] - b[None, :, :]).sum(axis=-1)
+
+
+def _sqeuclidean_kernel(x_ref, b_ref, o_ref):
+    """MXU-friendly chunk: |x|^2 + |b|^2 - 2 x.b^T, accumulated over p."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    b = b_ref[...]
+    xx = (x * x).sum(axis=-1)[:, None]
+    bb = (b * b).sum(axis=-1)[None, :]
+    xb = jax.lax.dot_general(
+        x, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] += xx + bb - 2.0 * xb
+
+
+_KERNELS = {"l1": _l1_kernel, "sqeuclidean": _sqeuclidean_kernel}
+
+
+def largest_divisor_at_most(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``target`` (block-size picker)."""
+    t = min(dim, max(1, target))
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "bn", "bm", "bp"))
+def pairwise(x, b, *, metric: str = "l1", bn: int = 128, bm: int = 128, bp: int = 128):
+    """Tiled pairwise distance matrix via a Pallas kernel.
+
+    Args:
+      x: (n, p) data tile.  n must be divisible by the row block.
+      b: (m, p) batch.      m must be divisible by the column block.
+      metric: "l1" or "sqeuclidean".
+      bn, bm, bp: target block sizes (clamped to divisors of n, m, p).
+    Returns:
+      (n, m) float32 distance matrix.
+    """
+    n, p = x.shape
+    m, pb = b.shape
+    assert p == pb, f"feature dims differ: {p} vs {pb}"
+    bn = largest_divisor_at_most(n, bn)
+    bm = largest_divisor_at_most(m, bm)
+    bp = largest_divisor_at_most(p, bp)
+    grid = (n // bn, m // bm, p // bp)
+    return pl.pallas_call(
+        _KERNELS[metric],
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda i, j, q: (i, q)),
+            pl.BlockSpec((bm, bp), lambda i, j, q: (j, q)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, q: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), b.astype(jnp.float32))

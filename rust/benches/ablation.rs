@@ -1,0 +1,108 @@
+//! Design-choice ablations (DESIGN.md §4, beyond the paper's tables):
+//!
+//! 1. batch-size sweep: m = c * 100 log(k n) for c in {0.25, 0.5, 1, 2};
+//! 2. sampler variants at each batch size (unif/debias/nniw/lwcs);
+//! 3. swap strategy: eager (Algorithm 2) vs steepest (Eq. 3);
+//! 4. backend: native vs xla (Pallas) vs xla-dense, when artifacts exist.
+
+use obpam::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use obpam::coordinator::{one_batch_pam, onebatch::SwapStrategy, OneBatchConfig, SamplerKind};
+use obpam::data::synth;
+use obpam::dissim::{DissimCounter, Metric};
+use obpam::eval;
+use obpam::harness::{bench_util, emit};
+use obpam::runtime::Runtime;
+use std::path::Path;
+use std::rc::Rc;
+
+fn main() {
+    let scale = bench_util::env_scale(0.05);
+    let data = synth::generate("drybean", scale, 0xAB1);
+    let x = &data.x;
+    let k = 10;
+    let n = x.rows;
+    let base_m = (100.0 * ((k * n) as f64).ln()).ceil() as usize;
+    println!("ablations on drybean-like data: n={n} p={} k={k} base m={base_m}\n", x.cols);
+
+    // --- 1+2: batch size x sampler --------------------------------------
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for sampler in SamplerKind::all() {
+        let mut cells = Vec::new();
+        for c in [0.25f64, 0.5, 1.0, 2.0] {
+            let m = ((base_m as f64 * c) as usize).clamp(k + 1, n);
+            let backend = NativeBackend::new(Metric::L1);
+            let cfg = OneBatchConfig { k, sampler, m: Some(m), seed: 1, ..Default::default() };
+            let r = one_batch_pam(x, &cfg, &backend).expect("run");
+            let obj = eval::objective(x, &r.medoids, &DissimCounter::new(Metric::L1));
+            cells.push(format!("{obj:.4}/{:.2}s", r.stats.seconds));
+            csv.push(vec![sampler.name().into(), format!("{c}"), format!("{obj:.6}"), format!("{:.4}", r.stats.seconds)]);
+        }
+        rows.push((format!("OneBatch-{}", sampler.name()), cells));
+    }
+    println!(
+        "{}",
+        emit::render_table(
+            "ablation: objective/time vs batch-size multiplier",
+            &["c=0.25", "c=0.5", "c=1", "c=2"],
+            &rows
+        )
+    );
+    emit::write_csv(Path::new("bench_out/ablation_batch.csv"), "sampler,mult,objective,seconds", &csv).unwrap();
+
+    // --- 3: eager vs steepest -------------------------------------------
+    let mut rows = Vec::new();
+    for strategy in [SwapStrategy::Eager, SwapStrategy::Steepest] {
+        let backend = NativeBackend::new(Metric::L1);
+        let cfg = OneBatchConfig {
+            k,
+            sampler: SamplerKind::Nniw,
+            strategy,
+            seed: 2,
+            ..Default::default()
+        };
+        let r = one_batch_pam(x, &cfg, &backend).expect("run");
+        let obj = eval::objective(x, &r.medoids, &DissimCounter::new(Metric::L1));
+        rows.push((
+            format!("{strategy:?}"),
+            vec![format!("{obj:.4}"), format!("{:.3}s", r.stats.seconds), r.stats.swap_count.to_string()],
+        ));
+    }
+    println!(
+        "{}",
+        emit::render_table("ablation: swap strategy", &["objective", "time", "swaps"], &rows)
+    );
+
+    // --- 4: backends ------------------------------------------------------
+    let mut rows = Vec::new();
+    {
+        let backend = NativeBackend::new(Metric::L1);
+        rows.push(backend_row("native", &backend, x, k));
+    }
+    match Runtime::load_default() {
+        Ok(rt) => {
+            let rt = Rc::new(rt);
+            let pallas = XlaBackend::new(rt.clone(), Metric::L1, false);
+            rows.push(backend_row("xla (pallas)", &pallas, x, k));
+            let dense = XlaBackend::new(rt, Metric::L1, true);
+            rows.push(backend_row("xla-dense", &dense, x, k));
+        }
+        Err(e) => eprintln!("skipping XLA backends ({e}); run `make artifacts`"),
+    }
+    println!(
+        "{}",
+        emit::render_table("ablation: compute backend", &["objective", "time"], &rows)
+    );
+}
+
+fn backend_row(
+    name: &str,
+    backend: &dyn ComputeBackend,
+    x: &obpam::linalg::Matrix,
+    k: usize,
+) -> (String, Vec<String>) {
+    let cfg = OneBatchConfig { k, sampler: SamplerKind::Nniw, seed: 3, ..Default::default() };
+    let r = one_batch_pam(x, &cfg, backend).expect("run");
+    let obj = eval::objective(x, &r.medoids, &DissimCounter::new(Metric::L1));
+    (name.into(), vec![format!("{obj:.4}"), format!("{:.3}s", r.stats.seconds)])
+}

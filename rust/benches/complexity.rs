@@ -1,0 +1,58 @@
+//! Empirical check of paper **Table 1** (theoretical complexity summary):
+//! measure dissimilarity-computation counts as n grows and fit the
+//! power-law exponent.
+//!
+//! Expected exponents (in n): FasterPAM ~2, OneBatchPAM ~1 (n log n),
+//! BanditPAM++ ~1 (n log n), k-means++ ~1, kmc2 ~0, FasterCLARA ~1
+//! (dominated by the n*k evaluation pass).
+
+use obpam::dissim::Metric;
+use obpam::harness::{bench_util, emit, methods::MethodSpec, runner};
+use obpam::data::synth;
+use std::path::Path;
+
+fn main() {
+    let ns = bench_util::env_list("OBPAM_COMPLEXITY_NS", &[500, 1_000, 2_000, 4_000]);
+    let k = 10;
+    let methods = vec![
+        MethodSpec::FasterPam,
+        MethodSpec::OneBatch {
+            sampler: obpam::coordinator::SamplerKind::Unif,
+            strategy: obpam::coordinator::onebatch::SwapStrategy::Eager,
+        },
+        MethodSpec::BanditPam { swaps: 2 },
+        MethodSpec::KMeansPp,
+        MethodSpec::Kmc2 { chain: 20 },
+        MethodSpec::FasterClara { reps: 5 },
+    ];
+
+    let mut csv_rows = Vec::new();
+    let mut rows = Vec::new();
+    for m in &methods {
+        let mut points = Vec::new();
+        let mut cells = Vec::new();
+        for &n in &ns {
+            let x = synth::generate(&format!("blobs_{n}_8_5"), 1.0, 0xC0).x;
+            let rec = runner::run_method(m, &x, "blobs", k, 0, Metric::L1, 0xC1).expect("run");
+            points.push((n as f64, rec.dissim as f64));
+            cells.push(format!("{}", rec.dissim));
+            csv_rows.push(vec![m.label(), n.to_string(), rec.dissim.to_string()]);
+        }
+        let expo = bench_util::fit_power_law(&points);
+        cells.push(format!("{expo:.2}"));
+        rows.push((m.label(), cells));
+        eprintln!("  {:<16} exponent {expo:.2}", m.label());
+    }
+    let mut headers: Vec<String> = ns.iter().map(|n| format!("n={n}")).collect();
+    headers.push("exponent".into());
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    println!(
+        "{}",
+        emit::render_table("Table 1 check: dissim computations vs n (k=10)", &headers_ref, &rows)
+    );
+    emit::write_csv(Path::new("bench_out/complexity.csv"), "method,n,dissim", &csv_rows).unwrap();
+    println!(
+        "paper reference (Table 1): FasterPAM O(n^2) -> exponent ~2; OneBatchPAM\n\
+         O(n log n) -> ~1.0-1.2; kmc2 O(L k^2) -> ~0; k-means++ O(k n) -> ~1."
+    );
+}

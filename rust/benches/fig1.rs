@@ -1,0 +1,91 @@
+//! Regenerates paper **Figure 1**: running time and objective on the
+//! MNIST(-like) dataset, (left) as a function of n at k=10 and (right)
+//! as a function of k at fixed n, for KM / FP / FC / BP / OBP.
+//!
+//! Knobs: OBPAM_FIG1_NS (default "500,1000,2000"), OBPAM_FIG1_KS
+//! (default "5,10,20"), OBPAM_FIG1_FIXED_N (default 1000).
+
+use obpam::data::synth;
+use obpam::dissim::Metric;
+use obpam::harness::{bench_util, emit, methods::MethodSpec, runner};
+use std::path::Path;
+
+fn mnist_subset(n: usize, seed: u64) -> obpam::linalg::Matrix {
+    // generate an mnist-like dataset with exactly n rows (p = 784)
+    synth::generate("mnist", n as f64 / 60_000.0, seed).x
+}
+
+fn sweep(
+    title: &str,
+    xs: &[usize],
+    make_x: impl Fn(usize) -> (obpam::linalg::Matrix, usize),
+    csv_name: &str,
+) {
+    let methods = MethodSpec::fig1_grid();
+    let mut csv_rows: Vec<Vec<String>> = Vec::new();
+    let mut time_series: Vec<(String, Vec<f64>)> =
+        methods.iter().map(|m| (m.label(), Vec::new())).collect();
+    let mut obj_series = time_series.clone();
+
+    for &v in xs {
+        let (x, k) = make_x(v);
+        for (mi, m) in methods.iter().enumerate() {
+            // FasterPAM / BanditPAM get slow fast: skip above the paper's
+            // own feasibility pattern (they are the motivation, after all)
+            let skip = matches!(m, MethodSpec::FasterPam | MethodSpec::BanditPam { .. })
+                && x.rows > 4_000;
+            let (secs, obj) = if skip {
+                (f64::NAN, f64::NAN)
+            } else {
+                let rec = runner::run_method(m, &x, "mnist", k, 0, Metric::L1, 0xF16 + v as u64)
+                    .expect("run");
+                (rec.seconds, rec.objective)
+            };
+            eprintln!("  {title} x={v} {:<16} {secs:.3}s obj={obj:.5}", m.label());
+            time_series[mi].1.push(secs);
+            obj_series[mi].1.push(obj);
+            csv_rows.push(vec![
+                v.to_string(),
+                m.label(),
+                format!("{secs:.5}"),
+                format!("{obj:.6}"),
+            ]);
+        }
+    }
+    emit::write_csv(
+        Path::new(&format!("bench_out/{csv_name}.csv")),
+        "x,method,seconds,objective",
+        &csv_rows,
+    )
+    .unwrap();
+
+    println!("== Figure 1 ({title}) ==");
+    println!("{:<18} {}", "method", xs.iter().map(|v| format!("{v:>10}")).collect::<String>());
+    for (label, ts) in &time_series {
+        let cells: String = ts.iter().map(|t| format!("{t:>9.3}s")).collect();
+        println!("{label:<18} {cells}   (time)");
+    }
+    for (label, os) in &obj_series {
+        let cells: String = os.iter().map(|o| format!("{o:>10.4}")).collect();
+        println!("{label:<18} {cells}   (objective)");
+    }
+    println!();
+}
+
+fn main() {
+    let ns = bench_util::env_list("OBPAM_FIG1_NS", &[500, 1_000, 2_000]);
+    let ks = bench_util::env_list("OBPAM_FIG1_KS", &[5, 10, 20]);
+    let fixed_n = bench_util::env_list("OBPAM_FIG1_FIXED_N", &[1_000])[0];
+
+    sweep("time/objective vs n, k=10", &ns, |n| (mnist_subset(n, 0xF1), 10), "fig1_vs_n");
+    sweep(
+        "time/objective vs k, fixed n",
+        &ks,
+        |k| (mnist_subset(fixed_n, 0xF2), k),
+        "fig1_vs_k",
+    );
+    println!(
+        "paper reference (Fig 1): OBP time curve tracks KM/FC (flat-ish in n),\n\
+         FP/BP blow up with n; OBP objective tracks FP closely while KM/FC sit higher."
+    );
+}

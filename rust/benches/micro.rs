@@ -1,0 +1,138 @@
+//! Micro-benchmarks of the hot-path tile ops — the §Perf tool
+//! (EXPERIMENTS.md records before/after from this bench).
+//!
+//! Measures, with warmup + median/MAD:
+//!   * native pairwise throughput (Gdissim/s and effective GB/s);
+//!   * XLA pairwise: Pallas kernel vs plain-XLA lowering (artifact path);
+//!   * swap-gain evaluation: native inner loop vs XLA matmul kernel;
+//!   * SwapState::eval_candidate / apply_swap latency;
+//!   * end-to-end OneBatchPAM at a fixed workload.
+
+use obpam::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use obpam::coordinator::state::SwapState;
+use obpam::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
+use obpam::dissim::Metric;
+use obpam::harness::bench_util::time_median;
+use obpam::linalg::Matrix;
+use obpam::rng::Rng;
+use obpam::runtime::Runtime;
+use std::rc::Rc;
+
+fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+    Matrix::from_vec(r, c, (0..r * c).map(|_| rng.f32()).collect())
+}
+
+fn report(name: &str, med: f64, mad: f64, work: Option<(f64, &str)>) {
+    match work {
+        Some((units, unit_name)) => println!(
+            "{name:<46} {:>9.3} ms ± {:>6.3}  ({:.2} {unit_name})",
+            med * 1e3,
+            mad * 1e3,
+            units / med
+        ),
+        None => println!("{name:<46} {:>9.3} ms ± {:>6.3}", med * 1e3, mad * 1e3),
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBEEF);
+    println!("== micro benches (median ± MAD) ==\n");
+
+    // ---- native pairwise, paper-ish shapes -----------------------------
+    for (n, m, p) in [(2_000, 512, 16), (2_000, 512, 128), (1_000, 512, 784)] {
+        let x = rand_matrix(&mut rng, n, p);
+        let b = rand_matrix(&mut rng, m, p);
+        let backend = NativeBackend::new(Metric::L1);
+        let (med, mad) = time_median(1, 5, || {
+            std::hint::black_box(backend.pairwise(&x, &b).unwrap());
+        });
+        let gdps = (n * m) as f64 / 1e9;
+        report(&format!("native pairwise l1 n={n} m={m} p={p}"), med, mad, Some((gdps, "Gdissim/s")));
+    }
+
+    // ---- swap gains: native loop --------------------------------------
+    let (n, m, k) = (4_000, 1_024, 100);
+    let d = rand_matrix(&mut rng, n, m);
+    let dn: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+    let ds: Vec<f32> = dn.iter().map(|v| v + 0.3).collect();
+    let near: Vec<usize> = (0..m).map(|_| rng.below(k)).collect();
+    let w = vec![1.0f32; m];
+    {
+        let backend = NativeBackend::new(Metric::L1);
+        let (med, mad) = time_median(1, 5, || {
+            std::hint::black_box(backend.gains(&d, &dn, &ds, &near, k, &w).unwrap());
+        });
+        report(
+            &format!("native gains n={n} m={m} k={k}"),
+            med,
+            mad,
+            Some(((n * m) as f64 / 1e9, "Gcell/s")),
+        );
+    }
+
+    // ---- SwapState ops --------------------------------------------------
+    {
+        let mut rng2 = Rng::new(1);
+        let med: Vec<usize> = rng2.sample_distinct(n, k);
+        let mut st = SwapState::init(&d, med, vec![1.0; m], n);
+        let (t_eval, mad) = time_median(10, 50, || {
+            std::hint::black_box(st.eval_candidate(d.row(17)));
+        });
+        report(&format!("state eval_candidate m={m} k={k}"), t_eval, mad, None);
+        let mut cand = 0usize;
+        let (t_swap, mad) = time_median(2, 20, || {
+            while st.is_medoid(cand % n) {
+                cand += 1;
+            }
+            let slot = cand % k;
+            st.apply_swap(&d, slot, cand % n);
+            cand += 1;
+        });
+        report(&format!("state apply_swap m={m} k={k}"), t_swap, mad, None);
+    }
+
+    // ---- end-to-end OneBatchPAM ----------------------------------------
+    {
+        let x = rand_matrix(&mut rng, 5_000, 32);
+        let backend = NativeBackend::new(Metric::L1);
+        let cfg = OneBatchConfig { k: 20, sampler: SamplerKind::Nniw, seed: 3, ..Default::default() };
+        let (med, mad) = time_median(1, 3, || {
+            std::hint::black_box(one_batch_pam(&x, &cfg, &backend).unwrap());
+        });
+        report("one_batch_pam n=5000 p=32 k=20 (native)", med, mad, None);
+    }
+
+    // ---- XLA artifact paths ---------------------------------------------
+    match Runtime::load_default() {
+        Err(e) => println!("\n(xla paths skipped: {e})"),
+        Ok(rt) => {
+            let rt = Rc::new(rt);
+            println!();
+            for dense in [false, true] {
+                let backend = XlaBackend::new(rt.clone(), Metric::L1, dense);
+                let (n, m, p) = (2_000, 512, 128);
+                let x = rand_matrix(&mut rng, n, p);
+                let b = rand_matrix(&mut rng, m, p);
+                let (med, mad) = time_median(1, 3, || {
+                    std::hint::black_box(backend.pairwise(&x, &b).unwrap());
+                });
+                report(
+                    &format!("{} pairwise l1 n={n} m={m} p={p}", backend.name()),
+                    med,
+                    mad,
+                    Some(((n * m) as f64 / 1e9, "Gdissim/s")),
+                );
+            }
+            let backend = XlaBackend::new(rt.clone(), Metric::L1, false);
+            let (med, mad) = time_median(1, 3, || {
+                std::hint::black_box(backend.gains(&d, &dn, &ds, &near, k, &w).unwrap());
+            });
+            report(
+                &format!("xla gains (pallas matmul) n={n} m={m} k={k}"),
+                med,
+                mad,
+                Some(((n * m) as f64 / 1e9, "Gcell/s")),
+            );
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Regenerates paper **Figures 12-31**: objective-vs-time Pareto fronts
+//! per dataset for k = 10 and k = 100.
+//!
+//! Reuses the records CSVs produced by the table3 bench when present.
+
+use obpam::data::synth;
+use obpam::dissim::Metric;
+use obpam::eval;
+use obpam::harness::{bench_util, emit, methods::MethodSpec, runner};
+use std::path::Path;
+
+fn records_for(tag: &str, datasets: &[&str], scale: f64) -> Vec<runner::Record> {
+    let csv = format!("bench_out/records_{tag}.csv");
+    if let Some(r) = bench_util::load_records_csv(Path::new(&csv)) {
+        eprintln!("[pareto] reusing {} records from {csv}", r.len());
+        return r;
+    }
+    let ks = bench_util::env_ks(&[10, 100]);
+    let reps = bench_util::env_reps(1);
+    let recs = runner::run_grid(
+        datasets,
+        &ks,
+        reps,
+        &MethodSpec::table3_grid(),
+        scale,
+        Metric::L1,
+        0xAAA1,
+        |r| eprintln!("  {} k={} {:<18} {:.3}s", r.dataset, r.k, r.method, r.seconds),
+    )
+    .expect("grid");
+    emit::write_records_csv(Path::new(&csv), &recs).unwrap();
+    recs
+}
+
+fn main() {
+    let scale = bench_util::env_scale(0.25);
+    let small = synth::small_scale_names();
+    let large = synth::large_scale_names();
+    let mut all = records_for("small", &small, scale);
+    all.extend(records_for("large", &large, scale * 0.2));
+
+    let mut front_membership: Vec<Vec<String>> = Vec::new();
+    for &ds in small.iter().chain(large.iter()) {
+        for &k in &[10usize, 100] {
+            // average reps per method
+            use std::collections::BTreeMap;
+            let mut by_method: BTreeMap<String, (f64, f64, usize)> = BTreeMap::new();
+            for r in all.iter().filter(|r| r.dataset == ds && r.k == k) {
+                let e = by_method.entry(r.method.clone()).or_insert((0.0, 0.0, 0));
+                e.0 += r.seconds;
+                e.1 += r.objective;
+                e.2 += 1;
+            }
+            if by_method.is_empty() {
+                continue;
+            }
+            let pts: Vec<(f64, f64, String)> = by_method
+                .iter()
+                .map(|(m, (t, o, c))| (t / *c as f64, o / *c as f64, m.clone()))
+                .collect();
+            let xy: Vec<(f64, f64)> = pts.iter().map(|p| (p.0, p.1)).collect();
+            let front = eval::pareto_front(&xy);
+            println!("{}", emit::scatter(&format!("Pareto: {ds} (k={k})"), &pts, &front));
+            for &fi in &front {
+                front_membership.push(vec![ds.into(), k.to_string(), pts[fi].2.clone()]);
+            }
+        }
+    }
+    emit::write_csv(
+        Path::new("bench_out/pareto_front_members.csv"),
+        "dataset,k,method",
+        &front_membership,
+    )
+    .unwrap();
+
+    // paper's qualitative claim (Appendix D): these methods populate fronts
+    let counts = |needle: &str| front_membership.iter().filter(|r| r[2] == needle).count();
+    println!(
+        "front membership counts: OneBatch-nniw={} FasterCLARA-5={} k-means++={} kmc2-20={} FasterPAM={}",
+        counts("OneBatch-nniw"),
+        counts("FasterCLARA-5"),
+        counts("k-means++"),
+        counts("kmc2-20"),
+        counts("FasterPAM"),
+    );
+    println!(
+        "paper reference (App. D): small-scale fronts contain k-means++, FasterCLARA-5,\n\
+         OneBatch-nniw, FasterPAM; large-scale fronts contain kmc2-20, FasterCLARA-5, OneBatch-nniw."
+    );
+}

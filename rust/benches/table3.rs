@@ -1,0 +1,93 @@
+//! Regenerates paper **Table 3 / Table 4** (aggregated RT and ΔRO over
+//! the small-scale and large-scale dataset groups, averaged over
+//! k ∈ {10,50,100} and repetitions).
+//!
+//! Knobs: OBPAM_SCALE (default 0.05), OBPAM_REPS (default 2),
+//! OBPAM_KS (default "10,50,100"), OBPAM_FRESH=1 to ignore cached
+//! records.  Raw per-run records land in bench_out/records_{small,large}.csv
+//! and are reused by the table5_6 / table7_8 / pareto benches.
+
+use obpam::dissim::Metric;
+use obpam::data::synth;
+use obpam::harness::{bench_util, emit, methods::MethodSpec, runner};
+use std::path::Path;
+
+fn run_group(name: &str, datasets: &[&str], scale: f64) -> Vec<runner::Record> {
+    let csv = format!("bench_out/records_{name}.csv");
+    if let Some(recs) = bench_util::load_records_csv(Path::new(&csv)) {
+        eprintln!("[table3] reusing {csv} ({} records); OBPAM_FRESH=1 to rerun", recs.len());
+        return recs;
+    }
+    let ks = bench_util::env_ks(&[10, 50]);
+    let reps = bench_util::env_reps(1);
+    let methods = MethodSpec::table3_grid();
+    eprintln!(
+        "[table3] running {name}-scale grid: {:?} x k={ks:?} x {reps} reps x {} methods (scale {scale})",
+        datasets,
+        methods.len()
+    );
+    let recs = runner::run_grid(datasets, &ks, reps, &methods, scale, Metric::L1, 0xAAA1, |r| {
+        eprintln!(
+            "  {} k={} rep={} {:<18} {:.3}s obj={:.5} dissim={}",
+            r.dataset, r.k, r.rep, r.method, r.seconds, r.objective, r.dissim
+        );
+    })
+    .expect("grid run failed");
+    emit::write_records_csv(Path::new(&csv), &recs).expect("write records");
+    recs
+}
+
+fn print_group(title: &str, recs: &[runner::Record], rt_reference: &str) {
+    let agg = runner::aggregate(recs, rt_reference);
+    // order rows like the paper
+    let order = MethodSpec::table3_grid();
+    let mut rows = Vec::new();
+    for m in &order {
+        if let Some((method, rt_m, rt_s, dro_m, dro_s)) = agg.iter().find(|a| a.0 == m.label()) {
+            rows.push((
+                method.clone(),
+                vec![emit::pct(*rt_m, *rt_s), emit::pct(*dro_m, *dro_s)],
+            ));
+        } else {
+            rows.push((m.label(), vec!["Na".into(), "Na".into()]));
+        }
+    }
+    println!(
+        "{}",
+        emit::render_table(title, &["RT %", "dRO %"], &rows)
+    );
+    let csv_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(m, c)| vec![m.clone(), c[0].clone(), c[1].clone()])
+        .collect();
+    emit::write_csv(
+        Path::new(&format!("bench_out/table3_{}.csv", title.replace(' ', "_"))),
+        "method,rt,dro",
+        &csv_rows,
+    )
+    .unwrap();
+}
+
+fn main() {
+    let scale = bench_util::env_scale(0.25);
+    let small: Vec<&str> = synth::small_scale_names();
+    let large: Vec<&str> = synth::large_scale_names();
+
+    let recs_small = run_group("small", &small, scale);
+    // large-scale datasets are 1-2 orders bigger; scale them down further
+    // by default so the bench finishes on one core (paper runs them on a
+    // real testbed; shapes, not absolutes, are the target).
+    let large_scale = bench_util::env_scale(0.25) * 0.2;
+    let recs_large = run_group("large", &large, large_scale);
+
+    // Paper normalisation: FasterPAM = 100% RT on small scale,
+    // OneBatch-nniw = 100% on large scale (FasterPAM is Na there).
+    print_group("small scale (Table 3 left)", &recs_small, "FasterPAM");
+    print_group("large scale (Table 3 right)", &recs_large, "OneBatch-nniw");
+
+    println!(
+        "paper reference (Table 3): OneBatch-nniw small RT~15.5 dRO~1.7 | large RT=100 dRO=0.0\n\
+         expected shape: OneBatch-* ~an order faster than FasterPAM at small dRO;\n\
+         FasterCLARA faster but 8-13% worse; kmc2/k-means++ fastest but 18-33% worse."
+    );
+}

@@ -1,0 +1,104 @@
+//! Regenerates paper **Tables 5 & 6** (per-dataset small-scale RT and
+//! ΔRO) and the data behind **Figures 2-6** (per-dataset RT/ΔRO bars).
+//!
+//! Reuses bench_out/records_small.csv when present (run the table3 bench
+//! first, or let this one regenerate the grid).
+
+use obpam::data::synth;
+use obpam::dissim::Metric;
+use obpam::harness::{bench_util, emit, methods::MethodSpec, runner};
+use std::path::Path;
+
+fn per_dataset_tables(recs: &[runner::Record], datasets: &[&str], rt_reference: &str, tag: &str) {
+    let order = MethodSpec::table3_grid();
+    for want in ["RT", "dRO"] {
+        let mut rows = Vec::new();
+        for m in &order {
+            let mut cells = Vec::new();
+            for &ds in datasets {
+                let sub: Vec<runner::Record> = recs
+                    .iter()
+                    .filter(|r| r.dataset == ds)
+                    .cloned()
+                    .collect();
+                let agg = runner::aggregate(&sub, rt_reference);
+                let cell = agg
+                    .iter()
+                    .find(|a| a.0 == m.label())
+                    .map(|(_, rt_m, rt_s, dro_m, dro_s)| {
+                        if want == "RT" {
+                            emit::pct(*rt_m, *rt_s)
+                        } else {
+                            emit::pct(*dro_m, *dro_s)
+                        }
+                    })
+                    .unwrap_or_else(|| "Na".into());
+                cells.push(cell);
+            }
+            rows.push((m.label(), cells));
+        }
+        let title = format!("{want} per dataset ({tag})");
+        println!("{}", emit::render_table(&title, datasets, &rows));
+        let csv_rows: Vec<Vec<String>> = rows
+            .iter()
+            .map(|(m, c)| {
+                let mut row = vec![m.clone()];
+                row.extend(c.clone());
+                row
+            })
+            .collect();
+        emit::write_csv(
+            Path::new(&format!("bench_out/table_{tag}_{want}.csv")),
+            &format!("method,{}", datasets.join(",")),
+            &csv_rows,
+        )
+        .unwrap();
+    }
+
+    // Figures 2-6: RT & dRO bar charts per dataset
+    for &ds in datasets {
+        let sub: Vec<runner::Record> = recs.iter().filter(|r| r.dataset == ds).cloned().collect();
+        if sub.is_empty() {
+            continue;
+        }
+        let agg = runner::aggregate(&sub, rt_reference);
+        let rt_items: Vec<(String, f64)> = agg.iter().map(|a| (a.0.clone(), a.1)).collect();
+        let dro_items: Vec<(String, f64)> = agg.iter().map(|a| (a.0.clone(), a.3)).collect();
+        println!("{}", emit::bar_chart(&format!("Fig: RT % — {ds}"), &rt_items, 40));
+        println!("{}", emit::bar_chart(&format!("Fig: dRO % — {ds}"), &dro_items, 40));
+    }
+}
+
+fn main() {
+    let small: Vec<&str> = synth::small_scale_names();
+    let csv = Path::new("bench_out/records_small.csv");
+    let recs = match bench_util::load_records_csv(csv) {
+        Some(r) => {
+            eprintln!("[table5_6] reusing {} records from {}", r.len(), csv.display());
+            r
+        }
+        None => {
+            let scale = bench_util::env_scale(0.25);
+            let ks = bench_util::env_ks(&[10, 50]);
+            let reps = bench_util::env_reps(1);
+            let recs = runner::run_grid(
+                &small,
+                &ks,
+                reps,
+                &MethodSpec::table3_grid(),
+                scale,
+                Metric::L1,
+                0xAAA1,
+                |r| eprintln!("  {} k={} {:<18} {:.3}s", r.dataset, r.k, r.method, r.seconds),
+            )
+            .expect("grid");
+            emit::write_records_csv(csv, &recs).unwrap();
+            recs
+        }
+    };
+    per_dataset_tables(&recs, &small, "FasterPAM", "small");
+    println!(
+        "paper reference (Tables 5/6): OneBatch-nniw RT 7-34%, dRO 1.4-2.4%;\n\
+         BanditPAM++ RT 700-5400%; FasterCLARA-5 RT ~2-7% with dRO 9-16%."
+    );
+}

@@ -1,0 +1,98 @@
+//! Regenerates paper **Tables 7 & 8** (per-dataset large-scale RT and
+//! ΔRO) and the data behind **Figures 7-11**.  RT is normalised by
+//! OneBatch-nniw (= 100), as in the paper.
+
+use obpam::data::synth;
+use obpam::dissim::Metric;
+use obpam::harness::{bench_util, emit, methods::MethodSpec, runner};
+use std::path::Path;
+
+fn main() {
+    let large: Vec<&str> = synth::large_scale_names();
+    let csv = Path::new("bench_out/records_large.csv");
+    let recs = match bench_util::load_records_csv(csv) {
+        Some(r) => {
+            eprintln!("[table7_8] reusing {} records from {}", r.len(), csv.display());
+            r
+        }
+        None => {
+            let scale = bench_util::env_scale(0.25) * 0.2;
+            let ks = bench_util::env_ks(&[10, 50]);
+            let reps = bench_util::env_reps(1);
+            let recs = runner::run_grid(
+                &large,
+                &ks,
+                reps,
+                &MethodSpec::table3_grid(),
+                scale,
+                Metric::L1,
+                0xAAA1,
+                |r| eprintln!("  {} k={} {:<18} {:.3}s", r.dataset, r.k, r.method, r.seconds),
+            )
+            .expect("grid");
+            emit::write_records_csv(csv, &recs).unwrap();
+            recs
+        }
+    };
+
+    let order = MethodSpec::table3_grid();
+    for want in ["RT", "dRO"] {
+        let mut rows = Vec::new();
+        for m in &order {
+            if !m.feasible_large_scale() {
+                continue; // paper omits Na rows in Tables 7/8
+            }
+            let mut cells = Vec::new();
+            for &ds in &large {
+                let sub: Vec<runner::Record> =
+                    recs.iter().filter(|r| r.dataset == ds).cloned().collect();
+                let agg = runner::aggregate(&sub, "OneBatch-nniw");
+                let cell = agg
+                    .iter()
+                    .find(|a| a.0 == m.label())
+                    .map(|(_, rt_m, rt_s, dro_m, dro_s)| {
+                        if want == "RT" {
+                            emit::pct(*rt_m, *rt_s)
+                        } else {
+                            emit::pct(*dro_m, *dro_s)
+                        }
+                    })
+                    .unwrap_or_else(|| "Na".into());
+                cells.push(cell);
+            }
+            rows.push((m.label(), cells));
+        }
+        println!("{}", emit::render_table(&format!("{want} per dataset (large)"), &large, &rows));
+        let csv_rows: Vec<Vec<String>> = rows
+            .iter()
+            .map(|(m, c)| {
+                let mut row = vec![m.clone()];
+                row.extend(c.clone());
+                row
+            })
+            .collect();
+        emit::write_csv(
+            Path::new(&format!("bench_out/table_large_{want}.csv")),
+            &format!("method,{}", large.join(",")),
+            &csv_rows,
+        )
+        .unwrap();
+    }
+
+    // Figures 7-11: bars
+    for &ds in &large {
+        let sub: Vec<runner::Record> = recs.iter().filter(|r| r.dataset == ds).cloned().collect();
+        if sub.is_empty() {
+            continue;
+        }
+        let agg = runner::aggregate(&sub, "OneBatch-nniw");
+        let rt_items: Vec<(String, f64)> = agg.iter().map(|a| (a.0.clone(), a.1)).collect();
+        let dro_items: Vec<(String, f64)> = agg.iter().map(|a| (a.0.clone(), a.3)).collect();
+        println!("{}", emit::bar_chart(&format!("Fig: RT % — {ds}"), &rt_items, 40));
+        println!("{}", emit::bar_chart(&format!("Fig: dRO % — {ds}"), &dro_items, 40));
+    }
+    println!(
+        "paper reference (Tables 7/8): OneBatch-nniw dRO = 0 on every large dataset;\n\
+         FasterCLARA-5 RT ~12-20% with dRO 4-11%; kmc2 RT < 1-11% with dRO 9-26%."
+    );
+}

@@ -1,0 +1,96 @@
+//! Empirical validation of **Theorem 1**: the probability that
+//! OneBatchPAM returns the *same medoid set* as FasterPAM, as a function
+//! of the batch size m.  The theorem predicts agreement with probability
+//! >= 1 - delta once `m >= (4 D^2 / Delta^2) log(2 T n / delta)`, i.e.
+//! agreement should rise steeply with m at fixed n and need only
+//! logarithmically larger m as n grows.
+//!
+//! Also reports the objective ratio for the non-identical cases — the
+//! paper's observation that even when the swap sequences diverge, the
+//! returned objective stays within ~2%.
+
+use obpam::backend::NativeBackend;
+use obpam::coordinator::engine;
+use obpam::coordinator::state::SwapState;
+use obpam::data::synth;
+use obpam::dissim::{DissimCounter, Metric};
+use obpam::eval;
+use obpam::harness::{bench_util, emit};
+use obpam::linalg::Matrix;
+use obpam::rng::Rng;
+use std::path::Path;
+
+/// Run the eager engine on the given batch columns from a SHARED random
+/// init, so OneBatch and FasterPAM are compared per Theorem 1's setting.
+fn run_engine(x: &Matrix, batch_idx: &[usize], k: usize, seed: u64) -> Vec<usize> {
+    let backend = NativeBackend::new(Metric::L1);
+    let b = x.select_rows(batch_idx);
+    let d = obpam::dissim::cross_matrix(backend.dissim(), x, &b);
+    let mut rng = Rng::new(seed);
+    let med = rng.sample_distinct(x.rows, k);
+    let mut st = SwapState::init(&d, med, vec![1.0; batch_idx.len()], x.rows);
+    let counters = obpam::telemetry::Counters::default();
+    // deterministic candidate order shared across runs: reseed
+    let mut order_rng = Rng::new(seed ^ 0x0DDE);
+    engine::eager_loop(&d, &mut st, 50, &mut order_rng, &counters);
+    let mut m = st.med.clone();
+    m.sort_unstable();
+    m
+}
+
+fn main() {
+    let n = bench_util::env_list("OBPAM_T1_N", &[600])[0];
+    let k = 4;
+    let trials = bench_util::env_reps(20);
+    let x = synth::generate(&format!("blobs_{n}_6_4"), 1.0, 0x7731).x;
+    let eval_d = DissimCounter::new(Metric::L1);
+
+    let ms: Vec<usize> = [0.05, 0.1, 0.2, 0.4, 0.7, 1.0]
+        .iter()
+        .map(|f| ((n as f64 * f) as usize).max(k + 1))
+        .collect();
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for &m in &ms {
+        let mut same = 0usize;
+        let mut ratio_sum = 0.0f64;
+        for t in 0..trials {
+            let seed = 0x5111 + t as u64;
+            // FasterPAM = engine on ALL columns; OneBatch = engine on m
+            let full: Vec<usize> = (0..n).collect();
+            let fp = run_engine(&x, &full, k, seed);
+            let mut rng = Rng::new(seed ^ 0xBA7C);
+            let batch = rng.sample_distinct(n, m);
+            let ob = run_engine(&x, &batch, k, seed);
+            if fp == ob {
+                same += 1;
+            }
+            let o_fp = eval::objective(&x, &fp, &eval_d);
+            let o_ob = eval::objective(&x, &ob, &eval_d);
+            ratio_sum += o_ob / o_fp;
+        }
+        let p = same as f64 / trials as f64;
+        let ratio = ratio_sum / trials as f64;
+        rows.push((
+            format!("m={m} ({}% of n)", m * 100 / n),
+            vec![format!("{p:.2}"), format!("{:+.2}%", (ratio - 1.0) * 100.0)],
+        ));
+        csv.push(vec![m.to_string(), format!("{p:.3}"), format!("{ratio:.5}")]);
+        eprintln!("  m={m}: P(same medoids)={p:.2} mean objective ratio={ratio:.4}");
+    }
+    println!(
+        "{}",
+        emit::render_table(
+            &format!("Theorem 1 check: n={n} k={k}, {trials} trials"),
+            &["P(same)", "mean dRO vs FasterPAM"],
+            &rows
+        )
+    );
+    emit::write_csv(Path::new("bench_out/theorem1.csv"), "m,p_same,obj_ratio", &csv).unwrap();
+    println!(
+        "expected: P(same) increases with m toward 1.0 at m=n, and the\n\
+         objective penalty stays small (~<2%) even where medoid sets differ\n\
+         (paper, Discussion: 'OneBatchPAM provides close objectives...')."
+    );
+}

@@ -1,0 +1,77 @@
+//! Compute backends: the same four tile ops (pairwise / top2 / gains /
+//! argmin) on either the pure-Rust native path or the AOT-XLA path.
+//!
+//! Every algorithm in the crate is written against [`ComputeBackend`], so
+//! XLA-vs-native is a runtime switch and numeric agreement is testable
+//! (rust/tests/xla_native_agreement.rs).
+
+mod native;
+mod xla_backend;
+
+pub use native::NativeBackend;
+pub use xla_backend::XlaBackend;
+
+use crate::dissim::Metric;
+use crate::linalg::Matrix;
+use crate::telemetry::Counters;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Row-wise nearest/second-nearest cache: (near, dnear, sec, dsec).
+pub type Top2 = (Vec<usize>, Vec<f32>, Vec<usize>, Vec<f32>);
+
+/// The tile operations the coordinator needs.
+pub trait ComputeBackend {
+    /// Backend name for logs/benches ("native", "xla", "xla-dense").
+    fn name(&self) -> &'static str;
+
+    /// Metric this backend evaluates.
+    fn metric(&self) -> Metric;
+
+    /// Telemetry counters (dissim computations etc.).
+    fn counters(&self) -> Arc<Counters>;
+
+    /// `rows(x) x rows(b)` distance matrix.
+    fn pairwise(&self, x: &Matrix, b: &Matrix) -> Result<Matrix>;
+
+    /// Row-wise two smallest over an `(n, k)` matrix (k >= 2).
+    fn top2(&self, d: &Matrix) -> Result<Top2>;
+
+    /// FasterPAM gain components for all candidate rows of `d`:
+    /// `(shared (n,), permedoid (n, k))` — see kernels/ref.py:swap_gains.
+    fn gains(
+        &self,
+        d: &Matrix,
+        dnear: &[f32],
+        dsec: &[f32],
+        near: &[usize],
+        k: usize,
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Matrix)>;
+
+    /// Row-wise (argmin, min) over an `(n, m)` matrix.
+    fn argmin_rows(&self, d: &Matrix) -> Result<(Vec<usize>, Vec<f32>)>;
+}
+
+/// Candidate-independent removal-loss term (gain form):
+/// `rloss[l] = sum_j w_j (dnear_j - dsec_j) [near_j == l]`.
+///
+/// Cheap (`O(m)`), identical for both backends, computed on the Rust side.
+pub fn removal_loss(dnear: &[f32], dsec: &[f32], near: &[usize], k: usize, w: &[f32]) -> Vec<f32> {
+    let mut rl = vec![0.0f32; k];
+    for j in 0..near.len() {
+        rl[near[j]] += w[j] * (dnear[j] - dsec[j]);
+    }
+    rl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn removal_loss_known() {
+        let rl = removal_loss(&[1.0, 2.0], &[3.0, 5.0], &[0, 1], 2, &[1.0, 2.0]);
+        assert_eq!(rl, vec![-2.0, -6.0]);
+    }
+}

@@ -1,0 +1,197 @@
+//! Pure-Rust compute backend.
+//!
+//! The fast path on this (single-core CPU) testbed and the reference the
+//! XLA path is checked against.  Hot loops are branch-light and
+//! allocation-free; the pairwise matrix is cache-blocked (see
+//! dissim::cross_matrix).
+
+use super::{ComputeBackend, Top2};
+use crate::dissim::{cross_matrix, DissimCounter, Metric};
+use crate::linalg::{top2_min, Matrix};
+use crate::telemetry::Counters;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Pure-Rust backend over a counted dissimilarity.
+#[derive(Clone)]
+pub struct NativeBackend {
+    dissim: DissimCounter,
+}
+
+impl NativeBackend {
+    /// Backend for `metric` with fresh counters.
+    pub fn new(metric: Metric) -> Self {
+        NativeBackend { dissim: DissimCounter::new(metric) }
+    }
+
+    /// Backend sharing existing counters.
+    pub fn with_counters(metric: Metric, counters: Arc<Counters>) -> Self {
+        NativeBackend { dissim: DissimCounter::with_counters(metric, counters) }
+    }
+
+    /// The underlying counted dissimilarity (for point-level algorithms).
+    pub fn dissim(&self) -> &DissimCounter {
+        &self.dissim
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn metric(&self) -> Metric {
+        self.dissim.metric
+    }
+
+    fn counters(&self) -> Arc<Counters> {
+        self.dissim.counters()
+    }
+
+    fn pairwise(&self, x: &Matrix, b: &Matrix) -> Result<Matrix> {
+        Ok(cross_matrix(&self.dissim, x, b))
+    }
+
+    fn top2(&self, d: &Matrix) -> Result<Top2> {
+        let n = d.rows;
+        let (mut ni, mut nd) = (vec![0usize; n], vec![0f32; n]);
+        let (mut si, mut sd) = (vec![0usize; n], vec![0f32; n]);
+        for i in 0..n {
+            let (a, av, b, bv) = top2_min(d.row(i));
+            ni[i] = a;
+            nd[i] = av;
+            si[i] = b;
+            sd[i] = bv;
+        }
+        Ok((ni, nd, si, sd))
+    }
+
+    fn gains(
+        &self,
+        d: &Matrix,
+        dnear: &[f32],
+        dsec: &[f32],
+        near: &[usize],
+        k: usize,
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Matrix)> {
+        let (n, m) = (d.rows, d.cols);
+        let mut shared = vec![0.0f32; n];
+        let mut permedoid = Matrix::zeros(n, k);
+        for i in 0..n {
+            let row = d.row(i);
+            let pm = permedoid.row_mut(i);
+            let mut sh = 0.0f32;
+            for j in 0..m {
+                let dij = row[j];
+                // branchless-ish: both branches touch pm[near[j]]
+                if dij < dnear[j] {
+                    sh += w[j] * (dnear[j] - dij);
+                    pm[near[j]] += w[j] * (dsec[j] - dnear[j]);
+                } else if dij < dsec[j] {
+                    pm[near[j]] += w[j] * (dsec[j] - dij);
+                }
+            }
+            shared[i] = sh;
+        }
+        Ok((shared, permedoid))
+    }
+
+    fn argmin_rows(&self, d: &Matrix) -> Result<(Vec<usize>, Vec<f32>)> {
+        let n = d.rows;
+        let (mut idx, mut val) = (vec![0usize; n], vec![0f32; n]);
+        for i in 0..n {
+            let (j, v) = crate::linalg::argmin(d.row(i));
+            idx[i] = j;
+            val[i] = v;
+        }
+        Ok((idx, val))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        Matrix::from_vec(r, c, (0..r * c).map(|_| rng.f32()).collect())
+    }
+
+    #[test]
+    fn top2_matches_manual() {
+        let b = NativeBackend::new(Metric::L1);
+        let d = Matrix::from_vec(2, 3, vec![3., 1., 2., 0.5, 0.5, 0.1]);
+        let (ni, nd, si, sd) = b.top2(&d).unwrap();
+        assert_eq!((ni[0], nd[0], si[0], sd[0]), (1, 1.0, 2, 2.0));
+        assert_eq!((ni[1], si[1]), (2, 0)); // tie 0.5 breaks low index for sec
+        assert_eq!(sd[1], 0.5);
+    }
+
+    #[test]
+    fn gains_match_bruteforce_objective_delta() {
+        // The decomposition invariant: shared + permedoid + removal_loss
+        // equals the exact batch-objective delta of the swap.
+        let mut rng = Rng::new(13);
+        let backend = NativeBackend::new(Metric::L1);
+        let (n, m, k, p) = (20, 9, 3, 4);
+        let x = rand_matrix(&mut rng, n, p);
+        let bidx: Vec<usize> = rng.sample_distinct(n, m);
+        let b = x.select_rows(&bidx);
+        let d = backend.pairwise(&x, &b).unwrap();
+        let med: Vec<usize> = rng.sample_distinct(n, k);
+        let w = vec![1.0f32; m];
+
+        // caches from medoid rows of d
+        let mut dmk = Matrix::zeros(m, k);
+        for (l, &mi) in med.iter().enumerate() {
+            for j in 0..m {
+                dmk.set(j, l, d.get(mi, j));
+            }
+        }
+        let (near, dnear, _, dsec) = backend.top2(&dmk).unwrap();
+        let (shared, pm) = backend.gains(&d, &dnear, &dsec, &near, k, &w).unwrap();
+        let rl = super::super::removal_loss(&dnear, &dsec, &near, k, &w);
+
+        let batch_obj = |meds: &[usize]| -> f32 {
+            (0..m)
+                .map(|j| meds.iter().map(|&mi| d.get(mi, j)).fold(f32::INFINITY, f32::min))
+                .sum()
+        };
+        let base = batch_obj(&med);
+        for i in 0..n {
+            if med.contains(&i) {
+                continue;
+            }
+            for l in 0..k {
+                let mut sw = med.clone();
+                sw[l] = i;
+                let true_gain = base - batch_obj(&sw);
+                let pred = shared[i] + pm.get(i, l) + rl[l];
+                assert!(
+                    (true_gain - pred).abs() < 1e-3,
+                    "i={i} l={l}: pred {pred} vs true {true_gain}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn argmin_rows_basic() {
+        let b = NativeBackend::new(Metric::L1);
+        let d = Matrix::from_vec(2, 3, vec![3., 1., 2., 0.1, 0.5, 0.2]);
+        let (idx, val) = b.argmin_rows(&d).unwrap();
+        assert_eq!(idx, vec![1, 0]);
+        assert_eq!(val, vec![1.0, 0.1]);
+    }
+
+    #[test]
+    fn pairwise_counts_dissims() {
+        let b = NativeBackend::new(Metric::L1);
+        let mut rng = Rng::new(5);
+        let x = rand_matrix(&mut rng, 10, 3);
+        let y = rand_matrix(&mut rng, 7, 3);
+        b.pairwise(&x, &y).unwrap();
+        assert_eq!(b.counters().dissim(), 70);
+    }
+}

@@ -1,0 +1,74 @@
+//! XLA compute backend: delegates the tile ops to AOT artifacts through
+//! the PJRT runtime.  The `dense` flag switches between the Pallas
+//! kernels and the plain-XLA lowering of the same math (perf ablation).
+
+use super::{ComputeBackend, Top2};
+use crate::dissim::Metric;
+use crate::linalg::Matrix;
+use crate::runtime::Runtime;
+use crate::telemetry::Counters;
+use anyhow::Result;
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Backend executing the AOT HLO artifacts.
+#[derive(Clone)]
+pub struct XlaBackend {
+    runtime: Rc<Runtime>,
+    metric: Metric,
+    dense: bool,
+}
+
+impl XlaBackend {
+    /// Wrap a runtime; `dense=false` uses the Pallas kernels.
+    pub fn new(runtime: Rc<Runtime>, metric: Metric, dense: bool) -> Self {
+        XlaBackend { runtime, metric, dense }
+    }
+
+    /// The underlying runtime.
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        if self.dense {
+            "xla-dense"
+        } else {
+            "xla"
+        }
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn counters(&self) -> Arc<Counters> {
+        self.runtime.counters()
+    }
+
+    fn pairwise(&self, x: &Matrix, b: &Matrix) -> Result<Matrix> {
+        self.runtime.pairwise(x, b, self.metric, self.dense)
+    }
+
+    fn top2(&self, d: &Matrix) -> Result<Top2> {
+        self.runtime.top2(d)
+    }
+
+    fn gains(
+        &self,
+        d: &Matrix,
+        dnear: &[f32],
+        dsec: &[f32],
+        near: &[usize],
+        k: usize,
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Matrix)> {
+        self.runtime.gains(d, dnear, dsec, near, k, w)
+    }
+
+    fn argmin_rows(&self, d: &Matrix) -> Result<(Vec<usize>, Vec<f32>)> {
+        self.runtime.argmin_rows(d)
+    }
+}

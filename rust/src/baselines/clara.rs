@@ -1,0 +1,133 @@
+//! FasterCLARA (Schubert & Rousseeuw 2021): FasterPAM on `I` random
+//! subsamples of size `80 + 4k`, each candidate medoid set evaluated on
+//! the full dataset; the best one wins.
+//!
+//! The defining difference from OneBatchPAM (paper, "From PAM to
+//! OneBatchPAM"): CLARA's swap search space is restricted to the
+//! subsample (`x' in X_m`), which doubles the theoretical approximation
+//! error; OneBatchPAM keeps all of `X_n` as candidates.
+
+use crate::backend::ComputeBackend;
+use crate::coordinator::engine;
+use crate::coordinator::state::SwapState;
+use crate::coordinator::KMedoidsResult;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::telemetry::{RunStats, Timer};
+use anyhow::Result;
+
+/// FasterCLARA configuration.
+#[derive(Clone, Debug)]
+pub struct ClaraConfig {
+    /// Number of medoids.
+    pub k: usize,
+    /// Number of subsample repetitions (paper: I in {5, 50}).
+    pub reps: usize,
+    /// Subsample size; `None` -> `80 + 4k` (Schubert & Rousseeuw).
+    pub sample_size: Option<usize>,
+    /// Max eager passes inside each FasterPAM run.
+    pub max_passes: usize,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl ClaraConfig {
+    /// Paper-default configuration for `k` with `reps` repetitions.
+    pub fn new(k: usize, reps: usize, seed: u64) -> Self {
+        ClaraConfig { k, reps, sample_size: None, max_passes: 20, seed }
+    }
+}
+
+/// Run FasterCLARA.
+pub fn faster_clara(
+    x: &Matrix,
+    cfg: &ClaraConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<KMedoidsResult> {
+    let n = x.rows;
+    let k = cfg.k;
+    assert!(k >= 2 && k < n);
+    let timer = Timer::start();
+    let counters = backend.counters();
+    let dissim0 = counters.dissim();
+    let swaps0 = counters.swaps();
+    let mut rng = Rng::new(cfg.seed);
+    let s = cfg.sample_size.unwrap_or(80 + 4 * k).min(n);
+
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    for _ in 0..cfg.reps.max(1) {
+        // FasterPAM on the subsample (search space restricted to it).
+        let sub_idx = rng.sample_distinct(n, s);
+        let sub = x.select_rows(&sub_idx);
+        let d = backend.pairwise(&sub, &sub)?;
+        let med0 = rng.sample_distinct(s, k);
+        let mut state = SwapState::init(&d, med0, vec![1.0; s], s);
+        engine::eager_loop(&d, &mut state, cfg.max_passes, &mut rng, &counters);
+        let med: Vec<usize> = state.med.iter().map(|&j| sub_idx[j]).collect();
+
+        // Evaluate this candidate set on the FULL dataset (n*k distances).
+        let med_rows = x.select_rows(&med);
+        let dm = backend.pairwise(x, &med_rows)?;
+        let mut obj = 0.0f64;
+        for i in 0..n {
+            obj += dm.row(i).iter().copied().fold(f32::INFINITY, f32::min) as f64;
+        }
+        obj /= n as f64;
+        if best.as_ref().map_or(true, |(_, b)| obj < *b) {
+            best = Some((med, obj));
+        }
+    }
+
+    let (medoids, est_objective) = best.unwrap();
+    Ok(KMedoidsResult {
+        medoids,
+        est_objective,
+        stats: RunStats {
+            seconds: timer.secs(),
+            dissim_count: counters.dissim() - dissim0,
+            swap_count: counters.swaps() - swaps0,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synth;
+    use crate::dissim::Metric;
+
+    #[test]
+    fn valid_result_and_counts() {
+        let mut rng = Rng::new(1);
+        let x = synth::gen_gaussian_mixture(&mut rng, 300, 4, 4, 0.15, 1.0);
+        let backend = NativeBackend::new(Metric::L1);
+        let cfg = ClaraConfig::new(4, 3, 2);
+        let r = faster_clara(&x, &cfg, &backend).unwrap();
+        r.validate(300, 4);
+        // I * (s^2 + n*k) dissimilarities
+        let s = (80 + 16).min(300);
+        assert_eq!(r.stats.dissim_count as usize, 3 * (s * s + 300 * 4));
+    }
+
+    #[test]
+    fn more_reps_never_worse() {
+        let mut rng = Rng::new(3);
+        let x = synth::gen_gaussian_mixture(&mut rng, 250, 3, 5, 0.2, 1.5);
+        let backend = NativeBackend::new(Metric::L1);
+        // same seed: rep sequence of reps=1 is a prefix of reps=4
+        let r1 = faster_clara(&x, &ClaraConfig::new(5, 1, 7), &backend).unwrap();
+        let r4 = faster_clara(&x, &ClaraConfig::new(5, 4, 7), &backend).unwrap();
+        assert!(r4.est_objective <= r1.est_objective + 1e-9);
+    }
+
+    #[test]
+    fn subsample_capped_at_n() {
+        let mut rng = Rng::new(4);
+        let x = synth::gen_gaussian_mixture(&mut rng, 60, 3, 3, 0.2, 1.0);
+        let backend = NativeBackend::new(Metric::L1);
+        let cfg = ClaraConfig::new(3, 2, 5); // 80 + 12 > 60 -> capped
+        let r = faster_clara(&x, &cfg, &backend).unwrap();
+        r.validate(60, 3);
+    }
+}

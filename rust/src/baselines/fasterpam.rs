@@ -1,0 +1,117 @@
+//! FasterPAM (Schubert & Rousseeuw 2021): random init + eager swaps over
+//! the full `n x n` dissimilarity matrix.
+//!
+//! Implemented as the degenerate OneBatch case `m = n`, batch = identity,
+//! weights = 1: the swap engine, caches and tolerance are *identical* to
+//! OneBatchPAM's, which is exactly the comparison the paper makes (the
+//! only difference is which columns the objective is summed over).
+//!
+//! Memory: `O(n^2)` — the paper marks FasterPAM "Na" on the large-scale
+//! datasets for this reason; we do the same in the harness.
+
+use crate::backend::ComputeBackend;
+use crate::coordinator::engine;
+use crate::coordinator::state::SwapState;
+use crate::coordinator::KMedoidsResult;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::telemetry::{RunStats, Timer};
+use anyhow::Result;
+
+/// Run FasterPAM.  `max_passes` bounds the eager scans (paper: converges
+/// in O(k) swaps; a pass without improvement terminates).
+pub fn faster_pam(
+    x: &Matrix,
+    k: usize,
+    max_passes: usize,
+    seed: u64,
+    backend: &dyn ComputeBackend,
+) -> Result<KMedoidsResult> {
+    let n = x.rows;
+    assert!(k >= 2 && k < n);
+    let timer = Timer::start();
+    let counters = backend.counters();
+    let dissim0 = counters.dissim();
+    let swaps0 = counters.swaps();
+    let mut rng = Rng::new(seed);
+
+    // Full pairwise matrix (the O(p n^2) cost the paper attacks).
+    let d = backend.pairwise(x, x)?;
+    let med = rng.sample_distinct(n, k);
+    let mut state = SwapState::init(&d, med, vec![1.0; n], n);
+    engine::eager_loop(&d, &mut state, max_passes, &mut rng, &counters);
+
+    Ok(KMedoidsResult {
+        medoids: state.med.clone(),
+        est_objective: state.est_objective(),
+        stats: RunStats {
+            seconds: timer.secs(),
+            dissim_count: counters.dissim() - dissim0,
+            swap_count: counters.swaps() - swaps0,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synth;
+    use crate::dissim::Metric;
+
+    #[test]
+    fn finds_planted_clusters() {
+        let mut rng = Rng::new(1);
+        let x = synth::gen_gaussian_mixture(&mut rng, 150, 3, 3, 0.05, 1.0);
+        let backend = NativeBackend::new(Metric::L1);
+        let r = faster_pam(&x, 3, 50, 2, &backend).unwrap();
+        r.validate(150, 3);
+        // exact objective equals est_objective for m = n
+        let exact: f64 = (0..150)
+            .map(|i| {
+                r.medoids
+                    .iter()
+                    .map(|&m| Metric::L1.eval(x.row(i), x.row(m)))
+                    .fold(f32::INFINITY, f32::min) as f64
+            })
+            .sum::<f64>()
+            / 150.0;
+        assert!((exact - r.est_objective).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dissim_count_is_n_squared() {
+        let mut rng = Rng::new(3);
+        let x = synth::gen_gaussian_mixture(&mut rng, 80, 3, 3, 0.2, 1.0);
+        let backend = NativeBackend::new(Metric::L1);
+        let r = faster_pam(&x, 4, 30, 1, &backend).unwrap();
+        assert_eq!(r.stats.dissim_count, 80 * 80);
+    }
+
+    #[test]
+    fn objective_not_worse_than_onebatch_usually() {
+        // FasterPAM sees the exact objective; on a fixed seed it should
+        // be at least as good as OneBatchPAM's full-data objective.
+        use crate::coordinator::{one_batch_pam, OneBatchConfig};
+        let mut rng = Rng::new(5);
+        let x = synth::gen_gaussian_mixture(&mut rng, 200, 4, 4, 0.15, 1.0);
+        let backend = NativeBackend::new(Metric::L1);
+        let fp = faster_pam(&x, 4, 50, 7, &backend).unwrap();
+        let ob = one_batch_pam(
+            &x,
+            &OneBatchConfig { k: 4, m: Some(40), seed: 7, ..Default::default() },
+            &backend,
+        )
+        .unwrap();
+        let full = |med: &[usize]| -> f64 {
+            (0..200)
+                .map(|i| {
+                    med.iter()
+                        .map(|&m| Metric::L1.eval(x.row(i), x.row(m)))
+                        .fold(f32::INFINITY, f32::min) as f64
+                })
+                .sum::<f64>()
+        };
+        assert!(full(&fp.medoids) <= full(&ob.medoids) * 1.05);
+    }
+}

@@ -1,0 +1,281 @@
+//! The k-means++ family used as k-medoids proxies (paper, Related Works):
+//!
+//! * [`kmeanspp`] — D^p sampling (Arthur & Vassilvitskii 2007).  For an
+//!   l_p dissimilarity the sampling weight is `d(x, C)^p`; the paper uses
+//!   L1, i.e. weight = distance itself.
+//! * [`kmc2`] — MCMC approximation of k-means++ (Bachem et al. 2016) with
+//!   chain length `L`; `O(L k^2)` dissimilarity computations.
+//! * [`ls_kmeanspp`] — k-means++ seeding followed by `Z` local-search
+//!   swap iterations (Lattanzi & Sohler 2019).
+
+use crate::coordinator::KMedoidsResult;
+use crate::dissim::{DissimCounter, Metric};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::telemetry::{RunStats, Timer};
+
+/// Sampling power for the metric: D^2 for (squared) Euclidean, D^1 for L1
+/// and the other non-Euclidean metrics (paper: "distance raised to the
+/// power p ... for any l_p distance").
+fn power(metric: Metric) -> i32 {
+    match metric {
+        Metric::L2 | Metric::SqL2 => 2,
+        _ => 1,
+    }
+}
+
+#[inline]
+fn weight(v: f32, pow: i32) -> f64 {
+    if pow == 2 {
+        (v as f64) * (v as f64)
+    } else {
+        v as f64
+    }
+}
+
+/// Classic k-means++ seeding as a k-medoids proxy (`O(k n)` evals).
+pub fn kmeanspp(x: &Matrix, k: usize, seed: u64, d: &DissimCounter) -> KMedoidsResult {
+    let n = x.rows;
+    assert!(k >= 1 && k <= n);
+    let timer = Timer::start();
+    let count0 = d.count();
+    let mut rng = Rng::new(seed);
+    let pow = power(d.metric);
+
+    let mut med = Vec::with_capacity(k);
+    med.push(rng.below(n));
+    // dmin[i] = distance to nearest chosen center so far
+    let mut dmin: Vec<f32> = (0..n).map(|i| d.eval(x.row(i), x.row(med[0]))).collect();
+    while med.len() < k {
+        let weights: Vec<f64> = dmin.iter().map(|&v| weight(v, pow)).collect();
+        let mut c = rng.weighted(&weights);
+        // avoid duplicate centers (possible when mass is concentrated)
+        while med.contains(&c) {
+            c = rng.below(n);
+        }
+        med.push(c);
+        for i in 0..n {
+            let v = d.eval(x.row(i), x.row(c));
+            if v < dmin[i] {
+                dmin[i] = v;
+            }
+        }
+    }
+    let obj = dmin.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    KMedoidsResult {
+        medoids: med,
+        est_objective: obj,
+        stats: RunStats {
+            seconds: timer.secs(),
+            dissim_count: d.count() - count0,
+            swap_count: 0,
+        },
+    }
+}
+
+/// kmc2: Markov-chain approximation of D^p sampling.
+///
+/// Chain of length `l` per center; each proposal evaluates distances to
+/// the current centers, giving `O(k^2 l)` total evaluations — sublinear
+/// in `n`, which is why it dominates the large-scale RT column.
+pub fn kmc2(x: &Matrix, k: usize, l: usize, seed: u64, d: &DissimCounter) -> KMedoidsResult {
+    let n = x.rows;
+    assert!(k >= 1 && k <= n && l >= 1);
+    let timer = Timer::start();
+    let count0 = d.count();
+    let mut rng = Rng::new(seed);
+    let pow = power(d.metric);
+
+    let dist_to = |c: &[usize], i: usize| -> f32 {
+        c.iter()
+            .map(|&m| d.eval(x.row(i), x.row(m)))
+            .fold(f32::INFINITY, f32::min)
+    };
+
+    let mut med = vec![rng.below(n)];
+    while med.len() < k {
+        // uniform-proposal Metropolis chain targeting D^p
+        let mut cur = rng.below(n);
+        let mut cur_w = weight(dist_to(&med, cur), pow);
+        for _ in 1..l {
+            let cand = rng.below(n);
+            let cand_w = weight(dist_to(&med, cand), pow);
+            let accept = if cur_w <= 0.0 { 1.0 } else { (cand_w / cur_w).min(1.0) };
+            if rng.f64() < accept {
+                cur = cand;
+                cur_w = cand_w;
+            }
+        }
+        if med.contains(&cur) {
+            cur = rng.below(n); // extremely rare; keep medoids distinct
+            while med.contains(&cur) {
+                cur = rng.below(n);
+            }
+        }
+        med.push(cur);
+    }
+    KMedoidsResult {
+        medoids: med,
+        est_objective: f64::NAN, // kmc2 never touches the full objective
+        stats: RunStats {
+            seconds: timer.secs(),
+            dissim_count: d.count() - count0,
+            swap_count: 0,
+        },
+    }
+}
+
+/// LS-k-means++ (Lattanzi & Sohler 2019): k-means++ seeding then `z`
+/// local-search iterations.  Each iteration D^p-samples one candidate and
+/// applies the best single-center swap if it improves the objective.
+pub fn ls_kmeanspp(x: &Matrix, k: usize, z: usize, seed: u64, d: &DissimCounter) -> KMedoidsResult {
+    let n = x.rows;
+    let timer = Timer::start();
+    let count0 = d.count();
+    let seeded = kmeanspp(x, k, seed, d);
+    let mut med = seeded.medoids;
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let pow = power(d.metric);
+
+    // near/sec caches over ALL points (needed for O(n) swap evaluation)
+    let mut dmed = Matrix::zeros(n, k);
+    for i in 0..n {
+        for (l, &m) in med.iter().enumerate() {
+            dmed.set(i, l, d.eval(x.row(i), x.row(m)));
+        }
+    }
+    let mut swaps = 0u64;
+    for _ in 0..z {
+        // caches
+        let mut near = vec![0usize; n];
+        let mut dnear = vec![0f32; n];
+        let mut dsec = vec![0f32; n];
+        for i in 0..n {
+            let (l1, v1, _, v2) = crate::linalg::top2_min(dmed.row(i));
+            near[i] = l1;
+            dnear[i] = v1;
+            dsec[i] = v2;
+        }
+        // D^p-sample the candidate
+        let weights: Vec<f64> = dnear.iter().map(|&v| weight(v, pow)).collect();
+        let c = rng.weighted(&weights);
+        if med.contains(&c) {
+            continue;
+        }
+        // cost of swapping center l -> c, for every l, in one pass
+        let dc: Vec<f32> = (0..n).map(|i| d.eval(x.row(i), x.row(c))).collect();
+        let base: f64 = dnear.iter().map(|&v| v as f64).sum();
+        let mut cost = vec![0.0f64; k];
+        let mut shared = 0.0f64; // sum over i of min(dc, dnear) - careful split
+        for i in 0..n {
+            let keep = dc[i].min(dnear[i]) as f64;
+            shared += keep;
+            // if near[i] is removed, the point falls back to min(dc, dsec)
+            cost[near[i]] += dc[i].min(dsec[i]) as f64 - keep;
+        }
+        let (mut bl, mut bv) = (0usize, f64::INFINITY);
+        for l in 0..k {
+            let v = shared + cost[l];
+            if v < bv {
+                bv = v;
+                bl = l;
+            }
+        }
+        if bv < base - 1e-9 {
+            med[bl] = c;
+            for i in 0..n {
+                dmed.set(i, bl, dc[i]);
+            }
+            swaps += 1;
+        }
+    }
+    let mut obj = 0.0f64;
+    for i in 0..n {
+        obj += dmed.row(i).iter().copied().fold(f32::INFINITY, f32::min) as f64;
+    }
+    obj /= n as f64;
+    KMedoidsResult {
+        medoids: med,
+        est_objective: obj,
+        stats: RunStats {
+            seconds: timer.secs(),
+            dissim_count: d.count() - count0,
+            swap_count: swaps,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn blob(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        synth::gen_gaussian_mixture(&mut rng, n, 4, 4, 0.1, 1.0)
+    }
+
+    fn full_obj(x: &Matrix, med: &[usize], metric: Metric) -> f64 {
+        (0..x.rows)
+            .map(|i| {
+                med.iter()
+                    .map(|&m| metric.eval(x.row(i), x.row(m)))
+                    .fold(f32::INFINITY, f32::min) as f64
+            })
+            .sum()
+    }
+
+    #[test]
+    fn kmeanspp_valid_and_linear_cost() {
+        let x = blob(200, 1);
+        let d = DissimCounter::new(Metric::L1);
+        let r = kmeanspp(&x, 4, 2, &d);
+        r.validate(200, 4);
+        assert_eq!(r.stats.dissim_count, 4 * 200);
+    }
+
+    #[test]
+    fn kmeanspp_beats_random() {
+        let x = blob(300, 2);
+        let d = DissimCounter::new(Metric::L1);
+        let r = kmeanspp(&x, 4, 3, &d);
+        let mut rng = Rng::new(4);
+        let rand = rng.sample_distinct(300, 4);
+        assert!(full_obj(&x, &r.medoids, Metric::L1) < full_obj(&x, &rand, Metric::L1));
+    }
+
+    #[test]
+    fn kmc2_valid_and_sublinear_cost() {
+        let x = blob(500, 5);
+        let d = DissimCounter::new(Metric::L1);
+        let r = kmc2(&x, 5, 20, 6, &d);
+        r.validate(500, 5);
+        // cost independent of n: < L * k^2 evaluations (plus slack)
+        assert!(r.stats.dissim_count < (20 * 5 * 5 + 100) as u64, "{}", r.stats.dissim_count);
+    }
+
+    #[test]
+    fn ls_improves_or_matches_seeding() {
+        let x = blob(250, 7);
+        let d = DissimCounter::new(Metric::L1);
+        let seed = kmeanspp(&x, 4, 8, &d);
+        let ls = ls_kmeanspp(&x, 4, 10, 8, &d);
+        ls.validate(250, 4);
+        let (o_seed, o_ls) = (
+            full_obj(&x, &seed.medoids, Metric::L1),
+            full_obj(&x, &ls.medoids, Metric::L1),
+        );
+        assert!(o_ls <= o_seed + 1e-6, "LS {o_ls} vs seed {o_seed}");
+    }
+
+    #[test]
+    fn ls_swap_eval_is_exact() {
+        // After any accepted swap, recomputing the objective from scratch
+        // must match est_objective.
+        let x = blob(100, 9);
+        let d = DissimCounter::new(Metric::L1);
+        let r = ls_kmeanspp(&x, 3, 15, 10, &d);
+        let exact = full_obj(&x, &r.medoids, Metric::L1) / 100.0;
+        assert!((exact - r.est_objective).abs() < 1e-4);
+    }
+}

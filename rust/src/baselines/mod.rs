@@ -1,0 +1,30 @@
+//! Every comparator from the paper's evaluation (Tables 3-8).
+//!
+//! | paper name        | here                               |
+//! |-------------------|------------------------------------|
+//! | Random            | [`random::random_select`]          |
+//! | FasterPAM         | [`fasterpam::faster_pam`]          |
+//! | Alternate         | [`alternate::alternate`]           |
+//! | FasterCLARA-I     | [`clara::faster_clara`]            |
+//! | k-means++         | [`kmeanspp::kmeanspp`]             |
+//! | kmc2-L            | [`kmeanspp::kmc2`]                 |
+//! | LS-k-means++-Z    | [`kmeanspp::ls_kmeanspp`]          |
+//! | BanditPAM++-T     | [`banditpam::bandit_pam`]          |
+//!
+//! All functions return [`crate::coordinator::KMedoidsResult`] and count
+//! dissimilarity computations through the same telemetry, so Table 1's
+//! complexity claims are measurable.
+
+pub mod alternate;
+pub mod banditpam;
+pub mod clara;
+pub mod fasterpam;
+pub mod kmeanspp;
+pub mod random;
+
+pub use alternate::alternate;
+pub use banditpam::{bandit_pam, BanditConfig};
+pub use clara::{faster_clara, ClaraConfig};
+pub use fasterpam::faster_pam;
+pub use kmeanspp::{kmc2, kmeanspp, ls_kmeanspp};
+pub use random::random_select;

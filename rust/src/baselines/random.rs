@@ -1,0 +1,37 @@
+//! Random medoid selection — the lower anchor of every comparison.
+
+use crate::coordinator::KMedoidsResult;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::telemetry::{RunStats, Timer};
+
+/// Select `k` distinct rows uniformly at random.
+pub fn random_select(x: &Matrix, k: usize, seed: u64) -> KMedoidsResult {
+    let timer = Timer::start();
+    let mut rng = Rng::new(seed);
+    let medoids = rng.sample_distinct(x.rows, k);
+    KMedoidsResult {
+        medoids,
+        est_objective: f64::NAN, // never evaluated internally
+        stats: RunStats { seconds: timer.secs(), dissim_count: 0, swap_count: 0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_and_free() {
+        let x = Matrix::zeros(50, 3);
+        let r = random_select(&x, 5, 1);
+        r.validate(50, 5);
+        assert_eq!(r.stats.dissim_count, 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let x = Matrix::zeros(50, 3);
+        assert_eq!(random_select(&x, 5, 2).medoids, random_select(&x, 5, 2).medoids);
+    }
+}

@@ -1,0 +1,126 @@
+//! Run configuration: a TOML-subset parser (flat `key = value` pairs with
+//! `[section]` headers — no toml crate offline) merged with CLI-style
+//! `key=value` overrides.
+//!
+//! Used by the `obpam` CLI and the bench harness so every experiment is
+//! reproducible from a single file + command line.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Flat configuration: `section.key -> value` strings.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse from TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("config line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("config line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full, value.trim().trim_matches('"').to_string());
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Apply `key=value` overrides (e.g. from trailing CLI args).
+    pub fn apply_overrides<'a>(&mut self, overrides: impl IntoIterator<Item = &'a str>) -> Result<()> {
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .with_context(|| format!("override '{ov}': expected key=value"))?;
+            self.values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(())
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// String with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Parsed numeric/boolean lookup with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("config key '{key}': cannot parse '{s}'")),
+        }
+    }
+
+    /// All keys (for diagnostics).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_quotes() {
+        let c = Config::parse(
+            "top = 1\n[run]\nk = 50   # medoids\nname = \"mnist\"\n\n[run.sub]\nx=2\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("top"), Some("1"));
+        assert_eq!(c.get("run.k"), Some("50"));
+        assert_eq!(c.get("run.name"), Some("mnist"));
+        assert_eq!(c.get("run.sub.x"), Some("2"));
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("[run]\nk = 10\n").unwrap();
+        c.apply_overrides(["run.k=99", "extra=hi"]).unwrap();
+        assert_eq!(c.get("run.k"), Some("99"));
+        assert_eq!(c.get("extra"), Some("hi"));
+    }
+
+    #[test]
+    fn typed_get_with_default() {
+        let c = Config::parse("[a]\nx = 2.5\n").unwrap();
+        assert_eq!(c.get_parse("a.x", 0.0f64).unwrap(), 2.5);
+        assert_eq!(c.get_parse("a.missing", 7usize).unwrap(), 7);
+        assert!(c.get_parse::<usize>("a.x", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("just words\n").is_err());
+        assert!(Config::parse("= novalue\n").is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! Swap-search engines over a precomputed `n x m` matrix.
+//!
+//! * [`eager_loop`] — the paper's Algorithm 2 (Approximated-FasterPAM):
+//!   scan candidates, swap as soon as an improvement is found, stop after
+//!   a full pass without a swap or `max_passes` passes.  `O(n (m + k))`
+//!   per pass, pure Rust (the per-candidate evaluation is `O(m)` and
+//!   data-dependent, which is exactly what XLA is bad at).
+//! * [`steepest_loop`] — Eq. (3) literally: evaluate *all* candidates via
+//!   the backend's batched gains kernel (XLA/Pallas on the AOT path),
+//!   apply the single best swap, repeat.  One `gains` launch per swap.
+//!
+//! Both stop on the same tolerance and share [`SwapState`], so they are
+//! directly comparable (benches/ablation.rs).
+
+use super::state::SwapState;
+use crate::backend::{removal_loss, ComputeBackend};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::telemetry::Counters;
+use anyhow::Result;
+
+/// Swap-acceptance tolerance: relative to the current objective estimate
+/// so f32 rounding can never produce an infinite improvement loop.
+pub fn tolerance(est_objective: f64) -> f64 {
+    1e-6 * est_objective.abs().max(1e-12)
+}
+
+/// Eager (Algorithm 2) swap search.  Returns the number of swaps applied.
+pub fn eager_loop(
+    d: &Matrix,
+    state: &mut SwapState,
+    max_passes: usize,
+    rng: &mut Rng,
+    counters: &Counters,
+) -> usize {
+    eager_loop_eps(d, state, max_passes, 0.0, rng, counters)
+}
+
+/// Eager swap search with an epsilon improvement threshold (paper, "How
+/// many iterations T are needed?"): a swap is only taken when it improves
+/// the objective by more than `eps * current_objective`, which bounds the
+/// number of swaps by `O(log(n)/eps)`.  `eps = 0` reproduces plain
+/// FasterPAM acceptance (modulo the FP-safety tolerance).
+pub fn eager_loop_eps(
+    d: &Matrix,
+    state: &mut SwapState,
+    max_passes: usize,
+    eps: f64,
+    rng: &mut Rng,
+    counters: &Counters,
+) -> usize {
+    let n = d.rows;
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut swaps = 0usize;
+    // The acceptance threshold only changes when the objective changes,
+    // i.e. on a swap — recompute it then, not per candidate (the O(m)
+    // est_objective per candidate doubled the scan cost; §Perf).
+    let threshold_of = |state: &SwapState| {
+        let obj = state.est_objective();
+        // `gain` is the unnormalised improvement (sum over weighted
+        // columns); eps is relative to the normalised objective.
+        tolerance(obj).max(eps * obj.abs() * state.weight_sum())
+    };
+    let mut threshold = threshold_of(state);
+    for _pass in 0..max_passes {
+        rng.shuffle(&mut order);
+        let mut improved = false;
+        for &i in &order {
+            if state.is_medoid(i) {
+                continue;
+            }
+            let (l, gain) = state.eval_candidate(d.row(i));
+            if gain > threshold {
+                state.apply_swap(d, l, i);
+                counters.add_swap();
+                swaps += 1;
+                improved = true;
+                threshold = threshold_of(state);
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    swaps
+}
+
+/// Steepest-descent (Eq. 3) swap search via the backend's gains kernel.
+/// Returns the number of swaps applied.
+pub fn steepest_loop(
+    backend: &dyn ComputeBackend,
+    d: &Matrix,
+    state: &mut SwapState,
+    max_swaps: usize,
+    counters: &Counters,
+) -> Result<usize> {
+    let k = state.k();
+    let mut swaps = 0usize;
+    for _ in 0..max_swaps {
+        let (shared, pm) = backend.gains(d, &state.dnear, &state.dsec, &state.near, k, &state.w)?;
+        let rl = removal_loss(&state.dnear, &state.dsec, &state.near, k, &state.w);
+        let mut best: Option<(usize, usize, f64)> = None;
+        for i in 0..d.rows {
+            if state.is_medoid(i) {
+                continue;
+            }
+            let row = pm.row(i);
+            let mut bl = 0usize;
+            let mut bv = f32::NEG_INFINITY;
+            for l in 0..k {
+                let v = row[l] + rl[l];
+                if v > bv {
+                    bv = v;
+                    bl = l;
+                }
+            }
+            let total = shared[i] as f64 + bv as f64;
+            if best.map_or(true, |(_, _, g)| total > g) {
+                best = Some((i, bl, total));
+            }
+        }
+        match best {
+            Some((i, l, gain)) if gain > tolerance(state.est_objective()) => {
+                state.apply_swap(d, l, i);
+                counters.add_swap();
+                swaps += 1;
+            }
+            _ => break,
+        }
+    }
+    Ok(swaps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::dissim::Metric;
+    use crate::rng::Rng;
+
+    fn instance(n: usize, m: usize, k: usize, seed: u64) -> (Matrix, SwapState, Rng) {
+        let mut rng = Rng::new(seed);
+        let d = Matrix::from_vec(n, m, (0..n * m).map(|_| rng.f32()).collect());
+        let med = rng.sample_distinct(n, k);
+        let st = SwapState::init(&d, med, vec![1.0; m], n);
+        (d, st, rng)
+    }
+
+    #[test]
+    fn eager_reaches_local_optimum() {
+        let (d, mut st, mut rng) = instance(60, 20, 4, 1);
+        let counters = Counters::default();
+        let before = st.est_objective();
+        let swaps = eager_loop(&d, &mut st, 100, &mut rng, &counters);
+        assert!(st.est_objective() <= before);
+        assert_eq!(counters.swaps(), swaps as u64);
+        // at a local optimum no candidate improves
+        let tol = tolerance(st.est_objective());
+        for i in 0..60 {
+            if st.is_medoid(i) {
+                continue;
+            }
+            let (_, gain) = st.eval_candidate(d.row(i));
+            assert!(gain <= tol, "candidate {i} still improves by {gain}");
+        }
+    }
+
+    #[test]
+    fn steepest_matches_eager_quality_roughly() {
+        let (d, st0, _) = instance(50, 16, 3, 2);
+        let counters = Counters::default();
+        let backend = NativeBackend::new(Metric::L1);
+
+        let mut st_e = st0.clone();
+        let mut rng = Rng::new(7);
+        eager_loop(&d, &mut st_e, 100, &mut rng, &counters);
+
+        let mut st_s = st0.clone();
+        steepest_loop(&backend, &d, &mut st_s, 500, &counters).unwrap();
+
+        // both must land at a local optimum; objectives within 10%
+        let (a, b) = (st_e.est_objective(), st_s.est_objective());
+        assert!((a - b).abs() / a.max(b) < 0.10, "eager {a} vs steepest {b}");
+    }
+
+    #[test]
+    fn steepest_objective_monotonically_decreases() {
+        let (d, mut st, _) = instance(40, 12, 3, 3);
+        let counters = Counters::default();
+        let backend = NativeBackend::new(Metric::L1);
+        let mut prev = st.est_objective();
+        loop {
+            let n = steepest_loop(&backend, &d, &mut st, 1, &counters).unwrap();
+            if n == 0 {
+                break;
+            }
+            let cur = st.est_objective();
+            assert!(cur < prev + 1e-9, "objective increased {prev} -> {cur}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn max_passes_zero_is_noop() {
+        let (d, mut st, mut rng) = instance(30, 10, 3, 4);
+        let counters = Counters::default();
+        let med0 = st.med.clone();
+        assert_eq!(eager_loop(&d, &mut st, 0, &mut rng, &counters), 0);
+        assert_eq!(st.med, med0);
+    }
+}

@@ -1,0 +1,41 @@
+//! The OneBatchPAM coordinator — the paper's system contribution.
+//!
+//! * [`sampler`] builds the single batch `X_m` (unif / debias / nniw /
+//!   lwcs variants from the paper's Experiments section);
+//! * [`state`] maintains the FasterPAM caches (near/sec per batch column,
+//!   removal losses, estimated objective) with incremental swap updates;
+//! * [`engine`] runs the swap search (eager Algorithm-2 loop or the
+//!   steepest-descent Eq.-3 loop that exercises the XLA gains kernel);
+//! * [`onebatch`] is the front door: Algorithm 1 end-to-end.
+
+pub mod engine;
+pub mod onebatch;
+pub mod sampler;
+pub mod state;
+
+pub use onebatch::{one_batch_pam, OneBatchConfig};
+pub use sampler::SamplerKind;
+
+use crate::telemetry::RunStats;
+
+/// Result of a k-medoids run.
+#[derive(Clone, Debug)]
+pub struct KMedoidsResult {
+    /// Selected medoid row indices into the dataset (unique, len k).
+    pub medoids: Vec<usize>,
+    /// Objective estimate on the batch (OneBatchPAM) or exact objective
+    /// over the evaluation set the algorithm used internally.
+    pub est_objective: f64,
+    /// Resource usage for the run.
+    pub stats: RunStats,
+}
+
+impl KMedoidsResult {
+    /// Sanity invariants every algorithm must satisfy.
+    pub fn validate(&self, n: usize, k: usize) {
+        assert_eq!(self.medoids.len(), k, "expected {k} medoids");
+        let set: std::collections::HashSet<_> = self.medoids.iter().collect();
+        assert_eq!(set.len(), k, "medoids must be unique");
+        assert!(self.medoids.iter().all(|&m| m < n), "medoid out of range");
+    }
+}

@@ -1,0 +1,270 @@
+//! OneBatchPAM front door (the paper's Algorithm 1).
+//!
+//! Pipeline: sample batch -> one `n x m` pairwise computation (the only
+//! dissimilarity cost, `O(n m p)`) -> optional debias mask / NNIW weights
+//! -> random medoid init -> swap search on the cached matrix.
+
+use super::engine;
+use super::sampler::{self, Batch, SamplerKind};
+use super::state::SwapState;
+use super::KMedoidsResult;
+use crate::backend::ComputeBackend;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::telemetry::{RunStats, Timer};
+use anyhow::Result;
+
+/// Which swap engine drives the local search.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapStrategy {
+    /// Algorithm 2: eager first-improvement scan (paper's choice).
+    Eager,
+    /// Eq. (3): batched best-swap via the gains kernel (XLA-friendly).
+    Steepest,
+}
+
+/// OneBatchPAM configuration.
+#[derive(Clone, Debug)]
+pub struct OneBatchConfig {
+    /// Number of medoids (k >= 2).
+    pub k: usize,
+    /// Batch variant (paper: nniw recommended).
+    pub sampler: SamplerKind,
+    /// Batch size; `None` -> paper default `100 * ln(k n)`.
+    pub m: Option<usize>,
+    /// Max eager passes (resp. max steepest swaps = k * this).
+    pub max_passes: usize,
+    /// Swap engine.
+    pub strategy: SwapStrategy,
+    /// Relative improvement threshold for accepting a swap (paper: with
+    /// threshold eps the swap count is O(log(n)/eps)).  0 = any
+    /// improvement (plain FasterPAM acceptance).
+    pub eps: f64,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for OneBatchConfig {
+    fn default() -> Self {
+        OneBatchConfig {
+            k: 10,
+            sampler: SamplerKind::Nniw,
+            m: None,
+            max_passes: 20,
+            strategy: SwapStrategy::Eager,
+            eps: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Run OneBatchPAM on dataset `x` with the given backend.
+pub fn one_batch_pam(
+    x: &Matrix,
+    cfg: &OneBatchConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<KMedoidsResult> {
+    let n = x.rows;
+    assert!(cfg.k >= 2 && cfg.k < n, "need 2 <= k < n");
+    let timer = Timer::start();
+    let counters = backend.counters();
+    let dissim0 = counters.dissim();
+    let swaps0 = counters.swaps();
+    let mut rng = Rng::new(cfg.seed);
+
+    // --- Batch construction (Algorithm 1, lines 3-6) -------------------
+    let m = cfg.m.unwrap_or_else(|| sampler::default_batch_size(n, cfg.k));
+    let batch: Batch = sampler::sample(cfg.sampler, x, m, backend.metric(), &mut rng);
+    let b = x.select_rows(&batch.indices);
+
+    // The single O(n m p) distance computation of the method.
+    let mut d = backend.pairwise(x, &b)?;
+    if batch.mask_self {
+        sampler::mask_self_distances(&mut d, &batch);
+    }
+    let mut w = batch.weights.clone();
+    if batch.want_nniw {
+        // NNIW reuses D: w_j = #rows whose nearest batch column is j.
+        let (idx, _) = backend.argmin_rows(&d)?;
+        let mut counts = vec![0.0f32; d.cols];
+        for &j in &idx {
+            counts[j] += 1.0;
+        }
+        w = counts;
+    }
+
+    // --- Random init + swap search (Algorithm 1, lines 7-8) ------------
+    let med = rng.sample_distinct(n, cfg.k);
+    let mut state = SwapState::init(&d, med, w, n);
+    match cfg.strategy {
+        SwapStrategy::Eager => {
+            engine::eager_loop_eps(&d, &mut state, cfg.max_passes, cfg.eps, &mut rng, &counters);
+        }
+        SwapStrategy::Steepest => {
+            engine::steepest_loop(backend, &d, &mut state, cfg.max_passes * cfg.k, &counters)?;
+        }
+    }
+
+    Ok(KMedoidsResult {
+        medoids: state.med.clone(),
+        est_objective: state.est_objective(),
+        stats: RunStats {
+            seconds: timer.secs(),
+            dissim_count: counters.dissim() - dissim0,
+            swap_count: counters.swaps() - swaps0,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::synth;
+    use crate::dissim::Metric;
+
+    fn blobs(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        synth::gen_gaussian_mixture(&mut rng, n, 4, 3, 0.1, 1.0)
+    }
+
+    fn run(cfg: &OneBatchConfig, x: &Matrix) -> KMedoidsResult {
+        let backend = NativeBackend::new(Metric::L1);
+        let r = one_batch_pam(x, cfg, &backend).unwrap();
+        r.validate(x.rows, cfg.k);
+        r
+    }
+
+    #[test]
+    fn produces_valid_result_all_samplers() {
+        let x = blobs(200, 1);
+        for sampler in SamplerKind::all() {
+            let cfg = OneBatchConfig { k: 3, sampler, m: Some(40), seed: 2, ..Default::default() };
+            let r = run(&cfg, &x);
+            assert!(r.est_objective.is_finite());
+            assert!(r.stats.dissim_count > 0);
+        }
+    }
+
+    #[test]
+    fn dissim_count_is_n_times_m_for_unif() {
+        let x = blobs(150, 3);
+        let cfg = OneBatchConfig {
+            k: 3,
+            sampler: SamplerKind::Unif,
+            m: Some(30),
+            seed: 1,
+            ..Default::default()
+        };
+        let r = run(&cfg, &x);
+        // the whole run computes exactly n*m dissimilarities
+        assert_eq!(r.stats.dissim_count, 150 * 30);
+    }
+
+    #[test]
+    fn beats_random_selection_on_clustered_data() {
+        let x = blobs(300, 4);
+        let backend = NativeBackend::new(Metric::L1);
+        let cfg = OneBatchConfig { k: 3, m: Some(60), seed: 5, ..Default::default() };
+        let r = one_batch_pam(&x, &cfg, &backend).unwrap();
+        // random baseline objective (exact, on full data)
+        let mut rng = Rng::new(6);
+        let rand_med = rng.sample_distinct(300, 3);
+        let full_obj = |med: &[usize]| -> f64 {
+            (0..300)
+                .map(|i| {
+                    med.iter()
+                        .map(|&mm| Metric::L1.eval(x.row(i), x.row(mm)))
+                        .fold(f32::INFINITY, f32::min) as f64
+                })
+                .sum::<f64>()
+                / 300.0
+        };
+        assert!(
+            full_obj(&r.medoids) < full_obj(&rand_med),
+            "OneBatchPAM should beat a random selection"
+        );
+    }
+
+    #[test]
+    fn steepest_strategy_runs() {
+        let x = blobs(120, 7);
+        let cfg = OneBatchConfig {
+            k: 3,
+            m: Some(30),
+            strategy: SwapStrategy::Steepest,
+            seed: 3,
+            ..Default::default()
+        };
+        let r = run(&cfg, &x);
+        assert!(r.est_objective.is_finite());
+    }
+
+    #[test]
+    fn eps_threshold_reduces_swap_count() {
+        let x = blobs(250, 12);
+        let backend = NativeBackend::new(Metric::L1);
+        let tight = one_batch_pam(
+            &x,
+            &OneBatchConfig { k: 4, m: Some(60), eps: 0.0, seed: 2, ..Default::default() },
+            &backend,
+        )
+        .unwrap();
+        let loose = one_batch_pam(
+            &x,
+            &OneBatchConfig { k: 4, m: Some(60), eps: 0.05, seed: 2, ..Default::default() },
+            &backend,
+        )
+        .unwrap();
+        assert!(
+            loose.stats.swap_count <= tight.stats.swap_count,
+            "eps=0.05 did {} swaps vs {} at eps=0",
+            loose.stats.swap_count,
+            tight.stats.swap_count
+        );
+    }
+
+    #[test]
+    fn progressive_sampler_covers_outliers() {
+        // a far-away mini-cluster that uniform batches often miss
+        let mut rng = Rng::new(21);
+        let mut x = synth::gen_gaussian_mixture(&mut rng, 380, 3, 2, 0.1, 1.0);
+        for i in 0..20 {
+            let row = x.row_mut(i);
+            for v in row.iter_mut() {
+                *v += 60.0; // 20 distant outliers
+            }
+        }
+        let backend = NativeBackend::new(Metric::L1);
+        let cfg = OneBatchConfig {
+            k: 3,
+            sampler: SamplerKind::Prog,
+            m: Some(50),
+            seed: 4,
+            ..Default::default()
+        };
+        let r = one_batch_pam(&x, &cfg, &backend).unwrap();
+        // with progressive batching the outlier cluster gets a medoid
+        assert!(
+            r.medoids.iter().any(|&m| m < 20),
+            "no medoid in the outlier cluster: {:?}",
+            r.medoids
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let x = blobs(100, 8);
+        let cfg = OneBatchConfig { k: 4, m: Some(25), seed: 11, ..Default::default() };
+        assert_eq!(run(&cfg, &x).medoids, run(&cfg, &x).medoids);
+    }
+
+    #[test]
+    fn m_defaults_to_paper_formula_and_caps_at_n() {
+        let x = blobs(80, 9);
+        // paper default would exceed n=80 -> capped, still valid
+        let cfg = OneBatchConfig { k: 3, m: None, seed: 1, ..Default::default() };
+        let r = run(&cfg, &x);
+        assert_eq!(r.stats.dissim_count, 80 * 80);
+    }
+}

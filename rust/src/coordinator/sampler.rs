@@ -1,0 +1,277 @@
+//! Batch construction: the four sampling variants of the paper.
+//!
+//! * `Unif`   — uniform without replacement (Theorem 1's setting);
+//! * `Debias` — uniform + `d(x_sigma(j), x_sigma(j)) = BIG` so batch
+//!   points get no free self-distance (prevents medoid bias toward the
+//!   batch);
+//! * `Nniw`   — uniform + nearest-neighbour importance weighting
+//!   (Loog 2012): w_j = #points whose nearest batch column is j.  Uses
+//!   the already-computed n x m matrix, so it is essentially free;
+//! * `Lwcs`   — lightweight-coreset sampling (Bachem et al. 2018):
+//!   q(x) = 1/2n + d(x, mean)^2 / 2 sum d(., mean)^2, weights 1/q;
+//! * `Prog`   — progressive batch construction (the paper's "Overfitting
+//!   for highly imbalanced datasets" future-work idea): seed half the
+//!   batch uniformly, then grow it by D-sampling points that are far from
+//!   the current batch, so sparse/distant regions get covered.
+
+use crate::dissim::{Metric, BIG};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// Which batch variant to run (paper Table 3's OneBatchPAM rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Uniform sampling.
+    Unif,
+    /// Uniform + self-distance masking.
+    Debias,
+    /// Uniform + nearest-neighbour importance weighting (paper's best).
+    Nniw,
+    /// Lightweight coreset sampling.
+    Lwcs,
+    /// Progressive batch construction (paper's future-work idea).
+    Prog,
+}
+
+impl SamplerKind {
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "unif" | "uniform" => SamplerKind::Unif,
+            "debias" => SamplerKind::Debias,
+            "nniw" => SamplerKind::Nniw,
+            "lwcs" => SamplerKind::Lwcs,
+            "prog" | "progressive" => SamplerKind::Prog,
+            _ => return None,
+        })
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SamplerKind::Unif => "unif",
+            SamplerKind::Debias => "debias",
+            SamplerKind::Nniw => "nniw",
+            SamplerKind::Lwcs => "lwcs",
+            SamplerKind::Prog => "prog",
+        }
+    }
+
+    /// The paper's four variants (Table 3 rows).
+    pub fn paper() -> [SamplerKind; 4] {
+        [SamplerKind::Unif, SamplerKind::Debias, SamplerKind::Nniw, SamplerKind::Lwcs]
+    }
+
+    /// All variants including this repo's extension (ablation sweeps).
+    pub fn all() -> [SamplerKind; 5] {
+        [
+            SamplerKind::Unif,
+            SamplerKind::Debias,
+            SamplerKind::Nniw,
+            SamplerKind::Lwcs,
+            SamplerKind::Prog,
+        ]
+    }
+}
+
+/// A constructed batch: indices into the dataset plus initial weights.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// sigma: batch column j -> dataset row sigma(j).
+    pub indices: Vec<usize>,
+    /// Per-column weights (1 for unif/debias until NNIW updates them).
+    pub weights: Vec<f32>,
+    /// Whether self-distances must be masked to BIG after the pairwise
+    /// computation (debias variant).
+    pub mask_self: bool,
+    /// Whether NNIW weights should be computed from the distance matrix.
+    pub want_nniw: bool,
+}
+
+/// Paper default batch size: `m = 100 * log(k * n)` (natural log),
+/// clamped to `[k + 1, n]`.
+pub fn default_batch_size(n: usize, k: usize) -> usize {
+    let m = (100.0 * ((k as f64) * (n as f64)).ln()).ceil() as usize;
+    m.clamp((k + 1).min(n), n)
+}
+
+/// Draw the batch according to `kind`.
+///
+/// For `Lwcs` the q-distribution needs one pass over the data
+/// (O(np) — same order as computing the mean), matching the lightweight
+/// coreset construction cost.
+pub fn sample(kind: SamplerKind, x: &Matrix, m: usize, metric: Metric, rng: &mut Rng) -> Batch {
+    let n = x.rows;
+    let m = m.min(n);
+    match kind {
+        SamplerKind::Unif | SamplerKind::Debias | SamplerKind::Nniw => Batch {
+            indices: rng.sample_distinct(n, m),
+            weights: vec![1.0; m],
+            mask_self: kind == SamplerKind::Debias,
+            want_nniw: kind == SamplerKind::Nniw,
+        },
+        SamplerKind::Prog => {
+            // seed half uniformly, then D-sample far-from-batch points
+            let seed_m = (m / 2).max(1);
+            let mut chosen = rng.sample_distinct(n, seed_m);
+            let mut in_batch = vec![false; n];
+            let mut dmin = vec![f32::INFINITY; n];
+            for &j in &chosen {
+                in_batch[j] = true;
+            }
+            for i in 0..n {
+                for &j in &chosen {
+                    let v = metric.eval(x.row(i), x.row(j));
+                    if v < dmin[i] {
+                        dmin[i] = v;
+                    }
+                }
+            }
+            while chosen.len() < m {
+                let weights: Vec<f64> = dmin
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| if in_batch[i] { 0.0 } else { v as f64 })
+                    .collect();
+                let c = rng.weighted(&weights);
+                if in_batch[c] {
+                    break; // all remaining mass is zero (duplicates)
+                }
+                in_batch[c] = true;
+                chosen.push(c);
+                for i in 0..n {
+                    let v = metric.eval(x.row(i), x.row(c));
+                    if v < dmin[i] {
+                        dmin[i] = v;
+                    }
+                }
+            }
+            let mlen = chosen.len();
+            Batch { indices: chosen, weights: vec![1.0; mlen], mask_self: false, want_nniw: true }
+        }
+        SamplerKind::Lwcs => {
+            // mean point
+            let p = x.cols;
+            let mut mean = vec![0.0f32; p];
+            for i in 0..n {
+                for (mj, v) in mean.iter_mut().zip(x.row(i)) {
+                    *mj += v;
+                }
+            }
+            for v in &mut mean {
+                *v /= n as f32;
+            }
+            // q(x) = 1/(2n) + d(x, mean)^2 / (2 * sum)
+            let d2: Vec<f64> = (0..n)
+                .map(|i| {
+                    let d = metric.eval(x.row(i), &mean) as f64;
+                    d * d
+                })
+                .collect();
+            let total: f64 = d2.iter().sum::<f64>().max(1e-30);
+            let q: Vec<f64> = d2
+                .iter()
+                .map(|&v| 0.5 / n as f64 + 0.5 * v / total)
+                .collect();
+            // sample WITH replacement per the coreset construction, then
+            // dedupe accumulating 1/q weights on repeats.
+            let mut weight_of: std::collections::HashMap<usize, f64> = Default::default();
+            let mut order: Vec<usize> = Vec::new();
+            for _ in 0..m {
+                let i = rng.weighted(&q);
+                if !weight_of.contains_key(&i) {
+                    order.push(i);
+                }
+                *weight_of.entry(i).or_insert(0.0) += 1.0 / (m as f64 * q[i]);
+            }
+            let weights: Vec<f32> = order.iter().map(|i| weight_of[i] as f32).collect();
+            Batch { indices: order, weights, mask_self: false, want_nniw: false }
+        }
+    }
+}
+
+/// Apply the debias mask in place: `d[sigma(j), j] = BIG`.
+pub fn mask_self_distances(d: &mut Matrix, batch: &Batch) {
+    for (j, &i) in batch.indices.iter().enumerate() {
+        d.set(i, j, BIG);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn blob(n: usize, p: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(n, p, (0..n * p).map(|_| rng.f32()).collect())
+    }
+
+    #[test]
+    fn default_size_grows_logarithmically() {
+        let m1 = default_batch_size(1_000, 10);
+        let m2 = default_batch_size(100_000, 10);
+        assert!(m2 > m1);
+        assert!(m2 - m1 < 500, "log growth expected, got {m1} -> {m2}");
+        // paper: m = 100 log(k n); n=60000, k=10 -> ~1330
+        let m = default_batch_size(60_000, 10);
+        assert!((1_300..1_400).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn default_size_clamped_to_n() {
+        assert_eq!(default_batch_size(50, 10), 50);
+    }
+
+    #[test]
+    fn unif_indices_distinct_weights_one() {
+        let x = blob(100, 3, 1);
+        let mut rng = Rng::new(2);
+        let b = sample(SamplerKind::Unif, &x, 20, Metric::L1, &mut rng);
+        assert_eq!(b.indices.len(), 20);
+        let set: std::collections::HashSet<_> = b.indices.iter().collect();
+        assert_eq!(set.len(), 20);
+        assert!(b.weights.iter().all(|&w| w == 1.0));
+        assert!(!b.mask_self && !b.want_nniw);
+    }
+
+    #[test]
+    fn debias_and_nniw_flags() {
+        let x = blob(50, 3, 3);
+        let mut rng = Rng::new(4);
+        assert!(sample(SamplerKind::Debias, &x, 10, Metric::L1, &mut rng).mask_self);
+        assert!(sample(SamplerKind::Nniw, &x, 10, Metric::L1, &mut rng).want_nniw);
+    }
+
+    #[test]
+    fn lwcs_weights_positive_and_mass_near_one() {
+        let x = blob(200, 4, 5);
+        let mut rng = Rng::new(6);
+        let b = sample(SamplerKind::Lwcs, &x, 60, Metric::L2, &mut rng);
+        assert!(!b.indices.is_empty());
+        assert!(b.weights.iter().all(|&w| w > 0.0));
+        // importance weights sum to ~n in expectation (each term 1/(m q))
+        let total: f32 = b.weights.iter().sum();
+        assert!(total > 50.0 && total < 800.0, "total weight {total}");
+    }
+
+    #[test]
+    fn mask_self_sets_big() {
+        let x = blob(10, 2, 7);
+        let mut rng = Rng::new(8);
+        let b = sample(SamplerKind::Debias, &x, 4, Metric::L1, &mut rng);
+        let mut d = Matrix::zeros(10, 4);
+        mask_self_distances(&mut d, &b);
+        for (j, &i) in b.indices.iter().enumerate() {
+            assert_eq!(d.get(i, j), BIG);
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for k in SamplerKind::all() {
+            assert_eq!(SamplerKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SamplerKind::parse("zzz"), None);
+    }
+}

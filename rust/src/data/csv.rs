@@ -1,0 +1,89 @@
+//! Tiny CSV loader (numeric-only; no csv crate offline).
+//!
+//! Accepts comma/semicolon/whitespace separation, skips a header line if
+//! the first field is non-numeric, ignores blank lines and `#` comments.
+
+use super::Dataset;
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Load a numeric CSV file into a [`Dataset`].
+pub fn load_csv(path: &Path) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    parse_csv(&text, &name)
+}
+
+/// Parse CSV text (exposed for tests).
+pub fn parse_csv(text: &str, name: &str) -> Result<Dataset> {
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line
+            .split(|c: char| c == ',' || c == ';' || c.is_whitespace())
+            .filter(|f| !f.is_empty())
+            .collect();
+        let parsed: std::result::Result<Vec<f32>, _> =
+            fields.iter().map(|f| f.parse::<f32>()).collect();
+        match parsed {
+            Ok(v) => {
+                if let Some(first) = rows.first() {
+                    if v.len() != first.len() {
+                        bail!(
+                            "line {}: expected {} fields, got {}",
+                            lineno + 1,
+                            first.len(),
+                            v.len()
+                        );
+                    }
+                }
+                rows.push(v);
+            }
+            Err(_) if rows.is_empty() => continue, // header line
+            Err(e) => bail!("line {}: {}", lineno + 1, e),
+        }
+    }
+    if rows.is_empty() {
+        bail!("no numeric rows in {name}");
+    }
+    let p = rows[0].len();
+    let n = rows.len();
+    let data: Vec<f32> = rows.into_iter().flatten().collect();
+    Ok(Dataset { name: name.into(), x: Matrix::from_vec(n, p, data) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_with_header_and_comments() {
+        let d = parse_csv("a,b\n# c\n1,2\n3,4\n", "t").unwrap();
+        assert_eq!((d.n(), d.p()), (2, 2));
+        assert_eq!(d.x.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn mixed_separators() {
+        let d = parse_csv("1;2 3\n4,5,6\n", "t").unwrap();
+        assert_eq!((d.n(), d.p()), (2, 3));
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(parse_csv("1,2\n3\n", "t").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_csv("only,text\n", "t").is_err());
+    }
+}

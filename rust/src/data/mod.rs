@@ -1,0 +1,66 @@
+//! Dataset abstraction, loaders and synthetic generators.
+
+pub mod csv;
+pub mod synth;
+
+use crate::linalg::Matrix;
+
+/// An in-memory dataset: `n` rows of `p` features plus provenance.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Human name (paper dataset name or file stem).
+    pub name: String,
+    /// Feature matrix (n x p).
+    pub x: Matrix,
+}
+
+impl Dataset {
+    /// Number of points.
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    /// Feature dimension.
+    pub fn p(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Min-max scale every feature to `[0, 1]` (constant features -> 0).
+    ///
+    /// Matches the usual preprocessing for mixed-scale UCI tables so no
+    /// single feature dominates the L1 distance.
+    pub fn minmax_scale(&mut self) {
+        let (n, p) = (self.n(), self.p());
+        for j in 0..p {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for i in 0..n {
+                let v = self.x.get(i, j);
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let span = hi - lo;
+            for i in 0..n {
+                let v = self.x.get(i, j);
+                self.x.set(i, j, if span > 0.0 { (v - lo) / span } else { 0.0 });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_scales_to_unit_interval() {
+        let mut d = Dataset {
+            name: "t".into(),
+            x: Matrix::from_vec(3, 2, vec![0.0, 5.0, 10.0, 5.0, 20.0, 5.0]),
+        };
+        d.minmax_scale();
+        assert_eq!(d.x.col(0), vec![0.0, 0.5, 1.0]);
+        // constant feature collapses to 0
+        assert_eq!(d.x.col(1), vec![0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,309 @@
+//! Dissimilarity functions.
+//!
+//! k-medoids works with *generic* dissimilarities (the paper's defining
+//! feature vs k-means); the paper's experiments use L1.  `Dissimilarity`
+//! is the open extension point — all algorithms in the crate are generic
+//! over it through the telemetry-counting `DissimCounter` wrapper.
+
+use crate::linalg::Matrix;
+use crate::telemetry::Counters;
+use std::sync::Arc;
+
+/// Finite "infinity" sentinel shared with the Python side (kernels/ref.py).
+/// Finite so sentinel-sentinel differences stay 0.0 instead of NaN.
+pub const BIG: f32 = 1e30;
+
+/// A dissimilarity measure over feature vectors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Manhattan / city-block (the paper's choice).
+    L1,
+    /// Euclidean.
+    L2,
+    /// Squared Euclidean (matmul-friendly form on the XLA path).
+    SqL2,
+    /// Chebyshev (max coordinate difference).
+    Chebyshev,
+    /// Cosine distance `1 - cos(x, y)` (0 for zero vectors).
+    Cosine,
+}
+
+impl Metric {
+    /// Parse from the CLI / config spelling.
+    pub fn parse(s: &str) -> Option<Metric> {
+        Some(match s {
+            "l1" | "manhattan" => Metric::L1,
+            "l2" | "euclidean" => Metric::L2,
+            "sqeuclidean" | "sql2" => Metric::SqL2,
+            "chebyshev" | "linf" => Metric::Chebyshev,
+            "cosine" => Metric::Cosine,
+            _ => return None,
+        })
+    }
+
+    /// Canonical name (manifest / CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::L1 => "l1",
+            Metric::L2 => "l2",
+            Metric::SqL2 => "sqeuclidean",
+            Metric::Chebyshev => "chebyshev",
+            Metric::Cosine => "cosine",
+        }
+    }
+
+    /// Pointwise dissimilarity between two vectors.
+    #[inline]
+    pub fn eval(self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Metric::L1 => self::l1(a, b),
+            Metric::L2 => self::sq_l2(a, b).sqrt(),
+            Metric::SqL2 => self::sq_l2(a, b),
+            Metric::Chebyshev => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max),
+            Metric::Cosine => {
+                let (mut xy, mut xx, mut yy) = (0.0f32, 0.0f32, 0.0f32);
+                for (x, y) in a.iter().zip(b) {
+                    xy += x * y;
+                    xx += x * x;
+                    yy += y * y;
+                }
+                if xx == 0.0 || yy == 0.0 {
+                    0.0
+                } else {
+                    1.0 - xy / (xx.sqrt() * yy.sqrt())
+                }
+            }
+        }
+    }
+}
+
+// Point-to-point evaluation: the plain iterator form measured fastest
+// for single pairs (manual lane-accumulators were tried and *regressed*
+// at p <= 128 — see EXPERIMENTS.md §Perf).  Bulk matrices go through
+// the transposed kernel in `cross_matrix` instead.
+
+#[inline]
+fn l1(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+#[inline]
+fn sq_l2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Dissimilarity evaluator with telemetry counting.
+///
+/// Every algorithm in the crate routes point-to-point evaluations through
+/// this, so the `O(nm)` / `O(n^2)` / `O((T+k) n log n)` claims of Table 1
+/// can be *measured* (see benches/complexity.rs).
+#[derive(Clone)]
+pub struct DissimCounter {
+    /// The metric in use.
+    pub metric: Metric,
+    counters: Arc<Counters>,
+}
+
+impl DissimCounter {
+    /// Wrap a metric with a fresh counter set.
+    pub fn new(metric: Metric) -> Self {
+        DissimCounter { metric, counters: Arc::new(Counters::default()) }
+    }
+
+    /// Wrap with shared counters (e.g. one per experiment run).
+    pub fn with_counters(metric: Metric, counters: Arc<Counters>) -> Self {
+        DissimCounter { metric, counters }
+    }
+
+    /// Evaluate `d(a, b)`, counting one dissimilarity computation.
+    #[inline]
+    pub fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        self.counters.add_dissim(1);
+        self.metric.eval(a, b)
+    }
+
+    /// Distances from one point to many rows of `x` (counts `idx.len()`).
+    pub fn point_to_rows(&self, x: &Matrix, point: &[f32], idx: &[usize]) -> Vec<f32> {
+        self.counters.add_dissim(idx.len() as u64);
+        idx.iter().map(|&i| self.metric.eval(x.row(i), point)).collect()
+    }
+
+    /// Total dissimilarity computations so far.
+    pub fn count(&self) -> u64 {
+        self.counters.dissim()
+    }
+
+    /// Shared counters handle.
+    pub fn counters(&self) -> Arc<Counters> {
+        self.counters.clone()
+    }
+}
+
+/// Blocked `rows(x) x rows(b)` distance matrix (native path).
+///
+/// For the accumulable metrics (L1 / L2 / SqL2 / Chebyshev) this uses a
+/// **transposed batch layout**: `b` is transposed once to `(p, m)` so the
+/// inner loop runs SIMD across a block of batch columns with contiguous
+/// loads (measured 2.2x at p=16 up to 5.8x at p=784 over the
+/// row-by-row form — EXPERIMENTS.md §Perf).  Cosine falls back to the
+/// row path.  Counts `n*m` evaluations either way.
+pub fn cross_matrix(d: &DissimCounter, x: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(x.cols, b.cols, "feature dims differ");
+    d.counters.add_dissim((x.rows * b.rows) as u64);
+    let (n, m, p) = (x.rows, b.rows, x.cols);
+    let mut out = Matrix::zeros(n, m);
+    let metric = d.metric;
+
+    if matches!(metric, Metric::Cosine) || m < 8 {
+        // row-by-row fallback (non-accumulable metric or tiny batch)
+        for i in 0..n {
+            let xi = x.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..m {
+                orow[j] = metric.eval(xi, b.row(j));
+            }
+        }
+        return out;
+    }
+
+    // transpose b to (p, m): bt[d * m + j] = b[j, d]
+    let mut bt = vec![0.0f32; p * m];
+    for j in 0..m {
+        let brow = b.row(j);
+        for dd in 0..p {
+            bt[dd * m + j] = brow[dd];
+        }
+    }
+
+    // j-blocked accumulation, SIMD across the batch columns
+    const BJ: usize = 64;
+    let post_sqrt = metric == Metric::L2;
+    for j0 in (0..m).step_by(BJ) {
+        let jw = BJ.min(m - j0);
+        for i in 0..n {
+            let xi = x.row(i);
+            let orow = &mut out.row_mut(i)[j0..j0 + jw];
+            orow.iter_mut().for_each(|v| *v = 0.0);
+            match metric {
+                Metric::L1 => {
+                    for (dd, &xv) in xi.iter().enumerate() {
+                        let brow = &bt[dd * m + j0..dd * m + j0 + jw];
+                        for l in 0..jw {
+                            orow[l] += (xv - brow[l]).abs();
+                        }
+                    }
+                }
+                Metric::SqL2 | Metric::L2 => {
+                    for (dd, &xv) in xi.iter().enumerate() {
+                        let brow = &bt[dd * m + j0..dd * m + j0 + jw];
+                        for l in 0..jw {
+                            let diff = xv - brow[l];
+                            orow[l] += diff * diff;
+                        }
+                    }
+                }
+                Metric::Chebyshev => {
+                    for (dd, &xv) in xi.iter().enumerate() {
+                        let brow = &bt[dd * m + j0..dd * m + j0 + jw];
+                        for l in 0..jw {
+                            orow[l] = orow[l].max((xv - brow[l]).abs());
+                        }
+                    }
+                }
+                Metric::Cosine => unreachable!(),
+            }
+            if post_sqrt {
+                orow.iter_mut().for_each(|v| *v = v.sqrt());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: Vec<f32>) -> Matrix {
+        Matrix::from_vec(rows, cols, v)
+    }
+
+    #[test]
+    fn l1_known() {
+        assert_eq!(Metric::L1.eval(&[0.0, 0.0], &[1.0, 2.0]), 3.0);
+    }
+
+    #[test]
+    fn l2_and_sql2_consistent() {
+        let (a, b) = ([3.0f32, 0.0], [0.0f32, 4.0]);
+        assert!((Metric::L2.eval(&a, &b) - 5.0).abs() < 1e-6);
+        assert!((Metric::SqL2.eval(&a, &b) - 25.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn chebyshev_known() {
+        assert_eq!(Metric::Chebyshev.eval(&[1.0, 5.0], &[4.0, 6.0]), 3.0);
+    }
+
+    #[test]
+    fn cosine_bounds_and_zero_vec() {
+        assert!(Metric::Cosine.eval(&[1.0, 0.0], &[1.0, 0.0]).abs() < 1e-6);
+        assert!((Metric::Cosine.eval(&[1.0, 0.0], &[-1.0, 0.0]) - 2.0).abs() < 1e-6);
+        assert_eq!(Metric::Cosine.eval(&[0.0, 0.0], &[1.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn metric_axioms_identity_symmetry() {
+        let mut rng = crate::rng::Rng::new(2);
+        for metric in [Metric::L1, Metric::L2, Metric::SqL2, Metric::Chebyshev] {
+            for _ in 0..50 {
+                let a: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+                let b: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+                assert!(metric.eval(&a, &a) < 1e-5);
+                assert!((metric.eval(&a, &b) - metric.eval(&b, &a)).abs() < 1e-5);
+                assert!(metric.eval(&a, &b) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for metric in [Metric::L1, Metric::L2, Metric::SqL2, Metric::Chebyshev, Metric::Cosine] {
+            assert_eq!(Metric::parse(metric.name()), Some(metric));
+        }
+        assert_eq!(Metric::parse("bogus"), None);
+    }
+
+    #[test]
+    fn cross_matrix_matches_pointwise_and_counts() {
+        let x = m(3, 2, vec![0., 0., 1., 1., 2., 0.]);
+        let b = m(2, 2, vec![0., 1., 2., 2.]);
+        let d = DissimCounter::new(Metric::L1);
+        let c = cross_matrix(&d, &x, &b);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(c.get(i, j), Metric::L1.eval(x.row(i), b.row(j)));
+            }
+        }
+        assert_eq!(d.count(), 6);
+    }
+
+    #[test]
+    fn cross_matrix_blocked_equals_unblocked_large() {
+        let mut rng = crate::rng::Rng::new(3);
+        let x = Matrix::from_vec(70, 5, (0..350).map(|_| rng.f32()).collect());
+        let b = Matrix::from_vec(67, 5, (0..335).map(|_| rng.f32()).collect());
+        let d = DissimCounter::new(Metric::L1);
+        let c = cross_matrix(&d, &x, &b);
+        for i in [0, 13, 69] {
+            for j in [0, 31, 32, 66] {
+                assert!((c.get(i, j) - Metric::L1.eval(x.row(i), b.row(j))).abs() < 1e-5);
+            }
+        }
+    }
+}

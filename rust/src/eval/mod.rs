@@ -1,0 +1,193 @@
+//! Evaluation: exact k-medoids objective, the paper's ΔRO / RT metrics
+//! (Eq. 6), Pareto-front extraction (Appendix D) and the cluster-quality
+//! utilities in [`quality`].
+
+pub mod quality;
+
+use crate::dissim::DissimCounter;
+use crate::linalg::Matrix;
+
+/// Exact objective `L(M) = (1/n) sum_i d(x_i, M)` (n*k evaluations).
+///
+/// Evaluation is *not* part of any algorithm's timed section, matching
+/// the paper's protocol.
+pub fn objective(x: &Matrix, medoids: &[usize], d: &DissimCounter) -> f64 {
+    let n = x.rows;
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let xi = x.row(i);
+        let mut best = f32::INFINITY;
+        for &m in medoids {
+            let v = d.eval(xi, x.row(m));
+            if v < best {
+                best = v;
+            }
+        }
+        total += best as f64;
+    }
+    total / n as f64
+}
+
+/// One algorithm's measurement on one workload.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Algorithm display name (paper row label).
+    pub method: String,
+    /// Wall-clock seconds of the selection itself.
+    pub seconds: f64,
+    /// Exact full-data objective of the selected medoids.
+    pub objective: f64,
+    /// Dissimilarity computations used by the selection.
+    pub dissim_count: u64,
+}
+
+/// Delta relative objective (paper Eq. 6): `L(M_A)/L(M_A*) - 1`, in %,
+/// where `A*` is the best objective in the run set.
+pub fn delta_relative_objective(objectives: &[f64]) -> Vec<f64> {
+    let best = objectives
+        .iter()
+        .copied()
+        .filter(|v| v.is_finite())
+        .fold(f64::INFINITY, f64::min);
+    objectives
+        .iter()
+        .map(|&o| if o.is_finite() { (o / best - 1.0) * 100.0 } else { f64::NAN })
+        .collect()
+}
+
+/// Relative time (paper Eq. 6): `T_A / T_ref`, in %, against an explicit
+/// reference time (the paper normalises by FasterPAM on small scale and
+/// by OneBatch-nniw on large scale).
+pub fn relative_time(seconds: &[f64], reference: f64) -> Vec<f64> {
+    seconds
+        .iter()
+        .map(|&s| if reference > 0.0 { s / reference * 100.0 } else { f64::NAN })
+        .collect()
+}
+
+/// A point in (time, objective) space for Pareto analysis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParetoPoint {
+    /// Run time (seconds).
+    pub time: f64,
+    /// Objective value.
+    pub objective: f64,
+    /// Index into the original measurement list.
+    pub index: usize,
+}
+
+/// Indices of the Pareto-optimal points (minimise both time and
+/// objective).  A point is dominated if another has `time <=` AND
+/// `objective <=` with at least one strict.  Output sorted by time.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len())
+        .filter(|&i| points[i].0.is_finite() && points[i].1.is_finite())
+        .collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .partial_cmp(&points[b].0)
+            .unwrap()
+            .then(points[a].1.partial_cmp(&points[b].1).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_obj = f64::INFINITY;
+    for &i in &idx {
+        if points[i].1 < best_obj {
+            front.push(i);
+            best_obj = points[i].1;
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dissim::Metric;
+    use crate::rng::Rng;
+
+    #[test]
+    fn objective_known_values() {
+        // points on a line: 0, 1, 10; medoid {0} -> mean(0,1,10)
+        let x = Matrix::from_vec(3, 1, vec![0.0, 1.0, 10.0]);
+        let d = DissimCounter::new(Metric::L1);
+        assert!((objective(&x, &[0], &d) - 11.0 / 3.0).abs() < 1e-6);
+        // medoids {0, 2} -> mean(0, 1, 0)
+        assert!((objective(&x, &[0, 2], &d) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn objective_more_medoids_never_worse() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_vec(50, 3, (0..150).map(|_| rng.f32()).collect());
+        let d = DissimCounter::new(Metric::L1);
+        let o2 = objective(&x, &[0, 1], &d);
+        let o3 = objective(&x, &[0, 1, 2], &d);
+        assert!(o3 <= o2 + 1e-9);
+    }
+
+    #[test]
+    fn dro_best_is_zero() {
+        let dro = delta_relative_objective(&[2.0, 1.0, 4.0]);
+        assert!((dro[1]).abs() < 1e-12);
+        assert!((dro[0] - 100.0).abs() < 1e-9);
+        assert!((dro[2] - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dro_ignores_nan_rows() {
+        let dro = delta_relative_objective(&[f64::NAN, 1.0]);
+        assert!(dro[0].is_nan());
+        assert_eq!(dro[1], 0.0);
+    }
+
+    #[test]
+    fn rt_normalises() {
+        let rt = relative_time(&[0.5, 1.0, 2.0], 1.0);
+        assert_eq!(rt, vec![50.0, 100.0, 200.0]);
+    }
+
+    #[test]
+    fn pareto_front_minimal_and_dominating() {
+        //       time  obj
+        let pts = [(1.0, 5.0), (2.0, 3.0), (3.0, 4.0), (4.0, 1.0), (0.5, 9.0)];
+        let front = pareto_front(&pts);
+        assert_eq!(front, vec![4, 0, 1, 3]); // sorted by time
+        // every non-front point is dominated by some front point
+        for i in 0..pts.len() {
+            if front.contains(&i) {
+                continue;
+            }
+            assert!(front.iter().any(|&f| pts[f].0 <= pts[i].0 && pts[f].1 <= pts[i].1));
+        }
+    }
+
+    #[test]
+    fn pareto_handles_nan() {
+        let pts = [(1.0, f64::NAN), (2.0, 1.0)];
+        assert_eq!(pareto_front(&pts), vec![1]);
+    }
+
+    #[test]
+    fn pareto_random_front_property() {
+        let mut rng = Rng::new(9);
+        let pts: Vec<(f64, f64)> = (0..60).map(|_| (rng.f64(), rng.f64())).collect();
+        let front = pareto_front(&pts);
+        assert!(!front.is_empty());
+        // along the front (sorted by time), objectives strictly decrease,
+        // so no front point dominates another
+        for w in front.windows(2) {
+            assert!(pts[w[0]].0 <= pts[w[1]].0);
+            assert!(pts[w[0]].1 > pts[w[1]].1);
+        }
+        // and every non-front point is dominated
+        for i in 0..pts.len() {
+            if !front.contains(&i) {
+                assert!(front
+                    .iter()
+                    .any(|&f| pts[f].0 <= pts[i].0 && pts[f].1 <= pts[i].1));
+            }
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Cluster-quality utilities beyond the raw objective: hard assignment,
+//! per-cluster statistics and the (medoid-based) simplified silhouette.
+//!
+//! These are what downstream users of a k-medoids library actually call
+//! after clustering; the paper's evaluation only needs `objective`, but a
+//! release-grade library needs the rest.
+
+use crate::dissim::DissimCounter;
+use crate::linalg::Matrix;
+
+/// Hard assignment of every row to its nearest medoid.
+/// Returns (assignment: n -> slot index, distance to that medoid).
+pub fn assign(x: &Matrix, medoids: &[usize], d: &DissimCounter) -> (Vec<usize>, Vec<f32>) {
+    let n = x.rows;
+    let mut a = vec![0usize; n];
+    let mut dist = vec![0f32; n];
+    for i in 0..n {
+        let xi = x.row(i);
+        let (mut bl, mut bv) = (0usize, f32::INFINITY);
+        for (l, &m) in medoids.iter().enumerate() {
+            let v = d.eval(xi, x.row(m));
+            if v < bv {
+                bv = v;
+                bl = l;
+            }
+        }
+        a[i] = bl;
+        dist[i] = bv;
+    }
+    (a, dist)
+}
+
+/// Assign *new* points (rows of `q`) to the medoids of a fitted model —
+/// the "predict" half of the API.
+pub fn assign_new(x: &Matrix, medoids: &[usize], q: &Matrix, d: &DissimCounter) -> Vec<usize> {
+    (0..q.rows)
+        .map(|i| {
+            let qi = q.row(i);
+            let (mut bl, mut bv) = (0usize, f32::INFINITY);
+            for (l, &m) in medoids.iter().enumerate() {
+                let v = d.eval(qi, x.row(m));
+                if v < bv {
+                    bv = v;
+                    bl = l;
+                }
+            }
+            bl
+        })
+        .collect()
+}
+
+/// Simplified (medoid-based) silhouette: for each point,
+/// `s = (b - a) / max(a, b)` with `a` = distance to its own medoid and
+/// `b` = distance to the nearest *other* medoid.  Returns the mean over
+/// all non-medoid points; in [-1, 1], higher is better.
+///
+/// This is the standard O(nk) approximation (full silhouette is O(n^2),
+/// exactly the cost the paper is trying to avoid).
+pub fn simplified_silhouette(x: &Matrix, medoids: &[usize], d: &DissimCounter) -> f64 {
+    assert!(medoids.len() >= 2);
+    let n = x.rows;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for i in 0..n {
+        if medoids.contains(&i) {
+            continue;
+        }
+        let xi = x.row(i);
+        let (mut a, mut b) = (f32::INFINITY, f32::INFINITY);
+        for &m in medoids {
+            let v = d.eval(xi, x.row(m));
+            if v < a {
+                b = a;
+                a = v;
+            } else if v < b {
+                b = v;
+            }
+        }
+        let denom = a.max(b);
+        if denom > 0.0 {
+            total += ((b - a) / denom) as f64;
+        }
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+/// Per-cluster summary: (size, mean within-cluster distance to medoid).
+pub fn cluster_stats(x: &Matrix, medoids: &[usize], d: &DissimCounter) -> Vec<(usize, f64)> {
+    let (a, dist) = assign(x, medoids, d);
+    let k = medoids.len();
+    let mut size = vec![0usize; k];
+    let mut sum = vec![0f64; k];
+    for i in 0..x.rows {
+        size[a[i]] += 1;
+        sum[a[i]] += dist[i] as f64;
+    }
+    (0..k)
+        .map(|l| (size[l], if size[l] > 0 { sum[l] / size[l] as f64 } else { 0.0 }))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dissim::Metric;
+    use crate::rng::Rng;
+
+    fn two_blobs() -> Matrix {
+        // 10 points at ~0, 10 points at ~100
+        let mut rng = Rng::new(1);
+        let mut data = Vec::new();
+        for c in 0..2 {
+            for _ in 0..10 {
+                data.push(c as f32 * 100.0 + rng.f32());
+                data.push(c as f32 * 100.0 + rng.f32());
+            }
+        }
+        Matrix::from_vec(20, 2, data)
+    }
+
+    #[test]
+    fn assign_respects_geometry() {
+        let x = two_blobs();
+        let d = DissimCounter::new(Metric::L1);
+        let (a, dist) = assign(&x, &[0, 10], &d);
+        assert!(a[..10].iter().all(|&l| l == 0));
+        assert!(a[10..].iter().all(|&l| l == 1));
+        assert!(dist.iter().all(|&v| v < 5.0));
+    }
+
+    #[test]
+    fn assign_new_predicts() {
+        let x = two_blobs();
+        let d = DissimCounter::new(Metric::L1);
+        let q = Matrix::from_vec(2, 2, vec![1.0, 1.0, 99.0, 99.0]);
+        assert_eq!(assign_new(&x, &[0, 10], &q, &d), vec![0, 1]);
+    }
+
+    #[test]
+    fn silhouette_high_for_separated_low_for_bad() {
+        let x = two_blobs();
+        let d = DissimCounter::new(Metric::L1);
+        let good = simplified_silhouette(&x, &[0, 10], &d);
+        assert!(good > 0.9, "{good}");
+        // both medoids in the same blob -> poor silhouette
+        let bad = simplified_silhouette(&x, &[0, 1], &d);
+        assert!(bad < good, "bad {bad} vs good {good}");
+    }
+
+    #[test]
+    fn cluster_stats_sizes_sum_to_n() {
+        let x = two_blobs();
+        let d = DissimCounter::new(Metric::L1);
+        let stats = cluster_stats(&x, &[0, 10], &d);
+        assert_eq!(stats.iter().map(|s| s.0).sum::<usize>(), 20);
+        assert_eq!(stats[0].0, 10);
+        assert!(stats[0].1 < 2.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Shared helpers for the custom bench harness (criterion is unavailable
+//! offline): env-tunable scale knobs, robust timing (median + MAD over
+//! warm iterations) and records-CSV reload so the per-table benches can
+//! share one expensive grid run.
+
+use super::runner::Record;
+use std::path::Path;
+use std::time::Instant;
+
+/// `OBPAM_SCALE` (default `default`): multiplies dataset sizes.
+pub fn env_scale(default: f64) -> f64 {
+    std::env::var("OBPAM_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// `OBPAM_REPS` (default `default`): experiment repetitions.
+pub fn env_reps(default: usize) -> usize {
+    std::env::var("OBPAM_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// `OBPAM_KS` (default `default`, e.g. "10,50,100").
+pub fn env_ks(default: &[usize]) -> Vec<usize> {
+    match std::env::var("OBPAM_KS") {
+        Ok(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+/// Generic comma-separated usize env list.
+pub fn env_list(name: &str, default: &[usize]) -> Vec<usize> {
+    match std::env::var(name) {
+        Ok(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+/// Median + median-absolute-deviation of `iters` timed runs after
+/// `warmup` discarded ones.  Returns (median_secs, mad_secs).
+pub fn time_median(warmup: usize, iters: usize, mut f: impl FnMut()) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..iters.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = times[times.len() / 2];
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - med).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (med, devs[devs.len() / 2])
+}
+
+/// Reload records written by `emit::write_records_csv` (returns None when
+/// the file is absent or `OBPAM_FRESH=1` forces regeneration).
+pub fn load_records_csv(path: &Path) -> Option<Vec<Record>> {
+    if std::env::var("OBPAM_FRESH").map(|v| v == "1").unwrap_or(false) {
+        return None;
+    }
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut out = Vec::new();
+    for line in text.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 8 {
+            return None;
+        }
+        out.push(Record {
+            dataset: f[0].into(),
+            k: f[1].parse().ok()?,
+            rep: f[2].parse().ok()?,
+            method: f[3].into(),
+            seconds: f[4].parse().ok()?,
+            objective: f[5].parse().ok()?,
+            dissim: f[6].parse().ok()?,
+            swaps: f[7].parse().ok()?,
+        });
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Fit the exponent b of `y = a x^b` by least squares on log-log points.
+pub fn fit_power_law(points: &[(f64, f64)]) -> f64 {
+    let pts: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|(x, y)| *x > 0.0 && *y > 0.0)
+        .map(|&(x, y)| (x.ln(), y.ln()))
+        .collect();
+    let n = pts.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_median_positive() {
+        let (m, _) = time_median(0, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m >= 0.0);
+    }
+
+    #[test]
+    fn power_law_recovers_exponent() {
+        let pts: Vec<(f64, f64)> = (1..6).map(|i| (i as f64, (i as f64).powi(2) * 3.0)).collect();
+        assert!((fit_power_law(&pts) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn records_roundtrip() {
+        let dir = std::env::temp_dir().join("obpam_bench_util");
+        let p = dir.join("r.csv");
+        let recs = vec![Record {
+            dataset: "d".into(),
+            k: 3,
+            rep: 0,
+            method: "Random".into(),
+            seconds: 0.5,
+            objective: 1.25,
+            dissim: 10,
+            swaps: 2,
+        }];
+        super::super::emit::write_records_csv(&p, &recs).unwrap();
+        let loaded = load_records_csv(&p).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].method, "Random");
+        assert_eq!(loaded[0].dissim, 10);
+    }
+}

@@ -1,0 +1,192 @@
+//! Emitters: paper-style aligned text tables, ASCII bar/line charts and
+//! CSV files under `bench_out/`.
+
+use super::runner::Record;
+use std::io::Write;
+use std::path::Path;
+
+/// Render an aligned text table.  `rows` are (label, cells).
+pub fn render_table(title: &str, headers: &[&str], rows: &[(String, Vec<String>)]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    let label_w = rows
+        .iter()
+        .map(|(l, _)| l.len())
+        .chain(std::iter::once(8))
+        .max()
+        .unwrap();
+    for (_, cells) in rows {
+        for (i, c) in cells.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!("{:label_w$}", "Method"));
+    for (h, w) in headers.iter().zip(&widths) {
+        out.push_str(&format!("  {h:>w$}"));
+    }
+    out.push('\n');
+    out.push_str(&"-".repeat(label_w + widths.iter().map(|w| w + 2).sum::<usize>()));
+    out.push('\n');
+    for (label, cells) in rows {
+        out.push_str(&format!("{label:label_w$}"));
+        for (c, w) in cells.iter().zip(&widths) {
+            out.push_str(&format!("  {c:>w$}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Format `mean (std)` with paper-style one-decimal percentages.
+pub fn pct(mean: f64, std: f64) -> String {
+    if mean.is_nan() {
+        "Na".into()
+    } else {
+        format!("{mean:.1} ({std:.1})")
+    }
+}
+
+/// Write raw records as CSV (one row per run).
+pub fn write_records_csv(path: &Path, records: &[Record]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "dataset,k,rep,method,seconds,objective,dissim,swaps")?;
+    for r in records {
+        writeln!(
+            f,
+            "{},{},{},{},{:.6},{:.6},{},{}",
+            r.dataset, r.k, r.rep, r.method, r.seconds, r.objective, r.dissim, r.swaps
+        )?;
+    }
+    Ok(())
+}
+
+/// Write generic CSV (header + rows of stringified cells).
+pub fn write_csv(path: &Path, header: &str, rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// ASCII horizontal bar chart (used for the Figure 2-11 RT/ΔRO bars).
+pub fn bar_chart(title: &str, items: &[(String, f64)], width: usize) -> String {
+    let max = items
+        .iter()
+        .map(|(_, v)| v.abs())
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    let mut out = format!("-- {title} --\n");
+    for (label, v) in items {
+        let bars = ((v.abs() / max) * width as f64).round() as usize;
+        out.push_str(&format!("{label:label_w$} | {:<width$} {v:8.2}\n", "#".repeat(bars)));
+    }
+    out
+}
+
+/// ASCII scatter for the Pareto figures: points ('.') and front ('X'),
+/// log-scaled time on the x-axis when the spread is wide.
+pub fn scatter(title: &str, pts: &[(f64, f64, String)], front: &[usize]) -> String {
+    const W: usize = 72;
+    const H: usize = 20;
+    if pts.is_empty() {
+        return format!("-- {title} -- (no points)\n");
+    }
+    let xs: Vec<f64> = pts.iter().map(|p| p.0.max(1e-9).ln()).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (x0, x1) = (
+        xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    );
+    let (y0, y1) = (
+        ys.iter().cloned().fold(f64::INFINITY, f64::min),
+        ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    );
+    let mut grid = vec![vec![' '; W]; H];
+    for (i, _p) in pts.iter().enumerate() {
+        let gx = if x1 > x0 { ((xs[i] - x0) / (x1 - x0) * (W - 1) as f64) as usize } else { 0 };
+        let gy = if y1 > y0 { ((ys[i] - y0) / (y1 - y0) * (H - 1) as f64) as usize } else { 0 };
+        let ch = if front.contains(&i) { 'X' } else { '.' };
+        grid[H - 1 - gy][gx] = ch;
+    }
+    let mut out = format!("-- {title} -- (x: log time {:.3}s..{:.3}s, y: objective {y0:.4}..{y1:.4}; X = Pareto)\n", pts.iter().map(|p| p.0).fold(f64::INFINITY, f64::min), pts.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    for (i, p) in pts.iter().enumerate() {
+        out.push_str(&format!(
+            "  {} {} t={:.4}s obj={:.5}\n",
+            if front.contains(&i) { "X" } else { "." },
+            p.2,
+            p.0,
+            p.1
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns() {
+        let t = render_table(
+            "T",
+            &["RT", "dRO"],
+            &[
+                ("Random".into(), vec!["0.0".into(), "62.9".into()]),
+                ("FasterPAM".into(), vec!["100.0".into(), "0.0".into()]),
+            ],
+        );
+        assert!(t.contains("FasterPAM"));
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines[2].len(), lines[3].len().max(lines[2].len()).min(lines[2].len()));
+    }
+
+    #[test]
+    fn pct_formats_na() {
+        assert_eq!(pct(f64::NAN, f64::NAN), "Na");
+        assert_eq!(pct(12.34, 0.5), "12.3 (0.5)");
+    }
+
+    #[test]
+    fn csv_roundtrip(){
+        let dir = std::env::temp_dir().join("obpam_emit_test");
+        let p = dir.join("x.csv");
+        write_csv(&p, "a,b", &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn bar_chart_renders() {
+        let c = bar_chart("t", &[("a".into(), 1.0), ("bb".into(), 2.0)], 10);
+        assert!(c.contains("bb"));
+        assert!(c.contains("##########"));
+    }
+
+    #[test]
+    fn scatter_marks_front() {
+        let pts = vec![
+            (0.1, 5.0, "a".into()),
+            (1.0, 1.0, "b".into()),
+        ];
+        let s = scatter("t", &pts, &[1]);
+        assert!(s.contains('X'));
+        assert!(s.contains("obj=1"));
+    }
+}

@@ -1,0 +1,231 @@
+//! Grid runner: (dataset x k x repetition x method) -> [`Record`]s.
+//!
+//! Timing protocol matches the paper: the *selection* is timed; the exact
+//! full-data objective is evaluated afterwards, outside the timed
+//! section, with an uncounted dissimilarity evaluator.
+
+use super::methods::MethodSpec;
+use crate::data::synth;
+use crate::dissim::{DissimCounter, Metric};
+use crate::eval;
+use crate::linalg::Matrix;
+
+/// One measured run.
+#[derive(Clone, Debug)]
+pub struct Record {
+    /// Dataset name.
+    pub dataset: String,
+    /// Number of medoids.
+    pub k: usize,
+    /// Repetition index (seed stream).
+    pub rep: usize,
+    /// Method label (paper row).
+    pub method: String,
+    /// Selection wall-clock seconds.
+    pub seconds: f64,
+    /// Exact full-data objective of the selection.
+    pub objective: f64,
+    /// Dissimilarity computations during selection.
+    pub dissim: u64,
+    /// Accepted swaps.
+    pub swaps: u64,
+}
+
+/// Run one method on one dataset instance and evaluate it exactly.
+pub fn run_method(
+    method: &MethodSpec,
+    x: &Matrix,
+    dataset: &str,
+    k: usize,
+    rep: usize,
+    metric: Metric,
+    seed: u64,
+) -> anyhow::Result<Record> {
+    let out = method.run(x, k, metric, seed)?;
+    // evaluation is outside the timed section and uncounted
+    let eval_d = DissimCounter::new(metric);
+    let objective = eval::objective(x, &out.medoids, &eval_d);
+    Ok(Record {
+        dataset: dataset.into(),
+        k,
+        rep,
+        method: method.label(),
+        seconds: out.seconds,
+        objective,
+        dissim: out.dissim_count,
+        swaps: out.swap_count,
+    })
+}
+
+/// Run the full grid.  `scale` multiplies dataset sizes (OBPAM_SCALE
+/// convention); methods infeasible at large scale are skipped for
+/// datasets flagged large in the catalogue, mirroring the paper's "Na"
+/// cells.  `progress` receives one line per finished run.
+#[allow(clippy::too_many_arguments)]
+pub fn run_grid(
+    datasets: &[&str],
+    ks: &[usize],
+    reps: usize,
+    methods: &[MethodSpec],
+    scale: f64,
+    metric: Metric,
+    base_seed: u64,
+    mut progress: impl FnMut(&Record),
+) -> anyhow::Result<Vec<Record>> {
+    let mut records = Vec::new();
+    for &ds in datasets {
+        let large = synth::large_scale_names().contains(&ds);
+        for (rep, &k) in (0..reps).flat_map(|r| ks.iter().map(move |k| (r, k))) {
+            // fresh dataset per repetition (paper re-draws nothing, but a
+            // per-rep seed on the algorithms; data stays fixed per rep)
+            let data = synth::generate(ds, scale, base_seed);
+            let x = &data.x;
+            if x.rows <= k + 1 {
+                continue;
+            }
+            for method in methods {
+                if large && !method.feasible_large_scale() {
+                    continue;
+                }
+                let seed = base_seed
+                    .wrapping_add(rep as u64)
+                    .wrapping_mul(0x9E37_79B9)
+                    .wrapping_add(k as u64);
+                let rec = run_method(method, x, ds, k, rep, metric, seed)?;
+                progress(&rec);
+                records.push(rec);
+            }
+        }
+    }
+    Ok(records)
+}
+
+/// Group records by (dataset, k, rep) — the unit within which ΔRO and RT
+/// are computed before averaging (paper Eq. 6).
+pub fn group_units<'a>(records: &'a [Record]) -> Vec<Vec<&'a Record>> {
+    use std::collections::BTreeMap;
+    let mut map: BTreeMap<(String, usize, usize), Vec<&Record>> = BTreeMap::new();
+    for r in records {
+        map.entry((r.dataset.clone(), r.k, r.rep)).or_default().push(r);
+    }
+    map.into_values().collect()
+}
+
+/// Per-method aggregate of ΔRO (%) and RT (%) across units.
+///
+/// `rt_reference` picks the normalising method per unit (the paper uses
+/// FasterPAM on small scale, OneBatch-nniw on large scale).  Units where
+/// the reference is missing are skipped for RT but kept for ΔRO.
+pub fn aggregate(
+    records: &[Record],
+    rt_reference: &str,
+) -> Vec<(String, f64, f64, f64, f64)> {
+    use std::collections::BTreeMap;
+    // method -> (rt values, dro values)
+    let mut acc: BTreeMap<String, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for unit in group_units(records) {
+        let objectives: Vec<f64> = unit.iter().map(|r| r.objective).collect();
+        let dro = eval::delta_relative_objective(&objectives);
+        let ref_time = unit
+            .iter()
+            .find(|r| r.method == rt_reference)
+            .map(|r| r.seconds);
+        for (r, dro_v) in unit.iter().zip(dro) {
+            let e = acc.entry(r.method.clone()).or_default();
+            e.1.push(dro_v);
+            if let Some(t) = ref_time {
+                if t > 0.0 {
+                    e.0.push(r.seconds / t * 100.0);
+                }
+            }
+        }
+    }
+    let mean_std = |v: &[f64]| -> (f64, f64) {
+        if v.is_empty() {
+            return (f64::NAN, f64::NAN);
+        }
+        let m = v.iter().sum::<f64>() / v.len() as f64;
+        let var = v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64;
+        (m, var.sqrt())
+    };
+    acc.into_iter()
+        .map(|(method, (rt, dro))| {
+            let (rt_m, rt_s) = mean_std(&rt);
+            let (dro_m, dro_s) = mean_std(&dro);
+            (method, rt_m, rt_s, dro_m, dro_s)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::onebatch::SwapStrategy;
+    use crate::coordinator::SamplerKind;
+
+    fn tiny_methods() -> Vec<MethodSpec> {
+        vec![
+            MethodSpec::Random,
+            MethodSpec::KMeansPp,
+            MethodSpec::OneBatch { sampler: SamplerKind::Unif, strategy: SwapStrategy::Eager },
+        ]
+    }
+
+    #[test]
+    fn grid_runs_and_groups() {
+        let recs = run_grid(
+            &["blobs_400_4_3"],
+            &[3],
+            2,
+            &tiny_methods(),
+            1.0,
+            Metric::L1,
+            42,
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(recs.len(), 3 * 2);
+        let units = group_units(&recs);
+        assert_eq!(units.len(), 2);
+        assert!(units.iter().all(|u| u.len() == 3));
+    }
+
+    #[test]
+    fn aggregate_has_zero_dro_for_best_and_100_rt_for_reference() {
+        let recs = run_grid(
+            &["blobs_400_4_3"],
+            &[3],
+            1,
+            &tiny_methods(),
+            1.0,
+            Metric::L1,
+            7,
+            |_| {},
+        )
+        .unwrap();
+        let agg = aggregate(&recs, "Random");
+        let random = agg.iter().find(|a| a.0 == "Random").unwrap();
+        assert!((random.1 - 100.0).abs() < 1e-9, "reference RT must be 100%");
+        // the best method in the unit has ΔRO == 0
+        let min_dro = agg.iter().map(|a| a.3).fold(f64::INFINITY, f64::min);
+        assert!(min_dro.abs() < 1e-9);
+    }
+
+    #[test]
+    fn large_scale_skips_na_methods() {
+        // use a real large-scale catalogue name at minuscule scale
+        let recs = run_grid(
+            &["gas"],
+            &[3],
+            1,
+            &[MethodSpec::FasterPam, MethodSpec::KMeansPp],
+            0.0005,
+            Metric::L1,
+            1,
+            |_| {},
+        )
+        .unwrap();
+        assert!(recs.iter().all(|r| r.method != "FasterPAM"));
+        assert_eq!(recs.len(), 1);
+    }
+}

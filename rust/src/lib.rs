@@ -1,0 +1,41 @@
+//! # obpam — OneBatchPAM: fast and frugal k-medoids (AAAI 2025)
+//!
+//! Production-grade reproduction of *OneBatchPAM* (de Mathelin et al.,
+//! AAAI 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — Pallas kernels + JAX graph in
+//!   `python/compile/`, AOT-lowered to HLO text under `artifacts/`;
+//! * **L3 (this crate)** — the coordinator: batch sampling, the
+//!   FasterPAM swap engine over one `n x m` distance matrix, every
+//!   baseline from the paper's evaluation, the experiment harness that
+//!   regenerates each table/figure, and a clustering job server.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use obpam::backend::NativeBackend;
+//! use obpam::coordinator::{one_batch_pam, OneBatchConfig};
+//! use obpam::data::synth;
+//! use obpam::dissim::Metric;
+//!
+//! let data = synth::generate("blobs_2000_8_5", 1.0, 42);
+//! let cfg = OneBatchConfig { k: 5, ..Default::default() };
+//! let backend = NativeBackend::new(Metric::L1);
+//! let result = one_batch_pam(&data.x, &cfg, &backend).unwrap();
+//! println!("medoids: {:?}", result.medoids);
+//! ```
+
+pub mod backend;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dissim;
+pub mod eval;
+pub mod harness;
+pub mod linalg;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod telemetry;

@@ -1,0 +1,177 @@
+//! Minimal dense row-major f32 matrix (no ndarray available offline).
+//!
+//! Only what the coordinator and backends need: contiguous storage, row
+//! views, and a handful of blocked helpers tuned for the single-core
+//! hot path.
+
+/// Dense row-major matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major contiguous data, `rows * cols` long.
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Immutable view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element write.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Copy of column `j` (strided gather).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// New matrix made of the given rows (gather).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Zero-pad to `(rows, cols)` (must be >= current shape).
+    pub fn pad_to(&self, rows: usize, cols: usize, fill: f32) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols);
+        let mut out = Matrix::full(rows, cols, fill);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+/// `argmin` over a slice; ties break to the lower index. Returns (idx, val).
+#[inline]
+pub fn argmin(xs: &[f32]) -> (usize, f32) {
+    debug_assert!(!xs.is_empty());
+    let mut bi = 0;
+    let mut bv = xs[0];
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        if v < bv {
+            bv = v;
+            bi = i;
+        }
+    }
+    (bi, bv)
+}
+
+/// Two smallest entries (stable tie-break): `(i1, v1, i2, v2)` with
+/// `v1 <= v2` and `i1 != i2`. Requires `len >= 2`.
+#[inline]
+pub fn top2_min(xs: &[f32]) -> (usize, f32, usize, f32) {
+    debug_assert!(xs.len() >= 2);
+    let (mut i1, mut v1, mut i2, mut v2) = if xs[0] <= xs[1] {
+        (0, xs[0], 1, xs[1])
+    } else {
+        (1, xs[1], 0, xs[0])
+    };
+    for (i, &v) in xs.iter().enumerate().skip(2) {
+        if v < v1 {
+            i2 = i1;
+            v2 = v1;
+            i1 = i;
+            v1 = v;
+        } else if v < v2 {
+            i2 = i;
+            v2 = v;
+        }
+    }
+    (i1, v1, i2, v2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_elements() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+        assert_eq!(m.col(2), vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn select_rows_gathers() {
+        let m = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.data, vec![5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn pad_preserves_and_fills() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let p = m.pad_to(3, 4, 9.0);
+        assert_eq!(p.row(0), &[1., 2., 9., 9.]);
+        assert_eq!(p.row(2), &[9., 9., 9., 9.]);
+    }
+
+    #[test]
+    fn argmin_stable_ties() {
+        assert_eq!(argmin(&[3.0, 1.0, 1.0, 2.0]), (1, 1.0));
+    }
+
+    #[test]
+    fn top2_basic_and_ties() {
+        let (i1, v1, i2, v2) = top2_min(&[5.0, 1.0, 3.0, 1.0]);
+        assert_eq!((i1, v1, i2, v2), (1, 1.0, 3, 1.0));
+        let (i1, _, i2, _) = top2_min(&[2.0, 2.0]);
+        assert_eq!((i1, i2), (0, 1));
+    }
+
+    #[test]
+    fn top2_matches_sort_on_random() {
+        let mut rng = crate::rng::Rng::new(1);
+        for _ in 0..200 {
+            let n = 2 + rng.below(20);
+            let xs: Vec<f32> = (0..n).map(|_| (rng.below(6)) as f32).collect();
+            let (i1, v1, i2, v2) = top2_min(&xs);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap().then(a.cmp(&b)));
+            assert_eq!((i1, v1), (idx[0], xs[idx[0]]));
+            assert_eq!((i2, v2), (idx[1], xs[idx[1]]));
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! `obpam` CLI — the launcher for the OneBatchPAM framework.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! obpam cluster  --dataset mnist --k 10 [--sampler nniw] [--metric l1]
+//!                [--scale 0.1] [--seed 0] [--backend native|xla|xla-dense]
+//!                [--m N] [--strategy eager|steepest] [--config file.toml]
+//! obpam bench    --table 3|5|7 | --fig 1|pareto  (thin wrapper; prefer `cargo bench`)
+//! obpam serve    [--addr 127.0.0.1:7878] [--workers 2]
+//! obpam gen      --list | --dataset NAME [--scale S] [--out file.csv]
+//! obpam artifacts-check
+//! ```
+
+use anyhow::{bail, Context, Result};
+use obpam::backend::{NativeBackend, XlaBackend};
+use obpam::config::Config;
+use obpam::coordinator::{one_batch_pam, onebatch::SwapStrategy, OneBatchConfig, SamplerKind};
+use obpam::data::synth;
+use obpam::dissim::{DissimCounter, Metric};
+use obpam::eval;
+use obpam::runtime::Runtime;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            rest.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (flags, rest)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: obpam <cluster|serve|gen|artifacts-check> [--flags]\n\
+         see `cargo doc` or README.md for details"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let (flags, rest) = parse_flags(&args[1..]);
+
+    match cmd.as_str() {
+        "cluster" => cmd_cluster(&flags, &rest),
+        "serve" => cmd_serve(&flags),
+        "gen" => cmd_gen(&flags),
+        "artifacts-check" => cmd_artifacts_check(),
+        _ => usage(),
+    }
+}
+
+fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<()> {
+    // config file (optional) + CLI flags + trailing key=value overrides
+    let mut cfg = match flags.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    cfg.apply_overrides(overrides.iter().map(|s| s.as_str()))?;
+    let get = |key: &str, flag: &str, default: &str| -> String {
+        flags
+            .get(flag)
+            .cloned()
+            .or_else(|| cfg.get(key).map(str::to_string))
+            .unwrap_or_else(|| default.to_string())
+    };
+
+    let dataset = get("run.dataset", "dataset", "blobs_2000_8_5");
+    let k: usize = get("run.k", "k", "10").parse().context("--k")?;
+    let scale: f64 = get("run.scale", "scale", "1.0").parse().context("--scale")?;
+    let seed: u64 = get("run.seed", "seed", "0").parse().context("--seed")?;
+    let metric = Metric::parse(&get("run.metric", "metric", "l1")).context("bad --metric")?;
+    let sampler = SamplerKind::parse(&get("run.sampler", "sampler", "nniw")).context("bad --sampler")?;
+    let strategy = match get("run.strategy", "strategy", "eager").as_str() {
+        "eager" => SwapStrategy::Eager,
+        "steepest" => SwapStrategy::Steepest,
+        s => bail!("bad --strategy {s}"),
+    };
+    let m: Option<usize> = match get("run.m", "m", "auto").as_str() {
+        "auto" => None,
+        s => Some(s.parse().context("--m")?),
+    };
+    let backend_name = get("run.backend", "backend", "native");
+
+    eprintln!("[obpam] generating dataset {dataset} (scale {scale})");
+    let data = synth::generate(&dataset, scale, seed);
+    eprintln!("[obpam] n={} p={} k={k} sampler={} backend={backend_name}", data.n(), data.p(), sampler.name());
+
+    let ob_cfg = OneBatchConfig { k, sampler, m, strategy, seed, ..Default::default() };
+    let result = match backend_name.as_str() {
+        "native" => {
+            let backend = NativeBackend::new(metric);
+            one_batch_pam(&data.x, &ob_cfg, &backend)?
+        }
+        "xla" | "xla-dense" => {
+            let rt = Rc::new(Runtime::load_default()?);
+            let backend = XlaBackend::new(rt, metric, backend_name == "xla-dense");
+            one_batch_pam(&data.x, &ob_cfg, &backend)?
+        }
+        other => bail!("unknown backend {other}"),
+    };
+
+    let obj = eval::objective(&data.x, &result.medoids, &DissimCounter::new(metric));
+    println!("medoids: {:?}", result.medoids);
+    println!("objective (full data): {obj:.6}");
+    println!("objective (batch estimate): {:.6}", result.est_objective);
+    println!(
+        "selection time: {:.3}s   dissim computations: {}   swaps: {}",
+        result.stats.seconds, result.stats.dissim_count, result.stats.swap_count
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = obpam::server::ServerConfig {
+        addr: flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".into()),
+        workers: flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2),
+        queue_cap: flags.get("queue-cap").and_then(|s| s.parse().ok()).unwrap_or(16),
+    };
+    let handle = obpam::server::serve(cfg)?;
+    println!("obpam server listening on {}", handle.addr);
+    println!("try: printf 'cluster dataset=blobs_2000_8_5 k=5\\n' | nc {} {}", handle.addr.ip(), handle.addr.port());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("list") {
+        println!("{:<12} {:>8} {:>6}  scale", "dataset", "n", "p");
+        for &(name, n, p, large) in synth::CATALOGUE {
+            println!("{name:<12} {n:>8} {p:>6}  {}", if large { "large" } else { "small" });
+        }
+        return Ok(());
+    }
+    let dataset = flags.get("dataset").context("--dataset or --list required")?;
+    let scale: f64 = flags.get("scale").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let data = synth::generate(dataset, scale, seed);
+    match flags.get("out") {
+        Some(path) => {
+            let mut out = String::new();
+            for i in 0..data.n() {
+                let row: Vec<String> = data.x.row(i).iter().map(|v| format!("{v}")).collect();
+                out.push_str(&row.join(","));
+                out.push('\n');
+            }
+            std::fs::write(path, out)?;
+            println!("wrote {} rows x {} cols to {path}", data.n(), data.p());
+        }
+        None => println!("generated {}: n={} p={}", dataset, data.n(), data.p()),
+    }
+    Ok(())
+}
+
+fn cmd_artifacts_check() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    println!("manifest: {} artifacts", rt.specs().len());
+    let mut by_kind: std::collections::BTreeMap<&str, usize> = Default::default();
+    for s in rt.specs() {
+        *by_kind.entry(s.kind.as_str()).or_default() += 1;
+    }
+    for (kind, count) in by_kind {
+        println!("  {kind:<16} {count}");
+    }
+    // compile + execute one tiny pairwise to prove the PJRT path works
+    let x = obpam::linalg::Matrix::from_vec(4, 2, vec![0., 0., 1., 0., 0., 1., 1., 1.]);
+    let d = rt.pairwise(&x, &x, Metric::L1, false)?;
+    anyhow::ensure!((d.get(0, 3) - 2.0).abs() < 1e-5, "pairwise sanity failed");
+    println!("PJRT execution check: OK (l1 pairwise via Pallas artifact)");
+    Ok(())
+}

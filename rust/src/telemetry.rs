@@ -1,0 +1,113 @@
+//! Run telemetry: dissimilarity-computation counters, swap counters and
+//! wall-clock timers.
+//!
+//! The dissimilarity counter is the empirical check of the paper's Table 1
+//! complexity claims: `O(nm)` for OneBatchPAM, `O(n^2)` for FasterPAM,
+//! `O((T+k) n log n)` for BanditPAM++ (see benches/complexity.rs).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Atomic run counters (shared across backend + coordinator).
+#[derive(Default, Debug)]
+pub struct Counters {
+    dissim: AtomicU64,
+    swaps: AtomicU64,
+    xla_executions: AtomicU64,
+}
+
+impl Counters {
+    /// Record `n` pairwise dissimilarity computations.
+    #[inline]
+    pub fn add_dissim(&self, n: u64) {
+        self.dissim.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one accepted swap.
+    #[inline]
+    pub fn add_swap(&self) {
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one XLA executable invocation.
+    #[inline]
+    pub fn add_xla_exec(&self) {
+        self.xla_executions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Dissimilarity computations so far.
+    pub fn dissim(&self) -> u64 {
+        self.dissim.load(Ordering::Relaxed)
+    }
+
+    /// Accepted swaps so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// XLA executions so far.
+    pub fn xla_executions(&self) -> u64 {
+        self.xla_executions.load(Ordering::Relaxed)
+    }
+
+    /// Reset everything to zero.
+    pub fn reset(&self) {
+        self.dissim.store(0, Ordering::Relaxed);
+        self.swaps.store(0, Ordering::Relaxed);
+        self.xla_executions.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Simple scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Result of one timed run: medoids + objective + resource usage.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    /// Wall-clock seconds.
+    pub seconds: f64,
+    /// Pairwise dissimilarity computations.
+    pub dissim_count: u64,
+    /// Accepted swaps.
+    pub swap_count: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_reset() {
+        let c = Counters::default();
+        c.add_dissim(10);
+        c.add_dissim(5);
+        c.add_swap();
+        c.add_xla_exec();
+        assert_eq!(c.dissim(), 15);
+        assert_eq!(c.swaps(), 1);
+        assert_eq!(c.xla_executions(), 1);
+        c.reset();
+        assert_eq!(c.dissim() + c.swaps() + c.xla_executions(), 0);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.secs() > 0.0);
+    }
+}

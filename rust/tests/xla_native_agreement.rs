@@ -1,0 +1,128 @@
+//! XLA backend == native backend, numerically, on all four tile ops and
+//! end-to-end.  These tests need `artifacts/` (run `make artifacts`); if
+//! the manifest is missing they print a notice and pass vacuously so the
+//! pure-Rust test suite stays runnable.
+
+use obpam::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use obpam::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
+use obpam::dissim::Metric;
+use obpam::linalg::Matrix;
+use obpam::rng::Rng;
+use obpam::runtime::Runtime;
+use std::rc::Rc;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+    Matrix::from_vec(r, c, (0..r * c).map(|_| rng.f32() * 2.0 - 0.5).collect())
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn pairwise_agrees_all_metrics_and_kinds() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    // shapes that exercise padding: n crosses the tile, p/m off-bucket
+    for (n, m, p) in [(10, 7, 5), (300, 130, 60), (2100, 300, 100)] {
+        let x = rand_matrix(&mut rng, n, p);
+        let b = rand_matrix(&mut rng, m, p);
+        for metric in [Metric::L1, Metric::SqL2, Metric::L2] {
+            let native = NativeBackend::new(metric).pairwise(&x, &b).unwrap();
+            for dense in [false, true] {
+                let xla = XlaBackend::new(rt.clone(), metric, dense)
+                    .pairwise(&x, &b)
+                    .unwrap();
+                assert_close(
+                    &native.data,
+                    &xla.data,
+                    2e-3,
+                    &format!("pairwise {} dense={dense} n={n}", metric.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn top2_and_argmin_agree() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    let xla = XlaBackend::new(rt, Metric::L1, false);
+    let native = NativeBackend::new(Metric::L1);
+    for (n, k) in [(50, 3), (2100, 9), (100, 60)] {
+        let d = rand_matrix(&mut rng, n, k.max(2));
+        let (ni_n, nd_n, si_n, sd_n) = native.top2(&d).unwrap();
+        let (ni_x, nd_x, si_x, sd_x) = xla.top2(&d).unwrap();
+        assert_eq!(ni_n, ni_x, "near idx n={n} k={k}");
+        assert_eq!(si_n, si_x, "sec idx n={n} k={k}");
+        assert_close(&nd_n, &nd_x, 1e-5, "dnear");
+        assert_close(&sd_n, &sd_x, 1e-5, "dsec");
+    }
+    for (n, m) in [(64, 17), (2100, 200)] {
+        let d = rand_matrix(&mut rng, n, m);
+        let (i_n, v_n) = native.argmin_rows(&d).unwrap();
+        let (i_x, v_x) = xla.argmin_rows(&d).unwrap();
+        assert_eq!(i_n, i_x, "argmin idx n={n} m={m}");
+        assert_close(&v_n, &v_x, 1e-5, "argmin val");
+    }
+}
+
+#[test]
+fn gains_agree() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let xla = XlaBackend::new(rt, Metric::L1, false);
+    let native = NativeBackend::new(Metric::L1);
+    for (n, m, k) in [(40, 11, 3), (2100, 200, 9), (128, 250, 45)] {
+        let d = rand_matrix(&mut rng, n, m);
+        let dn: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+        let ds: Vec<f32> = dn.iter().map(|v| v + rng.f32()).collect();
+        let near: Vec<usize> = (0..m).map(|_| rng.below(k)).collect();
+        let w: Vec<f32> = (0..m).map(|_| 0.5 + rng.f32()).collect();
+        let (sh_n, pm_n) = native.gains(&d, &dn, &ds, &near, k, &w).unwrap();
+        let (sh_x, pm_x) = xla.gains(&d, &dn, &ds, &near, k, &w).unwrap();
+        assert_close(&sh_n, &sh_x, 2e-3, &format!("gains shared n={n} m={m} k={k}"));
+        assert_close(&pm_n.data, &pm_x.data, 2e-3, "gains permedoid");
+    }
+}
+
+#[test]
+fn one_batch_pam_same_medoids_both_backends() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(4);
+    let x = obpam::data::synth::gen_gaussian_mixture(&mut rng, 400, 8, 4, 0.15, 1.0);
+    for sampler in [SamplerKind::Unif, SamplerKind::Debias, SamplerKind::Nniw] {
+        let cfg = OneBatchConfig { k: 4, sampler, m: Some(60), seed: 9, ..Default::default() };
+        let native = NativeBackend::new(Metric::L1);
+        let r_n = one_batch_pam(&x, &cfg, &native).unwrap();
+        let xla = XlaBackend::new(rt.clone(), Metric::L1, false);
+        let r_x = one_batch_pam(&x, &cfg, &xla).unwrap();
+        // identical seeds + deterministic pipeline -> identical medoids,
+        // modulo FP ties; compare objectives tightly instead of indices.
+        assert!(
+            (r_n.est_objective - r_x.est_objective).abs()
+                <= 1e-3 * r_n.est_objective.abs().max(1e-9),
+            "{}: native {} vs xla {}",
+            sampler.name(),
+            r_n.est_objective,
+            r_x.est_objective
+        );
+    }
+}
