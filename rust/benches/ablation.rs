@@ -5,14 +5,18 @@
 //! 3. swap strategy: eager (Algorithm 2) vs steepest (Eq. 3);
 //! 4. backend: native vs xla (Pallas) vs xla-dense, when artifacts exist.
 
-use obpam::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use obpam::backend::{ComputeBackend, NativeBackend};
+#[cfg(feature = "xla")]
+use obpam::backend::XlaBackend;
 use obpam::coordinator::{one_batch_pam, onebatch::SwapStrategy, OneBatchConfig, SamplerKind};
 use obpam::data::synth;
 use obpam::dissim::{DissimCounter, Metric};
 use obpam::eval;
 use obpam::harness::{bench_util, emit};
+#[cfg(feature = "xla")]
 use obpam::runtime::Runtime;
 use std::path::Path;
+#[cfg(feature = "xla")]
 use std::rc::Rc;
 
 fn main() {
@@ -79,6 +83,17 @@ fn main() {
         let backend = NativeBackend::new(Metric::L1);
         rows.push(backend_row("native", &backend, x, k));
     }
+    {
+        use obpam::runtime::Pool;
+        let backend = NativeBackend::with_pool(Metric::L1, Pool::auto());
+        rows.push(backend_row(
+            &format!("native t={}", backend.pool().threads()),
+            &backend,
+            x,
+            k,
+        ));
+    }
+    #[cfg(feature = "xla")]
     match Runtime::load_default() {
         Ok(rt) => {
             let rt = Rc::new(rt);
@@ -89,6 +104,8 @@ fn main() {
         }
         Err(e) => eprintln!("skipping XLA backends ({e}); run `make artifacts`"),
     }
+    #[cfg(not(feature = "xla"))]
+    eprintln!("skipping XLA backends (built without the `xla` feature)");
     println!(
         "{}",
         emit::render_table("ablation: compute backend", &["objective", "time"], &rows)

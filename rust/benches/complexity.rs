@@ -33,7 +33,17 @@ fn main() {
         let mut cells = Vec::new();
         for &n in &ns {
             let x = synth::generate(&format!("blobs_{n}_8_5"), 1.0, 0xC0).x;
-            let rec = runner::run_method(m, &x, "blobs", k, 0, Metric::L1, 0xC1).expect("run");
+            let rec = runner::run_method(
+                m,
+                &x,
+                "blobs",
+                k,
+                0,
+                Metric::L1,
+                0xC1,
+                bench_util::env_threads(1),
+            )
+            .expect("run");
             points.push((n as f64, rec.dissim as f64));
             cells.push(format!("{}", rec.dissim));
             csv_rows.push(vec![m.label(), n.to_string(), rec.dissim.to_string()]);

@@ -37,8 +37,17 @@ fn sweep(
             let (secs, obj) = if skip {
                 (f64::NAN, f64::NAN)
             } else {
-                let rec = runner::run_method(m, &x, "mnist", k, 0, Metric::L1, 0xF16 + v as u64)
-                    .expect("run");
+                let rec = runner::run_method(
+                    m,
+                    &x,
+                    "mnist",
+                    k,
+                    0,
+                    Metric::L1,
+                    0xF16 + v as u64,
+                    bench_util::env_threads(1),
+                )
+                .expect("run");
                 (rec.seconds, rec.objective)
             };
             eprintln!("  {title} x={v} {:<16} {secs:.3}s obj={obj:.5}", m.label());

@@ -2,21 +2,23 @@
 //! (EXPERIMENTS.md records before/after from this bench).
 //!
 //! Measures, with warmup + median/MAD:
-//!   * native pairwise throughput (Gdissim/s and effective GB/s);
-//!   * XLA pairwise: Pallas kernel vs plain-XLA lowering (artifact path);
-//!   * swap-gain evaluation: native inner loop vs XLA matmul kernel;
+//!   * native pairwise throughput (Gdissim/s) at 1 thread and at
+//!     `available_parallelism` threads (the runtime::pool scaling check);
+//!   * the eager candidate scan at 1 thread and at all cores;
+//!   * swap-gain evaluation: native inner loop (1 thread vs all cores);
 //!   * SwapState::eval_candidate / apply_swap latency;
-//!   * end-to-end OneBatchPAM at a fixed workload.
+//!   * end-to-end OneBatchPAM at a fixed workload, serial vs threaded;
+//!   * (feature `xla`) XLA pairwise/gains: Pallas kernel vs plain-XLA.
 
-use obpam::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use obpam::backend::{ComputeBackend, NativeBackend};
 use obpam::coordinator::state::SwapState;
-use obpam::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
+use obpam::coordinator::{engine, one_batch_pam, OneBatchConfig, SamplerKind};
 use obpam::dissim::Metric;
 use obpam::harness::bench_util::time_median;
 use obpam::linalg::Matrix;
 use obpam::rng::Rng;
-use obpam::runtime::Runtime;
-use std::rc::Rc;
+use obpam::runtime::Pool;
+use obpam::telemetry::Counters;
 
 fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
     Matrix::from_vec(r, c, (0..r * c).map(|_| rng.f32()).collect())
@@ -36,38 +38,88 @@ fn report(name: &str, med: f64, mad: f64, work: Option<(f64, &str)>) {
 
 fn main() {
     let mut rng = Rng::new(0xBEEF);
-    println!("== micro benches (median ± MAD) ==\n");
+    let cores = Pool::auto().threads();
+    println!("== micro benches (median ± MAD; {cores} cores detected) ==\n");
 
-    // ---- native pairwise, paper-ish shapes -----------------------------
+    // ---- native pairwise, paper-ish shapes, 1 thread vs all cores ------
     for (n, m, p) in [(2_000, 512, 16), (2_000, 512, 128), (1_000, 512, 784)] {
         let x = rand_matrix(&mut rng, n, p);
         let b = rand_matrix(&mut rng, m, p);
-        let backend = NativeBackend::new(Metric::L1);
-        let (med, mad) = time_median(1, 5, || {
-            std::hint::black_box(backend.pairwise(&x, &b).unwrap());
-        });
         let gdps = (n * m) as f64 / 1e9;
-        report(&format!("native pairwise l1 n={n} m={m} p={p}"), med, mad, Some((gdps, "Gdissim/s")));
+        for threads in [1, cores] {
+            let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
+            let (med, mad) = time_median(1, 5, || {
+                std::hint::black_box(backend.pairwise(&x, &b).unwrap());
+            });
+            report(
+                &format!("native pairwise l1 n={n} m={m} p={p} t={threads}"),
+                med,
+                mad,
+                Some((gdps, "Gdissim/s")),
+            );
+            if threads == cores {
+                break; // cores == 1: avoid a duplicate row
+            }
+        }
     }
 
-    // ---- swap gains: native loop --------------------------------------
+    // ---- swap gains: native loop, 1 thread vs all cores -----------------
     let (n, m, k) = (4_000, 1_024, 100);
     let d = rand_matrix(&mut rng, n, m);
     let dn: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
     let ds: Vec<f32> = dn.iter().map(|v| v + 0.3).collect();
     let near: Vec<usize> = (0..m).map(|_| rng.below(k)).collect();
     let w = vec![1.0f32; m];
-    {
-        let backend = NativeBackend::new(Metric::L1);
+    for threads in [1, cores] {
+        let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
         let (med, mad) = time_median(1, 5, || {
             std::hint::black_box(backend.gains(&d, &dn, &ds, &near, k, &w).unwrap());
         });
         report(
-            &format!("native gains n={n} m={m} k={k}"),
+            &format!("native gains n={n} m={m} k={k} t={threads}"),
             med,
             mad,
             Some(((n * m) as f64 / 1e9, "Gcell/s")),
         );
+        if threads == cores {
+            break;
+        }
+    }
+
+    // ---- eager candidate scan: one full pass, 1 thread vs all cores -----
+    {
+        let mut rng2 = Rng::new(1);
+        let med: Vec<usize> = rng2.sample_distinct(n, k);
+        let st0 = SwapState::init(&d, med, vec![1.0; m], n);
+        for threads in [1, cores] {
+            let pool = Pool::new(threads);
+            let counters = Counters::default();
+            let (t_scan, mad) = time_median(1, 5, || {
+                // fresh state + rng per iteration so every pass scans the
+                // same candidate sequence (clone cost is shared by both
+                // thread counts)
+                let mut st = st0.clone();
+                let mut order_rng = Rng::new(42);
+                std::hint::black_box(engine::eager_loop_eps(
+                    &d,
+                    &mut st,
+                    1,
+                    0.0,
+                    &mut order_rng,
+                    &counters,
+                    &pool,
+                ));
+            });
+            report(
+                &format!("eager scan pass n={n} m={m} k={k} t={threads}"),
+                t_scan,
+                mad,
+                Some(((n * (m + k)) as f64 / 1e9, "Gop/s")),
+            );
+            if threads == cores {
+                break;
+            }
+        }
     }
 
     // ---- SwapState ops --------------------------------------------------
@@ -91,18 +143,51 @@ fn main() {
         report(&format!("state apply_swap m={m} k={k}"), t_swap, mad, None);
     }
 
-    // ---- end-to-end OneBatchPAM ----------------------------------------
+    // ---- end-to-end OneBatchPAM, serial vs threaded ----------------------
     {
         let x = rand_matrix(&mut rng, 5_000, 32);
-        let backend = NativeBackend::new(Metric::L1);
-        let cfg = OneBatchConfig { k: 20, sampler: SamplerKind::Nniw, seed: 3, ..Default::default() };
-        let (med, mad) = time_median(1, 3, || {
-            std::hint::black_box(one_batch_pam(&x, &cfg, &backend).unwrap());
-        });
-        report("one_batch_pam n=5000 p=32 k=20 (native)", med, mad, None);
+        for threads in [1, cores] {
+            let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
+            let cfg = OneBatchConfig {
+                k: 20,
+                sampler: SamplerKind::Nniw,
+                seed: 3,
+                threads,
+                ..Default::default()
+            };
+            let (med, mad) = time_median(1, 3, || {
+                std::hint::black_box(one_batch_pam(&x, &cfg, &backend).unwrap());
+            });
+            report(&format!("one_batch_pam n=5000 p=32 k=20 t={threads}"), med, mad, None);
+            if threads == cores {
+                break;
+            }
+        }
     }
 
     // ---- XLA artifact paths ---------------------------------------------
+    #[cfg(feature = "xla")]
+    xla_section(&mut rng, &d, &dn, &ds, &near, k, &w);
+    #[cfg(not(feature = "xla"))]
+    println!("\n(xla paths skipped: built without the `xla` feature)");
+}
+
+#[cfg(feature = "xla")]
+#[allow(clippy::too_many_arguments)]
+fn xla_section(
+    rng: &mut Rng,
+    d: &Matrix,
+    dn: &[f32],
+    ds: &[f32],
+    near: &[usize],
+    k: usize,
+    w: &[f32],
+) {
+    use obpam::backend::XlaBackend;
+    use obpam::runtime::Runtime;
+    use std::rc::Rc;
+
+    let (n, m) = (d.rows, d.cols);
     match Runtime::load_default() {
         Err(e) => println!("\n(xla paths skipped: {e})"),
         Ok(rt) => {
@@ -110,22 +195,22 @@ fn main() {
             println!();
             for dense in [false, true] {
                 let backend = XlaBackend::new(rt.clone(), Metric::L1, dense);
-                let (n, m, p) = (2_000, 512, 128);
-                let x = rand_matrix(&mut rng, n, p);
-                let b = rand_matrix(&mut rng, m, p);
+                let (xn, xm, xp) = (2_000, 512, 128);
+                let x = rand_matrix(rng, xn, xp);
+                let b = rand_matrix(rng, xm, xp);
                 let (med, mad) = time_median(1, 3, || {
                     std::hint::black_box(backend.pairwise(&x, &b).unwrap());
                 });
                 report(
-                    &format!("{} pairwise l1 n={n} m={m} p={p}", backend.name()),
+                    &format!("{} pairwise l1 n={xn} m={xm} p={xp}", backend.name()),
                     med,
                     mad,
-                    Some(((n * m) as f64 / 1e9, "Gdissim/s")),
+                    Some(((xn * xm) as f64 / 1e9, "Gdissim/s")),
                 );
             }
             let backend = XlaBackend::new(rt.clone(), Metric::L1, false);
             let (med, mad) = time_median(1, 3, || {
-                std::hint::black_box(backend.gains(&d, &dn, &ds, &near, k, &w).unwrap());
+                std::hint::black_box(backend.gains(d, dn, ds, near, k, w).unwrap());
             });
             report(
                 &format!("xla gains (pallas matmul) n={n} m={m} k={k}"),

@@ -25,6 +25,7 @@ fn records_for(tag: &str, datasets: &[&str], scale: f64) -> Vec<runner::Record> 
         scale,
         Metric::L1,
         0xAAA1,
+        bench_util::env_threads(1),
         |r| eprintln!("  {} k={} {:<18} {:.3}s", r.dataset, r.k, r.method, r.seconds),
     )
     .expect("grid");

@@ -26,13 +26,15 @@ fn run_group(name: &str, datasets: &[&str], scale: f64) -> Vec<runner::Record> {
         datasets,
         methods.len()
     );
-    let recs = runner::run_grid(datasets, &ks, reps, &methods, scale, Metric::L1, 0xAAA1, |r| {
-        eprintln!(
-            "  {} k={} rep={} {:<18} {:.3}s obj={:.5} dissim={}",
-            r.dataset, r.k, r.rep, r.method, r.seconds, r.objective, r.dissim
-        );
-    })
-    .expect("grid run failed");
+    let threads = bench_util::env_threads(1);
+    let recs =
+        runner::run_grid(datasets, &ks, reps, &methods, scale, Metric::L1, 0xAAA1, threads, |r| {
+            eprintln!(
+                "  {} k={} rep={} {:<18} {:.3}s obj={:.5} dissim={}",
+                r.dataset, r.k, r.rep, r.method, r.seconds, r.objective, r.dissim
+            );
+        })
+        .expect("grid run failed");
     emit::write_records_csv(Path::new(&csv), &recs).expect("write records");
     recs
 }

@@ -27,6 +27,7 @@ fn main() {
                 scale,
                 Metric::L1,
                 0xAAA1,
+                bench_util::env_threads(1),
                 |r| eprintln!("  {} k={} {:<18} {:.3}s", r.dataset, r.k, r.method, r.seconds),
             )
             .expect("grid");

@@ -6,9 +6,11 @@
 //! (rust/tests/xla_native_agreement.rs).
 
 mod native;
+#[cfg(feature = "xla")]
 mod xla_backend;
 
 pub use native::NativeBackend;
+#[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
 
 use crate::dissim::Metric;

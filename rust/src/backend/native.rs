@@ -1,13 +1,16 @@
 //! Pure-Rust compute backend.
 //!
-//! The fast path on this (single-core CPU) testbed and the reference the
-//! XLA path is checked against.  Hot loops are branch-light and
-//! allocation-free; the pairwise matrix is cache-blocked (see
-//! dissim::cross_matrix).
+//! The CPU fast path and the reference the XLA path is checked against.
+//! Hot loops are branch-light and allocation-free; the pairwise matrix
+//! is cache-blocked (see dissim::cross_matrix) and every tile op is
+//! row-partitioned across the backend's [`Pool`] — results are
+//! bit-identical at any thread count because rows are independent and
+//! chunk stitching preserves row order.
 
 use super::{ComputeBackend, Top2};
-use crate::dissim::{cross_matrix, DissimCounter, Metric};
+use crate::dissim::{cross_matrix_pool, DissimCounter, Metric};
 use crate::linalg::{top2_min, Matrix};
+use crate::runtime::Pool;
 use crate::telemetry::Counters;
 use anyhow::Result;
 use std::sync::Arc;
@@ -16,22 +19,42 @@ use std::sync::Arc;
 #[derive(Clone)]
 pub struct NativeBackend {
     dissim: DissimCounter,
+    pool: Pool,
 }
 
 impl NativeBackend {
-    /// Backend for `metric` with fresh counters.
+    /// Serial backend for `metric` with fresh counters (the pre-parallel
+    /// default; use [`NativeBackend::with_pool`] to enable threading).
     pub fn new(metric: Metric) -> Self {
-        NativeBackend { dissim: DissimCounter::new(metric) }
+        NativeBackend { dissim: DissimCounter::new(metric), pool: Pool::serial() }
     }
 
-    /// Backend sharing existing counters.
+    /// Backend for `metric` running its tile ops on `pool`.
+    pub fn with_pool(metric: Metric, pool: Pool) -> Self {
+        NativeBackend { dissim: DissimCounter::new(metric), pool }
+    }
+
+    /// Serial backend sharing existing counters.
     pub fn with_counters(metric: Metric, counters: Arc<Counters>) -> Self {
-        NativeBackend { dissim: DissimCounter::with_counters(metric, counters) }
+        NativeBackend {
+            dissim: DissimCounter::with_counters(metric, counters),
+            pool: Pool::serial(),
+        }
+    }
+
+    /// Backend sharing existing counters and running on `pool`.
+    pub fn with_counters_and_pool(metric: Metric, counters: Arc<Counters>, pool: Pool) -> Self {
+        NativeBackend { dissim: DissimCounter::with_counters(metric, counters), pool }
     }
 
     /// The underlying counted dissimilarity (for point-level algorithms).
     pub fn dissim(&self) -> &DissimCounter {
         &self.dissim
+    }
+
+    /// The thread pool driving this backend's tile ops.
+    pub fn pool(&self) -> &Pool {
+        &self.pool
     }
 }
 
@@ -49,19 +72,35 @@ impl ComputeBackend for NativeBackend {
     }
 
     fn pairwise(&self, x: &Matrix, b: &Matrix) -> Result<Matrix> {
-        Ok(cross_matrix(&self.dissim, x, b))
+        Ok(cross_matrix_pool(&self.dissim, x, b, &self.pool))
     }
 
     fn top2(&self, d: &Matrix) -> Result<Top2> {
         let n = d.rows;
-        let (mut ni, mut nd) = (vec![0usize; n], vec![0f32; n]);
-        let (mut si, mut sd) = (vec![0usize; n], vec![0f32; n]);
-        for i in 0..n {
-            let (a, av, b, bv) = top2_min(d.row(i));
-            ni[i] = a;
-            nd[i] = av;
-            si[i] = b;
-            sd[i] = bv;
+        let mut parts = self.pool.map_ranges(n, |r| {
+            let len = r.end - r.start;
+            let (mut ni, mut nd) = (Vec::with_capacity(len), Vec::with_capacity(len));
+            let (mut si, mut sd) = (Vec::with_capacity(len), Vec::with_capacity(len));
+            for i in r {
+                let (a, av, b, bv) = top2_min(d.row(i));
+                ni.push(a);
+                nd.push(av);
+                si.push(b);
+                sd.push(bv);
+            }
+            (ni, nd, si, sd)
+        });
+        if parts.len() == 1 {
+            // serial path: the single part is already the full answer
+            return Ok(parts.pop().expect("one part"));
+        }
+        let (mut ni, mut nd) = (Vec::with_capacity(n), Vec::with_capacity(n));
+        let (mut si, mut sd) = (Vec::with_capacity(n), Vec::with_capacity(n));
+        for (a, b, c, e) in parts {
+            ni.extend(a);
+            nd.extend(b);
+            si.extend(c);
+            sd.extend(e);
         }
         Ok((ni, nd, si, sd))
     }
@@ -76,34 +115,62 @@ impl ComputeBackend for NativeBackend {
         w: &[f32],
     ) -> Result<(Vec<f32>, Matrix)> {
         let (n, m) = (d.rows, d.cols);
-        let mut shared = vec![0.0f32; n];
-        let mut permedoid = Matrix::zeros(n, k);
-        for i in 0..n {
-            let row = d.row(i);
-            let pm = permedoid.row_mut(i);
-            let mut sh = 0.0f32;
-            for j in 0..m {
-                let dij = row[j];
-                // branchless-ish: both branches touch pm[near[j]]
-                if dij < dnear[j] {
-                    sh += w[j] * (dnear[j] - dij);
-                    pm[near[j]] += w[j] * (dsec[j] - dnear[j]);
-                } else if dij < dsec[j] {
-                    pm[near[j]] += w[j] * (dsec[j] - dij);
+        // Row i touches only shared[i] and permedoid row i, so the scan
+        // partitions cleanly; per-row accumulation order is unchanged.
+        let mut parts = self.pool.map_ranges(n, |r| {
+            let len = r.end - r.start;
+            let mut shared = Vec::with_capacity(len);
+            let mut permedoid = vec![0.0f32; len * k];
+            for (di, i) in r.enumerate() {
+                let row = d.row(i);
+                let pm = &mut permedoid[di * k..(di + 1) * k];
+                let mut sh = 0.0f32;
+                for j in 0..m {
+                    let dij = row[j];
+                    // branchless-ish: both branches touch pm[near[j]]
+                    if dij < dnear[j] {
+                        sh += w[j] * (dnear[j] - dij);
+                        pm[near[j]] += w[j] * (dsec[j] - dnear[j]);
+                    } else if dij < dsec[j] {
+                        pm[near[j]] += w[j] * (dsec[j] - dij);
+                    }
                 }
+                shared.push(sh);
             }
-            shared[i] = sh;
+            (shared, permedoid)
+        });
+        if parts.len() == 1 {
+            let (shared, pm_data) = parts.pop().expect("one part");
+            return Ok((shared, Matrix::from_vec(n, k, pm_data)));
         }
-        Ok((shared, permedoid))
+        let mut shared = Vec::with_capacity(n);
+        let mut pm_data = Vec::with_capacity(n * k);
+        for (sh, pm) in parts {
+            shared.extend(sh);
+            pm_data.extend(pm);
+        }
+        Ok((shared, Matrix::from_vec(n, k, pm_data)))
     }
 
     fn argmin_rows(&self, d: &Matrix) -> Result<(Vec<usize>, Vec<f32>)> {
         let n = d.rows;
-        let (mut idx, mut val) = (vec![0usize; n], vec![0f32; n]);
-        for i in 0..n {
-            let (j, v) = crate::linalg::argmin(d.row(i));
-            idx[i] = j;
-            val[i] = v;
+        let mut parts = self.pool.map_ranges(n, |r| {
+            let len = r.end - r.start;
+            let (mut idx, mut val) = (Vec::with_capacity(len), Vec::with_capacity(len));
+            for i in r {
+                let (j, v) = crate::linalg::argmin(d.row(i));
+                idx.push(j);
+                val.push(v);
+            }
+            (idx, val)
+        });
+        if parts.len() == 1 {
+            return Ok(parts.pop().expect("one part"));
+        }
+        let (mut idx, mut val) = (Vec::with_capacity(n), Vec::with_capacity(n));
+        for (a, b) in parts {
+            idx.extend(a);
+            val.extend(b);
         }
         Ok((idx, val))
     }
@@ -193,5 +260,32 @@ mod tests {
         let y = rand_matrix(&mut rng, 7, 3);
         b.pairwise(&x, &y).unwrap();
         assert_eq!(b.counters().dissim(), 70);
+    }
+
+    #[test]
+    fn tile_ops_identical_across_thread_counts() {
+        let mut rng = Rng::new(77);
+        let (n, m, k) = (137, 33, 7);
+        let d = rand_matrix(&mut rng, n, m);
+        let dmk = rand_matrix(&mut rng, m, k);
+        let dn: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+        let ds: Vec<f32> = dn.iter().map(|v| v + 0.2).collect();
+        let near: Vec<usize> = (0..m).map(|_| rng.below(k)).collect();
+        let w: Vec<f32> = (0..m).map(|_| 1.0 + rng.f32()).collect();
+
+        let serial = NativeBackend::new(Metric::L1);
+        let (ni, nd, si, sd) = serial.top2(&dmk).unwrap();
+        let (am, av) = serial.argmin_rows(&d).unwrap();
+        let (sh, pm) = serial.gains(&d, &dn, &ds, &near, k, &w).unwrap();
+        for threads in [2, 3, 4] {
+            let par = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
+            let (ni2, nd2, si2, sd2) = par.top2(&dmk).unwrap();
+            assert_eq!((ni2, nd2, si2, sd2), (ni.clone(), nd.clone(), si.clone(), sd.clone()));
+            let (am2, av2) = par.argmin_rows(&d).unwrap();
+            assert_eq!((am2, av2), (am.clone(), av.clone()));
+            let (sh2, pm2) = par.gains(&d, &dn, &ds, &near, k, &w).unwrap();
+            assert_eq!(sh2, sh, "shared gains differ at {threads} threads");
+            assert_eq!(pm2.data, pm.data, "permedoid gains differ at {threads} threads");
+        }
     }
 }

@@ -16,6 +16,7 @@ use super::state::SwapState;
 use crate::backend::{removal_loss, ComputeBackend};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use crate::runtime::Pool;
 use crate::telemetry::Counters;
 use anyhow::Result;
 
@@ -25,7 +26,14 @@ pub fn tolerance(est_objective: f64) -> f64 {
     1e-6 * est_objective.abs().max(1e-12)
 }
 
-/// Eager (Algorithm 2) swap search.  Returns the number of swaps applied.
+/// Candidates evaluated per worker thread per parallel round.  Large
+/// enough to amortise the scoped-spawn cost (each evaluation is
+/// `O(m + k)`), small enough that an accepted swap does not discard
+/// much speculative work.
+const SCAN_CHUNK: usize = 256;
+
+/// Eager (Algorithm 2) swap search, serial.  Returns the number of
+/// swaps applied.
 pub fn eager_loop(
     d: &Matrix,
     state: &mut SwapState,
@@ -33,7 +41,7 @@ pub fn eager_loop(
     rng: &mut Rng,
     counters: &Counters,
 ) -> usize {
-    eager_loop_eps(d, state, max_passes, 0.0, rng, counters)
+    eager_loop_eps(d, state, max_passes, 0.0, rng, counters, &Pool::serial())
 }
 
 /// Eager swap search with an epsilon improvement threshold (paper, "How
@@ -41,6 +49,16 @@ pub fn eager_loop(
 /// the objective by more than `eps * current_objective`, which bounds the
 /// number of swaps by `O(log(n)/eps)`.  `eps = 0` reproduces plain
 /// FasterPAM acceptance (modulo the FP-safety tolerance).
+///
+/// The candidate scan is partitioned over `pool`: a window of candidates
+/// is gain-evaluated in parallel against the *frozen* state, then walked
+/// in scan order; the first improving swap is applied sequentially and
+/// invalidates the rest of the window, which is re-evaluated against the
+/// new state.  Every gain that decides a swap is therefore computed
+/// against exactly the state the serial scan would have used, so the
+/// accepted swap sequence — and the final medoids — are bit-identical at
+/// any thread count (`pool.threads() == 1` runs the plain serial loop).
+#[allow(clippy::too_many_arguments)]
 pub fn eager_loop_eps(
     d: &Matrix,
     state: &mut SwapState,
@@ -48,6 +66,7 @@ pub fn eager_loop_eps(
     eps: f64,
     rng: &mut Rng,
     counters: &Counters,
+    pool: &Pool,
 ) -> usize {
     let n = d.rows;
     let mut order: Vec<usize> = (0..n).collect();
@@ -62,20 +81,64 @@ pub fn eager_loop_eps(
         tolerance(obj).max(eps * obj.abs() * state.weight_sum())
     };
     let mut threshold = threshold_of(state);
+    let window = pool.threads() * SCAN_CHUNK;
     for _pass in 0..max_passes {
         rng.shuffle(&mut order);
         let mut improved = false;
-        for &i in &order {
-            if state.is_medoid(i) {
-                continue;
+        if pool.is_serial() {
+            // exactly the pre-parallel scan: zero overhead at 1 thread
+            for &i in &order {
+                if state.is_medoid(i) {
+                    continue;
+                }
+                let (l, gain) = state.eval_candidate(d.row(i));
+                if gain > threshold {
+                    state.apply_swap(d, l, i);
+                    counters.add_swap();
+                    swaps += 1;
+                    improved = true;
+                    threshold = threshold_of(state);
+                }
             }
-            let (l, gain) = state.eval_candidate(d.row(i));
-            if gain > threshold {
-                state.apply_swap(d, l, i);
-                counters.add_swap();
-                swaps += 1;
-                improved = true;
-                threshold = threshold_of(state);
+        } else {
+            let mut start = 0usize;
+            while start < n {
+                let end = (start + window).min(n);
+                let idxs = &order[start..end];
+                // Parallel speculative evaluation against the current
+                // state; candidates that are (currently) medoids get -inf.
+                let frozen: &SwapState = state;
+                let evals: Vec<(usize, f64)> = pool
+                    .map_ranges(idxs.len(), |r| {
+                        let mut scratch: Vec<f32> = Vec::with_capacity(frozen.k());
+                        r.map(|t| {
+                            let i = idxs[t];
+                            if frozen.is_medoid(i) {
+                                (0usize, f64::NEG_INFINITY)
+                            } else {
+                                frozen.eval_candidate_at(d.row(i), &mut scratch)
+                            }
+                        })
+                        .collect::<Vec<_>>()
+                    })
+                    .into_iter()
+                    .flatten()
+                    .collect();
+                // Sequential application: first improving candidate in
+                // scan order wins; everything after it is stale and is
+                // re-evaluated on the next round of the window loop.
+                match evals.iter().position(|&(_, gain)| gain > threshold) {
+                    Some(off) => {
+                        let (l, _) = evals[off];
+                        state.apply_swap(d, l, order[start + off]);
+                        counters.add_swap();
+                        swaps += 1;
+                        improved = true;
+                        threshold = threshold_of(state);
+                        start += off + 1;
+                    }
+                    None => start = end,
+                }
             }
         }
         if !improved {
@@ -197,6 +260,29 @@ mod tests {
             let cur = st.est_objective();
             assert!(cur < prev + 1e-9, "objective increased {prev} -> {cur}");
             prev = cur;
+        }
+    }
+
+    #[test]
+    fn parallel_scan_matches_serial_exactly() {
+        let (d, st0, _) = instance(90, 24, 4, 9);
+        let counters = Counters::default();
+        let mut st_serial = st0.clone();
+        let mut rng = Rng::new(5);
+        let s1 = eager_loop_eps(&d, &mut st_serial, 50, 0.0, &mut rng, &counters, &Pool::serial());
+        assert!(s1 > 0, "instance should admit at least one swap");
+        for threads in [2, 3, 4] {
+            let mut st_par = st0.clone();
+            let mut rng = Rng::new(5);
+            let s2 =
+                eager_loop_eps(&d, &mut st_par, 50, 0.0, &mut rng, &counters, &Pool::new(threads));
+            assert_eq!(s1, s2, "swap count differs at {threads} threads");
+            assert_eq!(st_serial.med, st_par.med, "medoids differ at {threads} threads");
+            assert_eq!(
+                st_serial.est_objective().to_bits(),
+                st_par.est_objective().to_bits(),
+                "objective bits differ at {threads} threads"
+            );
         }
     }
 

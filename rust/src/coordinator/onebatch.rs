@@ -9,8 +9,10 @@ use super::sampler::{self, Batch, SamplerKind};
 use super::state::SwapState;
 use super::KMedoidsResult;
 use crate::backend::ComputeBackend;
+use crate::dissim::DissimCounter;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use crate::runtime::Pool;
 use crate::telemetry::{RunStats, Timer};
 use anyhow::Result;
 
@@ -42,6 +44,11 @@ pub struct OneBatchConfig {
     pub eps: f64,
     /// PRNG seed.
     pub seed: u64,
+    /// Worker threads for the eager candidate scan (`1` = serial,
+    /// `0` = auto-detect).  Medoids are bit-identical at any value for a
+    /// fixed seed; pair with [`crate::backend::NativeBackend::with_pool`]
+    /// to also parallelise the pairwise pass.
+    pub threads: usize,
 }
 
 impl Default for OneBatchConfig {
@@ -54,6 +61,7 @@ impl Default for OneBatchConfig {
             strategy: SwapStrategy::Eager,
             eps: 0.0,
             seed: 0,
+            threads: 1,
         }
     }
 }
@@ -73,8 +81,11 @@ pub fn one_batch_pam(
     let mut rng = Rng::new(cfg.seed);
 
     // --- Batch construction (Algorithm 1, lines 3-6) -------------------
+    // The sampler's own dissimilarities (Prog / Lwcs passes) go through
+    // the backend's counters so dissim_count reflects the true cost.
+    let counted = DissimCounter::with_counters(backend.metric(), counters.clone());
     let m = cfg.m.unwrap_or_else(|| sampler::default_batch_size(n, cfg.k));
-    let batch: Batch = sampler::sample(cfg.sampler, x, m, backend.metric(), &mut rng);
+    let batch: Batch = sampler::sample(cfg.sampler, x, m, &counted, &mut rng);
     let b = x.select_rows(&batch.indices);
 
     // The single O(n m p) distance computation of the method.
@@ -98,7 +109,16 @@ pub fn one_batch_pam(
     let mut state = SwapState::init(&d, med, w, n);
     match cfg.strategy {
         SwapStrategy::Eager => {
-            engine::eager_loop_eps(&d, &mut state, cfg.max_passes, cfg.eps, &mut rng, &counters);
+            let pool = Pool::new(cfg.threads);
+            engine::eager_loop_eps(
+                &d,
+                &mut state,
+                cfg.max_passes,
+                cfg.eps,
+                &mut rng,
+                &counters,
+                &pool,
+            );
         }
         SwapStrategy::Steepest => {
             engine::steepest_loop(backend, &d, &mut state, cfg.max_passes * cfg.k, &counters)?;
@@ -257,6 +277,18 @@ mod tests {
         let x = blobs(100, 8);
         let cfg = OneBatchConfig { k: 4, m: Some(25), seed: 11, ..Default::default() };
         assert_eq!(run(&cfg, &x).medoids, run(&cfg, &x).medoids);
+    }
+
+    #[test]
+    fn medoids_identical_across_thread_counts() {
+        let x = blobs(300, 10);
+        let base = OneBatchConfig { k: 4, m: Some(60), seed: 9, ..Default::default() };
+        let serial = run(&base, &x);
+        for threads in [0, 2, 4] {
+            let cfg = OneBatchConfig { threads, ..base.clone() };
+            let r = run(&cfg, &x);
+            assert_eq!(r.medoids, serial.medoids, "threads={threads}");
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //!   batch uniformly, then grow it by D-sampling points that are far from
 //!   the current batch, so sparse/distant regions get covered.
 
-use crate::dissim::{Metric, BIG};
+use crate::dissim::{DissimCounter, BIG};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 
@@ -97,10 +97,12 @@ pub fn default_batch_size(n: usize, k: usize) -> usize {
 
 /// Draw the batch according to `kind`.
 ///
-/// For `Lwcs` the q-distribution needs one pass over the data
-/// (O(np) — same order as computing the mean), matching the lightweight
-/// coreset construction cost.
-pub fn sample(kind: SamplerKind, x: &Matrix, m: usize, metric: Metric, rng: &mut Rng) -> Batch {
+/// Every dissimilarity the sampler itself computes goes through the
+/// counted evaluator `d`, so `stats.dissim_count` reflects the *true*
+/// per-variant cost (Table 1): `Prog` adds one `O(n)` pass per batch
+/// point (`n * |batch|` total) and `Lwcs` adds the `O(n)` mean-distance
+/// pass for its q-distribution; the uniform variants add nothing.
+pub fn sample(kind: SamplerKind, x: &Matrix, m: usize, d: &DissimCounter, rng: &mut Rng) -> Batch {
     let n = x.rows;
     let m = m.min(n);
     match kind {
@@ -121,7 +123,7 @@ pub fn sample(kind: SamplerKind, x: &Matrix, m: usize, metric: Metric, rng: &mut
             }
             for i in 0..n {
                 for &j in &chosen {
-                    let v = metric.eval(x.row(i), x.row(j));
+                    let v = d.eval(x.row(i), x.row(j));
                     if v < dmin[i] {
                         dmin[i] = v;
                     }
@@ -140,7 +142,7 @@ pub fn sample(kind: SamplerKind, x: &Matrix, m: usize, metric: Metric, rng: &mut
                 in_batch[c] = true;
                 chosen.push(c);
                 for i in 0..n {
-                    let v = metric.eval(x.row(i), x.row(c));
+                    let v = d.eval(x.row(i), x.row(c));
                     if v < dmin[i] {
                         dmin[i] = v;
                     }
@@ -164,8 +166,8 @@ pub fn sample(kind: SamplerKind, x: &Matrix, m: usize, metric: Metric, rng: &mut
             // q(x) = 1/(2n) + d(x, mean)^2 / (2 * sum)
             let d2: Vec<f64> = (0..n)
                 .map(|i| {
-                    let d = metric.eval(x.row(i), &mean) as f64;
-                    d * d
+                    let v = d.eval(x.row(i), &mean) as f64;
+                    v * v
                 })
                 .collect();
             let total: f64 = d2.iter().sum::<f64>().max(1e-30);
@@ -200,11 +202,16 @@ pub fn mask_self_distances(d: &mut Matrix, batch: &Batch) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dissim::Metric;
     use crate::rng::Rng;
 
     fn blob(n: usize, p: usize, seed: u64) -> Matrix {
         let mut rng = Rng::new(seed);
         Matrix::from_vec(n, p, (0..n * p).map(|_| rng.f32()).collect())
+    }
+
+    fn counter(metric: Metric) -> DissimCounter {
+        DissimCounter::new(metric)
     }
 
     #[test]
@@ -227,7 +234,7 @@ mod tests {
     fn unif_indices_distinct_weights_one() {
         let x = blob(100, 3, 1);
         let mut rng = Rng::new(2);
-        let b = sample(SamplerKind::Unif, &x, 20, Metric::L1, &mut rng);
+        let b = sample(SamplerKind::Unif, &x, 20, &counter(Metric::L1), &mut rng);
         assert_eq!(b.indices.len(), 20);
         let set: std::collections::HashSet<_> = b.indices.iter().collect();
         assert_eq!(set.len(), 20);
@@ -239,15 +246,15 @@ mod tests {
     fn debias_and_nniw_flags() {
         let x = blob(50, 3, 3);
         let mut rng = Rng::new(4);
-        assert!(sample(SamplerKind::Debias, &x, 10, Metric::L1, &mut rng).mask_self);
-        assert!(sample(SamplerKind::Nniw, &x, 10, Metric::L1, &mut rng).want_nniw);
+        assert!(sample(SamplerKind::Debias, &x, 10, &counter(Metric::L1), &mut rng).mask_self);
+        assert!(sample(SamplerKind::Nniw, &x, 10, &counter(Metric::L1), &mut rng).want_nniw);
     }
 
     #[test]
     fn lwcs_weights_positive_and_mass_near_one() {
         let x = blob(200, 4, 5);
         let mut rng = Rng::new(6);
-        let b = sample(SamplerKind::Lwcs, &x, 60, Metric::L2, &mut rng);
+        let b = sample(SamplerKind::Lwcs, &x, 60, &counter(Metric::L2), &mut rng);
         assert!(!b.indices.is_empty());
         assert!(b.weights.iter().all(|&w| w > 0.0));
         // importance weights sum to ~n in expectation (each term 1/(m q))
@@ -256,10 +263,44 @@ mod tests {
     }
 
     #[test]
+    fn uniform_family_computes_no_dissims() {
+        let x = blob(80, 3, 12);
+        for kind in [SamplerKind::Unif, SamplerKind::Debias, SamplerKind::Nniw] {
+            let d = counter(Metric::L1);
+            let mut rng = Rng::new(13);
+            sample(kind, &x, 16, &d, &mut rng);
+            assert_eq!(d.count(), 0, "{} should be dissimilarity-free", kind.name());
+        }
+    }
+
+    #[test]
+    fn lwcs_counts_exactly_one_mean_pass() {
+        // The q-distribution costs exactly n point-to-mean evaluations.
+        let n = 150;
+        let x = blob(n, 4, 14);
+        let d = counter(Metric::L2);
+        let mut rng = Rng::new(15);
+        sample(SamplerKind::Lwcs, &x, 40, &d, &mut rng);
+        assert_eq!(d.count(), n as u64);
+    }
+
+    #[test]
+    fn prog_counts_exactly_one_pass_per_batch_point() {
+        // Seeding evaluates n * seed_m, then each grown point one O(n)
+        // pass: n * |batch| total, no more, no less.
+        let n = 120;
+        let x = blob(n, 3, 16);
+        let d = counter(Metric::L1);
+        let mut rng = Rng::new(17);
+        let b = sample(SamplerKind::Prog, &x, 24, &d, &mut rng);
+        assert_eq!(d.count(), (n * b.indices.len()) as u64);
+    }
+
+    #[test]
     fn mask_self_sets_big() {
         let x = blob(10, 2, 7);
         let mut rng = Rng::new(8);
-        let b = sample(SamplerKind::Debias, &x, 4, Metric::L1, &mut rng);
+        let b = sample(SamplerKind::Debias, &x, 4, &counter(Metric::L1), &mut rng);
         let mut d = Matrix::zeros(10, 4);
         mask_self_distances(&mut d, &b);
         for (j, &i) in b.indices.iter().enumerate() {

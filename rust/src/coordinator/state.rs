@@ -134,8 +134,23 @@ impl SwapState {
     /// swap (remove `best_slot`, add `i`) improves the batch objective by
     /// exactly that amount.  `O(m + k)`, allocation-free.
     pub fn eval_candidate(&mut self, drow: &[f32]) -> (usize, f64) {
+        // Route through the shared-borrow form using the state's own
+        // scratch buffer (take/restore keeps this allocation-free).
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let r = self.eval_candidate_at(drow, &mut scratch);
+        self.scratch = scratch;
+        r
+    }
+
+    /// [`SwapState::eval_candidate`] against an external `O(k)` scratch
+    /// buffer, through a shared borrow — the form the parallel candidate
+    /// scan uses (one scratch per worker thread, state read-only).  The
+    /// buffer is resized to `k` on entry; reuse it across calls to stay
+    /// allocation-free.
+    pub fn eval_candidate_at(&self, drow: &[f32], scratch: &mut Vec<f32>) -> (usize, f64) {
         let k = self.k();
-        self.scratch[..k].copy_from_slice(&self.rloss);
+        scratch.resize(k, 0.0);
+        scratch[..k].copy_from_slice(&self.rloss);
         let mut shared = 0.0f64;
         // Single predictable branch per column: every contribution
         // (shared or per-medoid) requires dij < dsec, which is false for
@@ -149,15 +164,15 @@ impl SwapState {
                 let w = self.w[j];
                 if dij < dn {
                     shared += (w * (dn - dij)) as f64;
-                    self.scratch[self.near[j]] += w * (ds - dn);
+                    scratch[self.near[j]] += w * (ds - dn);
                 } else {
-                    self.scratch[self.near[j]] += w * (ds - dij);
+                    scratch[self.near[j]] += w * (ds - dij);
                 }
             }
         }
         let mut best_l = 0;
         let mut best_v = f32::NEG_INFINITY;
-        for (l, &v) in self.scratch[..k].iter().enumerate() {
+        for (l, &v) in scratch[..k].iter().enumerate() {
             if v > best_v {
                 best_v = v;
                 best_l = l;

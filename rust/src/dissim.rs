@@ -6,6 +6,7 @@
 //! over it through the telemetry-counting `DissimCounter` wrapper.
 
 use crate::linalg::Matrix;
+use crate::runtime::Pool;
 use crate::telemetry::Counters;
 use std::sync::Arc;
 
@@ -144,7 +145,15 @@ impl DissimCounter {
     }
 }
 
-/// Blocked `rows(x) x rows(b)` distance matrix (native path).
+/// Blocked `rows(x) x rows(b)` distance matrix (native path, serial).
+///
+/// Convenience wrapper over [`cross_matrix_pool`] with the serial pool.
+pub fn cross_matrix(d: &DissimCounter, x: &Matrix, b: &Matrix) -> Matrix {
+    cross_matrix_pool(d, x, b, &Pool::serial())
+}
+
+/// Blocked `rows(x) x rows(b)` distance matrix, row-partitioned over
+/// `pool` (the method's single `O(nmp)` cost).
 ///
 /// For the accumulable metrics (L1 / L2 / SqL2 / Chebyshev) this uses a
 /// **transposed batch layout**: `b` is transposed once to `(p, m)` so the
@@ -152,22 +161,30 @@ impl DissimCounter {
 /// loads (measured 2.2x at p=16 up to 5.8x at p=784 over the
 /// row-by-row form — EXPERIMENTS.md §Perf).  Cosine falls back to the
 /// row path.  Counts `n*m` evaluations either way.
-pub fn cross_matrix(d: &DissimCounter, x: &Matrix, b: &Matrix) -> Matrix {
+///
+/// Rows are independent and each output cell accumulates in the same
+/// order regardless of the chunking, so the result is bit-identical at
+/// any thread count (rust/tests/parallel_equivalence.rs).
+pub fn cross_matrix_pool(d: &DissimCounter, x: &Matrix, b: &Matrix, pool: &Pool) -> Matrix {
     assert_eq!(x.cols, b.cols, "feature dims differ");
     d.counters.add_dissim((x.rows * b.rows) as u64);
     let (n, m, p) = (x.rows, b.rows, x.cols);
     let mut out = Matrix::zeros(n, m);
     let metric = d.metric;
+    if m == 0 || n == 0 {
+        return out;
+    }
 
     if matches!(metric, Metric::Cosine) || m < 8 {
         // row-by-row fallback (non-accumulable metric or tiny batch)
-        for i in 0..n {
-            let xi = x.row(i);
-            let orow = out.row_mut(i);
-            for j in 0..m {
-                orow[j] = metric.eval(xi, b.row(j));
+        pool.for_each_row_chunk(&mut out.data, n, m, |row0, chunk| {
+            for (di, orow) in chunk.chunks_mut(m).enumerate() {
+                let xi = x.row(row0 + di);
+                for j in 0..m {
+                    orow[j] = metric.eval(xi, b.row(j));
+                }
             }
-        }
+        });
         return out;
     }
 
@@ -180,48 +197,52 @@ pub fn cross_matrix(d: &DissimCounter, x: &Matrix, b: &Matrix) -> Matrix {
         }
     }
 
-    // j-blocked accumulation, SIMD across the batch columns
+    // j-blocked accumulation, SIMD across the batch columns; each worker
+    // owns a contiguous row chunk and reads the shared transpose.
     const BJ: usize = 64;
     let post_sqrt = metric == Metric::L2;
-    for j0 in (0..m).step_by(BJ) {
-        let jw = BJ.min(m - j0);
-        for i in 0..n {
-            let xi = x.row(i);
-            let orow = &mut out.row_mut(i)[j0..j0 + jw];
-            orow.iter_mut().for_each(|v| *v = 0.0);
-            match metric {
-                Metric::L1 => {
-                    for (dd, &xv) in xi.iter().enumerate() {
-                        let brow = &bt[dd * m + j0..dd * m + j0 + jw];
-                        for l in 0..jw {
-                            orow[l] += (xv - brow[l]).abs();
+    let bt = &bt;
+    pool.for_each_row_chunk(&mut out.data, n, m, |row0, chunk| {
+        for (di, full_row) in chunk.chunks_mut(m).enumerate() {
+            let xi = x.row(row0 + di);
+            for j0 in (0..m).step_by(BJ) {
+                let jw = BJ.min(m - j0);
+                let orow = &mut full_row[j0..j0 + jw];
+                orow.iter_mut().for_each(|v| *v = 0.0);
+                match metric {
+                    Metric::L1 => {
+                        for (dd, &xv) in xi.iter().enumerate() {
+                            let brow = &bt[dd * m + j0..dd * m + j0 + jw];
+                            for l in 0..jw {
+                                orow[l] += (xv - brow[l]).abs();
+                            }
                         }
                     }
-                }
-                Metric::SqL2 | Metric::L2 => {
-                    for (dd, &xv) in xi.iter().enumerate() {
-                        let brow = &bt[dd * m + j0..dd * m + j0 + jw];
-                        for l in 0..jw {
-                            let diff = xv - brow[l];
-                            orow[l] += diff * diff;
+                    Metric::SqL2 | Metric::L2 => {
+                        for (dd, &xv) in xi.iter().enumerate() {
+                            let brow = &bt[dd * m + j0..dd * m + j0 + jw];
+                            for l in 0..jw {
+                                let diff = xv - brow[l];
+                                orow[l] += diff * diff;
+                            }
                         }
                     }
-                }
-                Metric::Chebyshev => {
-                    for (dd, &xv) in xi.iter().enumerate() {
-                        let brow = &bt[dd * m + j0..dd * m + j0 + jw];
-                        for l in 0..jw {
-                            orow[l] = orow[l].max((xv - brow[l]).abs());
+                    Metric::Chebyshev => {
+                        for (dd, &xv) in xi.iter().enumerate() {
+                            let brow = &bt[dd * m + j0..dd * m + j0 + jw];
+                            for l in 0..jw {
+                                orow[l] = orow[l].max((xv - brow[l]).abs());
+                            }
                         }
                     }
+                    Metric::Cosine => unreachable!(),
                 }
-                Metric::Cosine => unreachable!(),
-            }
-            if post_sqrt {
-                orow.iter_mut().for_each(|v| *v = v.sqrt());
+                if post_sqrt {
+                    orow.iter_mut().for_each(|v| *v = v.sqrt());
+                }
             }
         }
-    }
+    });
     out
 }
 

@@ -17,6 +17,13 @@ pub fn env_reps(default: usize) -> usize {
     std::env::var("OBPAM_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
+/// `OBPAM_THREADS` (default `default`): execution-pool width for the
+/// benches (`1` = serial, `0` = auto-detect cores).  Selections are
+/// identical at any value; only wall-clock changes.
+pub fn env_threads(default: usize) -> usize {
+    std::env::var("OBPAM_THREADS").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 /// `OBPAM_KS` (default `default`, e.g. "10,50,100").
 pub fn env_ks(default: &[usize]) -> Vec<usize> {
     match std::env::var("OBPAM_KS") {

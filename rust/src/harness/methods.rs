@@ -5,6 +5,7 @@ use crate::baselines;
 use crate::coordinator::{self, onebatch::SwapStrategy, OneBatchConfig, SamplerKind};
 use crate::dissim::Metric;
 use crate::linalg::Matrix;
+use crate::runtime::Pool;
 use anyhow::Result;
 
 /// One method variant, named exactly like the paper's result rows.
@@ -94,21 +95,40 @@ impl MethodSpec {
         ]
     }
 
-    /// Run the method; returns the selected medoids.
+    /// Run the method serially; returns the selected medoids.
     pub fn run(&self, x: &Matrix, k: usize, metric: Metric, seed: u64) -> Result<RunOutput> {
-        let backend = NativeBackend::new(metric);
-        self.run_with_backend(x, k, seed, &backend)
+        self.run_threaded(x, k, metric, seed, 1)
+    }
+
+    /// Run on a native backend with a `threads`-wide execution pool
+    /// (`1` = serial, `0` = auto).  Matrix-level methods (OneBatch,
+    /// FasterPAM, FasterCLARA) parallelise their pairwise/tile ops and
+    /// OneBatch additionally its eager scan; selections are identical
+    /// to the serial run for a fixed seed.
+    pub fn run_threaded(
+        &self,
+        x: &Matrix,
+        k: usize,
+        metric: Metric,
+        seed: u64,
+        threads: usize,
+    ) -> Result<RunOutput> {
+        let backend = NativeBackend::with_pool(metric, Pool::new(threads));
+        self.run_with_backend(x, k, seed, &backend, threads)
     }
 
     /// Run against an explicit backend (XLA-vs-native ablations).
     /// Point-level algorithms (Alternate, k-means++ family, BanditPAM)
-    /// always use the backend's counted metric directly.
+    /// always use the backend's counted metric directly.  `threads`
+    /// sizes the OneBatch eager-scan pool (backend tile ops use the
+    /// backend's own pool).
     pub fn run_with_backend(
         &self,
         x: &Matrix,
         k: usize,
         seed: u64,
         backend: &dyn ComputeBackend,
+        threads: usize,
     ) -> Result<RunOutput> {
         let metric = backend.metric();
         let counted = crate::dissim::DissimCounter::with_counters(metric, backend.counters());
@@ -136,6 +156,7 @@ impl MethodSpec {
                     sampler: *sampler,
                     strategy: *strategy,
                     seed,
+                    threads,
                     ..Default::default()
                 },
                 backend,
@@ -214,6 +235,21 @@ mod tests {
         for m in MethodSpec::table3_grid() {
             let out = m.run(&x, 3, Metric::L1, 7).unwrap();
             assert_eq!(out.medoids.len(), 3, "{}", m.label());
+        }
+    }
+
+    #[test]
+    fn threaded_run_selects_identical_medoids() {
+        let mut rng = Rng::new(2);
+        let x = synth::gen_gaussian_mixture(&mut rng, 160, 4, 3, 0.15, 1.0);
+        for m in [
+            MethodSpec::FasterPam,
+            MethodSpec::OneBatch { sampler: SamplerKind::Nniw, strategy: SwapStrategy::Eager },
+        ] {
+            let serial = m.run(&x, 3, Metric::L1, 11).unwrap();
+            let par = m.run_threaded(&x, 3, Metric::L1, 11, 4).unwrap();
+            assert_eq!(serial.medoids, par.medoids, "{}", m.label());
+            assert_eq!(serial.dissim_count, par.dissim_count, "{}", m.label());
         }
     }
 }

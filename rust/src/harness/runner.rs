@@ -32,6 +32,10 @@ pub struct Record {
 }
 
 /// Run one method on one dataset instance and evaluate it exactly.
+/// `threads` sizes the execution pool (`1` = serial, `0` = auto); the
+/// selection is identical at any value for a fixed seed, only the
+/// wall-clock changes.
+#[allow(clippy::too_many_arguments)]
 pub fn run_method(
     method: &MethodSpec,
     x: &Matrix,
@@ -40,8 +44,9 @@ pub fn run_method(
     rep: usize,
     metric: Metric,
     seed: u64,
+    threads: usize,
 ) -> anyhow::Result<Record> {
-    let out = method.run(x, k, metric, seed)?;
+    let out = method.run_threaded(x, k, metric, seed, threads)?;
     // evaluation is outside the timed section and uncounted
     let eval_d = DissimCounter::new(metric);
     let objective = eval::objective(x, &out.medoids, &eval_d);
@@ -60,7 +65,9 @@ pub fn run_method(
 /// Run the full grid.  `scale` multiplies dataset sizes (OBPAM_SCALE
 /// convention); methods infeasible at large scale are skipped for
 /// datasets flagged large in the catalogue, mirroring the paper's "Na"
-/// cells.  `progress` receives one line per finished run.
+/// cells.  `threads` sizes the per-run execution pool (`OBPAM_THREADS`
+/// from the benches; selections are thread-count-invariant).
+/// `progress` receives one line per finished run.
 #[allow(clippy::too_many_arguments)]
 pub fn run_grid(
     datasets: &[&str],
@@ -70,6 +77,7 @@ pub fn run_grid(
     scale: f64,
     metric: Metric,
     base_seed: u64,
+    threads: usize,
     mut progress: impl FnMut(&Record),
 ) -> anyhow::Result<Vec<Record>> {
     let mut records = Vec::new();
@@ -91,7 +99,7 @@ pub fn run_grid(
                     .wrapping_add(rep as u64)
                     .wrapping_mul(0x9E37_79B9)
                     .wrapping_add(k as u64);
-                let rec = run_method(method, x, ds, k, rep, metric, seed)?;
+                let rec = run_method(method, x, ds, k, rep, metric, seed, threads)?;
                 progress(&rec);
                 records.push(rec);
             }
@@ -181,6 +189,7 @@ mod tests {
             1.0,
             Metric::L1,
             42,
+            1,
             |_| {},
         )
         .unwrap();
@@ -200,6 +209,7 @@ mod tests {
             1.0,
             Metric::L1,
             7,
+            1,
             |_| {},
         )
         .unwrap();
@@ -221,6 +231,7 @@ mod tests {
             &[MethodSpec::FasterPam, MethodSpec::KMeansPp],
             0.0005,
             Metric::L1,
+            1,
             1,
             |_| {},
         )

@@ -4,11 +4,20 @@
 //! AAAI 2025) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L1/L2 (build time)** — Pallas kernels + JAX graph in
-//!   `python/compile/`, AOT-lowered to HLO text under `artifacts/`;
+//!   `python/compile/`, AOT-lowered to HLO text under `artifacts/`
+//!   (consumed by the `xla`-feature PJRT runtime);
 //! * **L3 (this crate)** — the coordinator: batch sampling, the
 //!   FasterPAM swap engine over one `n x m` distance matrix, every
 //!   baseline from the paper's evaluation, the experiment harness that
 //!   regenerates each table/figure, and a clustering job server.
+//!
+//! Both dominant costs — the `O(nmp)` pairwise pass and the
+//! `O(n(m+k))` eager swap scan — are row-parallel over the
+//! [`runtime::Pool`] execution layer.  The thread count is one knob
+//! (`OneBatchConfig::threads` / `NativeBackend::with_pool` /
+//! `--threads` on the CLI / `threads=` on the server protocol); for a
+//! fixed seed the selected medoids are **bit-identical at any thread
+//! count**, so parallelism never costs reproducibility.
 //!
 //! Quick start (see `examples/quickstart.rs`):
 //!
@@ -17,10 +26,12 @@
 //! use obpam::coordinator::{one_batch_pam, OneBatchConfig};
 //! use obpam::data::synth;
 //! use obpam::dissim::Metric;
+//! use obpam::runtime::Pool;
 //!
 //! let data = synth::generate("blobs_2000_8_5", 1.0, 42);
-//! let cfg = OneBatchConfig { k: 5, ..Default::default() };
-//! let backend = NativeBackend::new(Metric::L1);
+//! // threads: 0 = all cores, 1 = serial; medoids identical either way.
+//! let cfg = OneBatchConfig { k: 5, threads: 0, ..Default::default() };
+//! let backend = NativeBackend::with_pool(Metric::L1, Pool::auto());
 //! let result = one_batch_pam(&data.x, &cfg, &backend).unwrap();
 //! println!("medoids: {:?}", result.medoids);
 //! ```

@@ -5,22 +5,33 @@
 //! ```text
 //! obpam cluster  --dataset mnist --k 10 [--sampler nniw] [--metric l1]
 //!                [--scale 0.1] [--seed 0] [--backend native|xla|xla-dense]
-//!                [--m N] [--strategy eager|steepest] [--config file.toml]
+//!                [--m N] [--strategy eager|steepest] [--threads T]
+//!                [--config file.toml]
 //! obpam bench    --table 3|5|7 | --fig 1|pareto  (thin wrapper; prefer `cargo bench`)
-//! obpam serve    [--addr 127.0.0.1:7878] [--workers 2]
+//! obpam serve    [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 16]
 //! obpam gen      --list | --dataset NAME [--scale S] [--out file.csv]
-//! obpam artifacts-check
+//! obpam artifacts-check   (requires the `xla` build feature)
 //! ```
+//!
+//! `--threads T` (config key `run.threads`) sizes the execution pool for
+//! the pairwise pass and the eager swap scan; `0` auto-detects the core
+//! count and `1` (the default) is the serial path.  Medoids are
+//! bit-identical at any thread count for a fixed seed.
 
 use anyhow::{bail, Context, Result};
-use obpam::backend::{NativeBackend, XlaBackend};
+use obpam::backend::NativeBackend;
+#[cfg(feature = "xla")]
+use obpam::backend::XlaBackend;
 use obpam::config::Config;
 use obpam::coordinator::{one_batch_pam, onebatch::SwapStrategy, OneBatchConfig, SamplerKind};
 use obpam::data::synth;
 use obpam::dissim::{DissimCounter, Metric};
 use obpam::eval;
+use obpam::runtime::Pool;
+#[cfg(feature = "xla")]
 use obpam::runtime::Runtime;
 use std::collections::HashMap;
+#[cfg(feature = "xla")]
 use std::rc::Rc;
 
 fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
@@ -96,22 +107,36 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
         "auto" => None,
         s => Some(s.parse().context("--m")?),
     };
+    let threads: usize = get("run.threads", "threads", "1").parse().context("--threads")?;
     let backend_name = get("run.backend", "backend", "native");
 
     eprintln!("[obpam] generating dataset {dataset} (scale {scale})");
     let data = synth::generate(&dataset, scale, seed);
-    eprintln!("[obpam] n={} p={} k={k} sampler={} backend={backend_name}", data.n(), data.p(), sampler.name());
+    eprintln!(
+        "[obpam] n={} p={} k={k} sampler={} backend={backend_name} threads={}",
+        data.n(),
+        data.p(),
+        sampler.name(),
+        Pool::new(threads).threads()
+    );
 
-    let ob_cfg = OneBatchConfig { k, sampler, m, strategy, seed, ..Default::default() };
+    let ob_cfg = OneBatchConfig { k, sampler, m, strategy, seed, threads, ..Default::default() };
     let result = match backend_name.as_str() {
         "native" => {
-            let backend = NativeBackend::new(metric);
+            let backend = NativeBackend::with_pool(metric, Pool::new(threads));
             one_batch_pam(&data.x, &ob_cfg, &backend)?
         }
+        #[cfg(feature = "xla")]
         "xla" | "xla-dense" => {
+            // the PJRT runtime is single-threaded; `threads` still
+            // parallelises the eager scan via ob_cfg
             let rt = Rc::new(Runtime::load_default()?);
             let backend = XlaBackend::new(rt, metric, backend_name == "xla-dense");
             one_batch_pam(&data.x, &ob_cfg, &backend)?
+        }
+        #[cfg(not(feature = "xla"))]
+        "xla" | "xla-dense" => {
+            bail!("this build has no `xla` feature; rebuild with --features xla")
         }
         other => bail!("unknown backend {other}"),
     };
@@ -169,6 +194,7 @@ fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_artifacts_check() -> Result<()> {
     let rt = Runtime::load_default()?;
     println!("manifest: {} artifacts", rt.specs().len());
@@ -185,4 +211,9 @@ fn cmd_artifacts_check() -> Result<()> {
     anyhow::ensure!((d.get(0, 3) - 2.0).abs() < 1e-5, "pairwise sanity failed");
     println!("PJRT execution check: OK (l1 pairwise via Pallas artifact)");
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_artifacts_check() -> Result<()> {
+    bail!("this build has no `xla` feature; rebuild with --features xla to check artifacts")
 }

@@ -1,0 +1,283 @@
+//! PJRT runtime (feature `xla`): load AOT artifacts (HLO text) and
+//! execute them.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once at build time; this
+//! module is the only bridge between the Rust hot path and those
+//! artifacts.
+//!
+//! Responsibilities:
+//!   * pick the smallest shape bucket that fits a request and pad inputs
+//!     (rows: zeros, batch columns: weight 0, medoid columns: BIG) so
+//!     results are exact despite padding;
+//!   * lazily compile HLO text -> PJRT executable, cached per artifact;
+//!   * tile the `n` axis in `N_TILE`-row chunks (the artifacts' fixed row
+//!     count).
+
+use super::{parse_manifest, slice_rows_padded, ArtifactSpec};
+use crate::dissim::{Metric, BIG};
+use crate::linalg::Matrix;
+use crate::telemetry::Counters;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Artifact registry + lazy executable cache over one PJRT client.
+///
+/// Not `Sync`: intended for single-threaded hot paths (the server guards
+/// it with a dedicated worker thread).  CPU-side parallelism lives in
+/// [`super::Pool`] instead.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+    cache: RefCell<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    counters: Arc<Counters>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and start a CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
+        let specs = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            specs,
+            cache: RefCell::new(HashMap::new()),
+            counters: Arc::new(Counters::default()),
+        })
+    }
+
+    /// Default artifact location: `$OBPAM_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("OBPAM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    /// Shared telemetry counters.
+    pub fn counters(&self) -> Arc<Counters> {
+        self.counters.clone()
+    }
+
+    /// All artifact specs (for introspection / `obpam artifacts-check`).
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Smallest bucket of `kind`/`metric` with p >= min_p, m >= min_m,
+    /// k >= min_k (0 requirements ignore that axis).
+    pub fn find(&self, kind: &str, metric: Option<Metric>, min_p: usize, min_m: usize, min_k: usize) -> Result<&ArtifactSpec> {
+        let metric_name = metric.map(|m| m.name());
+        self.specs
+            .iter()
+            .filter(|s| s.kind == kind)
+            .filter(|s| metric_name.map_or(true, |mn| s.metric == mn))
+            .filter(|s| s.p >= min_p && s.m >= min_m && s.k >= min_k)
+            .min_by_key(|s| (s.p, s.m, s.k))
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for kind={kind} metric={:?} p>={min_p} m>={min_m} k>={min_k}; \
+                     regenerate with `make artifacts` (full grid)",
+                    metric_name
+                )
+            })
+    }
+
+    /// Compile (cached) and return the executable for a spec.
+    fn executable(&self, spec: &ArtifactSpec) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&spec.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?,
+        );
+        self.cache.borrow_mut().insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact; returns the decomposed output tuple.
+    fn exec(&self, spec: &ArtifactSpec, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(spec)?;
+        self.counters.add_xla_exec();
+        let bufs = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", spec.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e:?}", spec.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {}: {e:?}", spec.name))
+    }
+
+    /// n-tiled, p/m-padded pairwise distance matrix via the Pallas
+    /// (`dense=false`) or plain-XLA (`dense=true`) artifact.
+    pub fn pairwise(&self, x: &Matrix, b: &Matrix, metric: Metric, dense: bool) -> Result<Matrix> {
+        assert_eq!(x.cols, b.cols, "feature dims differ");
+        let kind = if dense { "pairwise_dense" } else { "pairwise" };
+        // The artifact metric is l1 or sqeuclidean; L2 runs sqeuclidean + sqrt.
+        let (art_metric, post_sqrt) = match metric {
+            Metric::L1 => (Metric::L1, false),
+            Metric::SqL2 => (Metric::SqL2, false),
+            Metric::L2 => (Metric::SqL2, true),
+            other => bail!("metric {} has no XLA artifact; use the native backend", other.name()),
+        };
+        let spec = self.find(kind, Some(art_metric), x.cols, b.rows, 0)?.clone();
+        self.counters.add_dissim((x.rows * b.rows) as u64);
+
+        let bp = b.pad_to(spec.m, spec.p, 0.0);
+        let b_lit = matrix_literal(&bp)?;
+        let mut out = Matrix::zeros(x.rows, b.rows);
+        for i0 in (0..x.rows).step_by(spec.n) {
+            let i1 = (i0 + spec.n).min(x.rows);
+            let tile = slice_rows_padded(x, i0, i1, spec.n, spec.p, 0.0);
+            let x_lit = matrix_literal(&tile)?;
+            let outs = self.exec(&spec, &[&x_lit, &b_lit])?;
+            let d: Vec<f32> = outs[0]
+                .to_vec()
+                .map_err(|e| anyhow!("pairwise output: {e:?}"))?;
+            for i in i0..i1 {
+                let src = (i - i0) * spec.m;
+                let dst = out.row_mut(i);
+                let row = &d[src..src + b.rows];
+                if post_sqrt {
+                    for (o, v) in dst.iter_mut().zip(row) {
+                        *o = v.max(0.0).sqrt();
+                    }
+                } else {
+                    dst.copy_from_slice(row);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Swap-gain tile over all rows of `d` (n x m), padded to buckets.
+    /// Returns (shared (n,), permedoid (n x k)).
+    pub fn gains(
+        &self,
+        d: &Matrix,
+        dnear: &[f32],
+        dsec: &[f32],
+        near: &[usize],
+        k: usize,
+        w: &[f32],
+    ) -> Result<(Vec<f32>, Matrix)> {
+        let m = d.cols;
+        let spec = self.find("gains", None, 0, m, k)?.clone();
+        // Pad batch vectors; padded columns get w = 0 so they contribute 0.
+        let mut dn = vec![0.0f32; spec.m];
+        let mut ds = vec![0.0f32; spec.m];
+        let mut wp = vec![0.0f32; spec.m];
+        dn[..m].copy_from_slice(dnear);
+        ds[..m].copy_from_slice(dsec);
+        wp[..m].copy_from_slice(w);
+        let mut onehot = Matrix::zeros(spec.m, spec.k);
+        for (j, &l) in near.iter().enumerate() {
+            onehot.set(j, l, 1.0);
+        }
+        let dn_lit = vec_literal(&dn);
+        let ds_lit = vec_literal(&ds);
+        let w_lit = vec_literal(&wp);
+        let oh_lit = matrix_literal(&onehot)?;
+
+        let mut shared = vec![0.0f32; d.rows];
+        let mut permedoid = Matrix::zeros(d.rows, k);
+        for i0 in (0..d.rows).step_by(spec.n) {
+            let i1 = (i0 + spec.n).min(d.rows);
+            let tile = slice_rows_padded(d, i0, i1, spec.n, spec.m, 0.0);
+            let tile_lit = matrix_literal(&tile)?;
+            let outs = self.exec(&spec, &[&tile_lit, &dn_lit, &ds_lit, &oh_lit, &w_lit])?;
+            let sh: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("gains shared: {e:?}"))?;
+            let pm: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("gains permedoid: {e:?}"))?;
+            shared[i0..i1].copy_from_slice(&sh[..i1 - i0]);
+            for i in i0..i1 {
+                let src = (i - i0) * spec.k;
+                permedoid.row_mut(i).copy_from_slice(&pm[src..src + k]);
+            }
+        }
+        Ok((shared, permedoid))
+    }
+
+    /// Row-wise top-2 over an (n x k) medoid-distance matrix.
+    pub fn top2(&self, d: &Matrix) -> Result<(Vec<usize>, Vec<f32>, Vec<usize>, Vec<f32>)> {
+        let k = d.cols;
+        let spec = self.find("top2", None, 0, 0, k)?.clone();
+        let (mut ni, mut nd) = (vec![0usize; d.rows], vec![0f32; d.rows]);
+        let (mut si, mut sd) = (vec![0usize; d.rows], vec![0f32; d.rows]);
+        for i0 in (0..d.rows).step_by(spec.n) {
+            let i1 = (i0 + spec.n).min(d.rows);
+            // pad medoid columns with BIG so they never win top2
+            let tile = slice_rows_padded(d, i0, i1, spec.n, spec.k, BIG);
+            let tile_lit = matrix_literal(&tile)?;
+            let outs = self.exec(&spec, &[&tile_lit])?;
+            let a: Vec<i32> = outs[0].to_vec().map_err(|e| anyhow!("top2 ni: {e:?}"))?;
+            let b: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("top2 nd: {e:?}"))?;
+            let c: Vec<i32> = outs[2].to_vec().map_err(|e| anyhow!("top2 si: {e:?}"))?;
+            let e: Vec<f32> = outs[3].to_vec().map_err(|e| anyhow!("top2 sd: {e:?}"))?;
+            for i in i0..i1 {
+                ni[i] = a[i - i0] as usize;
+                nd[i] = b[i - i0];
+                si[i] = c[i - i0] as usize;
+                sd[i] = e[i - i0];
+            }
+        }
+        Ok((ni, nd, si, sd))
+    }
+
+    /// Row-wise (argmin, min) over an (n x m) matrix.
+    pub fn argmin_rows(&self, d: &Matrix) -> Result<(Vec<usize>, Vec<f32>)> {
+        let spec = self.find("argmin", None, 0, d.cols, 0)?.clone();
+        let (mut idx, mut val) = (vec![0usize; d.rows], vec![0f32; d.rows]);
+        for i0 in (0..d.rows).step_by(spec.n) {
+            let i1 = (i0 + spec.n).min(d.rows);
+            let tile = slice_rows_padded(d, i0, i1, spec.n, spec.m, BIG);
+            let tile_lit = matrix_literal(&tile)?;
+            let outs = self.exec(&spec, &[&tile_lit])?;
+            let a: Vec<i32> = outs[0].to_vec().map_err(|e| anyhow!("argmin idx: {e:?}"))?;
+            let b: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("argmin val: {e:?}"))?;
+            for i in i0..i1 {
+                idx[i] = a[i - i0] as usize;
+                val[i] = b[i - i0];
+            }
+        }
+        Ok((idx, val))
+    }
+
+    /// Weighted batch objective via the `objective` artifact.
+    pub fn objective(&self, dnear: &[f32], w: &[f32]) -> Result<f32> {
+        let spec = self.find("objective", None, 0, dnear.len(), 0)?.clone();
+        let mut dn = vec![0.0f32; spec.m];
+        let mut wp = vec![0.0f32; spec.m];
+        dn[..dnear.len()].copy_from_slice(dnear);
+        wp[..w.len()].copy_from_slice(w);
+        let dn_lit = vec_literal(&dn);
+        let wp_lit = vec_literal(&wp);
+        let outs = self.exec(&spec, &[&dn_lit, &wp_lit])?;
+        outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("objective: {e:?}"))
+            .map(|v| v[0])
+    }
+}
+
+/// Matrix -> f32 PJRT literal of shape [rows, cols].
+fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+    xla::Literal::vec1(&m.data)
+        .reshape(&[m.rows as i64, m.cols as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Slice -> f32 PJRT literal of shape [len].
+fn vec_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}

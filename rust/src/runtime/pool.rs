@@ -1,0 +1,207 @@
+//! Row-chunked thread pool for the embarrassingly parallel hot paths.
+//!
+//! Every expensive loop in the crate (the `O(nmp)` pairwise pass, the
+//! per-row `top2` / `gains` / `argmin` tile ops, the `O(n(m+k))` eager
+//! candidate scan) iterates independent rows, so parallelism is plain
+//! row partitioning.  [`Pool`] captures one knob — the thread count —
+//! and two execution shapes:
+//!
+//! * [`Pool::map_ranges`] — split `0..n` into at most `threads`
+//!   contiguous ranges, run a closure per range on scoped threads, and
+//!   return the results *in range order*;
+//! * [`Pool::for_each_row_chunk`] — hand each thread a disjoint
+//!   `&mut` window of a row-major buffer (no result stitching).
+//!
+//! Determinism: ranges are contiguous and results are stitched in
+//! order, and every per-row computation in the crate is independent of
+//! its chunk boundaries, so all outputs are **bit-identical at any
+//! thread count** (asserted by rust/tests/parallel_equivalence.rs).
+//!
+//! `threads == 1` never spawns: closures run inline on the caller's
+//! thread, which is exactly the pre-parallel serial path.
+//!
+//! Implementation note: this is `std::thread::scope` per parallel
+//! region rather than a persistent rayon-style pool — rayon is not in
+//! the offline vendor set (same reason rand/clap/serde are hand-rolled
+//! here).  Scoped-spawn overhead is tens of microseconds, amortised by
+//! the chunk sizes used at the call sites.
+
+use std::num::NonZeroUsize;
+use std::ops::Range;
+
+/// A configurable-width scoped thread pool (see module docs).
+#[derive(Clone, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Default for Pool {
+    /// Default is the serial path (one thread).
+    fn default() -> Self {
+        Pool::serial()
+    }
+}
+
+impl Pool {
+    /// Pool with `threads` workers; `0` means auto-detect
+    /// (`std::thread::available_parallelism`, falling back to 1).
+    pub fn new(threads: usize) -> Self {
+        let t = if threads == 0 {
+            std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+        } else {
+            threads
+        };
+        Pool { threads: t.max(1) }
+    }
+
+    /// The single-threaded pool: every call runs inline on the caller.
+    pub fn serial() -> Self {
+        Pool { threads: 1 }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn auto() -> Self {
+        Pool::new(0)
+    }
+
+    /// Worker count (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Does this pool run everything inline on the caller's thread?
+    pub fn is_serial(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Split `0..n` into at most `threads` contiguous, non-empty,
+    /// ascending ranges covering `0..n` (empty for `n == 0`).
+    pub fn ranges(&self, n: usize) -> Vec<Range<usize>> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let t = self.threads.min(n);
+        let chunk = (n + t - 1) / t;
+        let mut out = Vec::with_capacity(t);
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            out.push(start..end);
+            start = end;
+        }
+        out
+    }
+
+    /// Run `f` over contiguous sub-ranges of `0..n` in parallel and
+    /// return one result per range, in range order.
+    ///
+    /// Serial pools (and `n <= 1`) call `f(0..n)` inline.
+    pub fn map_ranges<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(Range<usize>) -> R + Sync,
+    {
+        if self.is_serial() || n <= 1 {
+            return vec![f(0..n)];
+        }
+        let ranges = self.ranges(n);
+        let f = &f; // share one &F across the spawned closures
+        std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .into_iter()
+                .map(|r| s.spawn(move || f(r)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Partition the row-major buffer `data` (`rows x cols`) into
+    /// disjoint row chunks and run `f(first_row, chunk)` on each in
+    /// parallel.  Serial pools call `f(0, data)` inline.
+    pub fn for_each_row_chunk<F>(&self, data: &mut [f32], rows: usize, cols: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        debug_assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        if self.is_serial() || rows <= 1 || cols == 0 {
+            f(0, data);
+            return;
+        }
+        let ranges = self.ranges(rows);
+        let f = &f; // share one &F across the spawned closures
+        std::thread::scope(|s| {
+            let mut rest: &mut [f32] = data;
+            for r in ranges {
+                let (head, tail) = rest.split_at_mut((r.end - r.start) * cols);
+                rest = tail;
+                s.spawn(move || f(r.start, head));
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_zero_is_auto_and_nonzero() {
+        assert!(Pool::new(0).threads() >= 1);
+        assert_eq!(Pool::new(3).threads(), 3);
+        assert!(Pool::serial().is_serial());
+        assert!(!Pool::new(2).is_serial());
+    }
+
+    #[test]
+    fn ranges_cover_exactly_in_order() {
+        for threads in [1, 2, 3, 4, 7] {
+            let pool = Pool::new(threads);
+            for n in [0usize, 1, 2, 5, 16, 17, 100] {
+                let rs = pool.ranges(n);
+                assert!(rs.len() <= threads.max(1));
+                let mut expect = 0;
+                for r in &rs {
+                    assert_eq!(r.start, expect, "gap at n={n} t={threads}");
+                    assert!(r.end > r.start, "empty range at n={n} t={threads}");
+                    expect = r.end;
+                }
+                assert_eq!(expect, n, "coverage at n={n} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_ranges_results_in_order() {
+        for threads in [1, 2, 4] {
+            let pool = Pool::new(threads);
+            let parts = pool.map_ranges(25, |r| r.map(|i| i * i).collect::<Vec<_>>());
+            let flat: Vec<usize> = parts.into_iter().flatten().collect();
+            let expect: Vec<usize> = (0..25).map(|i| i * i).collect();
+            assert_eq!(flat, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_row_chunk_touches_every_row_once() {
+        for threads in [1, 2, 3, 8] {
+            let pool = Pool::new(threads);
+            let (rows, cols) = (13, 4);
+            let mut data = vec![0.0f32; rows * cols];
+            pool.for_each_row_chunk(&mut data, rows, cols, |row0, chunk| {
+                for (di, row) in chunk.chunks_mut(cols).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (row0 + di) as f32 + 1.0;
+                    }
+                }
+            });
+            for i in 0..rows {
+                for j in 0..cols {
+                    assert_eq!(data[i * cols + j], (i + 1) as f32, "threads={threads}");
+                }
+            }
+        }
+    }
+}

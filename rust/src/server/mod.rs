@@ -1,29 +1,38 @@
 //! Clustering job server: a std::net TCP service with a bounded job
-//! queue and a worker pool (tokio is unavailable offline; on this
-//! single-core testbed thread-per-worker is the right shape anyway).
+//! queue and a fixed worker pool (tokio is unavailable offline;
+//! thread-per-worker over a bounded queue is the right shape for
+//! CPU-bound jobs anyway).
 //!
 //! Line protocol (one request per connection line, one reply line):
 //!
 //! ```text
-//! -> cluster dataset=blobs_2000_8_5 k=5 sampler=nniw seed=3 scale=1.0
-//! <- ok medoids=4,17,... objective=0.1234 seconds=0.05 queue_ms=0.1
+//! -> cluster dataset=blobs_2000_8_5 k=5 sampler=nniw seed=3 scale=1.0 threads=4
+//! <- ok medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 served_ms=50.1
 //! -> ping
 //! <- pong
 //! ```
 //!
-//! Backpressure: when the queue is full the server replies
-//! `err queue full` immediately instead of accepting unbounded work.
+//! Concurrency model:
+//!   * `ServerConfig::workers` long-lived worker threads drain accepted
+//!     connections from an mpsc queue — cross-job parallelism;
+//!   * each `cluster` job may additionally ask for data parallelism via
+//!     the `threads=` key (a [`crate::runtime::Pool`] per job);
+//!   * admission is a **single atomic** `fetch_update` on the in-flight
+//!     counter (queued + running): a burst of connections can never
+//!     push it past `queue_cap`, and rejected connections get an
+//!     immediate `err queue full` line instead of unbounded queueing.
 
 use crate::backend::NativeBackend;
 use crate::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
 use crate::data::synth;
 use crate::dissim::{DissimCounter, Metric};
 use crate::eval;
+use crate::runtime::Pool;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 /// Server tuning knobs.
@@ -31,9 +40,9 @@ use std::time::Instant;
 pub struct ServerConfig {
     /// Bind address, e.g. "127.0.0.1:7878" (port 0 = ephemeral).
     pub addr: String,
-    /// Worker threads.
+    /// Worker threads draining the job queue (>= 1).
     pub workers: usize,
-    /// Max queued jobs before backpressure kicks in.
+    /// Max in-flight jobs (queued + running) before backpressure.
     pub queue_cap: usize,
 }
 
@@ -49,15 +58,20 @@ pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// Ask the server to stop and join the accept loop.
+    /// Ask the server to stop, drain the queue and join every thread.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // unblock accept() with a dummy connection
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // the accept loop dropped the queue sender; workers drain and exit
+        for t in self.workers.drain(..) {
             let _ = t.join();
         }
     }
@@ -78,6 +92,9 @@ pub fn handle_cluster(kv: &HashMap<String, String>) -> Result<String, String> {
     let k: usize = kv.get("k").and_then(|s| s.parse().ok()).unwrap_or(10);
     let scale: f64 = kv.get("scale").and_then(|s| s.parse().ok()).unwrap_or(1.0);
     let seed: u64 = kv.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    // capped: a request can use the machine, not fork-bomb it
+    let threads: usize =
+        kv.get("threads").and_then(|s| s.parse().ok()).unwrap_or(1).min(64);
     let sampler = kv
         .get("sampler")
         .map(|s| SamplerKind::parse(s).ok_or(format!("unknown sampler {s}")))
@@ -97,8 +114,8 @@ pub fn handle_cluster(kv: &HashMap<String, String>) -> Result<String, String> {
     if data.n() <= k + 1 {
         return Err(format!("dataset too small (n={}) for k={k}", data.n()));
     }
-    let backend = NativeBackend::new(metric);
-    let cfg = OneBatchConfig { k, sampler, seed, ..Default::default() };
+    let backend = NativeBackend::with_pool(metric, Pool::new(threads));
+    let cfg = OneBatchConfig { k, sampler, seed, threads, ..Default::default() };
     let r = one_batch_pam(&data.x, &cfg, &backend).map_err(|e| e.to_string())?;
     let obj = eval::objective(&data.x, &r.medoids, &DissimCounter::new(metric));
     let meds: Vec<String> = r.medoids.iter().map(|m| m.to_string()).collect();
@@ -119,8 +136,36 @@ pub fn handle_line(line: &str) -> String {
             Ok(r) => r,
             Err(e) => format!("err {e}"),
         },
+        // Diagnostic: hold a worker for `ms` (capped) — used by the
+        // backpressure tests and for probing queue behaviour under load.
+        Some("sleep") => {
+            let kv = parse_kv(&parts[1..]);
+            let ms: u64 = kv.get("ms").and_then(|s| s.parse().ok()).unwrap_or(0).min(10_000);
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            format!("ok slept_ms={ms}")
+        }
         Some(cmd) => format!("err unknown command {cmd}"),
         None => "err empty request".into(),
+    }
+}
+
+/// How long a worker waits for a client to send its request line (or
+/// accept the reply) before giving the slot back.  Without this, a
+/// handful of idle connections could pin every worker forever.
+const IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Serve one accepted connection: read a line, dispatch, reply.
+fn handle_connection(stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let Ok(clone) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(clone);
+    let mut line = String::new();
+    if reader.read_line(&mut line).is_ok() && !line.trim().is_empty() {
+        let started = Instant::now();
+        let reply = handle_line(line.trim());
+        let mut s = stream;
+        let _ = writeln!(s, "{reply} served_ms={:.1}", started.elapsed().as_secs_f64() * 1e3);
     }
 }
 
@@ -131,42 +176,62 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
     let stop = Arc::new(AtomicBool::new(false));
     let inflight = Arc::new(AtomicUsize::new(0));
     let queue_cap = cfg.queue_cap.max(1);
-    // simple worker pool: connections are cheap, jobs are heavy, so the
-    // bounded "queue" is the in-flight job counter.
-    let pool: Arc<Mutex<()>> = Arc::new(Mutex::new(()));
-    let _ = pool; // workers>1 handled by spawning per connection below
+    let worker_count = cfg.workers.max(1);
+
+    // Bounded job queue: admission reserves a slot in `inflight` before
+    // enqueueing; the worker releases it when the job finishes, so
+    // queued + running <= queue_cap always holds.
+    let (tx, rx) = mpsc::channel::<TcpStream>();
+    let rx = Arc::new(Mutex::new(rx));
+    let mut workers = Vec::with_capacity(worker_count);
+    for _ in 0..worker_count {
+        let rx = rx.clone();
+        let inflight = inflight.clone();
+        workers.push(std::thread::spawn(move || loop {
+            // the guard temporary drops at the end of this statement, so
+            // workers do not hold the lock while serving
+            let job = rx.lock().expect("queue receiver poisoned").recv();
+            let Ok(stream) = job else { break };
+            let _slot = DecrementOnDrop(inflight.clone());
+            // a panicking job must not shrink the long-lived pool
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                handle_connection(stream);
+            }));
+        }));
+    }
 
     let stop2 = stop.clone();
+    let inflight2 = inflight.clone();
     let accept_thread = std::thread::spawn(move || {
         for conn in listener.incoming() {
             if stop2.load(Ordering::SeqCst) {
                 break;
             }
             let Ok(stream) = conn else { continue };
-            let inflight = inflight.clone();
-            if inflight.load(Ordering::SeqCst) >= queue_cap {
+            // single-RMW admission: reserve a slot or reject — no
+            // check-then-increment window for a burst to slip through
+            let admitted = inflight2
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
+                    if c < queue_cap {
+                        Some(c + 1)
+                    } else {
+                        None
+                    }
+                })
+                .is_ok();
+            if !admitted {
                 let mut s = stream;
                 let _ = writeln!(s, "err queue full");
                 continue;
             }
-            inflight.fetch_add(1, Ordering::SeqCst);
-            std::thread::spawn(move || {
-                let _guard = DecrementOnDrop(inflight);
-                let peer = stream.peer_addr().ok();
-                let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
-                let mut line = String::new();
-                if reader.read_line(&mut line).is_ok() && !line.trim().is_empty() {
-                    let started = Instant::now();
-                    let reply = handle_line(line.trim());
-                    let mut s = stream;
-                    let _ = writeln!(s, "{reply} served_ms={:.1}", started.elapsed().as_secs_f64() * 1e3);
-                    let _ = peer;
-                }
-            });
+            if tx.send(stream).is_err() {
+                break;
+            }
         }
+        // dropping `tx` wakes every idle worker with RecvError -> exit
     });
 
-    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread) })
+    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread), workers })
 }
 
 struct DecrementOnDrop(Arc<AtomicUsize>);
@@ -225,5 +290,50 @@ mod tests {
             stable(handle_cluster(&kv).unwrap()),
             stable(handle_cluster(&kv).unwrap())
         );
+    }
+
+    #[test]
+    fn threaded_cluster_matches_serial_cluster() {
+        let mk = |threads: &str| -> String {
+            let kv: HashMap<String, String> = [
+                ("dataset", "blobs_400_4_3"),
+                ("k", "3"),
+                ("seed", "6"),
+                ("threads", threads),
+            ]
+            .iter()
+            .map(|(a, b)| (a.to_string(), b.to_string()))
+            .collect();
+            let r = handle_cluster(&kv).unwrap();
+            r.split(" seconds=").next().unwrap().to_string()
+        };
+        assert_eq!(mk("1"), mk("4"));
+    }
+
+    #[test]
+    fn workers_serve_concurrently() {
+        // With 4 workers, 4 concurrent 150 ms sleeps finish in ~1 batch,
+        // far below the 600 ms serial floor.
+        let h = serve(ServerConfig { addr: "127.0.0.1:0".into(), workers: 4, queue_cap: 8 })
+            .unwrap();
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let addr = h.addr;
+                std::thread::spawn(move || request(addr, "sleep ms=150").unwrap())
+            })
+            .collect();
+        for th in handles {
+            assert!(th.join().unwrap().starts_with("ok slept_ms=150"));
+        }
+        let elapsed = t0.elapsed().as_millis();
+        assert!(elapsed < 550, "4 workers should overlap sleeps, took {elapsed} ms");
+        h.shutdown();
+    }
+
+    #[test]
+    fn sleep_command_caps_duration() {
+        let r = handle_line("sleep ms=1");
+        assert!(r.starts_with("ok slept_ms=1"), "{r}");
     }
 }

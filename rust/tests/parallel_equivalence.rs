@@ -1,0 +1,176 @@
+//! Parallel-vs-serial equivalence suite for the runtime::pool execution
+//! layer, plus the server backpressure contract.
+//!
+//! The parallel layer's promise is strict: for a fixed seed, every
+//! result — the pairwise matrix, the tile ops, the full `one_batch_pam`
+//! medoid selection — is **bit-identical** at any thread count.  These
+//! tests pin that promise at {1, 2, 4} threads (and auto).
+
+use obpam::backend::{ComputeBackend, NativeBackend};
+use obpam::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
+use obpam::dissim::{cross_matrix_pool, DissimCounter, Metric};
+use obpam::linalg::Matrix;
+use obpam::rng::Rng;
+use obpam::runtime::Pool;
+use obpam::server::{request, serve, ServerConfig};
+
+fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+    Matrix::from_vec(r, c, (0..r * c).map(|_| rng.f32()).collect())
+}
+
+#[test]
+fn pairwise_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(0xA11);
+    // odd shapes on purpose: exercise ragged chunk boundaries
+    let x = rand_matrix(&mut rng, 301, 17);
+    let b = rand_matrix(&mut rng, 67, 17);
+    for metric in [Metric::L1, Metric::L2, Metric::SqL2, Metric::Chebyshev, Metric::Cosine] {
+        let serial = cross_matrix_pool(&DissimCounter::new(metric), &x, &b, &Pool::serial());
+        for threads in [2, 4] {
+            let par =
+                cross_matrix_pool(&DissimCounter::new(metric), &x, &b, &Pool::new(threads));
+            // Vec<f32> equality is bitwise for non-NaN values; distances
+            // are never NaN here
+            assert_eq!(
+                par.data,
+                serial.data,
+                "{} differs at {threads} threads",
+                metric.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pairwise_counts_dissims_once_regardless_of_threads() {
+    let mut rng = Rng::new(0xA12);
+    let x = rand_matrix(&mut rng, 50, 5);
+    let b = rand_matrix(&mut rng, 9, 5);
+    for threads in [1, 2, 4] {
+        let d = DissimCounter::new(Metric::L1);
+        cross_matrix_pool(&d, &x, &b, &Pool::new(threads));
+        assert_eq!(d.count(), 50 * 9, "threads={threads}");
+    }
+}
+
+#[test]
+fn one_batch_pam_medoids_identical_at_any_thread_count() {
+    let mut rng = Rng::new(0xA13);
+    let x = rand_matrix(&mut rng, 600, 12);
+    for sampler in [SamplerKind::Unif, SamplerKind::Nniw, SamplerKind::Lwcs] {
+        let run = |threads: usize| {
+            let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
+            let cfg = OneBatchConfig {
+                k: 6,
+                sampler,
+                m: Some(120),
+                seed: 77,
+                threads,
+                ..Default::default()
+            };
+            one_batch_pam(&x, &cfg, &backend).unwrap()
+        };
+        let serial = run(1);
+        for threads in [2, 4, 0] {
+            let par = run(threads);
+            assert_eq!(
+                par.medoids,
+                serial.medoids,
+                "{} medoids differ at {threads} threads",
+                sampler.name()
+            );
+            assert_eq!(
+                par.est_objective.to_bits(),
+                serial.est_objective.to_bits(),
+                "{} objective bits differ at {threads} threads",
+                sampler.name()
+            );
+            assert_eq!(
+                par.stats.dissim_count, serial.stats.dissim_count,
+                "{} dissim count differs at {threads} threads",
+                sampler.name()
+            );
+            assert_eq!(
+                par.stats.swap_count, serial.stats.swap_count,
+                "{} swap count differs at {threads} threads",
+                sampler.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn backend_tile_ops_identical_across_thread_counts() {
+    let mut rng = Rng::new(0xA14);
+    let (n, m, k) = (211, 40, 9);
+    let d = rand_matrix(&mut rng, n, m);
+    let dmk = rand_matrix(&mut rng, n, k);
+    let dn: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+    let ds: Vec<f32> = dn.iter().map(|v| v + 0.25).collect();
+    let near: Vec<usize> = (0..m).map(|_| rng.below(k)).collect();
+    let w: Vec<f32> = (0..m).map(|_| 0.5 + rng.f32()).collect();
+
+    let serial = NativeBackend::new(Metric::L1);
+    let top2_s = serial.top2(&dmk).unwrap();
+    let argmin_s = serial.argmin_rows(&d).unwrap();
+    let gains_s = serial.gains(&d, &dn, &ds, &near, k, &w).unwrap();
+    for threads in [2, 4] {
+        let par = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
+        assert_eq!(par.top2(&dmk).unwrap(), top2_s, "top2 at {threads} threads");
+        assert_eq!(par.argmin_rows(&d).unwrap(), argmin_s, "argmin at {threads} threads");
+        let gains_p = par.gains(&d, &dn, &ds, &near, k, &w).unwrap();
+        assert_eq!(gains_p.0, gains_s.0, "shared gains at {threads} threads");
+        assert_eq!(gains_p.1.data, gains_s.1.data, "permedoid gains at {threads} threads");
+    }
+}
+
+/// Fire far more concurrent jobs than `queue_cap` at a slow endpoint and
+/// check the admission contract: every connection gets exactly one reply,
+/// rejected ones get `err queue full`, and the number of *served* jobs
+/// can never exceed what a cap-bounded queue could admit — i.e. the
+/// check-then-increment overshoot is gone.
+#[test]
+fn server_burst_backpressure_bounds_inflight_jobs() {
+    let queue_cap = 2;
+    let burst = 12;
+    let h = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap,
+    })
+    .unwrap();
+
+    let handles: Vec<_> = (0..burst)
+        .map(|_| {
+            let addr = h.addr;
+            std::thread::spawn(move || request(addr, "sleep ms=400").unwrap())
+        })
+        .collect();
+    let replies: Vec<String> = handles.into_iter().map(|t| t.join().unwrap()).collect();
+    h.shutdown();
+
+    assert_eq!(replies.len(), burst, "every connection must get a reply");
+    let served = replies.iter().filter(|r| r.starts_with("ok slept_ms=400")).count();
+    let rejected = replies.iter().filter(|r| r.starts_with("err queue full")).count();
+    assert_eq!(served + rejected, burst, "unexpected reply in {replies:?}");
+    assert!(rejected > 0, "burst of {burst} over cap {queue_cap} must reject some jobs");
+    // With one worker on 400 ms jobs and a simultaneous burst, only the
+    // first `queue_cap` connections fit in the system; allow generous
+    // scheduling slack but far below the old unbounded behaviour.
+    assert!(
+        served <= queue_cap + 2,
+        "admission exceeded the in-flight bound: {served} served (cap {queue_cap})"
+    );
+}
+
+/// Server replies are identical whether the job ran serial or threaded.
+#[test]
+fn server_threaded_jobs_match_serial_jobs() {
+    let h = serve(ServerConfig::default()).unwrap();
+    let strip = |r: String| r.split(" seconds=").next().unwrap().to_string();
+    let a = strip(request(h.addr, "cluster dataset=blobs_400_4_3 k=3 seed=2 threads=1").unwrap());
+    let b = strip(request(h.addr, "cluster dataset=blobs_400_4_3 k=3 seed=2 threads=4").unwrap());
+    h.shutdown();
+    assert!(a.starts_with("ok medoids="), "{a}");
+    assert_eq!(a, b);
+}

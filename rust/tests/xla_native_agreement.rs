@@ -1,7 +1,9 @@
 //! XLA backend == native backend, numerically, on all four tile ops and
-//! end-to-end.  These tests need `artifacts/` (run `make artifacts`); if
-//! the manifest is missing they print a notice and pass vacuously so the
-//! pure-Rust test suite stays runnable.
+//! end-to-end.  These tests need the `xla` build feature plus
+//! `artifacts/` (run `make artifacts`); if the manifest is missing they
+//! print a notice and pass vacuously so the pure-Rust test suite stays
+//! runnable.
+#![cfg(feature = "xla")]
 
 use obpam::backend::{ComputeBackend, NativeBackend, XlaBackend};
 use obpam::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
