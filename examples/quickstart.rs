@@ -1,51 +1,42 @@
-//! Quickstart: cluster a synthetic blob dataset with OneBatchPAM and
-//! compare the three things the paper is about — objective quality,
-//! wall-clock time, and the number of dissimilarity computations —
-//! against FasterPAM and a random selection.
+//! Quickstart: one entry point, every method.  Runs OneBatchPAM and
+//! three baselines through the unified [`obpam::solver`] API — each
+//! method is just a paper row label — and compares the three things the
+//! paper is about: objective quality, wall-clock time, and the number of
+//! dissimilarity computations.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use obpam::backend::NativeBackend;
-use obpam::baselines;
-use obpam::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
 use obpam::data::synth;
 use obpam::dissim::{DissimCounter, Metric};
 use obpam::eval;
+use obpam::solver::{self, MethodSpec, SolveSpec};
 
 fn main() -> anyhow::Result<()> {
     // 5 well-separated Gaussian clusters, 4000 points, 8 features.
-    let data = synth::generate("blobs_4000_8_5", 1.0, 42);
+    let data = synth::try_generate("blobs_4000_8_5", 1.0, 42)?;
     let (n, p, k) = (data.n(), data.p(), 5);
     println!("dataset: n={n} p={p}, k={k}, metric=l1\n");
 
     let eval_d = DissimCounter::new(Metric::L1);
+    println!("{:<14} {:>10} {:>10} {:>20}", "method", "objective", "time", "dissim-computations");
 
-    // --- OneBatchPAM (the paper's method, NNIW variant) ------------------
-    let backend = NativeBackend::new(Metric::L1);
-    let cfg = OneBatchConfig { k, sampler: SamplerKind::Nniw, seed: 7, ..Default::default() };
-    let ob = one_batch_pam(&data.x, &cfg, &backend)?;
-    let ob_obj = eval::objective(&data.x, &ob.medoids, &eval_d);
-
-    // --- FasterPAM (exact local search, O(n^2)) ---------------------------
-    let backend_fp = NativeBackend::new(Metric::L1);
-    let fp = baselines::faster_pam(&data.x, k, 50, 7, &backend_fp)?;
-    let fp_obj = eval::objective(&data.x, &fp.medoids, &eval_d);
-
-    // --- Random -----------------------------------------------------------
-    let rnd = baselines::random_select(&data.x, k, 7);
-    let rnd_obj = eval::objective(&data.x, &rnd.medoids, &eval_d);
-
-    println!("{:<14} {:>10} {:>10} {:>14}", "method", "objective", "time", "dissim-computations");
-    for (name, obj, r) in [
-        ("OneBatchPAM", ob_obj, &ob),
-        ("FasterPAM", fp_obj, &fp),
-        ("Random", rnd_obj, &rnd),
-    ] {
+    // any paper row label runs through the same solve() call — swap in
+    // "BanditPAM++-2", "FasterCLARA-50", "OneBatch-unif-steepest", ...
+    let mut runs = Vec::new();
+    for label in ["OneBatch-nniw", "FasterPAM", "k-means++", "Random"] {
+        let method = MethodSpec::parse(label).expect("paper row label");
+        let backend = NativeBackend::new(Metric::L1);
+        let r = solver::solve(&data.x, &SolveSpec::new(method, k, 7), &backend)?;
+        let obj = eval::objective(&data.x, &r.medoids, &eval_d);
         println!(
-            "{name:<14} {obj:>10.5} {:>9.3}s {:>14}",
+            "{label:<14} {obj:>10.5} {:>9.3}s {:>20}",
             r.stats.seconds, r.stats.dissim_count
         );
+        runs.push(r);
     }
+
+    let (ob, fp) = (&runs[0], &runs[1]);
     println!(
         "\nOneBatchPAM medoids: {:?}\n\
          expected: objective within ~2% of FasterPAM using ~{}x fewer dissimilarities",

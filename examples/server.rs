@@ -1,6 +1,9 @@
-//! Clustering service demo: start the TCP job server, fire a burst of
-//! concurrent clustering requests at it, and report latency /
-//! throughput / backpressure behaviour.
+//! Clustering service demo (protocol v2): start the TCP job server,
+//! fire a burst of *mixed-method* clustering requests at it (any paper
+//! row label is addressable with `method=`), then repeat the burst to
+//! show the sharded dataset cache at work — the warm round reports
+//! `cache=hit` on every job and the final `stats` line shows zero new
+//! regenerations.
 //!
 //! Run: `cargo run --release --example server`
 
@@ -8,51 +11,68 @@ use obpam::server::{request, serve, ServerConfig};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    let handle = serve(ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, queue_cap: 8 })?;
+    let handle = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        queue_cap: 8,
+        cache_cap: 32,
+    })?;
     println!("server on {}", handle.addr);
     assert_eq!(request(handle.addr, "ping")?.split_whitespace().next(), Some("pong"));
 
-    // a burst of mixed jobs
-    let jobs: Vec<String> = (0..6)
-        .map(|i| {
-            format!(
-                "cluster dataset=blobs_{}_8_4 k=4 sampler={} seed={i}",
-                1_000 + 500 * i,
-                if i % 2 == 0 { "nniw" } else { "unif" }
-            )
+    // a burst of mixed-method jobs over three distinct datasets
+    let methods =
+        ["OneBatch-nniw", "FasterPAM", "k-means++", "FasterCLARA-5", "OneBatch-lwcs", "kmc2-20"];
+    let jobs: Vec<String> = methods
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            format!("cluster dataset=blobs_{}_8_4 k=4 method={m} seed={i}", 1_000 + 500 * (i % 3))
         })
         .collect();
 
-    let t0 = Instant::now();
-    let mut handles = Vec::new();
-    for job in jobs.clone() {
-        let addr = handle.addr;
-        handles.push(std::thread::spawn(move || {
-            let t = Instant::now();
-            let reply = request(addr, &job).unwrap_or_else(|e| format!("err {e}"));
-            (job, reply, t.elapsed().as_secs_f64())
-        }));
-    }
-    let mut ok = 0;
-    let mut latencies = Vec::new();
-    for h in handles {
-        let (job, reply, lat) = h.join().unwrap();
-        let status = reply.split_whitespace().next().unwrap_or("?").to_string();
-        println!("[{lat:7.3}s] {status:<4} <- {job}");
-        if status == "ok" {
-            ok += 1;
-            latencies.push(lat);
+    for round in ["cold", "warm"] {
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for job in jobs.clone() {
+            let addr = handle.addr;
+            handles.push(std::thread::spawn(move || {
+                let t = Instant::now();
+                let reply = request(addr, &job).unwrap_or_else(|e| format!("err {e}"));
+                (job, reply, t.elapsed().as_secs_f64())
+            }));
         }
+        let mut ok = 0;
+        let mut latencies = Vec::new();
+        for h in handles {
+            let (job, reply, lat) = h.join().unwrap();
+            let status = reply.split_whitespace().next().unwrap_or("?").to_string();
+            let cache = reply
+                .split_whitespace()
+                .find(|t| t.starts_with("cache="))
+                .unwrap_or("cache=?")
+                .to_string();
+            println!("[{lat:7.3}s] {status:<4} {cache:<10} <- {job}");
+            if status == "ok" {
+                ok += 1;
+                latencies.push(lat);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "{round} round: {ok}/{} ok | wall {wall:.2}s | throughput {:.2} jobs/s | \
+             p50 latency {:.3}s | p max {:.3}s\n",
+            jobs.len(),
+            ok as f64 / wall,
+            latencies.get(latencies.len() / 2).copied().unwrap_or(f64::NAN),
+            latencies.last().copied().unwrap_or(f64::NAN),
+        );
     }
-    let wall = t0.elapsed().as_secs_f64();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    println!(
-        "\n{ok}/{} ok | wall {wall:.2}s | throughput {:.2} jobs/s | p50 latency {:.3}s | p max {:.3}s",
-        jobs.len(),
-        ok as f64 / wall,
-        latencies.get(latencies.len() / 2).copied().unwrap_or(f64::NAN),
-        latencies.last().copied().unwrap_or(f64::NAN),
-    );
+
+    // cache_misses equals the number of distinct (dataset, scale, seed)
+    // keys; the warm round regenerated nothing.
+    println!("{}", request(handle.addr, "stats")?);
 
     handle.shutdown();
     println!("server stopped");

@@ -95,6 +95,34 @@ pub fn alternate(
     }
 }
 
+/// [`crate::solver::Solver`] adapter for [`alternate`].
+pub struct AlternateSolver {
+    /// Max alternation iterations (assignment convergence ends earlier).
+    pub max_iter: usize,
+}
+
+impl Default for AlternateSolver {
+    fn default() -> Self {
+        AlternateSolver { max_iter: 100 }
+    }
+}
+
+impl crate::solver::Solver for AlternateSolver {
+    fn label(&self) -> String {
+        "Alternate".into()
+    }
+
+    fn solve(
+        &self,
+        x: &Matrix,
+        spec: &crate::solver::SolveSpec,
+        backend: &dyn crate::backend::ComputeBackend,
+    ) -> anyhow::Result<KMedoidsResult> {
+        let d = DissimCounter::with_counters(backend.metric(), backend.counters());
+        Ok(alternate(x, spec.k, self.max_iter, spec.seed, &d))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -273,6 +273,28 @@ pub fn bandit_pam(x: &Matrix, cfg: &BanditConfig, d: &DissimCounter) -> KMedoids
     }
 }
 
+/// [`crate::solver::Solver`] adapter for [`bandit_pam`].
+pub struct BanditPamSolver {
+    /// Max swap rounds `T` (paper sweeps {0, 2, 5}).
+    pub swaps: usize,
+}
+
+impl crate::solver::Solver for BanditPamSolver {
+    fn label(&self) -> String {
+        format!("BanditPAM++-{}", self.swaps)
+    }
+
+    fn solve(
+        &self,
+        x: &Matrix,
+        spec: &crate::solver::SolveSpec,
+        backend: &dyn crate::backend::ComputeBackend,
+    ) -> anyhow::Result<KMedoidsResult> {
+        let d = DissimCounter::with_counters(backend.metric(), backend.counters());
+        Ok(bandit_pam(x, &BanditConfig::new(spec.k, self.swaps, spec.seed), &d))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

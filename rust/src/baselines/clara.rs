@@ -90,6 +90,27 @@ pub fn faster_clara(
     })
 }
 
+/// [`crate::solver::Solver`] adapter for [`faster_clara`].
+pub struct ClaraSolver {
+    /// Subsample repetitions (paper: I in {5, 50}).
+    pub reps: usize,
+}
+
+impl crate::solver::Solver for ClaraSolver {
+    fn label(&self) -> String {
+        format!("FasterCLARA-{}", self.reps)
+    }
+
+    fn solve(
+        &self,
+        x: &Matrix,
+        spec: &crate::solver::SolveSpec,
+        backend: &dyn ComputeBackend,
+    ) -> Result<KMedoidsResult> {
+        faster_clara(x, &ClaraConfig::new(spec.k, self.reps, spec.seed), backend)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

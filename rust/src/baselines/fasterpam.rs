@@ -52,6 +52,33 @@ pub fn faster_pam(
     })
 }
 
+/// [`crate::solver::Solver`] adapter for [`faster_pam`].
+pub struct FasterPamSolver {
+    /// Max eager passes (converges in O(k) swaps long before this).
+    pub max_passes: usize,
+}
+
+impl Default for FasterPamSolver {
+    fn default() -> Self {
+        FasterPamSolver { max_passes: 50 }
+    }
+}
+
+impl crate::solver::Solver for FasterPamSolver {
+    fn label(&self) -> String {
+        "FasterPAM".into()
+    }
+
+    fn solve(
+        &self,
+        x: &Matrix,
+        spec: &crate::solver::SolveSpec,
+        backend: &dyn ComputeBackend,
+    ) -> Result<KMedoidsResult> {
+        faster_pam(x, spec.k, self.max_passes, spec.seed, backend)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -205,6 +205,72 @@ pub fn ls_kmeanspp(x: &Matrix, k: usize, z: usize, seed: u64, d: &DissimCounter)
     }
 }
 
+/// [`crate::solver::Solver`] adapter for [`kmeanspp`].
+pub struct KMeansPpSolver;
+
+/// [`crate::solver::Solver`] adapter for [`kmc2`].
+pub struct Kmc2Solver {
+    /// MCMC chain length `L` (paper sweeps {20, 100, 200}).
+    pub chain: usize,
+}
+
+/// [`crate::solver::Solver`] adapter for [`ls_kmeanspp`].
+pub struct LsKMeansPpSolver {
+    /// Local-search steps `Z` (paper sweeps {5, 10}).
+    pub steps: usize,
+}
+
+/// Counted evaluator wired to the backend's telemetry, so the measured
+/// dissimilarity cost is comparable across every method.
+fn counted(backend: &dyn crate::backend::ComputeBackend) -> DissimCounter {
+    DissimCounter::with_counters(backend.metric(), backend.counters())
+}
+
+impl crate::solver::Solver for KMeansPpSolver {
+    fn label(&self) -> String {
+        "k-means++".into()
+    }
+
+    fn solve(
+        &self,
+        x: &Matrix,
+        spec: &crate::solver::SolveSpec,
+        backend: &dyn crate::backend::ComputeBackend,
+    ) -> anyhow::Result<KMedoidsResult> {
+        Ok(kmeanspp(x, spec.k, spec.seed, &counted(backend)))
+    }
+}
+
+impl crate::solver::Solver for Kmc2Solver {
+    fn label(&self) -> String {
+        format!("kmc2-{}", self.chain)
+    }
+
+    fn solve(
+        &self,
+        x: &Matrix,
+        spec: &crate::solver::SolveSpec,
+        backend: &dyn crate::backend::ComputeBackend,
+    ) -> anyhow::Result<KMedoidsResult> {
+        Ok(kmc2(x, spec.k, self.chain, spec.seed, &counted(backend)))
+    }
+}
+
+impl crate::solver::Solver for LsKMeansPpSolver {
+    fn label(&self) -> String {
+        format!("LS-k-means++-{}", self.steps)
+    }
+
+    fn solve(
+        &self,
+        x: &Matrix,
+        spec: &crate::solver::SolveSpec,
+        backend: &dyn crate::backend::ComputeBackend,
+    ) -> anyhow::Result<KMedoidsResult> {
+        Ok(ls_kmeanspp(x, spec.k, self.steps, spec.seed, &counted(backend)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,19 +1,21 @@
 //! Every comparator from the paper's evaluation (Tables 3-8).
 //!
-//! | paper name        | here                               |
-//! |-------------------|------------------------------------|
-//! | Random            | [`random::random_select`]          |
-//! | FasterPAM         | [`fasterpam::faster_pam`]          |
-//! | Alternate         | [`alternate::alternate`]           |
-//! | FasterCLARA-I     | [`clara::faster_clara`]            |
-//! | k-means++         | [`kmeanspp::kmeanspp`]             |
-//! | kmc2-L            | [`kmeanspp::kmc2`]                 |
-//! | LS-k-means++-Z    | [`kmeanspp::ls_kmeanspp`]          |
-//! | BanditPAM++-T     | [`banditpam::bandit_pam`]          |
+//! | paper name        | free function                      | [`crate::solver::Solver`] |
+//! |-------------------|------------------------------------|---------------------------|
+//! | Random            | [`random::random_select`]          | [`RandomSolver`]          |
+//! | FasterPAM         | [`fasterpam::faster_pam`]          | [`FasterPamSolver`]       |
+//! | Alternate         | [`alternate::alternate`]           | [`AlternateSolver`]       |
+//! | FasterCLARA-I     | [`clara::faster_clara`]            | [`ClaraSolver`]           |
+//! | k-means++         | [`kmeanspp::kmeanspp`]             | [`KMeansPpSolver`]        |
+//! | kmc2-L            | [`kmeanspp::kmc2`]                 | [`Kmc2Solver`]            |
+//! | LS-k-means++-Z    | [`kmeanspp::ls_kmeanspp`]          | [`LsKMeansPpSolver`]      |
+//! | BanditPAM++-T     | [`banditpam::bandit_pam`]          | [`BanditPamSolver`]       |
 //!
 //! All functions return [`crate::coordinator::KMedoidsResult`] and count
 //! dissimilarity computations through the same telemetry, so Table 1's
-//! complexity claims are measurable.
+//! complexity claims are measurable.  The `*Solver` adapters plug every
+//! method into the unified [`crate::solver`] entry point used by the
+//! CLI, the bench harness and the job server.
 
 pub mod alternate;
 pub mod banditpam;
@@ -22,9 +24,9 @@ pub mod fasterpam;
 pub mod kmeanspp;
 pub mod random;
 
-pub use alternate::alternate;
-pub use banditpam::{bandit_pam, BanditConfig};
-pub use clara::{faster_clara, ClaraConfig};
-pub use fasterpam::faster_pam;
-pub use kmeanspp::{kmc2, kmeanspp, ls_kmeanspp};
-pub use random::random_select;
+pub use alternate::{alternate, AlternateSolver};
+pub use banditpam::{bandit_pam, BanditConfig, BanditPamSolver};
+pub use clara::{faster_clara, ClaraConfig, ClaraSolver};
+pub use fasterpam::{faster_pam, FasterPamSolver};
+pub use kmeanspp::{kmc2, kmeanspp, ls_kmeanspp, KMeansPpSolver, Kmc2Solver, LsKMeansPpSolver};
+pub use random::{random_select, RandomSolver};

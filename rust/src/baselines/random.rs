@@ -1,8 +1,10 @@
 //! Random medoid selection — the lower anchor of every comparison.
 
+use crate::backend::ComputeBackend;
 use crate::coordinator::KMedoidsResult;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use crate::solver::{SolveSpec, Solver};
 use crate::telemetry::{RunStats, Timer};
 
 /// Select `k` distinct rows uniformly at random.
@@ -14,6 +16,24 @@ pub fn random_select(x: &Matrix, k: usize, seed: u64) -> KMedoidsResult {
         medoids,
         est_objective: f64::NAN, // never evaluated internally
         stats: RunStats { seconds: timer.secs(), dissim_count: 0, swap_count: 0 },
+    }
+}
+
+/// [`Solver`] adapter for [`random_select`].
+pub struct RandomSolver;
+
+impl Solver for RandomSolver {
+    fn label(&self) -> String {
+        "Random".into()
+    }
+
+    fn solve(
+        &self,
+        x: &Matrix,
+        spec: &SolveSpec,
+        _backend: &dyn ComputeBackend,
+    ) -> anyhow::Result<KMedoidsResult> {
+        Ok(random_select(x, spec.k, spec.seed))
     }
 }
 

@@ -13,7 +13,7 @@ pub mod onebatch;
 pub mod sampler;
 pub mod state;
 
-pub use onebatch::{one_batch_pam, OneBatchConfig};
+pub use onebatch::{one_batch_pam, OneBatchConfig, OneBatchSolver, SwapStrategy};
 pub use sampler::SamplerKind;
 
 use crate::telemetry::RunStats;

@@ -25,6 +25,25 @@ pub enum SwapStrategy {
     Steepest,
 }
 
+impl SwapStrategy {
+    /// Parse the CLI / wire spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "eager" => SwapStrategy::Eager,
+            "steepest" => SwapStrategy::Steepest,
+            _ => return None,
+        })
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SwapStrategy::Eager => "eager",
+            SwapStrategy::Steepest => "steepest",
+        }
+    }
+}
+
 /// OneBatchPAM configuration.
 #[derive(Clone, Debug)]
 pub struct OneBatchConfig {
@@ -134,6 +153,44 @@ pub fn one_batch_pam(
             swap_count: counters.swaps() - swaps0,
         },
     })
+}
+
+/// [`crate::solver::Solver`] adapter for [`one_batch_pam`]: the batch
+/// variant and swap engine live here; batch size / eps / pass budget
+/// come from the [`crate::solver::SolveSpec`].
+pub struct OneBatchSolver {
+    /// Batch construction variant.
+    pub sampler: SamplerKind,
+    /// Swap engine.
+    pub strategy: SwapStrategy,
+}
+
+impl crate::solver::Solver for OneBatchSolver {
+    fn label(&self) -> String {
+        match self.strategy {
+            SwapStrategy::Eager => format!("OneBatch-{}", self.sampler.name()),
+            SwapStrategy::Steepest => format!("OneBatch-{}-steepest", self.sampler.name()),
+        }
+    }
+
+    fn solve(
+        &self,
+        x: &Matrix,
+        spec: &crate::solver::SolveSpec,
+        backend: &dyn ComputeBackend,
+    ) -> Result<KMedoidsResult> {
+        let cfg = OneBatchConfig {
+            k: spec.k,
+            sampler: self.sampler,
+            m: spec.m,
+            max_passes: spec.max_passes,
+            strategy: self.strategy,
+            eps: spec.eps,
+            seed: spec.seed,
+            threads: spec.threads,
+        };
+        one_batch_pam(x, &cfg, backend)
+    }
 }
 
 #[cfg(test)]

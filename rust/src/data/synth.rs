@@ -14,6 +14,7 @@
 use super::Dataset;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use anyhow::{bail, Result};
 
 /// Catalogue entry: paper name, full-size n, p.
 pub const CATALOGUE: &[(&str, usize, usize, bool)] = &[
@@ -51,8 +52,11 @@ pub fn env_scale() -> f64 {
 /// Generate a catalogue dataset by name at `scale * n` rows.
 ///
 /// Unknown names fall back to isotropic blobs with the requested name
-/// parsed as `blobs_<n>_<p>_<k>` if possible.
-pub fn generate(name: &str, scale: f64, seed: u64) -> Dataset {
+/// parsed as `blobs_<n>_<p>_<k>` if possible; anything else is an error
+/// listing the catalogue.  This is the fallible entry point behind the
+/// server, the CLI and the grid runner; [`generate`] is the panicking
+/// wrapper for callers with known-good names.
+pub fn try_generate(name: &str, scale: f64, seed: u64) -> Result<Dataset> {
     let mut rng = Rng::new(seed ^ fxhash(name));
     if let Some(&(_, n, p, _)) = CATALOGUE.iter().find(|c| c.0 == name) {
         let n = ((n as f64 * scale).round() as usize).max(64);
@@ -69,20 +73,45 @@ pub fn generate(name: &str, scale: f64, seed: u64) -> Dataset {
             "covertype" => gen_covertype(&mut rng, n, p),
             _ => unreachable!(),
         };
-        return Dataset { name: name.into(), x };
+        return Ok(Dataset { name: name.into(), x });
     }
     // blobs_<n>_<p>_<k>
     if let Some(rest) = name.strip_prefix("blobs_") {
         let parts: Vec<usize> = rest.split('_').filter_map(|s| s.parse().ok()).collect();
         if parts.len() == 3 {
             let n = ((parts[0] as f64 * scale).round() as usize).max(8);
-            return Dataset {
+            return Ok(Dataset {
                 name: name.into(),
                 x: gen_gaussian_mixture(&mut rng, n, parts[1], parts[2], 0.15, 1.0),
-            };
+            });
         }
     }
-    panic!("unknown dataset '{name}' (catalogue: {:?})", CATALOGUE.iter().map(|c| c.0).collect::<Vec<_>>());
+    bail!(
+        "unknown dataset '{name}' (catalogue: {:?})",
+        CATALOGUE.iter().map(|c| c.0).collect::<Vec<_>>()
+    );
+}
+
+/// Infallible wrapper over [`try_generate`]: panics on unknown names.
+pub fn generate(name: &str, scale: f64, seed: u64) -> Dataset {
+    try_generate(name, scale, seed).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Rows [`try_generate`] would produce for `name` at `scale`, without
+/// generating anything (catalogue lookup / `blobs_` parse).  `None` for
+/// unknown names.  Lets callers (the job server) reject infeasible
+/// requests before paying for generation.
+pub fn expected_rows(name: &str, scale: f64) -> Option<usize> {
+    if let Some(&(_, n, _, _)) = CATALOGUE.iter().find(|c| c.0 == name) {
+        return Some(((n as f64 * scale).round() as usize).max(64));
+    }
+    if let Some(rest) = name.strip_prefix("blobs_") {
+        let parts: Vec<usize> = rest.split('_').filter_map(|s| s.parse().ok()).collect();
+        if parts.len() == 3 {
+            return Some(((parts[0] as f64 * scale).round() as usize).max(8));
+        }
+    }
+    None
 }
 
 /// Simple FNV-style string hash for per-dataset seed separation.
@@ -337,6 +366,26 @@ mod tests {
     #[should_panic]
     fn unknown_name_panics() {
         generate("nope", 1.0, 0);
+    }
+
+    #[test]
+    fn expected_rows_matches_generate() {
+        for (name, scale) in [("drybean", 0.01), ("abalone", 0.0001), ("blobs_1000_4_3", 0.1)] {
+            assert_eq!(
+                expected_rows(name, scale).unwrap(),
+                generate(name, scale, 0).n(),
+                "{name}@{scale}"
+            );
+        }
+        assert_eq!(expected_rows("nope", 1.0), None);
+    }
+
+    #[test]
+    fn try_generate_reports_unknown_names() {
+        let err = try_generate("nope", 1.0, 0).unwrap_err().to_string();
+        assert!(err.contains("unknown dataset 'nope'"), "{err}");
+        assert!(err.contains("abalone"), "error should list the catalogue: {err}");
+        assert!(try_generate("blobs_100_4_2", 1.0, 0).is_ok());
     }
 
     #[test]

@@ -1,255 +1,7 @@
-//! The method grid of the paper's evaluation (Table 3 rows).
+//! Compatibility shim: the method grid was promoted out of the harness
+//! into the core [`crate::solver`] API (so the CLI, server and config
+//! files can address any method by name, not just the bench harness).
+//! `harness::methods` re-exports it to keep existing bench / test
+//! imports working.
 
-use crate::backend::{ComputeBackend, NativeBackend};
-use crate::baselines;
-use crate::coordinator::{self, onebatch::SwapStrategy, OneBatchConfig, SamplerKind};
-use crate::dissim::Metric;
-use crate::linalg::Matrix;
-use crate::runtime::Pool;
-use anyhow::Result;
-
-/// One method variant, named exactly like the paper's result rows.
-#[derive(Clone, Debug, PartialEq)]
-pub enum MethodSpec {
-    /// Random k-subset.
-    Random,
-    /// FasterPAM (full n x n; small scale only in the paper).
-    FasterPam,
-    /// Alternate (Park & Jun; small scale only).
-    Alternate,
-    /// FasterCLARA with I repetitions.
-    FasterClara { reps: usize },
-    /// kmc2 with chain length L.
-    Kmc2 { chain: usize },
-    /// k-means++ seeding.
-    KMeansPp,
-    /// LS-k-means++ with Z local-search steps.
-    LsKMeansPp { steps: usize },
-    /// BanditPAM++ with T swap rounds.
-    BanditPam { swaps: usize },
-    /// OneBatchPAM with a sampling variant.
-    OneBatch { sampler: SamplerKind, strategy: SwapStrategy },
-}
-
-impl MethodSpec {
-    /// Paper row label.
-    pub fn label(&self) -> String {
-        match self {
-            MethodSpec::Random => "Random".into(),
-            MethodSpec::FasterPam => "FasterPAM".into(),
-            MethodSpec::Alternate => "Alternate".into(),
-            MethodSpec::FasterClara { reps } => format!("FasterCLARA-{reps}"),
-            MethodSpec::Kmc2 { chain } => format!("kmc2-{chain}"),
-            MethodSpec::KMeansPp => "k-means++".into(),
-            MethodSpec::LsKMeansPp { steps } => format!("LS-k-means++-{steps}"),
-            MethodSpec::BanditPam { swaps } => format!("BanditPAM++-{swaps}"),
-            MethodSpec::OneBatch { sampler, strategy } => match strategy {
-                SwapStrategy::Eager => format!("OneBatch-{}", sampler.name()),
-                SwapStrategy::Steepest => format!("OneBatch-{}-steepest", sampler.name()),
-            },
-        }
-    }
-
-    /// Does the paper run this method on large-scale datasets?
-    /// (FasterPAM / Alternate / BanditPAM++ are "Na" there.)
-    pub fn feasible_large_scale(&self) -> bool {
-        !matches!(
-            self,
-            MethodSpec::FasterPam | MethodSpec::Alternate | MethodSpec::BanditPam { .. }
-        )
-    }
-
-    /// The full 18-row method grid of Table 3.
-    pub fn table3_grid() -> Vec<MethodSpec> {
-        use MethodSpec::*;
-        let mut v = vec![
-            Random,
-            FasterPam,
-            Alternate,
-            FasterClara { reps: 5 },
-            FasterClara { reps: 50 },
-            Kmc2 { chain: 20 },
-            Kmc2 { chain: 100 },
-            Kmc2 { chain: 200 },
-            KMeansPp,
-            LsKMeansPp { steps: 5 },
-            LsKMeansPp { steps: 10 },
-            BanditPam { swaps: 0 },
-            BanditPam { swaps: 2 },
-            BanditPam { swaps: 5 },
-        ];
-        for sampler in [SamplerKind::Lwcs, SamplerKind::Unif, SamplerKind::Debias, SamplerKind::Nniw] {
-            v.push(OneBatch { sampler, strategy: SwapStrategy::Eager });
-        }
-        v
-    }
-
-    /// The 5-method subset of Figure 1 (KM, FP, FC, BP, OBP).
-    pub fn fig1_grid() -> Vec<MethodSpec> {
-        vec![
-            MethodSpec::KMeansPp,
-            MethodSpec::FasterPam,
-            MethodSpec::FasterClara { reps: 5 },
-            MethodSpec::BanditPam { swaps: 2 },
-            MethodSpec::OneBatch { sampler: SamplerKind::Nniw, strategy: SwapStrategy::Eager },
-        ]
-    }
-
-    /// Run the method serially; returns the selected medoids.
-    pub fn run(&self, x: &Matrix, k: usize, metric: Metric, seed: u64) -> Result<RunOutput> {
-        self.run_threaded(x, k, metric, seed, 1)
-    }
-
-    /// Run on a native backend with a `threads`-wide execution pool
-    /// (`1` = serial, `0` = auto).  Matrix-level methods (OneBatch,
-    /// FasterPAM, FasterCLARA) parallelise their pairwise/tile ops and
-    /// OneBatch additionally its eager scan; selections are identical
-    /// to the serial run for a fixed seed.
-    pub fn run_threaded(
-        &self,
-        x: &Matrix,
-        k: usize,
-        metric: Metric,
-        seed: u64,
-        threads: usize,
-    ) -> Result<RunOutput> {
-        let backend = NativeBackend::with_pool(metric, Pool::new(threads));
-        self.run_with_backend(x, k, seed, &backend, threads)
-    }
-
-    /// Run against an explicit backend (XLA-vs-native ablations).
-    /// Point-level algorithms (Alternate, k-means++ family, BanditPAM)
-    /// always use the backend's counted metric directly.  `threads`
-    /// sizes the OneBatch eager-scan pool (backend tile ops use the
-    /// backend's own pool).
-    pub fn run_with_backend(
-        &self,
-        x: &Matrix,
-        k: usize,
-        seed: u64,
-        backend: &dyn ComputeBackend,
-        threads: usize,
-    ) -> Result<RunOutput> {
-        let metric = backend.metric();
-        let counted = crate::dissim::DissimCounter::with_counters(metric, backend.counters());
-        let r = match self {
-            MethodSpec::Random => baselines::random_select(x, k, seed),
-            MethodSpec::FasterPam => baselines::faster_pam(x, k, 50, seed, backend)?,
-            MethodSpec::Alternate => baselines::alternate(x, k, 100, seed, &counted),
-            MethodSpec::FasterClara { reps } => baselines::faster_clara(
-                x,
-                &baselines::ClaraConfig::new(k, *reps, seed),
-                backend,
-            )?,
-            MethodSpec::Kmc2 { chain } => baselines::kmc2(x, k, *chain, seed, &counted),
-            MethodSpec::KMeansPp => baselines::kmeanspp(x, k, seed, &counted),
-            MethodSpec::LsKMeansPp { steps } => baselines::ls_kmeanspp(x, k, *steps, seed, &counted),
-            MethodSpec::BanditPam { swaps } => baselines::bandit_pam(
-                x,
-                &baselines::BanditConfig::new(k, *swaps, seed),
-                &counted,
-            ),
-            MethodSpec::OneBatch { sampler, strategy } => coordinator::one_batch_pam(
-                x,
-                &OneBatchConfig {
-                    k,
-                    sampler: *sampler,
-                    strategy: *strategy,
-                    seed,
-                    threads,
-                    ..Default::default()
-                },
-                backend,
-            )?,
-        };
-        r.validate(x.rows, k);
-        Ok(RunOutput {
-            medoids: r.medoids,
-            seconds: r.stats.seconds,
-            dissim_count: r.stats.dissim_count,
-            swap_count: r.stats.swap_count,
-        })
-    }
-}
-
-/// What the harness records per run before objective evaluation.
-#[derive(Clone, Debug)]
-pub struct RunOutput {
-    /// Selected medoid rows.
-    pub medoids: Vec<usize>,
-    /// Timed selection seconds.
-    pub seconds: f64,
-    /// Dissimilarity computations.
-    pub dissim_count: u64,
-    /// Accepted swaps.
-    pub swap_count: u64,
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::data::synth;
-    use crate::rng::Rng;
-
-    #[test]
-    fn labels_match_paper_rows() {
-        let labels: Vec<String> = MethodSpec::table3_grid().iter().map(|m| m.label()).collect();
-        for expect in [
-            "Random",
-            "FasterPAM",
-            "Alternate",
-            "FasterCLARA-5",
-            "FasterCLARA-50",
-            "kmc2-20",
-            "kmc2-100",
-            "kmc2-200",
-            "k-means++",
-            "LS-k-means++-5",
-            "LS-k-means++-10",
-            "BanditPAM++-0",
-            "BanditPAM++-2",
-            "BanditPAM++-5",
-            "OneBatch-lwcs",
-            "OneBatch-unif",
-            "OneBatch-debias",
-            "OneBatch-nniw",
-        ] {
-            assert!(labels.iter().any(|l| l == expect), "missing {expect}");
-        }
-        assert_eq!(labels.len(), 18);
-    }
-
-    #[test]
-    fn large_scale_feasibility_matches_paper_na() {
-        assert!(!MethodSpec::FasterPam.feasible_large_scale());
-        assert!(!MethodSpec::Alternate.feasible_large_scale());
-        assert!(!MethodSpec::BanditPam { swaps: 2 }.feasible_large_scale());
-        assert!(MethodSpec::FasterClara { reps: 5 }.feasible_large_scale());
-        assert!(MethodSpec::KMeansPp.feasible_large_scale());
-    }
-
-    #[test]
-    fn every_method_runs_on_tiny_data() {
-        let mut rng = Rng::new(1);
-        let x = synth::gen_gaussian_mixture(&mut rng, 130, 4, 3, 0.15, 1.0);
-        for m in MethodSpec::table3_grid() {
-            let out = m.run(&x, 3, Metric::L1, 7).unwrap();
-            assert_eq!(out.medoids.len(), 3, "{}", m.label());
-        }
-    }
-
-    #[test]
-    fn threaded_run_selects_identical_medoids() {
-        let mut rng = Rng::new(2);
-        let x = synth::gen_gaussian_mixture(&mut rng, 160, 4, 3, 0.15, 1.0);
-        for m in [
-            MethodSpec::FasterPam,
-            MethodSpec::OneBatch { sampler: SamplerKind::Nniw, strategy: SwapStrategy::Eager },
-        ] {
-            let serial = m.run(&x, 3, Metric::L1, 11).unwrap();
-            let par = m.run_threaded(&x, 3, Metric::L1, 11, 4).unwrap();
-            assert_eq!(serial.medoids, par.medoids, "{}", m.label());
-            assert_eq!(serial.dissim_count, par.dissim_count, "{}", m.label());
-        }
-    }
-}
+pub use crate::solver::{MethodSpec, RunOutput};

@@ -1,14 +1,16 @@
 //! Experiment harness: runs (dataset x k x repetition x method) grids and
 //! emits every table and figure of the paper's evaluation section.
 //!
-//! DESIGN.md §4 maps each paper table/figure to the bench target that
-//! calls into this module.  Output goes to stdout (paper-style aligned
-//! tables / ASCII charts) and `bench_out/*.csv`.
+//! Methods are addressed through the unified [`crate::solver`] API
+//! ([`MethodSpec`] re-exported here for the bench targets); DESIGN.md §4
+//! maps each paper table/figure to the bench target that calls into this
+//! module.  Output goes to stdout (paper-style aligned tables / ASCII
+//! charts) and `bench_out/*.csv`.
 
 pub mod bench_util;
 pub mod emit;
 pub mod methods;
 pub mod runner;
 
-pub use methods::MethodSpec;
+pub use methods::{MethodSpec, RunOutput};
 pub use runner::{run_grid, run_method, Record};

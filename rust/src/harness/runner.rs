@@ -4,11 +4,13 @@
 //! full-data objective is evaluated afterwards, outside the timed
 //! section, with an uncounted dissimilarity evaluator.
 
-use super::methods::MethodSpec;
+use crate::backend::NativeBackend;
 use crate::data::synth;
 use crate::dissim::{DissimCounter, Metric};
 use crate::eval;
 use crate::linalg::Matrix;
+use crate::runtime::Pool;
+use crate::solver::{self, MethodSpec, SolveSpec};
 
 /// One measured run.
 #[derive(Clone, Debug)]
@@ -46,7 +48,9 @@ pub fn run_method(
     seed: u64,
     threads: usize,
 ) -> anyhow::Result<Record> {
-    let out = method.run_threaded(x, k, metric, seed, threads)?;
+    let backend = NativeBackend::with_pool(metric, Pool::new(threads));
+    let spec = SolveSpec { threads, ..SolveSpec::new(method.clone(), k, seed) };
+    let out = solver::solve(x, &spec, &backend)?;
     // evaluation is outside the timed section and uncounted
     let eval_d = DissimCounter::new(metric);
     let objective = eval::objective(x, &out.medoids, &eval_d);
@@ -55,10 +59,10 @@ pub fn run_method(
         k,
         rep,
         method: method.label(),
-        seconds: out.seconds,
+        seconds: out.stats.seconds,
         objective,
-        dissim: out.dissim_count,
-        swaps: out.swap_count,
+        dissim: out.stats.dissim_count,
+        swaps: out.stats.swap_count,
     })
 }
 
@@ -86,7 +90,7 @@ pub fn run_grid(
         for (rep, &k) in (0..reps).flat_map(|r| ks.iter().map(move |k| (r, k))) {
             // fresh dataset per repetition (paper re-draws nothing, but a
             // per-rep seed on the algorithms; data stays fixed per rep)
-            let data = synth::generate(ds, scale, base_seed);
+            let data = synth::try_generate(ds, scale, base_seed)?;
             let x = &data.x;
             if x.rows <= k + 1 {
                 continue;

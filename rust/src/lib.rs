@@ -9,7 +9,8 @@
 //! * **L3 (this crate)** — the coordinator: batch sampling, the
 //!   FasterPAM swap engine over one `n x m` distance matrix, every
 //!   baseline from the paper's evaluation, the experiment harness that
-//!   regenerates each table/figure, and a clustering job server.
+//!   regenerates each table/figure, and a clustering job server
+//!   (protocol v2: any method by name over a sharded dataset cache).
 //!
 //! Both dominant costs — the `O(nmp)` pairwise pass and the
 //! `O(n(m+k))` eager swap scan — are row-parallel over the
@@ -19,22 +20,32 @@
 //! fixed seed the selected medoids are **bit-identical at any thread
 //! count**, so parallelism never costs reproducibility.
 //!
-//! Quick start (see `examples/quickstart.rs`):
+//! Quick start (see `examples/quickstart.rs`): every algorithm —
+//! OneBatchPAM and all eight paper baselines — runs through the unified
+//! [`solver`] API.  [`solver::MethodSpec`] round-trips through the
+//! paper's row labels, so a method is one string in a config file, a
+//! `--method` CLI flag, or a `method=` key on the server wire protocol:
 //!
 //! ```no_run
 //! use obpam::backend::NativeBackend;
-//! use obpam::coordinator::{one_batch_pam, OneBatchConfig};
 //! use obpam::data::synth;
 //! use obpam::dissim::Metric;
 //! use obpam::runtime::Pool;
+//! use obpam::solver::{self, MethodSpec, SolveSpec};
 //!
-//! let data = synth::generate("blobs_2000_8_5", 1.0, 42);
+//! let data = synth::try_generate("blobs_2000_8_5", 1.0, 42).unwrap();
+//! // any paper row label: "FasterPAM", "BanditPAM++-2", "OneBatch-nniw", ...
+//! let method = MethodSpec::parse("OneBatch-nniw").unwrap();
 //! // threads: 0 = all cores, 1 = serial; medoids identical either way.
-//! let cfg = OneBatchConfig { k: 5, threads: 0, ..Default::default() };
+//! let spec = SolveSpec { threads: 0, ..SolveSpec::new(method, 5, 42) };
 //! let backend = NativeBackend::with_pool(Metric::L1, Pool::auto());
-//! let result = one_batch_pam(&data.x, &cfg, &backend).unwrap();
+//! let result = solver::solve(&data.x, &spec, &backend).unwrap();
 //! println!("medoids: {:?}", result.medoids);
 //! ```
+//!
+//! The low-level entry points ([`coordinator::one_batch_pam`],
+//! [`baselines::faster_pam`], ...) remain available when a caller needs
+//! algorithm-specific knobs beyond [`solver::SolveSpec`].
 
 pub mod backend;
 pub mod baselines;
@@ -49,4 +60,5 @@ pub mod proptest;
 pub mod rng;
 pub mod runtime;
 pub mod server;
+pub mod solver;
 pub mod telemetry;

@@ -3,15 +3,22 @@
 //! Subcommands (hand-rolled parser; clap is unavailable offline):
 //!
 //! ```text
-//! obpam cluster  --dataset mnist --k 10 [--sampler nniw] [--metric l1]
+//! obpam cluster  --dataset mnist --k 10 [--method FasterPAM] [--metric l1]
 //!                [--scale 0.1] [--seed 0] [--backend native|xla|xla-dense]
-//!                [--m N] [--strategy eager|steepest] [--threads T]
-//!                [--config file.toml]
+//!                [--sampler nniw] [--m N] [--eps E] [--max-passes P]
+//!                [--strategy eager|steepest] [--threads T] [--config file.toml]
 //! obpam bench    --table 3|5|7 | --fig 1|pareto  (thin wrapper; prefer `cargo bench`)
-//! obpam serve    [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 16]
+//! obpam serve    [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 16] [--cache-cap 32]
 //! obpam gen      --list | --dataset NAME [--scale S] [--out file.csv]
 //! obpam artifacts-check   (requires the `xla` build feature)
 //! ```
+//!
+//! `--method` (config key `run.method`) accepts any paper row label via
+//! [`MethodSpec::parse`] — `FasterPAM`, `FasterCLARA-50`, `BanditPAM++-2`,
+//! `OneBatch-nniw-steepest`, ... — and routes through the unified
+//! [`obpam::solver`] API; without it the CLI runs OneBatchPAM configured
+//! by the OneBatch knobs (`--sampler/--m/--eps/--max-passes/--strategy`,
+//! which are rejected for non-OneBatch methods).
 //!
 //! `--threads T` (config key `run.threads`) sizes the execution pool for
 //! the pairwise pass and the eager swap scan; `0` auto-detects the core
@@ -23,11 +30,12 @@ use obpam::backend::NativeBackend;
 #[cfg(feature = "xla")]
 use obpam::backend::XlaBackend;
 use obpam::config::Config;
-use obpam::coordinator::{one_batch_pam, onebatch::SwapStrategy, OneBatchConfig, SamplerKind};
+use obpam::coordinator::{SamplerKind, SwapStrategy};
 use obpam::data::synth;
 use obpam::dissim::{DissimCounter, Metric};
 use obpam::eval;
 use obpam::runtime::Pool;
+use obpam::solver::{self, MethodSpec, SolveSpec};
 #[cfg(feature = "xla")]
 use obpam::runtime::Runtime;
 use std::collections::HashMap;
@@ -97,42 +105,99 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
     let scale: f64 = get("run.scale", "scale", "1.0").parse().context("--scale")?;
     let seed: u64 = get("run.seed", "seed", "0").parse().context("--seed")?;
     let metric = Metric::parse(&get("run.metric", "metric", "l1")).context("bad --metric")?;
-    let sampler = SamplerKind::parse(&get("run.sampler", "sampler", "nniw")).context("bad --sampler")?;
-    let strategy = match get("run.strategy", "strategy", "eager").as_str() {
-        "eager" => SwapStrategy::Eager,
-        "steepest" => SwapStrategy::Steepest,
-        s => bail!("bad --strategy {s}"),
-    };
-    let m: Option<usize> = match get("run.m", "m", "auto").as_str() {
-        "auto" => None,
-        s => Some(s.parse().context("--m")?),
-    };
     let threads: usize = get("run.threads", "threads", "1").parse().context("--threads")?;
     let backend_name = get("run.backend", "backend", "native");
 
+    // OneBatch-only knobs: track explicit presence so a non-OneBatch
+    // --method rejects them instead of silently ignoring them
+    let explicit = |key: &str, flag: &str| -> Option<String> {
+        flags.get(flag).cloned().or_else(|| cfg.get(key).map(str::to_string))
+    };
+    let sampler_s = explicit("run.sampler", "sampler");
+    let strategy_s = explicit("run.strategy", "strategy");
+    // "auto" is the documented not-set spelling for the batch size
+    let m_s = explicit("run.m", "m").filter(|s| s != "auto");
+    let eps_s = explicit("run.eps", "eps");
+    let passes_s = explicit("run.max_passes", "max-passes");
+    let sampler = match &sampler_s {
+        Some(s) => SamplerKind::parse(s).context("bad --sampler")?,
+        None => SamplerKind::Nniw,
+    };
+    let strategy = match &strategy_s {
+        Some(s) => SwapStrategy::parse(s).context("bad --strategy")?,
+        None => SwapStrategy::Eager,
+    };
+    let m: Option<usize> = match m_s.as_deref() {
+        None => None,
+        Some(s) => Some(s.parse().context("--m")?),
+    };
+    let eps: f64 = match &eps_s {
+        Some(s) => s.parse().context("--eps")?,
+        None => 0.0,
+    };
+    let max_passes: usize = match &passes_s {
+        Some(s) => s.parse().context("--max-passes")?,
+        None => 20,
+    };
+
+    let method = match explicit("run.method", "method") {
+        None => MethodSpec::OneBatch { sampler, strategy },
+        Some(s) => {
+            let Some(base) = MethodSpec::parse(&s) else { bail!("unknown --method {s}") };
+            match base {
+                // CLI flags beat the parsed label; config-file defaults
+                // (run.sampler etc.) must not override an explicit method
+                MethodSpec::OneBatch { sampler: s0, strategy: t0 } => MethodSpec::OneBatch {
+                    sampler: if flags.contains_key("sampler") { sampler } else { s0 },
+                    strategy: if flags.contains_key("strategy") { strategy } else { t0 },
+                },
+                other => {
+                    // only reject knobs typed on this invocation: a config
+                    // file's OneBatch defaults are simply unused here, and
+                    // `--m auto` is the documented not-set spelling
+                    let m_cli =
+                        flags.get("m").map(String::as_str).is_some_and(|s| s != "auto");
+                    if flags.contains_key("sampler")
+                        || flags.contains_key("strategy")
+                        || m_cli
+                        || flags.contains_key("eps")
+                        || flags.contains_key("max-passes")
+                    {
+                        bail!(
+                            "--sampler/--strategy/--m/--eps/--max-passes only apply to \
+                             OneBatch methods (got --method {})",
+                            other.label()
+                        );
+                    }
+                    other
+                }
+            }
+        }
+    };
+
     eprintln!("[obpam] generating dataset {dataset} (scale {scale})");
-    let data = synth::generate(&dataset, scale, seed);
+    let data = synth::try_generate(&dataset, scale, seed)?;
     eprintln!(
-        "[obpam] n={} p={} k={k} sampler={} backend={backend_name} threads={}",
+        "[obpam] n={} p={} k={k} method={} backend={backend_name} threads={}",
         data.n(),
         data.p(),
-        sampler.name(),
+        method.label(),
         Pool::new(threads).threads()
     );
 
-    let ob_cfg = OneBatchConfig { k, sampler, m, strategy, seed, threads, ..Default::default() };
+    let spec = SolveSpec { method, k, seed, threads, m, eps, max_passes };
     let result = match backend_name.as_str() {
         "native" => {
             let backend = NativeBackend::with_pool(metric, Pool::new(threads));
-            one_batch_pam(&data.x, &ob_cfg, &backend)?
+            solver::solve(&data.x, &spec, &backend)?
         }
         #[cfg(feature = "xla")]
         "xla" | "xla-dense" => {
             // the PJRT runtime is single-threaded; `threads` still
-            // parallelises the eager scan via ob_cfg
+            // parallelises the eager scan via the spec
             let rt = Rc::new(Runtime::load_default()?);
             let backend = XlaBackend::new(rt, metric, backend_name == "xla-dense");
-            one_batch_pam(&data.x, &ob_cfg, &backend)?
+            solver::solve(&data.x, &spec, &backend)?
         }
         #[cfg(not(feature = "xla"))]
         "xla" | "xla-dense" => {
@@ -142,9 +207,13 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
     };
 
     let obj = eval::objective(&data.x, &result.medoids, &DissimCounter::new(metric));
+    println!("method: {}", spec.method.label());
     println!("medoids: {:?}", result.medoids);
     println!("objective (full data): {obj:.6}");
-    println!("objective (batch estimate): {:.6}", result.est_objective);
+    // some methods (Random, the seeding family) never estimate one
+    if result.est_objective.is_finite() {
+        println!("objective (internal estimate): {:.6}", result.est_objective);
+    }
     println!(
         "selection time: {:.3}s   dissim computations: {}   swaps: {}",
         result.stats.seconds, result.stats.dissim_count, result.stats.swap_count
@@ -157,10 +226,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         addr: flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".into()),
         workers: flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2),
         queue_cap: flags.get("queue-cap").and_then(|s| s.parse().ok()).unwrap_or(16),
+        cache_cap: flags.get("cache-cap").and_then(|s| s.parse().ok()).unwrap_or(32),
     };
     let handle = obpam::server::serve(cfg)?;
     println!("obpam server listening on {}", handle.addr);
-    println!("try: printf 'cluster dataset=blobs_2000_8_5 k=5\\n' | nc {} {}", handle.addr.ip(), handle.addr.port());
+    println!(
+        "try: printf 'cluster dataset=blobs_2000_8_5 k=5 method=FasterPAM\\n' | nc {} {}",
+        handle.addr.ip(),
+        handle.addr.port()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -177,7 +251,7 @@ fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
     let dataset = flags.get("dataset").context("--dataset or --list required")?;
     let scale: f64 = flags.get("scale").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
-    let data = synth::generate(dataset, scale, seed);
+    let data = synth::try_generate(dataset, scale, seed)?;
     match flags.get("out") {
         Some(path) => {
             let mut out = String::new();

@@ -1,0 +1,176 @@
+//! Sharded, LRU-bounded dataset cache (server protocol v2).
+//!
+//! Keyed by `(dataset, scale, seed)` — exactly the inputs that determine
+//! a generated matrix — and holding `Arc<Matrix>` values so concurrent
+//! jobs share one copy with zero cloning.  [`SHARDS`] independent locks
+//! keep requests for different datasets from serializing on one mutex.
+//!
+//! A shard generates a missing dataset *while holding its lock*: a burst
+//! of identical requests costs exactly one generation (no thundering
+//! herd), at the price of briefly blocking other keys that hash to the
+//! same shard.  Generation failures (unknown dataset names) are returned
+//! to the caller and never cached.
+
+use crate::data::synth;
+use crate::linalg::Matrix;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of independently locked shards.
+pub const SHARDS: usize = 8;
+
+/// Cache key: the full provenance of a generated dataset.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct DataKey {
+    dataset: String,
+    /// `f64::to_bits` of the scale (`f64` itself is not `Eq`/`Hash`).
+    scale_bits: u64,
+    seed: u64,
+}
+
+/// One shard: entries kept in most-recently-used-first order (caches are
+/// small — `cache_cap` datasets total — so a scan beats a linked map).
+struct Shard {
+    entries: Vec<(DataKey, Arc<Matrix>)>,
+}
+
+/// Sharded dataset cache; see the module docs.
+pub struct DatasetCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Hit/miss/occupancy snapshot (served by the `stats` wire command).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Requests served from the cache.
+    pub hits: u64,
+    /// Requests that had to generate (== total generations ever run).
+    pub misses: u64,
+    /// Datasets currently resident.
+    pub entries: usize,
+}
+
+impl DatasetCache {
+    /// Cache bounded to ~`cap` datasets total: the budget is split
+    /// evenly across [`SHARDS`] shards (rounded up, at least one entry
+    /// per shard), each evicting least-recently-used first.
+    pub fn new(cap: usize) -> Self {
+        DatasetCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard { entries: Vec::new() })).collect(),
+            per_shard_cap: cap.div_ceil(SHARDS).max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the dataset for `(dataset, scale, seed)`, generating it on a
+    /// miss.  Returns the shared matrix and whether it was a cache hit.
+    pub fn get_or_generate(
+        &self,
+        dataset: &str,
+        scale: f64,
+        seed: u64,
+    ) -> Result<(Arc<Matrix>, bool)> {
+        let key = DataKey { dataset: dataset.to_string(), scale_bits: scale.to_bits(), seed };
+        let shard = &self.shards[shard_of(&key)];
+        let mut guard = shard.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(pos) = guard.entries.iter().position(|(k, _)| *k == key) {
+            let entry = guard.entries.remove(pos);
+            let x = entry.1.clone();
+            guard.entries.insert(0, entry);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((x, true));
+        }
+        let x = Arc::new(synth::try_generate(dataset, scale, seed)?.x);
+        guard.entries.insert(0, (key, x.clone()));
+        guard.entries.truncate(self.per_shard_cap);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok((x, false))
+    }
+
+    /// Lifetime counters plus current occupancy.
+    pub fn stats(&self) -> CacheStats {
+        let entries = self
+            .shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).entries.len())
+            .sum();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries,
+        }
+    }
+}
+
+fn shard_of(key: &DataKey) -> usize {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() as usize) % SHARDS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit_shares_one_matrix() {
+        let cache = DatasetCache::new(8);
+        let (a, hit_a) = cache.get_or_generate("blobs_200_4_3", 1.0, 7).unwrap();
+        let (b, hit_b) = cache.get_or_generate("blobs_200_4_3", 1.0, 7).unwrap();
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached allocation");
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, entries: 1 });
+    }
+
+    #[test]
+    fn key_is_dataset_scale_seed() {
+        let cache = DatasetCache::new(16);
+        let base = cache.get_or_generate("blobs_200_4_3", 1.0, 7).unwrap().0;
+        for (name, scale, seed) in
+            [("blobs_201_4_3", 1.0, 7), ("blobs_200_4_3", 0.5, 7), ("blobs_200_4_3", 1.0, 8)]
+        {
+            let (x, hit) = cache.get_or_generate(name, scale, seed).unwrap();
+            assert!(!hit, "{name}/{scale}/{seed} must be a distinct key");
+            assert!(!Arc::ptr_eq(&base, &x));
+        }
+        assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn lru_bound_holds() {
+        // cap 1 -> one entry per shard -> at most SHARDS resident no
+        // matter how many distinct keys stream through
+        let cache = DatasetCache::new(1);
+        for seed in 0..50 {
+            cache.get_or_generate("blobs_100_4_2", 1.0, seed).unwrap();
+        }
+        assert!(cache.stats().entries <= SHARDS, "entries {}", cache.stats().entries);
+        assert_eq!(cache.stats().misses, 50);
+    }
+
+    #[test]
+    fn eviction_is_least_recently_used() {
+        // With per-shard cap 1, two same-shard keys evict each other; a
+        // re-request of the first must regenerate.  Streaming the same
+        // key repeatedly must not (it stays most-recent).
+        let cache = DatasetCache::new(1);
+        for _ in 0..5 {
+            cache.get_or_generate("blobs_100_4_2", 1.0, 1).unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!((s.misses, s.hits), (1, 4));
+    }
+
+    #[test]
+    fn failures_are_not_cached() {
+        let cache = DatasetCache::new(8);
+        assert!(cache.get_or_generate("doesnotexist", 1.0, 0).is_err());
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0, entries: 0 });
+    }
+}

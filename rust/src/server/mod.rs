@@ -1,33 +1,63 @@
 //! Clustering job server: a std::net TCP service with a bounded job
-//! queue and a fixed worker pool (tokio is unavailable offline;
+//! queue, a fixed worker pool (tokio is unavailable offline;
 //! thread-per-worker over a bounded queue is the right shape for
-//! CPU-bound jobs anyway).
+//! CPU-bound jobs anyway), and a sharded dataset cache.
 //!
-//! Line protocol (one request per connection line, one reply line):
+//! # Line protocol v2 (one request line per connection, one reply line)
 //!
 //! ```text
-//! -> cluster dataset=blobs_2000_8_5 k=5 sampler=nniw seed=3 scale=1.0 threads=4
-//! <- ok medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 served_ms=50.1
+//! -> cluster dataset=blobs_2000_8_5 k=5 method=FasterPAM seed=3 threads=4
+//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 served_ms=50.1
+//! -> stats
+//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 served_ms=0.0
 //! -> ping
 //! <- pong
 //! ```
 //!
-//! Concurrency model:
-//!   * `ServerConfig::workers` long-lived worker threads drain accepted
-//!     connections from an mpsc queue — cross-job parallelism;
-//!   * each `cluster` job may additionally ask for data parallelism via
-//!     the `threads=` key (a [`crate::runtime::Pool`] per job);
-//!   * admission is a **single atomic** `fetch_update` on the in-flight
-//!     counter (queued + running): a burst of connections can never
-//!     push it past `queue_cap`, and rejected connections get an
-//!     immediate `err queue full` line instead of unbounded queueing.
+//! `cluster` keys:
+//!
+//! * `dataset=`, `scale=`, `seed=` — dataset provenance.  Requests route
+//!   through a sharded LRU dataset cache keyed by exactly this triple
+//!   ([`DatasetCache`], bounded by [`ServerConfig::cache_cap`]), so
+//!   repeated traffic never regenerates data; every reply reports
+//!   `cache=hit|miss`.  `seed=` also seeds the algorithm.
+//! * `method=` — any [`MethodSpec`] label (`FasterPAM`, `FasterCLARA-50`,
+//!   `BanditPAM++-2`, `OneBatch-nniw-steepest`, ...; see
+//!   [`MethodSpec::parse`]).  Omitted -> legacy v1 behaviour: OneBatchPAM
+//!   with `sampler=` (default `nniw`) and `strategy=` (default `eager`).
+//!   Methods the paper marks "Na" at large scale (full `n x n` matrix or
+//!   per-round resampling) are rejected above [`FULL_MATRIX_LIMIT`] rows.
+//! * `k=`, `metric=`, `threads=` — shared run parameters.
+//! * `m=`, `eps=`, `max_passes=`, `strategy=`, `sampler=` — OneBatch
+//!   knobs (batch size, swap-acceptance threshold, pass budget, swap
+//!   engine, batch variant).  Sending one alongside a non-OneBatch
+//!   `method=` is an error, not silently ignored — as is any
+//!   present-but-unparsable value (`err ...` replies).
+//!
+//! # Concurrency model
+//!
+//! * [`ServerConfig::workers`] long-lived worker threads drain accepted
+//!   connections from an mpsc queue — cross-job parallelism;
+//! * each `cluster` job may additionally ask for data parallelism via
+//!   the `threads=` key (a [`crate::runtime::Pool`] per job);
+//! * admission is a **single atomic** `fetch_update` on the in-flight
+//!   counter (queued + running): a burst of connections can never push
+//!   it past `queue_cap`, and rejected connections get an immediate
+//!   `err queue full` line instead of unbounded queueing;
+//! * the dataset cache is sharded ([`cache::SHARDS`] locks), so jobs for
+//!   different datasets never contend on one mutex, and a burst for the
+//!   same new dataset generates it exactly once.
+
+pub mod cache;
+
+pub use cache::{CacheStats, DatasetCache};
 
 use crate::backend::NativeBackend;
-use crate::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
-use crate::data::synth;
+use crate::coordinator::{SamplerKind, SwapStrategy};
 use crate::dissim::{DissimCounter, Metric};
 use crate::eval;
 use crate::runtime::Pool;
+use crate::solver::{self, MethodSpec, SolveSpec};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -44,11 +74,27 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Max in-flight jobs (queued + running) before backpressure.
     pub queue_cap: usize,
+    /// Dataset-cache budget in datasets (split across shards, LRU).
+    pub cache_cap: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, queue_cap: 16 }
+        ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, queue_cap: 16, cache_cap: 32 }
+    }
+}
+
+/// Shared mutable server state, visible to every worker (and exposed on
+/// [`ServerHandle::state`] for tests / ops probes).
+pub struct ServerState {
+    /// Sharded dataset cache for `cluster` requests.
+    pub cache: DatasetCache,
+}
+
+impl ServerState {
+    /// Fresh state sized from the config.
+    pub fn new(cfg: &ServerConfig) -> Self {
+        ServerState { cache: DatasetCache::new(cfg.cache_cap) }
     }
 }
 
@@ -56,6 +102,8 @@ impl Default for ServerConfig {
 pub struct ServerHandle {
     /// The actually-bound address (useful with port 0).
     pub addr: std::net::SocketAddr,
+    /// The server's shared state (dataset cache and its counters).
+    pub state: Arc<ServerState>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -86,20 +134,31 @@ fn parse_kv(parts: &[&str]) -> HashMap<String, String> {
         .collect()
 }
 
+/// Optional `key=value` lookup where a present-but-unparsable value is a
+/// protocol error (v2 validates instead of silently falling back).
+fn parse_key<T: std::str::FromStr>(
+    kv: &HashMap<String, String>,
+    key: &str,
+) -> Result<Option<T>, String> {
+    match kv.get(key) {
+        None => Ok(None),
+        Some(s) => s.parse().map(Some).map_err(|_| format!("bad {key}={s}")),
+    }
+}
+
+/// Methods the paper marks "Na" at large scale hold a full `n x n`
+/// matrix (FasterPAM) or resample every round (BanditPAM++); above this
+/// many rows the server rejects them instead of stalling a worker.
+pub const FULL_MATRIX_LIMIT: usize = 20_000;
+
 /// Execute one `cluster` request (shared by server workers and tests).
-pub fn handle_cluster(kv: &HashMap<String, String>) -> Result<String, String> {
+pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Result<String, String> {
     let dataset = kv.get("dataset").cloned().unwrap_or_else(|| "blobs_1000_8_5".into());
-    let k: usize = kv.get("k").and_then(|s| s.parse().ok()).unwrap_or(10);
-    let scale: f64 = kv.get("scale").and_then(|s| s.parse().ok()).unwrap_or(1.0);
-    let seed: u64 = kv.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let k: usize = parse_key(kv, "k")?.unwrap_or(10);
+    let scale: f64 = parse_key(kv, "scale")?.unwrap_or(1.0);
+    let seed: u64 = parse_key(kv, "seed")?.unwrap_or(0);
     // capped: a request can use the machine, not fork-bomb it
-    let threads: usize =
-        kv.get("threads").and_then(|s| s.parse().ok()).unwrap_or(1).min(64);
-    let sampler = kv
-        .get("sampler")
-        .map(|s| SamplerKind::parse(s).ok_or(format!("unknown sampler {s}")))
-        .transpose()?
-        .unwrap_or(SamplerKind::Nniw);
+    let threads: usize = parse_key(kv, "threads")?.unwrap_or(1).min(64);
     let metric = kv
         .get("metric")
         .map(|s| Metric::parse(s).ok_or(format!("unknown metric {s}")))
@@ -109,33 +168,121 @@ pub fn handle_cluster(kv: &HashMap<String, String>) -> Result<String, String> {
         return Err("k must be >= 2".into());
     }
 
-    let data = std::panic::catch_unwind(|| synth::generate(&dataset, scale, seed))
-        .map_err(|_| format!("unknown dataset {dataset}"))?;
-    if data.n() <= k + 1 {
-        return Err(format!("dataset too small (n={}) for k={k}", data.n()));
+    // method resolution: explicit method= wins; legacy lines without it
+    // default to OneBatchPAM driven by the v1 sampler=/strategy= keys
+    let base = match kv.get("method") {
+        Some(s) => MethodSpec::parse(s).ok_or(format!("unknown method {s}"))?,
+        None => MethodSpec::default(),
+    };
+    let sampler = kv
+        .get("sampler")
+        .map(|s| SamplerKind::parse(s).ok_or(format!("unknown sampler {s}")))
+        .transpose()?;
+    let strategy = kv
+        .get("strategy")
+        .map(|s| SwapStrategy::parse(s).ok_or(format!("unknown strategy {s}")))
+        .transpose()?;
+    let m: Option<usize> = parse_key(kv, "m")?;
+    let eps: Option<f64> = parse_key(kv, "eps")?;
+    let max_passes: Option<usize> = parse_key(kv, "max_passes")?;
+    let method = match base {
+        MethodSpec::OneBatch { sampler: s0, strategy: t0 } => MethodSpec::OneBatch {
+            sampler: sampler.unwrap_or(s0),
+            strategy: strategy.unwrap_or(t0),
+        },
+        other => {
+            for key in ["sampler", "strategy", "m", "eps", "max_passes"] {
+                if kv.contains_key(key) {
+                    return Err(format!(
+                        "{key}= only applies to OneBatch methods (method={})",
+                        other.label()
+                    ));
+                }
+            }
+            other
+        }
+    };
+    if let Some(m) = m {
+        if m < 2 {
+            return Err(format!("m must be >= 2, got {m}"));
+        }
+    }
+    if let Some(e) = eps {
+        if !e.is_finite() || e < 0.0 {
+            return Err(format!("eps must be finite and >= 0, got {e}"));
+        }
+    }
+    if max_passes == Some(0) {
+        return Err("max_passes must be >= 1".into());
+    }
+
+    // reject infeasible (method, size) combinations *before* paying for
+    // generation or touching the cache — the size is predictable
+    if !method.feasible_large_scale() {
+        if let Some(n) = crate::data::synth::expected_rows(&dataset, scale) {
+            if n > FULL_MATRIX_LIMIT {
+                return Err(format!(
+                    "method {} infeasible at n={n} (limit {FULL_MATRIX_LIMIT})",
+                    method.label()
+                ));
+            }
+        }
+    }
+
+    let (x, hit) = state.cache.get_or_generate(&dataset, scale, seed).map_err(|e| e.to_string())?;
+    if x.rows <= k + 1 {
+        return Err(format!("dataset too small (n={}) for k={k}", x.rows));
+    }
+    if !method.feasible_large_scale() && x.rows > FULL_MATRIX_LIMIT {
+        // backstop in case a dataset scheme without a size prediction
+        // ever slips past the pre-check
+        return Err(format!(
+            "method {} infeasible at n={} (limit {FULL_MATRIX_LIMIT})",
+            method.label(),
+            x.rows
+        ));
+    }
+
+    let mut spec = SolveSpec::new(method, k, seed);
+    spec.threads = threads;
+    spec.m = m;
+    if let Some(e) = eps {
+        spec.eps = e;
+    }
+    if let Some(p) = max_passes {
+        spec.max_passes = p;
     }
     let backend = NativeBackend::with_pool(metric, Pool::new(threads));
-    let cfg = OneBatchConfig { k, sampler, seed, threads, ..Default::default() };
-    let r = one_batch_pam(&data.x, &cfg, &backend).map_err(|e| e.to_string())?;
-    let obj = eval::objective(&data.x, &r.medoids, &DissimCounter::new(metric));
+    let r = solver::solve(&x, &spec, &backend).map_err(|e| e.to_string())?;
+    let obj = eval::objective(&x, &r.medoids, &DissimCounter::new(metric));
     let meds: Vec<String> = r.medoids.iter().map(|m| m.to_string()).collect();
     Ok(format!(
-        "ok medoids={} objective={obj:.6} seconds={:.4} dissim={}",
+        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={}",
+        spec.method.label(),
+        if hit { "hit" } else { "miss" },
         meds.join(","),
         r.stats.seconds,
-        r.stats.dissim_count
+        r.stats.dissim_count,
+        r.stats.swap_count,
     ))
 }
 
 /// Dispatch one request line to a reply line.
-pub fn handle_line(line: &str) -> String {
+pub fn handle_line(state: &ServerState, line: &str) -> String {
     let parts: Vec<&str> = line.split_whitespace().collect();
     match parts.first().copied() {
         Some("ping") => "pong".into(),
-        Some("cluster") => match handle_cluster(&parse_kv(&parts[1..])) {
+        Some("cluster") => match handle_cluster(state, &parse_kv(&parts[1..])) {
             Ok(r) => r,
             Err(e) => format!("err {e}"),
         },
+        Some("stats") => {
+            let s = state.cache.stats();
+            format!(
+                "ok cache_hits={} cache_misses={} cache_entries={}",
+                s.hits, s.misses, s.entries
+            )
+        }
         // Diagnostic: hold a worker for `ms` (capped) — used by the
         // backpressure tests and for probing queue behaviour under load.
         Some("sleep") => {
@@ -155,7 +302,7 @@ pub fn handle_line(line: &str) -> String {
 const IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
 
 /// Serve one accepted connection: read a line, dispatch, reply.
-fn handle_connection(stream: TcpStream) {
+fn handle_connection(state: &ServerState, stream: TcpStream) {
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let Ok(clone) = stream.try_clone() else { return };
@@ -163,7 +310,7 @@ fn handle_connection(stream: TcpStream) {
     let mut line = String::new();
     if reader.read_line(&mut line).is_ok() && !line.trim().is_empty() {
         let started = Instant::now();
-        let reply = handle_line(line.trim());
+        let reply = handle_line(state, line.trim());
         let mut s = stream;
         let _ = writeln!(s, "{reply} served_ms={:.1}", started.elapsed().as_secs_f64() * 1e3);
     }
@@ -175,6 +322,7 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let inflight = Arc::new(AtomicUsize::new(0));
+    let state = Arc::new(ServerState::new(&cfg));
     let queue_cap = cfg.queue_cap.max(1);
     let worker_count = cfg.workers.max(1);
 
@@ -187,6 +335,7 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
     for _ in 0..worker_count {
         let rx = rx.clone();
         let inflight = inflight.clone();
+        let state = state.clone();
         workers.push(std::thread::spawn(move || loop {
             // the guard temporary drops at the end of this statement, so
             // workers do not hold the lock while serving
@@ -195,7 +344,7 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
             let _slot = DecrementOnDrop(inflight.clone());
             // a panicking job must not shrink the long-lived pool
             let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                handle_connection(stream);
+                handle_connection(&state, stream);
             }));
         }));
     }
@@ -231,7 +380,7 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
         // dropping `tx` wakes every idle worker with RecvError -> exit
     });
 
-    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread), workers })
+    Ok(ServerHandle { addr, state, stop, accept_thread: Some(accept_thread), workers })
 }
 
 struct DecrementOnDrop(Arc<AtomicUsize>);
@@ -255,67 +404,190 @@ pub fn request(addr: std::net::SocketAddr, line: &str) -> std::io::Result<String
 mod tests {
     use super::*;
 
+    fn fresh_state() -> ServerState {
+        ServerState::new(&ServerConfig::default())
+    }
+
+    fn kv(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs.iter().map(|(a, b)| (a.to_string(), b.to_string())).collect()
+    }
+
     #[test]
     fn ping_pong_and_cluster_roundtrip() {
         let h = serve(ServerConfig::default()).unwrap();
         assert!(request(h.addr, "ping").unwrap().starts_with("pong"));
         let r = request(h.addr, "cluster dataset=blobs_300_4_3 k=3 seed=1").unwrap();
-        assert!(r.starts_with("ok medoids="), "{r}");
+        // legacy lines without method= still work and default to
+        // OneBatch-nniw (protocol v1 compatibility)
+        assert!(r.starts_with("ok method=OneBatch-nniw cache=miss medoids="), "{r}");
         assert!(r.contains("objective="));
+        assert!(r.contains("swaps="));
+        h.shutdown();
+    }
+
+    #[test]
+    fn every_table3_method_is_addressable_on_the_wire() {
+        let h = serve(ServerConfig::default()).unwrap();
+        for method in MethodSpec::table3_grid() {
+            let label = method.label();
+            let r = request(h.addr, &format!("cluster dataset=blobs_200_4_3 k=3 seed=1 method={label}"))
+                .unwrap();
+            assert!(r.starts_with("ok "), "{label}: {r}");
+            assert!(r.contains(&format!("method={label} ")), "{label}: {r}");
+        }
         h.shutdown();
     }
 
     #[test]
     fn bad_requests_get_errors() {
-        assert!(handle_line("nope").starts_with("err"));
-        assert!(handle_line("").starts_with("err"));
-        assert!(handle_line("cluster dataset=doesnotexist").starts_with("err"));
-        assert!(handle_line("cluster k=1").starts_with("err"));
-        assert!(handle_line("cluster sampler=bogus").starts_with("err"));
+        let st = fresh_state();
+        for line in [
+            "nope",
+            "",
+            "cluster dataset=doesnotexist",
+            "cluster k=1",
+            "cluster k=abc",
+            "cluster sampler=bogus",
+            "cluster method=bogus",
+            "cluster strategy=bogus",
+            "cluster m=1",
+            "cluster m=xyz",
+            "cluster eps=-0.5",
+            "cluster eps=nope",
+            "cluster max_passes=0",
+            // OneBatch-only knobs must not be silently dropped
+            "cluster method=FasterPAM m=50",
+            "cluster method=k-means++ strategy=steepest",
+            "cluster method=Random sampler=unif",
+        ] {
+            assert!(handle_line(&st, line).starts_with("err"), "{line:?} should err");
+        }
+    }
+
+    #[test]
+    fn onebatch_knobs_are_accepted_and_validated() {
+        let st = fresh_state();
+        let r = handle_line(
+            &st,
+            "cluster dataset=blobs_300_4_3 k=3 seed=2 m=60 eps=0.01 max_passes=5 strategy=steepest sampler=unif",
+        );
+        assert!(r.starts_with("ok method=OneBatch-unif-steepest "), "{r}");
+        // a unif run computes exactly n*m dissimilarities -> m= reached
+        // the coordinator (plus the steepest engine's gain evals)
+        assert!(r.contains("dissim="), "{r}");
+    }
+
+    #[test]
+    fn cache_reports_miss_then_hit_with_identical_medoids() {
+        let st = fresh_state();
+        let line = "cluster dataset=blobs_300_4_3 k=3 seed=5";
+        let first = handle_line(&st, line);
+        let second = handle_line(&st, line);
+        assert!(first.starts_with("ok "), "{first}");
+        assert!(first.contains("cache=miss"), "{first}");
+        assert!(second.contains("cache=hit"), "{second}");
+        let meds = |r: &str| {
+            r.split("medoids=").nth(1).unwrap().split_whitespace().next().unwrap().to_string()
+        };
+        assert_eq!(meds(&first), meds(&second));
+        let s = st.cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn repeated_requests_never_regenerate_after_warmup() {
+        let h = serve(ServerConfig::default()).unwrap();
+        let jobs: Vec<String> = (0..3)
+            .map(|i| format!("cluster dataset=blobs_300_4_3 k=3 seed={i}"))
+            .collect();
+        for job in &jobs {
+            assert!(request(h.addr, job).unwrap().contains("cache=miss"));
+        }
+        let warm_misses = h.state.cache.stats().misses;
+        for _ in 0..2 {
+            for job in &jobs {
+                assert!(request(h.addr, job).unwrap().contains("cache=hit"));
+            }
+        }
+        let s = h.state.cache.stats();
+        assert_eq!(s.misses, warm_misses, "no regeneration after warmup");
+        assert_eq!(s.hits, 6);
+        let stats_line = request(h.addr, "stats").unwrap();
+        assert!(stats_line.starts_with("ok cache_hits=6 cache_misses=3"), "{stats_line}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn infeasible_large_scale_method_rejected_before_generation() {
+        let st = fresh_state();
+        let r = handle_line(&st, "cluster dataset=covertype k=5 method=FasterPAM");
+        assert!(r.starts_with("err"), "{r}");
+        assert!(r.contains("infeasible"), "{r}");
+        let s = st.cache.stats();
+        assert_eq!((s.misses, s.entries), (0, 0), "must not generate the dataset");
     }
 
     #[test]
     fn cluster_handler_is_deterministic() {
-        let kv: HashMap<String, String> = [
-            ("dataset", "blobs_300_4_3"),
-            ("k", "3"),
-            ("seed", "5"),
-        ]
-        .iter()
-        .map(|(a, b)| (a.to_string(), b.to_string()))
-        .collect();
-        // strip the timing field (wall-clock varies run to run)
+        let args = kv(&[("dataset", "blobs_300_4_3"), ("k", "3"), ("seed", "5")]);
+        // fresh state each side so both runs are cache=miss; strip the
+        // timing field (wall-clock varies run to run)
         let stable = |r: String| r.split(" seconds=").next().unwrap().to_string();
         assert_eq!(
-            stable(handle_cluster(&kv).unwrap()),
-            stable(handle_cluster(&kv).unwrap())
+            stable(handle_cluster(&fresh_state(), &args).unwrap()),
+            stable(handle_cluster(&fresh_state(), &args).unwrap())
         );
     }
 
     #[test]
     fn threaded_cluster_matches_serial_cluster() {
         let mk = |threads: &str| -> String {
-            let kv: HashMap<String, String> = [
+            let args = kv(&[
                 ("dataset", "blobs_400_4_3"),
                 ("k", "3"),
                 ("seed", "6"),
                 ("threads", threads),
-            ]
-            .iter()
-            .map(|(a, b)| (a.to_string(), b.to_string()))
-            .collect();
-            let r = handle_cluster(&kv).unwrap();
+            ]);
+            let r = handle_cluster(&fresh_state(), &args).unwrap();
             r.split(" seconds=").next().unwrap().to_string()
         };
         assert_eq!(mk("1"), mk("4"));
     }
 
     #[test]
+    fn methods_agree_between_wire_and_library() {
+        // the medoids a wire request reports must be exactly what the
+        // unified API computes for the same (data, method, seed)
+        let st = fresh_state();
+        let r = handle_line(&st, "cluster dataset=blobs_250_4_3 k=3 seed=4 method=FasterPAM");
+        let wire: Vec<usize> = r
+            .split("medoids=")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .split(',')
+            .map(|t| t.parse().unwrap())
+            .collect();
+        let data = crate::data::synth::generate("blobs_250_4_3", 1.0, 4);
+        let backend = NativeBackend::new(Metric::L1);
+        let lib =
+            solver::solve(&data.x, &SolveSpec::new(MethodSpec::FasterPam, 3, 4), &backend).unwrap();
+        assert_eq!(wire, lib.medoids);
+    }
+
+    #[test]
     fn workers_serve_concurrently() {
         // With 4 workers, 4 concurrent 150 ms sleeps finish in ~1 batch,
         // far below the 600 ms serial floor.
-        let h = serve(ServerConfig { addr: "127.0.0.1:0".into(), workers: 4, queue_cap: 8 })
-            .unwrap();
+        let h = serve(ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            queue_cap: 8,
+            ..Default::default()
+        })
+        .unwrap();
         let t0 = Instant::now();
         let handles: Vec<_> = (0..4)
             .map(|_| {
@@ -333,7 +605,7 @@ mod tests {
 
     #[test]
     fn sleep_command_caps_duration() {
-        let r = handle_line("sleep ms=1");
+        let r = handle_line(&fresh_state(), "sleep ms=1");
         assert!(r.starts_with("ok slept_ms=1"), "{r}");
     }
 }

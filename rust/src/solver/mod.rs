@@ -1,0 +1,488 @@
+//! The unified solver API: every k-medoids algorithm in the crate —
+//! OneBatchPAM and all eight paper baselines — behind one entry point.
+//!
+//! [`MethodSpec`] names a method exactly like the paper's result rows and
+//! round-trips through strings ([`MethodSpec::parse`] /
+//! [`MethodSpec::label`]), so any method is addressable from config
+//! files, CLI flags (`--method`) and the server wire protocol
+//! (`cluster method=...`).  [`SolveSpec`] carries the method plus the
+//! shared run parameters, and [`solve`] dispatches through the
+//! [`Solver`] trait that each algorithm implements as a thin adapter
+//! over its existing free function (`baselines::faster_pam`,
+//! `coordinator::one_batch_pam`, ...).
+//!
+//! Adding a new algorithm is: implement [`Solver`] next to the
+//! algorithm, add a [`MethodSpec`] variant, and every surface — CLI,
+//! bench harness, job server, examples — can run it by name.
+//!
+//! ```no_run
+//! use obpam::backend::NativeBackend;
+//! use obpam::data::synth;
+//! use obpam::dissim::Metric;
+//! use obpam::solver::{self, MethodSpec, SolveSpec};
+//!
+//! let data = synth::try_generate("blobs_2000_8_5", 1.0, 42).unwrap();
+//! // any paper row label works: "FasterPAM", "BanditPAM++-2", ...
+//! let method = MethodSpec::parse("OneBatch-nniw").unwrap();
+//! let backend = NativeBackend::new(Metric::L1);
+//! let result = solver::solve(&data.x, &SolveSpec::new(method, 5, 42), &backend).unwrap();
+//! println!("medoids: {:?}", result.medoids);
+//! ```
+
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::baselines::{
+    AlternateSolver, BanditPamSolver, ClaraSolver, FasterPamSolver, KMeansPpSolver, Kmc2Solver,
+    LsKMeansPpSolver, RandomSolver,
+};
+use crate::coordinator::onebatch::{OneBatchSolver, SwapStrategy};
+use crate::coordinator::{KMedoidsResult, SamplerKind};
+use crate::dissim::Metric;
+use crate::linalg::Matrix;
+use crate::runtime::Pool;
+use anyhow::Result;
+
+/// One k-medoids algorithm behind the unified entry point.
+///
+/// Implementations are thin adapters over the crate's existing free
+/// functions; they read the shared run parameters from the [`SolveSpec`]
+/// and carry their method-specific hyperparameters (repetitions, chain
+/// length, ...) in the struct itself.
+pub trait Solver {
+    /// Paper row label of the configured method (round-trips through
+    /// [`MethodSpec::parse`]).
+    fn label(&self) -> String;
+
+    /// Select `spec.k` medoids of `x` on `backend`.
+    fn solve(
+        &self,
+        x: &Matrix,
+        spec: &SolveSpec,
+        backend: &dyn ComputeBackend,
+    ) -> Result<KMedoidsResult>;
+}
+
+/// Method-independent run parameters for [`solve`].
+///
+/// The OneBatch-only knobs (`m`, `eps`, `max_passes`) have no meaning
+/// for the point-level baselines and are ignored by them; user surfaces
+/// that expose these knobs (CLI flags, server keys) reject them for
+/// non-OneBatch methods instead of silently dropping them.
+#[derive(Clone, Debug)]
+pub struct SolveSpec {
+    /// Which algorithm to run.
+    pub method: MethodSpec,
+    /// Number of medoids (k >= 2).
+    pub k: usize,
+    /// PRNG seed (every method's selection is deterministic given it).
+    pub seed: u64,
+    /// Execution-pool width for OneBatch's eager scan (`0` = auto,
+    /// `1` = serial).  Matrix tile ops use the backend's own pool;
+    /// medoids are bit-identical at any value for a fixed seed.
+    pub threads: usize,
+    /// OneBatch batch size; `None` -> paper default `100 ln(kn)`.
+    pub m: Option<usize>,
+    /// OneBatch swap acceptance threshold (0 = any improvement).
+    pub eps: f64,
+    /// OneBatch max eager passes (steepest: `k *` this many swaps).
+    pub max_passes: usize,
+}
+
+impl SolveSpec {
+    /// Spec for `method` with the default OneBatch knobs and a serial
+    /// pool; override fields with struct-update syntax.
+    pub fn new(method: MethodSpec, k: usize, seed: u64) -> Self {
+        SolveSpec { method, k, seed, threads: 1, m: None, eps: 0.0, max_passes: 20 }
+    }
+}
+
+impl Default for SolveSpec {
+    fn default() -> Self {
+        SolveSpec::new(MethodSpec::default(), 10, 0)
+    }
+}
+
+/// Run `spec.method` on `x` and validate the result invariants
+/// (`k` unique in-range medoids).
+///
+/// This is the single entry point behind the CLI, the bench harness,
+/// the job server and the examples.
+pub fn solve(x: &Matrix, spec: &SolveSpec, backend: &dyn ComputeBackend) -> Result<KMedoidsResult> {
+    let r = spec.method.solver().solve(x, spec, backend)?;
+    r.validate(x.rows, spec.k);
+    Ok(r)
+}
+
+/// One method variant, named exactly like the paper's result rows.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MethodSpec {
+    /// Random k-subset.
+    Random,
+    /// FasterPAM (full n x n; small scale only in the paper).
+    FasterPam,
+    /// Alternate (Park & Jun; small scale only).
+    Alternate,
+    /// FasterCLARA with I repetitions.
+    FasterClara {
+        /// Subsample repetitions (paper: I in {5, 50}).
+        reps: usize,
+    },
+    /// kmc2 with chain length L.
+    Kmc2 {
+        /// MCMC chain length.
+        chain: usize,
+    },
+    /// k-means++ seeding.
+    KMeansPp,
+    /// LS-k-means++ with Z local-search steps.
+    LsKMeansPp {
+        /// Local-search steps.
+        steps: usize,
+    },
+    /// BanditPAM++ with T swap rounds.
+    BanditPam {
+        /// Max swap rounds (paper sweeps {0, 2, 5}).
+        swaps: usize,
+    },
+    /// OneBatchPAM with a sampling variant.
+    OneBatch {
+        /// Batch construction variant.
+        sampler: SamplerKind,
+        /// Swap engine.
+        strategy: SwapStrategy,
+    },
+}
+
+impl Default for MethodSpec {
+    /// The paper's recommended method: OneBatch-nniw with eager swaps.
+    fn default() -> Self {
+        MethodSpec::OneBatch { sampler: SamplerKind::Nniw, strategy: SwapStrategy::Eager }
+    }
+}
+
+impl MethodSpec {
+    /// Paper row label (round-trips through [`MethodSpec::parse`]).
+    ///
+    /// Kept as a direct match — `label()` runs once per record / reply /
+    /// error message, so it must not box a solver just to name itself;
+    /// agreement with [`Solver::label`] is asserted in the tests.
+    pub fn label(&self) -> String {
+        match self {
+            MethodSpec::Random => "Random".into(),
+            MethodSpec::FasterPam => "FasterPAM".into(),
+            MethodSpec::Alternate => "Alternate".into(),
+            MethodSpec::FasterClara { reps } => format!("FasterCLARA-{reps}"),
+            MethodSpec::Kmc2 { chain } => format!("kmc2-{chain}"),
+            MethodSpec::KMeansPp => "k-means++".into(),
+            MethodSpec::LsKMeansPp { steps } => format!("LS-k-means++-{steps}"),
+            MethodSpec::BanditPam { swaps } => format!("BanditPAM++-{swaps}"),
+            MethodSpec::OneBatch { sampler, strategy } => match strategy {
+                SwapStrategy::Eager => format!("OneBatch-{}", sampler.name()),
+                SwapStrategy::Steepest => format!("OneBatch-{}-steepest", sampler.name()),
+            },
+        }
+    }
+
+    /// Parse a method label back into a spec (case-insensitive).
+    ///
+    /// Accepts every [`MethodSpec::label`] spelling plus a few aliases:
+    /// `kmeanspp` / `kmeans++` for `k-means++`, `lskmeanspp-Z` for
+    /// `LS-k-means++-Z`, `banditpam-T` for `BanditPAM++-T`, and a bare
+    /// `onebatch` for the paper default `OneBatch-nniw`.
+    pub fn parse(s: &str) -> Option<MethodSpec> {
+        let t = s.trim().to_ascii_lowercase();
+        let spec = match t.as_str() {
+            "random" => MethodSpec::Random,
+            "fasterpam" => MethodSpec::FasterPam,
+            "alternate" => MethodSpec::Alternate,
+            "k-means++" | "kmeans++" | "kmeanspp" => MethodSpec::KMeansPp,
+            "onebatch" | "onebatchpam" => MethodSpec::default(),
+            _ => {
+                if let Some(rest) = t.strip_prefix("fasterclara-") {
+                    MethodSpec::FasterClara { reps: rest.parse().ok()? }
+                } else if let Some(rest) = t.strip_prefix("kmc2-") {
+                    // chain length 0 would trip kmc2's `l >= 1` assert
+                    // deep inside a worker; reject it at the boundary
+                    match rest.parse().ok()? {
+                        0 => return None,
+                        chain => MethodSpec::Kmc2 { chain },
+                    }
+                } else if let Some(rest) =
+                    t.strip_prefix("ls-k-means++-").or_else(|| t.strip_prefix("lskmeanspp-"))
+                {
+                    MethodSpec::LsKMeansPp { steps: rest.parse().ok()? }
+                } else if let Some(rest) =
+                    t.strip_prefix("banditpam++-").or_else(|| t.strip_prefix("banditpam-"))
+                {
+                    MethodSpec::BanditPam { swaps: rest.parse().ok()? }
+                } else if let Some(rest) = t.strip_prefix("onebatch-") {
+                    let (sampler, strategy) = match rest.strip_suffix("-steepest") {
+                        Some(sk) => (sk, SwapStrategy::Steepest),
+                        None => (rest, SwapStrategy::Eager),
+                    };
+                    MethodSpec::OneBatch { sampler: SamplerKind::parse(sampler)?, strategy }
+                } else {
+                    return None;
+                }
+            }
+        };
+        Some(spec)
+    }
+
+    /// Construct the [`Solver`] that runs this method.
+    pub fn solver(&self) -> Box<dyn Solver> {
+        match self {
+            MethodSpec::Random => Box::new(RandomSolver),
+            MethodSpec::FasterPam => Box::new(FasterPamSolver::default()),
+            MethodSpec::Alternate => Box::new(AlternateSolver::default()),
+            MethodSpec::FasterClara { reps } => Box::new(ClaraSolver { reps: *reps }),
+            MethodSpec::Kmc2 { chain } => Box::new(Kmc2Solver { chain: *chain }),
+            MethodSpec::KMeansPp => Box::new(KMeansPpSolver),
+            MethodSpec::LsKMeansPp { steps } => Box::new(LsKMeansPpSolver { steps: *steps }),
+            MethodSpec::BanditPam { swaps } => Box::new(BanditPamSolver { swaps: *swaps }),
+            MethodSpec::OneBatch { sampler, strategy } => {
+                Box::new(OneBatchSolver { sampler: *sampler, strategy: *strategy })
+            }
+        }
+    }
+
+    /// Does the paper run this method on large-scale datasets?
+    /// (FasterPAM / Alternate / BanditPAM++ are "Na" there.)
+    pub fn feasible_large_scale(&self) -> bool {
+        !matches!(
+            self,
+            MethodSpec::FasterPam | MethodSpec::Alternate | MethodSpec::BanditPam { .. }
+        )
+    }
+
+    /// The full 18-row method grid of Table 3.
+    pub fn table3_grid() -> Vec<MethodSpec> {
+        use MethodSpec::*;
+        let mut v = vec![
+            Random,
+            FasterPam,
+            Alternate,
+            FasterClara { reps: 5 },
+            FasterClara { reps: 50 },
+            Kmc2 { chain: 20 },
+            Kmc2 { chain: 100 },
+            Kmc2 { chain: 200 },
+            KMeansPp,
+            LsKMeansPp { steps: 5 },
+            LsKMeansPp { steps: 10 },
+            BanditPam { swaps: 0 },
+            BanditPam { swaps: 2 },
+            BanditPam { swaps: 5 },
+        ];
+        for sampler in [SamplerKind::Lwcs, SamplerKind::Unif, SamplerKind::Debias, SamplerKind::Nniw] {
+            v.push(OneBatch { sampler, strategy: SwapStrategy::Eager });
+        }
+        v
+    }
+
+    /// The 5-method subset of Figure 1 (KM, FP, FC, BP, OBP).
+    pub fn fig1_grid() -> Vec<MethodSpec> {
+        vec![
+            MethodSpec::KMeansPp,
+            MethodSpec::FasterPam,
+            MethodSpec::FasterClara { reps: 5 },
+            MethodSpec::BanditPam { swaps: 2 },
+            MethodSpec::OneBatch { sampler: SamplerKind::Nniw, strategy: SwapStrategy::Eager },
+        ]
+    }
+
+    /// Run the method serially (convenience wrapper over [`solve`]).
+    pub fn run(&self, x: &Matrix, k: usize, metric: Metric, seed: u64) -> Result<RunOutput> {
+        self.run_threaded(x, k, metric, seed, 1)
+    }
+
+    /// Run on a native backend with a `threads`-wide execution pool
+    /// (`1` = serial, `0` = auto).  Matrix-level methods (OneBatch,
+    /// FasterPAM, FasterCLARA) parallelise their pairwise/tile ops and
+    /// OneBatch additionally its eager scan; selections are identical
+    /// to the serial run for a fixed seed.
+    pub fn run_threaded(
+        &self,
+        x: &Matrix,
+        k: usize,
+        metric: Metric,
+        seed: u64,
+        threads: usize,
+    ) -> Result<RunOutput> {
+        let backend = NativeBackend::with_pool(metric, Pool::new(threads));
+        self.run_with_backend(x, k, seed, &backend, threads)
+    }
+
+    /// Run against an explicit backend (XLA-vs-native ablations).
+    /// `threads` sizes the OneBatch eager-scan pool (backend tile ops
+    /// use the backend's own pool).
+    pub fn run_with_backend(
+        &self,
+        x: &Matrix,
+        k: usize,
+        seed: u64,
+        backend: &dyn ComputeBackend,
+        threads: usize,
+    ) -> Result<RunOutput> {
+        let spec = SolveSpec { threads, ..SolveSpec::new(self.clone(), k, seed) };
+        Ok(solve(x, &spec, backend)?.into())
+    }
+}
+
+/// What the harness records per run before objective evaluation.
+#[derive(Clone, Debug)]
+pub struct RunOutput {
+    /// Selected medoid rows.
+    pub medoids: Vec<usize>,
+    /// Timed selection seconds.
+    pub seconds: f64,
+    /// Dissimilarity computations.
+    pub dissim_count: u64,
+    /// Accepted swaps.
+    pub swap_count: u64,
+}
+
+impl From<KMedoidsResult> for RunOutput {
+    fn from(r: KMedoidsResult) -> Self {
+        RunOutput {
+            medoids: r.medoids,
+            seconds: r.stats.seconds,
+            dissim_count: r.stats.dissim_count,
+            swap_count: r.stats.swap_count,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::rng::Rng;
+
+    #[test]
+    fn labels_match_paper_rows() {
+        let labels: Vec<String> = MethodSpec::table3_grid().iter().map(|m| m.label()).collect();
+        for expect in [
+            "Random",
+            "FasterPAM",
+            "Alternate",
+            "FasterCLARA-5",
+            "FasterCLARA-50",
+            "kmc2-20",
+            "kmc2-100",
+            "kmc2-200",
+            "k-means++",
+            "LS-k-means++-5",
+            "LS-k-means++-10",
+            "BanditPAM++-0",
+            "BanditPAM++-2",
+            "BanditPAM++-5",
+            "OneBatch-lwcs",
+            "OneBatch-unif",
+            "OneBatch-debias",
+            "OneBatch-nniw",
+        ] {
+            assert!(labels.iter().any(|l| l == expect), "missing {expect}");
+        }
+        assert_eq!(labels.len(), 18);
+    }
+
+    #[test]
+    fn parse_round_trips_every_label() {
+        let mut grid = MethodSpec::table3_grid();
+        grid.extend(MethodSpec::fig1_grid());
+        grid.push(MethodSpec::OneBatch {
+            sampler: SamplerKind::Prog,
+            strategy: SwapStrategy::Steepest,
+        });
+        for m in grid {
+            let label = m.label();
+            assert_eq!(MethodSpec::parse(&label), Some(m), "label {label} does not round-trip");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_aliases_and_case() {
+        assert_eq!(MethodSpec::parse("kmeanspp"), Some(MethodSpec::KMeansPp));
+        assert_eq!(MethodSpec::parse("KMEANS++"), Some(MethodSpec::KMeansPp));
+        assert_eq!(MethodSpec::parse("banditpam-3"), Some(MethodSpec::BanditPam { swaps: 3 }));
+        assert_eq!(MethodSpec::parse("lskmeanspp-7"), Some(MethodSpec::LsKMeansPp { steps: 7 }));
+        assert_eq!(MethodSpec::parse("onebatch"), Some(MethodSpec::default()));
+        assert_eq!(MethodSpec::parse(" fasterpam "), Some(MethodSpec::FasterPam));
+        assert_eq!(
+            MethodSpec::parse("OneBatch-unif-steepest"),
+            Some(MethodSpec::OneBatch {
+                sampler: SamplerKind::Unif,
+                strategy: SwapStrategy::Steepest
+            })
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in
+            ["nope", "", "FasterCLARA-", "FasterCLARA-x", "kmc2-", "kmc2-0", "OneBatch-bogus", "k-means"]
+        {
+            assert_eq!(MethodSpec::parse(bad), None, "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn solver_labels_agree_with_spec_labels() {
+        for m in MethodSpec::table3_grid() {
+            assert_eq!(m.label(), m.solver().label());
+        }
+    }
+
+    #[test]
+    fn large_scale_feasibility_matches_paper_na() {
+        assert!(!MethodSpec::FasterPam.feasible_large_scale());
+        assert!(!MethodSpec::Alternate.feasible_large_scale());
+        assert!(!MethodSpec::BanditPam { swaps: 2 }.feasible_large_scale());
+        assert!(MethodSpec::FasterClara { reps: 5 }.feasible_large_scale());
+        assert!(MethodSpec::KMeansPp.feasible_large_scale());
+    }
+
+    #[test]
+    fn every_method_runs_on_tiny_data() {
+        let mut rng = Rng::new(1);
+        let x = synth::gen_gaussian_mixture(&mut rng, 130, 4, 3, 0.15, 1.0);
+        for m in MethodSpec::table3_grid() {
+            let out = m.run(&x, 3, Metric::L1, 7).unwrap();
+            assert_eq!(out.medoids.len(), 3, "{}", m.label());
+        }
+    }
+
+    #[test]
+    fn threaded_run_selects_identical_medoids() {
+        let mut rng = Rng::new(2);
+        let x = synth::gen_gaussian_mixture(&mut rng, 160, 4, 3, 0.15, 1.0);
+        for m in [
+            MethodSpec::FasterPam,
+            MethodSpec::OneBatch { sampler: SamplerKind::Nniw, strategy: SwapStrategy::Eager },
+        ] {
+            let serial = m.run(&x, 3, Metric::L1, 11).unwrap();
+            let par = m.run_threaded(&x, 3, Metric::L1, 11, 4).unwrap();
+            assert_eq!(serial.medoids, par.medoids, "{}", m.label());
+            assert_eq!(serial.dissim_count, par.dissim_count, "{}", m.label());
+        }
+    }
+
+    #[test]
+    fn onebatch_knobs_flow_through_spec() {
+        let mut rng = Rng::new(3);
+        let x = synth::gen_gaussian_mixture(&mut rng, 150, 4, 3, 0.15, 1.0);
+        let backend = NativeBackend::new(Metric::L1);
+        let spec = SolveSpec {
+            m: Some(30),
+            ..SolveSpec::new(
+                MethodSpec::OneBatch { sampler: SamplerKind::Unif, strategy: SwapStrategy::Eager },
+                3,
+                5,
+            )
+        };
+        let r = solve(&x, &spec, &backend).unwrap();
+        // a unif run computes exactly n*m dissimilarities, so spec.m
+        // demonstrably reached the coordinator
+        assert_eq!(r.stats.dissim_count, 150 * 30);
+    }
+}

@@ -131,6 +131,7 @@ fn server_concurrent_requests() {
         addr: "127.0.0.1:0".into(),
         workers: 2,
         queue_cap: 32,
+        ..Default::default()
     })
     .unwrap();
     let addr = h.addr;

@@ -1,0 +1,69 @@
+//! Cross-method property tests for the unified `solver` API: every
+//! method of the paper's Table 3 grid must run through the same
+//! `solve()` entry point and produce valid, deterministic results.
+
+use obpam::backend::NativeBackend;
+use obpam::data::synth;
+use obpam::dissim::{DissimCounter, Metric};
+use obpam::eval;
+use obpam::rng::Rng;
+use obpam::solver::{self, MethodSpec, SolveSpec};
+
+/// Valid medoids, finite objective, nonzero counted dissimilarities
+/// (except Random, which computes none by construction), and exact
+/// seed-determinism — for all 18 Table 3 rows.
+#[test]
+fn every_table3_method_solves_validly_and_deterministically() {
+    let mut rng = Rng::new(3);
+    let x = synth::gen_gaussian_mixture(&mut rng, 150, 4, 3, 0.15, 1.0);
+    let eval_d = DissimCounter::new(Metric::L1);
+    for method in MethodSpec::table3_grid() {
+        let label = method.label();
+        let spec = SolveSpec::new(method, 3, 9);
+        let run = || {
+            let backend = NativeBackend::new(Metric::L1);
+            solver::solve(&x, &spec, &backend).unwrap()
+        };
+        let a = run();
+        let b = run();
+        // solve() validated uniqueness/range internally; spot-check anyway
+        assert_eq!(a.medoids.len(), 3, "{label}");
+        assert!(a.medoids.iter().all(|&m| m < x.rows), "{label}");
+        let obj = eval::objective(&x, &a.medoids, &eval_d);
+        assert!(obj.is_finite() && obj >= 0.0, "{label}: objective {obj}");
+        if label != "Random" {
+            assert!(a.stats.dissim_count > 0, "{label}: no counted dissimilarities");
+        }
+        assert_eq!(a.medoids, b.medoids, "{label}: not seed-deterministic");
+        assert_eq!(a.stats.dissim_count, b.stats.dissim_count, "{label}: dissim count varies");
+    }
+}
+
+/// The steepest swap engine is reachable through the string API too.
+#[test]
+fn steepest_variant_runs_through_parsed_label() {
+    let mut rng = Rng::new(4);
+    let x = synth::gen_gaussian_mixture(&mut rng, 120, 4, 3, 0.15, 1.0);
+    let method = MethodSpec::parse("OneBatch-nniw-steepest").unwrap();
+    let backend = NativeBackend::new(Metric::L1);
+    let r = solver::solve(&x, &SolveSpec::new(method, 3, 2), &backend).unwrap();
+    assert_eq!(r.medoids.len(), 3);
+    assert!(r.est_objective.is_finite());
+}
+
+/// A different seed must be able to change the selection (the spec's
+/// seed actually reaches every algorithm): check it on a seeding-driven
+/// method where the first medoid is drawn directly from the RNG.
+#[test]
+fn seed_reaches_the_algorithms() {
+    let mut rng = Rng::new(5);
+    let x = synth::gen_gaussian_mixture(&mut rng, 200, 4, 4, 0.3, 1.0);
+    let backend = NativeBackend::new(Metric::L1);
+    let run = |seed: u64| {
+        solver::solve(&x, &SolveSpec::new(MethodSpec::Random, 4, seed), &backend)
+            .unwrap()
+            .medoids
+    };
+    let distinct: std::collections::HashSet<Vec<usize>> = (0..8).map(run).collect();
+    assert!(distinct.len() > 1, "8 seeds produced identical random selections");
+}
