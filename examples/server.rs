@@ -1,9 +1,10 @@
-//! Clustering service demo (protocol v2): start the TCP job server,
+//! Clustering service demo (protocol v3): start the TCP job server,
 //! fire a burst of *mixed-method* clustering requests at it (any paper
 //! row label is addressable with `method=`), then repeat the burst to
 //! show the sharded dataset cache at work — the warm round reports
-//! `cache=hit` on every job and the final `stats` line shows zero new
-//! regenerations.
+//! `cache=hit` on every job.  A final round clusters a CSV written to
+//! disk through the same cache (`dataset=file:... metric=l2`), and the
+//! closing `stats` line shows the per-method serving aggregates.
 //!
 //! Run: `cargo run --release --example server`
 
@@ -70,11 +71,38 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // cache_misses equals the number of distinct (dataset, scale, seed)
-    // keys; the warm round regenerated nothing.
+    // --- loaded data over the same wire: dataset=file:... ------------
+    let csv_path = std::env::temp_dir().join("obpam_server_demo.csv");
+    let mut csv = String::from("x,y,z\n");
+    for i in 0..300 {
+        let c = (i % 3) as f64 * 20.0;
+        csv.push_str(&format!(
+            "{},{},{}\n",
+            c + (i % 7) as f64 * 0.3,
+            c - (i % 5) as f64 * 0.2,
+            c + (i % 4) as f64 * 0.1
+        ));
+    }
+    std::fs::write(&csv_path, csv)?;
+    let file_job =
+        format!("cluster dataset=file:{} metric=l2 k=3 seed=1", csv_path.display());
+    for round in ["cold", "warm"] {
+        let reply = request(handle.addr, &file_job)?;
+        let cache = reply
+            .split_whitespace()
+            .find(|t| t.starts_with("cache="))
+            .unwrap_or("cache=?")
+            .to_string();
+        println!("file round {round:<4}: {cache:<10} <- {file_job}");
+    }
+
+    // cache_misses equals the number of distinct (source, scale, seed)
+    // keys; the warm rounds reloaded nothing, and the per-method
+    // aggregates (count / latency / dissim) close out the demo.
     println!("{}", request(handle.addr, "stats")?);
 
     handle.shutdown();
+    std::fs::remove_file(&csv_path).ok();
     println!("server stopped");
     Ok(())
 }

@@ -1,7 +1,9 @@
 //! Tiny CSV loader (numeric-only; no csv crate offline).
 //!
-//! Accepts comma/semicolon/whitespace separation, skips a header line if
-//! the first field is non-numeric, ignores blank lines and `#` comments.
+//! Accepts comma/semicolon/whitespace separation, ignores blank lines
+//! and `#` comments, and allows exactly one non-numeric header: the
+//! *first* content line.  Any later non-numeric line is an error with
+//! its line number — corrupt rows must surface, not vanish.
 
 use super::Dataset;
 use crate::linalg::Matrix;
@@ -22,11 +24,16 @@ pub fn load_csv(path: &Path) -> Result<Dataset> {
 /// Parse CSV text (exposed for tests).
 pub fn parse_csv(text: &str, name: &str) -> Result<Dataset> {
     let mut rows: Vec<Vec<f32>> = Vec::new();
+    // non-blank, non-comment lines seen so far: only the very first one
+    // may be a non-numeric header — later garbage is corruption, not a
+    // header, and must error with its line number
+    let mut content_lines = 0usize;
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
+        content_lines += 1;
         let fields: Vec<&str> = line
             .split(|c: char| c == ',' || c == ';' || c.is_whitespace())
             .filter(|f| !f.is_empty())
@@ -47,8 +54,12 @@ pub fn parse_csv(text: &str, name: &str) -> Result<Dataset> {
                 }
                 rows.push(v);
             }
-            Err(_) if rows.is_empty() => continue, // header line
-            Err(e) => bail!("line {}: {}", lineno + 1, e),
+            Err(_) if content_lines == 1 => continue, // the one allowed header
+            Err(e) => bail!(
+                "line {}: {} (only the first line may be a non-numeric header)",
+                lineno + 1,
+                e
+            ),
         }
     }
     if rows.is_empty() {
@@ -85,5 +96,27 @@ mod tests {
     #[test]
     fn rejects_empty() {
         assert!(parse_csv("only,text\n", "t").is_err());
+    }
+
+    #[test]
+    fn only_the_first_line_may_be_a_header() {
+        // regression: a second non-numeric line before any numeric row
+        // used to be silently swallowed as "another header"
+        let err = parse_csv("a,b\nx,y\n1,2\n", "t").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn garbage_after_numeric_rows_errors_with_line_number() {
+        let err = parse_csv("1,2\n3,4\noops,zap\n", "t").unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn header_detection_skips_blanks_and_comments() {
+        // comments / blank lines do not consume the one header slot
+        let d = parse_csv("# generated\n\na,b\n1,2\n3,4\n", "t").unwrap();
+        assert_eq!((d.n(), d.p()), (2, 2));
+        assert_eq!(d.x.row(0), &[1.0, 2.0]);
     }
 }

@@ -1,9 +1,57 @@
 //! Dataset abstraction, loaders and synthetic generators.
+//!
+//! Data enters the system through [`DataSource`] — a parsed URI
+//! (`synth:abalone`, `file:/data/points.csv`, bare names aliasing
+//! `synth:`) with one `load()` entry point — so every surface (CLI,
+//! bench grid, server) addresses generated and loaded datasets the same
+//! way.  [`FeatureScaling`] names the optional preprocessing step
+//! applied after loading.
 
 pub mod csv;
+pub mod source;
 pub mod synth;
 
+pub use source::DataSource;
+
 use crate::linalg::Matrix;
+
+/// Feature preprocessing applied after a [`DataSource`] load (the wire
+/// key `scale_features=`, the CLI flag `--scale-features`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum FeatureScaling {
+    /// Use features as loaded (protocol-v2 behaviour).
+    #[default]
+    None,
+    /// Min-max scale every feature to `[0, 1]` ([`Dataset::minmax_scale`],
+    /// the usual preprocessing for mixed-scale UCI tables).
+    MinMax,
+}
+
+impl FeatureScaling {
+    /// Parse the wire / CLI spelling (`minmax` | `none`).
+    pub fn parse(s: &str) -> Option<FeatureScaling> {
+        match s {
+            "none" => Some(FeatureScaling::None),
+            "minmax" => Some(FeatureScaling::MinMax),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`FeatureScaling::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            FeatureScaling::None => "none",
+            FeatureScaling::MinMax => "minmax",
+        }
+    }
+
+    /// Apply the scaling in place.
+    pub fn apply(self, d: &mut Dataset) {
+        if self == FeatureScaling::MinMax {
+            d.minmax_scale();
+        }
+    }
+}
 
 /// An in-memory dataset: `n` rows of `p` features plus provenance.
 #[derive(Clone, Debug)]
@@ -62,5 +110,23 @@ mod tests {
         assert_eq!(d.x.col(0), vec![0.0, 0.5, 1.0]);
         // constant feature collapses to 0
         assert_eq!(d.x.col(1), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn feature_scaling_round_trips_and_applies() {
+        for fs in [FeatureScaling::None, FeatureScaling::MinMax] {
+            assert_eq!(FeatureScaling::parse(fs.name()), Some(fs));
+        }
+        assert_eq!(FeatureScaling::parse("bogus"), None);
+        let mk = || Dataset {
+            name: "t".into(),
+            x: Matrix::from_vec(2, 1, vec![0.0, 4.0]),
+        };
+        let mut scaled = mk();
+        FeatureScaling::MinMax.apply(&mut scaled);
+        assert_eq!(scaled.x.col(0), vec![0.0, 1.0]);
+        let mut raw = mk();
+        FeatureScaling::None.apply(&mut raw);
+        assert_eq!(raw.x.col(0), vec![0.0, 4.0]);
     }
 }

@@ -1,0 +1,410 @@
+//! URI-addressed dataset sources: one parse/load pipeline for every
+//! surface (CLI, config, bench grid, server wire protocol).
+//!
+//! A [`DataSource`] is a parsed dataset URI:
+//!
+//! * `synth:<name>` — a seeded synthetic generator from the catalogue
+//!   (`synth:abalone`, `synth:blobs_2000_8_5`);
+//! * `file:<path>` — a numeric CSV on disk, optionally carrying a row
+//!   hint for admission control (`file:/data/gas.csv?rows=416153`);
+//! * a bare name (`abalone`, `blobs_2000_8_5`) — protocol-v2 back-compat
+//!   alias for `synth:<name>`.
+//!
+//! Every source has a canonical string form ([`DataSource::canon`], the
+//! scheme-qualified spelling, round-trips through [`DataSource::parse`])
+//! and a stable [`DataSource::fingerprint`] used as the dataset-cache
+//! key.  For `file:` sources the fingerprint mixes in the file's size
+//! and mtime, so editing the file on disk changes the key and stale
+//! cache entries self-invalidate (they age out of the LRU instead of
+//! being served).
+//!
+//! [`DataSource::load`] is the single entry point behind the CLI, the
+//! grid runner and the server — call sites no longer pick between
+//! `synth::try_generate` and `load_csv` by hand.
+
+use super::csv::load_csv;
+use super::{synth, Dataset};
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Where the bytes come from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum SourceKind {
+    /// Seeded synthetic generator addressed by catalogue / `blobs_` name.
+    Synth(String),
+    /// Numeric CSV on disk.
+    File(PathBuf),
+}
+
+/// A parsed dataset URI; see the module docs for the accepted forms.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DataSource {
+    kind: SourceKind,
+    /// `?rows=N` hint on `file:` sources (admission control for files
+    /// whose size is known without reading them).
+    rows_hint: Option<usize>,
+}
+
+impl DataSource {
+    /// Parse a dataset URI (`synth:name`, `file:path[?rows=N]`, or a
+    /// bare name aliasing `synth:`).  Any other scheme is an error —
+    /// unknown *names* are only detected at [`DataSource::load`] time.
+    pub fn parse(s: &str) -> Result<DataSource> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty dataset source");
+        }
+        if let Some(rest) = s.strip_prefix("synth:") {
+            if rest.is_empty() {
+                bail!("synth: needs a dataset name (e.g. synth:abalone)");
+            }
+            if rest.contains('?') {
+                bail!("synth: sources take no query string (got '{s}')");
+            }
+            return Ok(DataSource { kind: SourceKind::Synth(rest.to_string()), rows_hint: None });
+        }
+        if let Some(rest) = s.strip_prefix("file:") {
+            let (path, query) = match rest.split_once('?') {
+                Some((p, q)) => (p, Some(q)),
+                None => (rest, None),
+            };
+            if path.is_empty() {
+                bail!("file: needs a path (e.g. file:/data/points.csv)");
+            }
+            let mut rows_hint = None;
+            if let Some(q) = query {
+                for pair in q.split('&') {
+                    match pair.split_once('=') {
+                        Some(("rows", v)) => {
+                            let n: usize = v
+                                .parse()
+                                .with_context(|| format!("bad rows hint '{v}' in '{s}'"))?;
+                            if n == 0 {
+                                bail!("rows hint must be >= 1 in '{s}'");
+                            }
+                            rows_hint = Some(n);
+                        }
+                        _ => bail!("unknown query key in '{s}' (only rows=N is supported)"),
+                    }
+                }
+            }
+            return Ok(DataSource { kind: SourceKind::File(PathBuf::from(path)), rows_hint });
+        }
+        // bare names alias synth: (protocol-v2 back-compat); anything
+        // with an unrecognised scheme prefix is rejected, not guessed at
+        if let Some((scheme, _)) = s.split_once(':') {
+            bail!("unknown dataset scheme '{scheme}:' in '{s}' (use synth:, file:, or a bare synth name)");
+        }
+        Ok(DataSource { kind: SourceKind::Synth(s.to_string()), rows_hint: None })
+    }
+
+    /// Canonical scheme-qualified form; `parse(canon())` reproduces the
+    /// source exactly, and bare names canonicalise to `synth:<name>`.
+    pub fn canon(&self) -> String {
+        match &self.kind {
+            SourceKind::Synth(name) => format!("synth:{name}"),
+            SourceKind::File(path) => match self.rows_hint {
+                Some(n) => format!("file:{}?rows={n}", path.display()),
+                None => format!("file:{}", path.display()),
+            },
+        }
+    }
+
+    /// The canonical spelling of *what bytes this source yields*:
+    /// [`DataSource::canon`] minus admission-only decorations (the
+    /// `?rows=` hint does not change the loaded data), with `file:`
+    /// paths resolved through `fs::canonicalize` so different spellings
+    /// of one file (`./x.csv`, `/data/../data/x.csv`) collapse to one
+    /// identity.  Cache layers key on this, so aliased spellings share
+    /// one entry.  Falls back to the raw path for files that do not
+    /// exist (yet) — by the time a cache admits one, the load has to
+    /// resolve it anyway.
+    pub fn identity(&self) -> String {
+        match &self.kind {
+            SourceKind::Synth(name) => format!("synth:{name}"),
+            SourceKind::File(path) => {
+                let p = std::fs::canonicalize(path).unwrap_or_else(|_| path.clone());
+                format!("file:{}", p.display())
+            }
+        }
+    }
+
+    /// Short human name: the synth name or the file stem (used as the
+    /// loaded [`Dataset::name`] and in log lines).
+    pub fn name(&self) -> String {
+        match &self.kind {
+            SourceKind::Synth(name) => name.clone(),
+            SourceKind::File(path) => path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "csv".into()),
+        }
+    }
+
+    /// Is this a `file:` source?  (File bytes are independent of the
+    /// generation knobs, so cache layers normalise scale/seed away.)
+    pub fn is_file(&self) -> bool {
+        matches!(self.kind, SourceKind::File(_))
+    }
+
+    /// Stable cache fingerprint over the source's [`DataSource::identity`]
+    /// (admission hints excluded — they do not change the bytes).  Synth
+    /// sources hash the identity alone (generation is pure given
+    /// `(name, scale, seed)`); `file:` sources additionally mix the
+    /// file's current size and mtime, so an edit that changes either
+    /// gets a fresh fingerprint and the stale cache entry becomes
+    /// unreachable.  Caveat: a same-size rewrite landing within one
+    /// mtime tick (coarse-granularity filesystems, mtime-preserving
+    /// tools like `rsync -t` / `touch -r`) is indistinguishable from no
+    /// edit without hashing the content on every request — which would
+    /// cost a full read per cache probe, defeating the cache.  Errors if
+    /// a `file:` path cannot be stat'ed.
+    pub fn fingerprint(&self) -> Result<u64> {
+        self.fingerprint_of(&self.identity())
+    }
+
+    /// [`DataSource::fingerprint`] with the [`DataSource::identity`]
+    /// precomputed — callers that also key on the identity (the dataset
+    /// cache) avoid resolving the path twice per request.
+    pub fn fingerprint_of(&self, identity: &str) -> Result<u64> {
+        let mut h = fnv1a(identity.as_bytes());
+        if let SourceKind::File(path) = &self.kind {
+            let meta = std::fs::metadata(path)
+                .with_context(|| format!("stat {}", path.display()))?;
+            let mtime_ns = meta
+                .modified()
+                .ok()
+                .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0);
+            h = h
+                .rotate_left(17)
+                .wrapping_mul(0x100000001b3)
+                .wrapping_add(meta.len())
+                .rotate_left(17)
+                .wrapping_mul(0x100000001b3)
+                .wrapping_add(mtime_ns);
+        }
+        Ok(h)
+    }
+
+    /// Rows [`DataSource::load`] is expected to produce, without loading
+    /// anything: the catalogue / `blobs_` prediction for synth sources,
+    /// the `?rows=` hint for files.  `None` when unpredictable (unknown
+    /// synth names, hint-less files) — callers fall back to a post-load
+    /// check.
+    pub fn expected_rows(&self, scale: f64) -> Option<usize> {
+        match &self.kind {
+            SourceKind::Synth(name) => synth::expected_rows(name, scale),
+            SourceKind::File(_) => self.rows_hint,
+        }
+    }
+
+    /// Does the paper's Table 2 flag this source's dataset large-scale?
+    /// (`file:` sources are judged by row count instead — see
+    /// [`DataSource::expected_rows`].)
+    pub fn paper_large_scale(&self) -> bool {
+        match &self.kind {
+            SourceKind::Synth(name) => synth::large_scale_names().contains(&name.as_str()),
+            SourceKind::File(_) => false,
+        }
+    }
+
+    /// Load the dataset.  `scale` and `seed` shape synthetic generation
+    /// only; a `file:` source's provenance is the bytes on disk, so both
+    /// are ignored there.
+    pub fn load(&self, scale: f64, seed: u64) -> Result<Dataset> {
+        match &self.kind {
+            SourceKind::Synth(name) => synth::try_generate(name, scale, seed),
+            SourceKind::File(path) => load_csv(path),
+        }
+    }
+}
+
+impl std::fmt::Display for DataSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.canon())
+    }
+}
+
+impl std::str::FromStr for DataSource {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        DataSource::parse(s)
+    }
+}
+
+/// FNV-1a over a byte string (no std::hash — the fingerprint must be
+/// stable across runs and Rust versions, it is a cache key).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_csv(tag: &str, rows: usize) -> PathBuf {
+        let dir = std::env::temp_dir().join("obpam_source_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{tag}_{}.csv", std::process::id()));
+        let mut s = String::from("a,b\n");
+        for i in 0..rows {
+            s.push_str(&format!("{}.0,{}.5\n", i % 10, (i * 3) % 7));
+        }
+        std::fs::write(&path, s).unwrap();
+        path
+    }
+
+    #[test]
+    fn bare_names_alias_synth() {
+        let bare = DataSource::parse("abalone").unwrap();
+        let schemed = DataSource::parse("synth:abalone").unwrap();
+        assert_eq!(bare, schemed);
+        assert_eq!(bare.canon(), "synth:abalone");
+        assert_eq!(bare.name(), "abalone");
+        assert!(!bare.is_file());
+    }
+
+    #[test]
+    fn canon_round_trips() {
+        for uri in
+            ["synth:blobs_2000_8_5", "file:/data/points.csv", "file:/data/points.csv?rows=416153"]
+        {
+            let src = DataSource::parse(uri).unwrap();
+            assert_eq!(src.canon(), uri);
+            assert_eq!(DataSource::parse(&src.canon()).unwrap(), src);
+        }
+    }
+
+    #[test]
+    fn bad_uris_rejected() {
+        for bad in [
+            "",
+            "   ",
+            "synth:",
+            "file:",
+            "http://example.com/x.csv",
+            "s3:bucket/key",
+            "file:/x.csv?rows=0",
+            "file:/x.csv?rows=abc",
+            "file:/x.csv?bogus=1",
+            "synth:abalone?rows=5",
+        ] {
+            assert!(DataSource::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn expected_rows_synth_matches_generator_prediction() {
+        let src = DataSource::parse("synth:drybean").unwrap();
+        assert_eq!(src.expected_rows(0.01), synth::expected_rows("drybean", 0.01));
+        assert_eq!(DataSource::parse("nope_not_real").unwrap().expected_rows(1.0), None);
+    }
+
+    #[test]
+    fn expected_rows_file_uses_hint() {
+        let hinted = DataSource::parse("file:/x.csv?rows=123").unwrap();
+        // the hint is scale-independent: file bytes do not scale
+        assert_eq!(hinted.expected_rows(1.0), Some(123));
+        assert_eq!(hinted.expected_rows(0.1), Some(123));
+        assert_eq!(DataSource::parse("file:/x.csv").unwrap().expected_rows(1.0), None);
+    }
+
+    #[test]
+    fn paper_large_scale_flags_catalogue_only() {
+        assert!(DataSource::parse("gas").unwrap().paper_large_scale());
+        assert!(!DataSource::parse("abalone").unwrap().paper_large_scale());
+        assert!(!DataSource::parse("file:/x.csv?rows=999999").unwrap().paper_large_scale());
+    }
+
+    #[test]
+    fn load_synth_matches_direct_generation() {
+        let src = DataSource::parse("blobs_200_4_3").unwrap();
+        let via_source = src.load(1.0, 7).unwrap();
+        let direct = synth::try_generate("blobs_200_4_3", 1.0, 7).unwrap();
+        assert_eq!(via_source.x.data, direct.x.data);
+    }
+
+    #[test]
+    fn load_file_reads_csv_and_ignores_scale_seed() {
+        let path = temp_csv("load", 12);
+        let src = DataSource::parse(&format!("file:{}", path.display())).unwrap();
+        let a = src.load(1.0, 0).unwrap();
+        let b = src.load(0.25, 99).unwrap();
+        assert_eq!((a.n(), a.p()), (12, 2));
+        assert_eq!(a.x.data, b.x.data, "scale/seed must not affect file loads");
+        assert_eq!(a.name, src.name());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_is_stable_until_the_file_changes() {
+        let path = temp_csv("fp", 10);
+        let src = DataSource::parse(&format!("file:{}", path.display())).unwrap();
+        let f1 = src.fingerprint().unwrap();
+        assert_eq!(src.fingerprint().unwrap(), f1, "unchanged file -> stable fingerprint");
+        // append a row: the size changes, so the fingerprint must too
+        // (mtime granularity alone is not relied on)
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("9.0,9.5\n");
+        std::fs::write(&path, text).unwrap();
+        assert_ne!(src.fingerprint().unwrap(), f1, "edited file -> new fingerprint");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_separates_sources() {
+        let a = DataSource::parse("synth:abalone").unwrap().fingerprint().unwrap();
+        let b = DataSource::parse("synth:drybean").unwrap().fingerprint().unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn identity_collapses_path_spellings() {
+        let path = temp_csv("alias", 6);
+        let plain = DataSource::parse(&format!("file:{}", path.display())).unwrap();
+        // insert a redundant `.` component: same file, different spelling
+        let dotted = DataSource::parse(&format!(
+            "file:{}/./{}",
+            path.parent().unwrap().display(),
+            path.file_name().unwrap().to_string_lossy()
+        ))
+        .unwrap();
+        assert_ne!(plain, dotted, "the parsed sources differ textually");
+        assert_eq!(plain.identity(), dotted.identity());
+        assert_eq!(plain.fingerprint().unwrap(), dotted.fingerprint().unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn identity_and_fingerprint_ignore_the_rows_hint() {
+        // the hint is admission metadata, not provenance: hinted and
+        // hint-less spellings of one file must share identity/fingerprint
+        let path = temp_csv("hint", 8);
+        let plain = DataSource::parse(&format!("file:{}", path.display())).unwrap();
+        let hinted = DataSource::parse(&format!("file:{}?rows=8", path.display())).unwrap();
+        assert_eq!(plain.identity(), hinted.identity());
+        assert_ne!(plain.canon(), hinted.canon(), "canon still round-trips the hint");
+        assert_eq!(plain.fingerprint().unwrap(), hinted.fingerprint().unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_errors_on_missing_file() {
+        let src = DataSource::parse("file:/definitely/not/here.csv").unwrap();
+        assert!(src.fingerprint().is_err());
+    }
+
+    #[test]
+    fn display_and_fromstr_round_trip() {
+        let src: DataSource = "file:/d/x.csv?rows=5".parse().unwrap();
+        assert_eq!(src.to_string(), "file:/d/x.csv?rows=5");
+    }
+}

@@ -10,7 +10,8 @@
 //!   FasterPAM swap engine over one `n x m` distance matrix, every
 //!   baseline from the paper's evaluation, the experiment harness that
 //!   regenerates each table/figure, and a clustering job server
-//!   (protocol v2: any method by name over a sharded dataset cache).
+//!   (protocol v3: any method by name, any dataset by URI, any metric,
+//!   over a sharded dataset cache with per-method serving metrics).
 //!
 //! Both dominant costs — the `O(nmp)` pairwise pass and the
 //! `O(n(m+k))` eager swap scan — are row-parallel over the
@@ -22,23 +23,30 @@
 //!
 //! Quick start (see `examples/quickstart.rs`): every algorithm —
 //! OneBatchPAM and all eight paper baselines — runs through the unified
-//! [`solver`] API.  [`solver::MethodSpec`] round-trips through the
-//! paper's row labels, so a method is one string in a config file, a
-//! `--method` CLI flag, or a `method=` key on the server wire protocol:
+//! [`solver`] API, and every dataset — synthetic or loaded from disk —
+//! through the [`data::DataSource`] URI pipeline.
+//! [`solver::MethodSpec`] round-trips through the paper's row labels
+//! and a dataset is one URI string, so a full run is addressable from a
+//! config file, CLI flags, or one `cluster` line on the server wire
+//! protocol:
 //!
 //! ```no_run
 //! use obpam::backend::NativeBackend;
-//! use obpam::data::synth;
-//! use obpam::dissim::Metric;
+//! use obpam::data::DataSource;
 //! use obpam::runtime::Pool;
 //! use obpam::solver::{self, MethodSpec, SolveSpec};
 //!
-//! let data = synth::try_generate("blobs_2000_8_5", 1.0, 42).unwrap();
+//! // "synth:blobs_2000_8_5" generates; "file:/data/points.csv" loads a
+//! // numeric CSV; bare names alias synth: for back-compat.
+//! let source = DataSource::parse("synth:blobs_2000_8_5").unwrap();
+//! let data = source.load(1.0, 42).unwrap();
 //! // any paper row label: "FasterPAM", "BanditPAM++-2", "OneBatch-nniw", ...
 //! let method = MethodSpec::parse("OneBatch-nniw").unwrap();
 //! // threads: 0 = all cores, 1 = serial; medoids identical either way.
+//! // spec.metric (default L1) names the dissimilarity; build the
+//! // backend from it so the two can never disagree.
 //! let spec = SolveSpec { threads: 0, ..SolveSpec::new(method, 5, 42) };
-//! let backend = NativeBackend::with_pool(Metric::L1, Pool::auto());
+//! let backend = NativeBackend::with_pool(spec.metric, Pool::auto());
 //! let result = solver::solve(&data.x, &spec, &backend).unwrap();
 //! println!("medoids: {:?}", result.medoids);
 //! ```

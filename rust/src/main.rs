@@ -5,13 +5,22 @@
 //! ```text
 //! obpam cluster  --dataset mnist --k 10 [--method FasterPAM] [--metric l1]
 //!                [--scale 0.1] [--seed 0] [--backend native|xla|xla-dense]
-//!                [--sampler nniw] [--m N] [--eps E] [--max-passes P]
-//!                [--strategy eager|steepest] [--threads T] [--config file.toml]
+//!                [--scale-features minmax|none] [--sampler nniw] [--m N]
+//!                [--eps E] [--max-passes P] [--strategy eager|steepest]
+//!                [--threads T] [--config file.toml]
 //! obpam bench    --table 3|5|7 | --fig 1|pareto  (thin wrapper; prefer `cargo bench`)
 //! obpam serve    [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 16] [--cache-cap 32]
-//! obpam gen      --list | --dataset NAME [--scale S] [--out file.csv]
+//! obpam gen      --list | --dataset SOURCE [--scale S] [--out file.csv]
 //! obpam artifacts-check   (requires the `xla` build feature)
 //! ```
+//!
+//! `--dataset` (config key `run.dataset`) is a [`DataSource`] URI:
+//! `synth:<name>` generates a catalogue dataset, `file:<path>` loads a
+//! numeric CSV, and a bare name aliases `synth:` — so
+//! `obpam cluster --dataset file:/data/points.csv --metric l2` clusters
+//! loaded data through exactly the same path as the synthetic
+//! reproductions.  `--scale-features minmax` min-max scales features
+//! after loading (config key `run.scale_features`).
 //!
 //! `--method` (config key `run.method`) accepts any paper row label via
 //! [`MethodSpec::parse`] — `FasterPAM`, `FasterCLARA-50`, `BanditPAM++-2`,
@@ -31,7 +40,7 @@ use obpam::backend::NativeBackend;
 use obpam::backend::XlaBackend;
 use obpam::config::Config;
 use obpam::coordinator::{SamplerKind, SwapStrategy};
-use obpam::data::synth;
+use obpam::data::{synth, DataSource, FeatureScaling};
 use obpam::dissim::{DissimCounter, Metric};
 use obpam::eval;
 use obpam::runtime::Pool;
@@ -101,10 +110,16 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
     };
 
     let dataset = get("run.dataset", "dataset", "blobs_2000_8_5");
+    let source = DataSource::parse(&dataset)?;
     let k: usize = get("run.k", "k", "10").parse().context("--k")?;
     let scale: f64 = get("run.scale", "scale", "1.0").parse().context("--scale")?;
+    if source.is_file() && scale != 1.0 {
+        bail!("--scale does not apply to file: sources (got --scale {scale})");
+    }
     let seed: u64 = get("run.seed", "seed", "0").parse().context("--seed")?;
     let metric = Metric::parse(&get("run.metric", "metric", "l1")).context("bad --metric")?;
+    let scaling = FeatureScaling::parse(&get("run.scale_features", "scale-features", "none"))
+        .context("bad --scale-features (minmax|none)")?;
     let threads: usize = get("run.threads", "threads", "1").parse().context("--threads")?;
     let backend_name = get("run.backend", "backend", "native");
 
@@ -175,17 +190,19 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
         }
     };
 
-    eprintln!("[obpam] generating dataset {dataset} (scale {scale})");
-    let data = synth::try_generate(&dataset, scale, seed)?;
+    eprintln!("[obpam] loading {} (scale {scale})", source.canon());
+    let mut data = source.load(scale, seed)?;
+    scaling.apply(&mut data);
     eprintln!(
-        "[obpam] n={} p={} k={k} method={} backend={backend_name} threads={}",
+        "[obpam] n={} p={} k={k} method={} metric={} backend={backend_name} threads={}",
         data.n(),
         data.p(),
         method.label(),
+        metric.name(),
         Pool::new(threads).threads()
     );
 
-    let spec = SolveSpec { method, k, seed, threads, m, eps, max_passes };
+    let spec = SolveSpec { method, k, seed, metric, threads, m, eps, max_passes };
     let result = match backend_name.as_str() {
         "native" => {
             let backend = NativeBackend::with_pool(metric, Pool::new(threads));
@@ -251,7 +268,14 @@ fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
     let dataset = flags.get("dataset").context("--dataset or --list required")?;
     let scale: f64 = flags.get("scale").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
-    let data = synth::try_generate(dataset, scale, seed)?;
+    // any DataSource URI works, so gen doubles as a file:->csv normaliser
+    let src = DataSource::parse(dataset)?;
+    if src.is_file() && scale != 1.0 {
+        // same rule as cluster: file bytes do not scale, and a silently
+        // unscaled "subsample" would be a lie
+        bail!("--scale does not apply to file: sources (got --scale {scale})");
+    }
+    let data = src.load(scale, seed)?;
     match flags.get("out") {
         Some(path) => {
             let mut out = String::new();

@@ -1,17 +1,34 @@
-//! Sharded, LRU-bounded dataset cache (server protocol v2).
+//! Sharded, LRU-bounded dataset cache (server protocol v3).
 //!
-//! Keyed by `(dataset, scale, seed)` — exactly the inputs that determine
-//! a generated matrix — and holding `Arc<Matrix>` values so concurrent
-//! jobs share one copy with zero cloning.  [`SHARDS`] independent locks
-//! keep requests for different datasets from serializing on one mutex.
+//! Keyed by the full provenance of a prepared matrix: the
+//! [`DataSource`] identity (its canonical URI minus admission-only
+//! decorations like `?rows=`) *and* its fingerprint, the generation
+//! knobs (`scale`, `seed` — synthetic sources only) and the
+//! [`FeatureScaling`] applied after loading.  Values are `Arc<Matrix>`
+//! so concurrent jobs share one copy with zero cloning, spread over
+//! [`SHARDS`] independent locks.
 //!
-//! A shard generates a missing dataset *while holding its lock*: a burst
-//! of identical requests costs exactly one generation (no thundering
-//! herd), at the price of briefly blocking other keys that hash to the
-//! same shard.  Generation failures (unknown dataset names) are returned
-//! to the caller and never cached.
+//! `file:` sources are admitted like synthetic ones, with two twists:
+//!
+//! * the fingerprint mixes the file's size + mtime
+//!   ([`DataSource::fingerprint`]), so any edit that changes either
+//!   makes the stale entry unreachable (it ages out of the LRU; see the
+//!   fingerprint docs for the same-size-same-mtime-tick caveat);
+//! * `scale`/`seed` do not shape file bytes, so they are normalised out
+//!   of the key — a seed sweep over one CSV shares a single resident
+//!   copy.
+//!
+//! A shard loads a missing dataset *while holding its lock*: a burst of
+//! identical requests costs exactly one load (no thundering herd), at
+//! the price of blocking other keys that hash to the same shard for the
+//! duration of the load.  That window was sized for fast in-memory
+//! synthetic generation; a cold multi-GB `file:` load stretches it, so
+//! for big-file workloads either raise [`SHARDS`] or pre-warm the entry
+//! (a per-key in-flight marker that loads outside the lock is the
+//! recorded follow-up).  Load failures (unknown synth names, unreadable
+//! files) are returned to the caller and never cached.
 
-use crate::data::synth;
+use crate::data::{DataSource, FeatureScaling};
 use crate::linalg::Matrix;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,13 +37,21 @@ use std::sync::{Arc, Mutex};
 /// Number of independently locked shards.
 pub const SHARDS: usize = 8;
 
-/// Cache key: the full provenance of a generated dataset.
+/// Cache key: the full provenance of a prepared matrix.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 struct DataKey {
-    dataset: String,
+    /// Source identity ([`DataSource::identity`] — the `canon()` minus
+    /// admission-only decorations like `?rows=`, which do not change
+    /// the loaded bytes).
+    source: String,
+    /// Source fingerprint — re-stat'ed per request for `file:` sources,
+    /// so on-disk edits change the key ([`DataSource::fingerprint`]).
+    fingerprint: u64,
     /// `f64::to_bits` of the scale (`f64` itself is not `Eq`/`Hash`).
     scale_bits: u64,
     seed: u64,
+    /// Post-load feature preprocessing.
+    scaling: FeatureScaling,
 }
 
 /// One shard: entries kept in most-recently-used-first order (caches are
@@ -48,7 +73,7 @@ pub struct DatasetCache {
 pub struct CacheStats {
     /// Requests served from the cache.
     pub hits: u64,
-    /// Requests that had to generate (== total generations ever run).
+    /// Requests that had to load (== total loads ever run).
     pub misses: u64,
     /// Datasets currently resident.
     pub entries: usize,
@@ -67,15 +92,32 @@ impl DatasetCache {
         }
     }
 
-    /// Fetch the dataset for `(dataset, scale, seed)`, generating it on a
-    /// miss.  Returns the shared matrix and whether it was a cache hit.
-    pub fn get_or_generate(
+    /// Fetch the prepared matrix for `(src, scale, seed, scaling)`,
+    /// loading it on a miss.  Returns the shared matrix and whether it
+    /// was a cache hit.
+    pub fn get_or_load(
         &self,
-        dataset: &str,
+        src: &DataSource,
         scale: f64,
         seed: u64,
+        scaling: FeatureScaling,
     ) -> Result<(Arc<Matrix>, bool)> {
-        let key = DataKey { dataset: dataset.to_string(), scale_bits: scale.to_bits(), seed };
+        // the canonicalize + stat happen here, outside any shard lock; an
+        // edited file gets a fresh fingerprint, so a stale entry is
+        // unreachable (identity is computed once and shared with the
+        // fingerprint — one path resolution per request, even on hits)
+        let identity = src.identity();
+        let fingerprint = src.fingerprint_of(&identity)?;
+        // file bytes are independent of the generation knobs: normalise
+        // them out so a scale/seed sweep over one CSV is one entry
+        let (kscale, kseed) = if src.is_file() { (1.0, 0) } else { (scale, seed) };
+        let key = DataKey {
+            source: identity,
+            fingerprint,
+            scale_bits: kscale.to_bits(),
+            seed: kseed,
+            scaling,
+        };
         let shard = &self.shards[shard_of(&key)];
         let mut guard = shard.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(pos) = guard.entries.iter().position(|(k, _)| *k == key) {
@@ -85,7 +127,18 @@ impl DatasetCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok((x, true));
         }
-        let x = Arc::new(synth::try_generate(dataset, scale, seed)?.x);
+        let mut d = src.load(scale, seed)?;
+        scaling.apply(&mut d);
+        let x = Arc::new(d.x);
+        // a fingerprint change (edited file) makes old entries for this
+        // same provenance unreachable — evict them now instead of letting
+        // dead matrices squat in the LRU and inflate `entries`
+        guard.entries.retain(|(k, _)| {
+            k.source != key.source
+                || k.scale_bits != key.scale_bits
+                || k.seed != key.seed
+                || k.scaling != key.scaling
+        });
         guard.entries.insert(0, (key, x.clone()));
         guard.entries.truncate(self.per_shard_cap);
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -110,36 +163,162 @@ impl DatasetCache {
 fn shard_of(key: &DataKey) -> usize {
     use std::hash::{Hash, Hasher};
     let mut h = std::collections::hash_map::DefaultHasher::new();
-    key.hash(&mut h);
+    // shard on provenance, NOT the fingerprint: every fingerprint of one
+    // source must land in the same shard so the miss-path eviction of a
+    // stale file entry is guaranteed to find it
+    key.source.hash(&mut h);
+    key.scale_bits.hash(&mut h);
+    key.seed.hash(&mut h);
+    key.scaling.hash(&mut h);
     (h.finish() as usize) % SHARDS
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
+
+    fn src(uri: &str) -> DataSource {
+        DataSource::parse(uri).unwrap()
+    }
+
+    fn get(cache: &DatasetCache, uri: &str, scale: f64, seed: u64) -> Result<(Arc<Matrix>, bool)> {
+        cache.get_or_load(&src(uri), scale, seed, FeatureScaling::None)
+    }
+
+    fn temp_csv(tag: &str, rows: usize) -> PathBuf {
+        let dir = std::env::temp_dir().join("obpam_cache_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{tag}_{}.csv", std::process::id()));
+        let mut s = String::from("a,b\n");
+        for i in 0..rows {
+            s.push_str(&format!("{}.0,{}.5\n", i % 9, (i * 5) % 11));
+        }
+        std::fs::write(&path, s).unwrap();
+        path
+    }
 
     #[test]
     fn miss_then_hit_shares_one_matrix() {
         let cache = DatasetCache::new(8);
-        let (a, hit_a) = cache.get_or_generate("blobs_200_4_3", 1.0, 7).unwrap();
-        let (b, hit_b) = cache.get_or_generate("blobs_200_4_3", 1.0, 7).unwrap();
+        let (a, hit_a) = get(&cache, "blobs_200_4_3", 1.0, 7).unwrap();
+        let (b, hit_b) = get(&cache, "blobs_200_4_3", 1.0, 7).unwrap();
         assert!(!hit_a && hit_b);
         assert!(Arc::ptr_eq(&a, &b), "hit must return the cached allocation");
         assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, entries: 1 });
     }
 
     #[test]
-    fn key_is_dataset_scale_seed() {
+    fn bare_name_and_synth_scheme_share_one_entry() {
+        // back-compat aliasing must not double-cache the same dataset
+        let cache = DatasetCache::new(8);
+        let (a, _) = get(&cache, "blobs_200_4_3", 1.0, 7).unwrap();
+        let (b, hit) = get(&cache, "synth:blobs_200_4_3", 1.0, 7).unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn key_is_source_scale_seed() {
         let cache = DatasetCache::new(16);
-        let base = cache.get_or_generate("blobs_200_4_3", 1.0, 7).unwrap().0;
+        let base = get(&cache, "blobs_200_4_3", 1.0, 7).unwrap().0;
         for (name, scale, seed) in
             [("blobs_201_4_3", 1.0, 7), ("blobs_200_4_3", 0.5, 7), ("blobs_200_4_3", 1.0, 8)]
         {
-            let (x, hit) = cache.get_or_generate(name, scale, seed).unwrap();
+            let (x, hit) = get(&cache, name, scale, seed).unwrap();
             assert!(!hit, "{name}/{scale}/{seed} must be a distinct key");
             assert!(!Arc::ptr_eq(&base, &x));
         }
         assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn feature_scaling_is_part_of_the_key() {
+        let cache = DatasetCache::new(8);
+        let source = src("blobs_200_4_3");
+        let (raw, _) = cache.get_or_load(&source, 1.0, 7, FeatureScaling::None).unwrap();
+        let (scaled, hit) = cache.get_or_load(&source, 1.0, 7, FeatureScaling::MinMax).unwrap();
+        assert!(!hit, "minmax must be a distinct entry, not the raw matrix");
+        assert!(!Arc::ptr_eq(&raw, &scaled));
+        assert!(scaled.data.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn file_sources_are_admitted_and_hit() {
+        let path = temp_csv("admit", 20);
+        let uri = format!("file:{}", path.display());
+        let cache = DatasetCache::new(8);
+        let (a, hit_a) = get(&cache, &uri, 1.0, 0).unwrap();
+        let (b, hit_b) = get(&cache, &uri, 1.0, 0).unwrap();
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.rows, 20);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_key_normalises_scale_and_seed() {
+        // different scale/seed do not change file bytes -> one entry
+        let path = temp_csv("norm", 16);
+        let uri = format!("file:{}", path.display());
+        let cache = DatasetCache::new(8);
+        get(&cache, &uri, 1.0, 0).unwrap();
+        let (_, hit) = get(&cache, &uri, 0.25, 99).unwrap();
+        assert!(hit, "file keys must ignore scale/seed");
+        assert_eq!(cache.stats().entries, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_key_normalises_the_rows_hint() {
+        // the ?rows= admission hint does not change the loaded bytes, so
+        // hinted and hint-less spellings must share one resident copy
+        let path = temp_csv("hintkey", 16);
+        let cache = DatasetCache::new(8);
+        let (a, _) = get(&cache, &format!("file:{}", path.display()), 1.0, 0).unwrap();
+        let (b, hit) = get(&cache, &format!("file:{}?rows=16", path.display()), 1.0, 0).unwrap();
+        assert!(hit, "rows hint must not split the cache key");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.stats().entries, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_edit_invalidates_the_entry() {
+        let path = temp_csv("edit", 12);
+        let uri = format!("file:{}", path.display());
+        let cache = DatasetCache::new(8);
+        let (before, _) = get(&cache, &uri, 1.0, 0).unwrap();
+        // append a row (size change -> fingerprint change regardless of
+        // mtime granularity)
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("8.0,8.5\n");
+        std::fs::write(&path, text).unwrap();
+        let (after, hit) = get(&cache, &uri, 1.0, 0).unwrap();
+        assert!(!hit, "an edited file must be reloaded, not served stale");
+        assert_eq!(after.rows, before.rows + 1);
+        // the new fingerprint now hits, and the dead pre-edit entry was
+        // evicted rather than left squatting in the LRU
+        assert!(get(&cache, &uri, 1.0, 0).unwrap().1);
+        assert_eq!(cache.stats().entries, 1, "stale entry must be evicted on reload");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn path_spellings_share_one_entry() {
+        // file:/dir/x.csv and file:/dir/./x.csv are one provenance
+        let path = temp_csv("spell", 10);
+        let cache = DatasetCache::new(8);
+        let (a, _) = get(&cache, &format!("file:{}", path.display()), 1.0, 0).unwrap();
+        let dotted = format!(
+            "file:{}/./{}",
+            path.parent().unwrap().display(),
+            path.file_name().unwrap().to_string_lossy()
+        );
+        let (b, hit) = get(&cache, &dotted, 1.0, 0).unwrap();
+        assert!(hit, "aliased path spellings must not double-cache");
+        assert!(Arc::ptr_eq(&a, &b));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
@@ -148,7 +327,7 @@ mod tests {
         // matter how many distinct keys stream through
         let cache = DatasetCache::new(1);
         for seed in 0..50 {
-            cache.get_or_generate("blobs_100_4_2", 1.0, seed).unwrap();
+            get(&cache, "blobs_100_4_2", 1.0, seed).unwrap();
         }
         assert!(cache.stats().entries <= SHARDS, "entries {}", cache.stats().entries);
         assert_eq!(cache.stats().misses, 50);
@@ -157,11 +336,11 @@ mod tests {
     #[test]
     fn eviction_is_least_recently_used() {
         // With per-shard cap 1, two same-shard keys evict each other; a
-        // re-request of the first must regenerate.  Streaming the same
-        // key repeatedly must not (it stays most-recent).
+        // re-request of the first must reload.  Streaming the same key
+        // repeatedly must not (it stays most-recent).
         let cache = DatasetCache::new(1);
         for _ in 0..5 {
-            cache.get_or_generate("blobs_100_4_2", 1.0, 1).unwrap();
+            get(&cache, "blobs_100_4_2", 1.0, 1).unwrap();
         }
         let s = cache.stats();
         assert_eq!((s.misses, s.hits), (1, 4));
@@ -170,7 +349,8 @@ mod tests {
     #[test]
     fn failures_are_not_cached() {
         let cache = DatasetCache::new(8);
-        assert!(cache.get_or_generate("doesnotexist", 1.0, 0).is_err());
+        assert!(get(&cache, "doesnotexist", 1.0, 0).is_err());
+        assert!(get(&cache, "file:/definitely/not/here.csv", 1.0, 0).is_err());
         assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0, entries: 0 });
     }
 }

@@ -1,0 +1,147 @@
+//! Per-method serving metrics (protocol v3 `stats`).
+//!
+//! Every successful `cluster` reply records its method's solve+eval
+//! latency and dissimilarity count here; the `stats` wire command
+//! exports count/min/mean/max per [`crate::solver::MethodSpec`] label.
+//! One mutex over a small BTreeMap is plenty: the critical section is a
+//! map insert, vastly cheaper than the clustering job that precedes it,
+//! and the BTreeMap keeps the `stats` line deterministically ordered.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Aggregate for one method label.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MethodAgg {
+    /// Jobs served with this method.
+    pub count: u64,
+    /// Fastest solve+eval latency (milliseconds).
+    pub ms_min: f64,
+    /// Total latency (milliseconds) — mean = `ms_sum / count`.
+    pub ms_sum: f64,
+    /// Slowest solve+eval latency (milliseconds).
+    pub ms_max: f64,
+    /// Smallest dissimilarity count of one job.
+    pub dissim_min: u64,
+    /// Total dissimilarity computations — mean = `dissim_sum / count`.
+    pub dissim_sum: u64,
+    /// Largest dissimilarity count of one job.
+    pub dissim_max: u64,
+}
+
+impl MethodAgg {
+    fn first(ms: f64, dissim: u64) -> Self {
+        MethodAgg {
+            count: 1,
+            ms_min: ms,
+            ms_sum: ms,
+            ms_max: ms,
+            dissim_min: dissim,
+            dissim_sum: dissim,
+            dissim_max: dissim,
+        }
+    }
+
+    fn add(&mut self, ms: f64, dissim: u64) {
+        self.count += 1;
+        self.ms_min = self.ms_min.min(ms);
+        self.ms_sum += ms;
+        self.ms_max = self.ms_max.max(ms);
+        self.dissim_min = self.dissim_min.min(dissim);
+        self.dissim_sum += dissim;
+        self.dissim_max = self.dissim_max.max(dissim);
+    }
+
+    /// Mean latency in milliseconds.
+    pub fn ms_mean(&self) -> f64 {
+        self.ms_sum / self.count.max(1) as f64
+    }
+
+    /// Mean dissimilarity computations per job.
+    pub fn dissim_mean(&self) -> f64 {
+        self.dissim_sum as f64 / self.count.max(1) as f64
+    }
+}
+
+/// Thread-safe per-method aggregates, keyed by method label.
+#[derive(Default)]
+pub struct MethodMetrics {
+    inner: Mutex<BTreeMap<String, MethodAgg>>,
+}
+
+impl MethodMetrics {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served job for `label`.
+    pub fn record(&self, label: &str, ms: f64, dissim: u64) {
+        let mut map = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        match map.get_mut(label) {
+            Some(agg) => agg.add(ms, dissim),
+            None => {
+                map.insert(label.to_string(), MethodAgg::first(ms, dissim));
+            }
+        }
+    }
+
+    /// Snapshot of every label's aggregate, sorted by label.
+    pub fn snapshot(&self) -> Vec<(String, MethodAgg)> {
+        let map = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        map.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_count_min_mean_max() {
+        let m = MethodMetrics::new();
+        m.record("OneBatch-nniw", 2.0, 100);
+        m.record("OneBatch-nniw", 6.0, 300);
+        m.record("OneBatch-nniw", 4.0, 200);
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 1);
+        let (label, a) = &snap[0];
+        assert_eq!(label, "OneBatch-nniw");
+        assert_eq!(a.count, 3);
+        assert_eq!((a.ms_min, a.ms_max), (2.0, 6.0));
+        assert!((a.ms_mean() - 4.0).abs() < 1e-12);
+        assert_eq!((a.dissim_min, a.dissim_max), (100, 300));
+        assert!((a.dissim_mean() - 200.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_by_label() {
+        let m = MethodMetrics::new();
+        m.record("kmc2-20", 1.0, 1);
+        m.record("FasterPAM", 1.0, 1);
+        m.record("OneBatch-nniw", 1.0, 1);
+        let labels: Vec<String> = m.snapshot().into_iter().map(|(l, _)| l).collect();
+        assert_eq!(labels, vec!["FasterPAM", "OneBatch-nniw", "kmc2-20"]);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        let m = std::sync::Arc::new(MethodMetrics::new());
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        m.record("Random", i as f64, 10);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap[0].1.count, 400);
+        assert_eq!(snap[0].1.dissim_sum, 4000);
+    }
+}

@@ -3,36 +3,60 @@
 //! thread-per-worker over a bounded queue is the right shape for
 //! CPU-bound jobs anyway), and a sharded dataset cache.
 //!
-//! # Line protocol v2 (one request line per connection, one reply line)
+//! # Line protocol v3 (one request line per connection, one reply line)
 //!
 //! ```text
 //! -> cluster dataset=blobs_2000_8_5 k=5 method=FasterPAM seed=3 threads=4
-//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 served_ms=50.1
+//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 source=synth:blobs_2000_8_5 served_ms=50.1
+//! -> cluster dataset=file:/data/points.csv metric=l2 scale_features=minmax k=3
+//! <- ok method=OneBatch-nniw cache=hit medoids=... objective=... seconds=... dissim=... swaps=... source=file:/data/points.csv served_ms=1.9
 //! -> stats
-//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 served_ms=0.0
+//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 method.FasterPAM.count=2 method.FasterPAM.ms_min=... method.FasterPAM.ms_mean=... method.FasterPAM.ms_max=... method.FasterPAM.dissim_min=... method.FasterPAM.dissim_mean=... method.FasterPAM.dissim_max=... served_ms=0.0
 //! -> ping
 //! <- pong
 //! ```
 //!
 //! `cluster` keys:
 //!
-//! * `dataset=`, `scale=`, `seed=` — dataset provenance.  Requests route
-//!   through a sharded LRU dataset cache keyed by exactly this triple
+//! * `dataset=` — a [`DataSource`] URI: `synth:<name>` generates,
+//!   `file:<path>[?rows=N]` loads a numeric CSV from disk, and a bare
+//!   name aliases `synth:` (every v2 request line is still valid; v2
+//!   replies gained only the trailing `source=` field).  Request lines
+//!   are whitespace-tokenized, so paths containing spaces are not
+//!   addressable on the wire — use the CLI or library for those.
+//! * `scale=`, `seed=` — synthetic-generation knobs (`seed=` also seeds
+//!   the algorithm; a non-neutral `scale=` with a `file:` source is an
+//!   error — file bytes do not scale).  Requests route through a sharded
+//!   LRU dataset cache
+//!   keyed by `(source identity + fingerprint, scale, seed, scale_features)`
 //!   ([`DatasetCache`], bounded by [`ServerConfig::cache_cap`]), so
-//!   repeated traffic never regenerates data; every reply reports
-//!   `cache=hit|miss`.  `seed=` also seeds the algorithm.
+//!   repeated traffic never reloads data; every reply reports
+//!   `cache=hit|miss`.  A `file:` fingerprint mixes size + mtime, so an
+//!   edit that changes either invalidates its entries automatically.
 //! * `method=` — any [`MethodSpec`] label (`FasterPAM`, `FasterCLARA-50`,
 //!   `BanditPAM++-2`, `OneBatch-nniw-steepest`, ...; see
 //!   [`MethodSpec::parse`]).  Omitted -> legacy v1 behaviour: OneBatchPAM
 //!   with `sampler=` (default `nniw`) and `strategy=` (default `eager`).
 //!   Methods the paper marks "Na" at large scale (full `n x n` matrix or
-//!   per-round resampling) are rejected above [`FULL_MATRIX_LIMIT`] rows.
-//! * `k=`, `metric=`, `threads=` — shared run parameters.
+//!   per-round resampling) are rejected above [`FULL_MATRIX_LIMIT`] rows,
+//!   *before* loading, using the source's row hint (catalogue prediction
+//!   or `?rows=N`).
+//! * `metric=` — any [`Metric`] spelling (`l1` default, `l2`,
+//!   `sqeuclidean`, `chebyshev`, `cosine`); carried on
+//!   [`SolveSpec::metric`] so selection, evaluation and the backend all
+//!   agree.
+//! * `scale_features=` — `minmax` | `none` (default `none`): min-max
+//!   feature preprocessing applied once at admission and cached.
+//! * `k=`, `threads=` — shared run parameters.
 //! * `m=`, `eps=`, `max_passes=`, `strategy=`, `sampler=` — OneBatch
 //!   knobs (batch size, swap-acceptance threshold, pass budget, swap
 //!   engine, batch variant).  Sending one alongside a non-OneBatch
 //!   `method=` is an error, not silently ignored — as is any
 //!   present-but-unparsable value (`err ...` replies).
+//!
+//! `stats` reports the cache counters plus, per served method label,
+//! count/min/mean/max aggregates of solve+eval latency (ms) and
+//! dissimilarity computations ([`MethodMetrics`]).
 //!
 //! # Concurrency model
 //!
@@ -49,11 +73,14 @@
 //!   same new dataset generates it exactly once.
 
 pub mod cache;
+pub mod metrics;
 
 pub use cache::{CacheStats, DatasetCache};
+pub use metrics::{MethodAgg, MethodMetrics};
 
 use crate::backend::NativeBackend;
 use crate::coordinator::{SamplerKind, SwapStrategy};
+use crate::data::{DataSource, FeatureScaling};
 use crate::dissim::{DissimCounter, Metric};
 use crate::eval;
 use crate::runtime::Pool;
@@ -89,12 +116,14 @@ impl Default for ServerConfig {
 pub struct ServerState {
     /// Sharded dataset cache for `cluster` requests.
     pub cache: DatasetCache,
+    /// Per-method latency / dissim aggregates (the `stats` command).
+    pub methods: MethodMetrics,
 }
 
 impl ServerState {
     /// Fresh state sized from the config.
     pub fn new(cfg: &ServerConfig) -> Self {
-        ServerState { cache: DatasetCache::new(cfg.cache_cap) }
+        ServerState { cache: DatasetCache::new(cfg.cache_cap), methods: MethodMetrics::new() }
     }
 }
 
@@ -146,14 +175,15 @@ fn parse_key<T: std::str::FromStr>(
     }
 }
 
-/// Methods the paper marks "Na" at large scale hold a full `n x n`
-/// matrix (FasterPAM) or resample every round (BanditPAM++); above this
-/// many rows the server rejects them instead of stalling a worker.
-pub const FULL_MATRIX_LIMIT: usize = 20_000;
+/// Re-export of [`crate::solver::FULL_MATRIX_LIMIT`] (the constant moved
+/// next to [`MethodSpec::feasible_large_scale`] so the grid runner can
+/// apply the same bound without depending on the server).
+pub use crate::solver::FULL_MATRIX_LIMIT;
 
 /// Execute one `cluster` request (shared by server workers and tests).
 pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Result<String, String> {
     let dataset = kv.get("dataset").cloned().unwrap_or_else(|| "blobs_1000_8_5".into());
+    let src = DataSource::parse(&dataset).map_err(|e| e.to_string())?;
     let k: usize = parse_key(kv, "k")?.unwrap_or(10);
     let scale: f64 = parse_key(kv, "scale")?.unwrap_or(1.0);
     let seed: u64 = parse_key(kv, "seed")?.unwrap_or(0);
@@ -164,8 +194,19 @@ pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Resu
         .map(|s| Metric::parse(s).ok_or(format!("unknown metric {s}")))
         .transpose()?
         .unwrap_or(Metric::L1);
+    let scaling = kv
+        .get("scale_features")
+        .map(|s| FeatureScaling::parse(s).ok_or(format!("unknown scale_features {s} (minmax|none)")))
+        .transpose()?
+        .unwrap_or_default();
     if k < 2 {
         return Err("k must be >= 2".into());
+    }
+    // file bytes do not scale: a non-neutral scale= on a file: source is
+    // a mis-configured experiment, not a knob to silently drop (the same
+    // rule the protocol applies to OneBatch-only keys)
+    if src.is_file() && scale != 1.0 {
+        return Err(format!("scale= does not apply to file: sources (got scale={scale})"));
     }
 
     // method resolution: explicit method= wins; legacy lines without it
@@ -217,9 +258,10 @@ pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Resu
     }
 
     // reject infeasible (method, size) combinations *before* paying for
-    // generation or touching the cache — the size is predictable
+    // a load or touching the cache — the size is predictable for every
+    // catalogue source and for files carrying a `?rows=` hint
     if !method.feasible_large_scale() {
-        if let Some(n) = crate::data::synth::expected_rows(&dataset, scale) {
+        if let Some(n) = src.expected_rows(scale) {
             if n > FULL_MATRIX_LIMIT {
                 return Err(format!(
                     "method {} infeasible at n={n} (limit {FULL_MATRIX_LIMIT})",
@@ -229,13 +271,13 @@ pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Resu
         }
     }
 
-    let (x, hit) = state.cache.get_or_generate(&dataset, scale, seed).map_err(|e| e.to_string())?;
+    let (x, hit) = state.cache.get_or_load(&src, scale, seed, scaling).map_err(|e| e.to_string())?;
     if x.rows <= k + 1 {
         return Err(format!("dataset too small (n={}) for k={k}", x.rows));
     }
     if !method.feasible_large_scale() && x.rows > FULL_MATRIX_LIMIT {
-        // backstop in case a dataset scheme without a size prediction
-        // ever slips past the pre-check
+        // backstop for sources without a size prediction (hint-less
+        // files, unknown synth names that still loaded)
         return Err(format!(
             "method {} infeasible at n={} (limit {FULL_MATRIX_LIMIT})",
             method.label(),
@@ -244,6 +286,7 @@ pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Resu
     }
 
     let mut spec = SolveSpec::new(method, k, seed);
+    spec.metric = metric;
     spec.threads = threads;
     spec.m = m;
     if let Some(e) = eps {
@@ -253,17 +296,26 @@ pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Resu
         spec.max_passes = p;
     }
     let backend = NativeBackend::with_pool(metric, Pool::new(threads));
+    let solve_started = Instant::now();
     let r = solver::solve(&x, &spec, &backend).map_err(|e| e.to_string())?;
     let obj = eval::objective(&x, &r.medoids, &DissimCounter::new(metric));
+    // per-method aggregates cover solve + eval (time attributable to the
+    // method), not the dataset load a cache miss happens to pay
+    state.methods.record(
+        &spec.method.label(),
+        solve_started.elapsed().as_secs_f64() * 1e3,
+        r.stats.dissim_count,
+    );
     let meds: Vec<String> = r.medoids.iter().map(|m| m.to_string()).collect();
     Ok(format!(
-        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={}",
+        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={} source={}",
         spec.method.label(),
         if hit { "hit" } else { "miss" },
         meds.join(","),
         r.stats.seconds,
         r.stats.dissim_count,
         r.stats.swap_count,
+        src.canon(),
     ))
 }
 
@@ -278,10 +330,27 @@ pub fn handle_line(state: &ServerState, line: &str) -> String {
         },
         Some("stats") => {
             let s = state.cache.stats();
-            format!(
+            let mut line = format!(
                 "ok cache_hits={} cache_misses={} cache_entries={}",
                 s.hits, s.misses, s.entries
-            )
+            );
+            // v3: per-method aggregates, label-sorted for determinism
+            for (label, a) in state.methods.snapshot() {
+                line.push_str(&format!(
+                    " method.{label}.count={} \
+                     method.{label}.ms_min={:.3} method.{label}.ms_mean={:.3} \
+                     method.{label}.ms_max={:.3} method.{label}.dissim_min={} \
+                     method.{label}.dissim_mean={:.1} method.{label}.dissim_max={}",
+                    a.count,
+                    a.ms_min,
+                    a.ms_mean(),
+                    a.ms_max,
+                    a.dissim_min,
+                    a.dissim_mean(),
+                    a.dissim_max
+                ));
+            }
+            line
         }
         // Diagnostic: hold a worker for `ms` (capped) — used by the
         // backpressure tests and for probing queue behaviour under load.
@@ -418,10 +487,12 @@ mod tests {
         assert!(request(h.addr, "ping").unwrap().starts_with("pong"));
         let r = request(h.addr, "cluster dataset=blobs_300_4_3 k=3 seed=1").unwrap();
         // legacy lines without method= still work and default to
-        // OneBatch-nniw (protocol v1 compatibility)
+        // OneBatch-nniw (protocol v1 compatibility); the v2 reply fields
+        // are byte-identical, with v3's source= appended
         assert!(r.starts_with("ok method=OneBatch-nniw cache=miss medoids="), "{r}");
         assert!(r.contains("objective="));
         assert!(r.contains("swaps="));
+        assert!(r.contains(" source=synth:blobs_300_4_3"), "{r}");
         h.shutdown();
     }
 
@@ -447,6 +518,13 @@ mod tests {
             "cluster dataset=doesnotexist",
             "cluster k=1",
             "cluster k=abc",
+            "cluster dataset=s3:bucket/key",
+            "cluster dataset=file:",
+            "cluster dataset=file:/x.csv?rows=0",
+            // file bytes do not scale; silent no-ops are not allowed
+            "cluster dataset=file:/x.csv scale=0.5",
+            "cluster metric=bogus",
+            "cluster scale_features=bogus",
             "cluster sampler=bogus",
             "cluster method=bogus",
             "cluster strategy=bogus",
@@ -515,6 +593,64 @@ mod tests {
         let stats_line = request(h.addr, "stats").unwrap();
         assert!(stats_line.starts_with("ok cache_hits=6 cache_misses=3"), "{stats_line}");
         h.shutdown();
+    }
+
+    #[test]
+    fn stats_reports_per_method_aggregates() {
+        let st = fresh_state();
+        for line in [
+            "cluster dataset=blobs_300_4_3 k=3 seed=1",
+            "cluster dataset=blobs_300_4_3 k=3 seed=2",
+            "cluster dataset=blobs_300_4_3 k=3 seed=1 method=FasterPAM",
+        ] {
+            assert!(handle_line(&st, line).starts_with("ok "), "{line}");
+        }
+        let stats = handle_line(&st, "stats");
+        assert!(stats.contains("method.OneBatch-nniw.count=2"), "{stats}");
+        assert!(stats.contains("method.FasterPAM.count=1"), "{stats}");
+        for field in
+            ["ms_min", "ms_mean", "ms_max", "dissim_min", "dissim_mean", "dissim_max"]
+        {
+            assert!(stats.contains(&format!("method.FasterPAM.{field}=")), "{field}: {stats}");
+        }
+        // the snapshot agrees with the wire line
+        let snap = st.methods.snapshot();
+        assert_eq!(snap.len(), 2);
+        let ob = snap.iter().find(|(l, _)| l == "OneBatch-nniw").unwrap();
+        assert_eq!(ob.1.count, 2);
+        assert!(ob.1.ms_min <= ob.1.ms_mean() && ob.1.ms_mean() <= ob.1.ms_max);
+        assert!(ob.1.dissim_min <= ob.1.dissim_max);
+    }
+
+    #[test]
+    fn metric_and_scaling_are_wire_addressable() {
+        let st = fresh_state();
+        let base = "cluster dataset=blobs_300_4_3 k=3 seed=5";
+        let l1 = handle_line(&st, base);
+        let l2 = handle_line(&st, &format!("{base} metric=l2"));
+        let mm = handle_line(&st, &format!("{base} metric=l2 scale_features=minmax"));
+        for r in [&l1, &l2, &mm] {
+            assert!(r.starts_with("ok "), "{r}");
+        }
+        // the matrix is metric-independent (one cache entry), but the
+        // minmax-scaled variant is a distinct entry
+        assert!(l2.contains("cache=hit"), "{l2}");
+        assert!(mm.contains("cache=miss"), "{mm}");
+        assert_eq!(st.cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn file_rows_hint_gates_infeasible_methods_before_any_io() {
+        // the path does not exist: with a large rows hint the request
+        // must be rejected on the hint alone, before any stat/load
+        let st = fresh_state();
+        let r = handle_line(
+            &st,
+            "cluster dataset=file:/definitely/not/here.csv?rows=50000 k=5 method=FasterPAM",
+        );
+        assert!(r.starts_with("err"), "{r}");
+        assert!(r.contains("infeasible at n=50000"), "{r}");
+        assert_eq!(st.cache.stats(), CacheStats::default());
     }
 
     #[test]

@@ -17,15 +17,19 @@
 //!
 //! ```no_run
 //! use obpam::backend::NativeBackend;
-//! use obpam::data::synth;
+//! use obpam::data::DataSource;
 //! use obpam::dissim::Metric;
 //! use obpam::solver::{self, MethodSpec, SolveSpec};
 //!
-//! let data = synth::try_generate("blobs_2000_8_5", 1.0, 42).unwrap();
+//! // URI-addressed sources: synth:, file:, or a bare synth name.
+//! let data = DataSource::parse("synth:blobs_2000_8_5").unwrap().load(1.0, 42).unwrap();
 //! // any paper row label works: "FasterPAM", "BanditPAM++-2", ...
 //! let method = MethodSpec::parse("OneBatch-nniw").unwrap();
-//! let backend = NativeBackend::new(Metric::L1);
-//! let result = solver::solve(&data.x, &SolveSpec::new(method, 5, 42), &backend).unwrap();
+//! // the spec carries the metric; the backend is built from it so the
+//! // two can never silently disagree
+//! let spec = SolveSpec { metric: Metric::L2, ..SolveSpec::new(method, 5, 42) };
+//! let backend = NativeBackend::new(spec.metric);
+//! let result = solver::solve(&data.x, &spec, &backend).unwrap();
 //! println!("medoids: {:?}", result.medoids);
 //! ```
 
@@ -75,6 +79,11 @@ pub struct SolveSpec {
     pub k: usize,
     /// PRNG seed (every method's selection is deterministic given it).
     pub seed: u64,
+    /// Dissimilarity the run is defined over.  Surfaces (CLI, server,
+    /// grid runner) construct the compute backend from this field, and
+    /// [`solve`] rejects a backend whose metric disagrees — a silent
+    /// mismatch would corrupt every downstream number.
+    pub metric: Metric,
     /// Execution-pool width for OneBatch's eager scan (`0` = auto,
     /// `1` = serial).  Matrix tile ops use the backend's own pool;
     /// medoids are bit-identical at any value for a fixed seed.
@@ -91,7 +100,16 @@ impl SolveSpec {
     /// Spec for `method` with the default OneBatch knobs and a serial
     /// pool; override fields with struct-update syntax.
     pub fn new(method: MethodSpec, k: usize, seed: u64) -> Self {
-        SolveSpec { method, k, seed, threads: 1, m: None, eps: 0.0, max_passes: 20 }
+        SolveSpec {
+            method,
+            k,
+            seed,
+            metric: Metric::L1,
+            threads: 1,
+            m: None,
+            eps: 0.0,
+            max_passes: 20,
+        }
     }
 }
 
@@ -101,12 +119,25 @@ impl Default for SolveSpec {
     }
 }
 
+/// Methods the paper marks "Na" at large scale hold a full `n x n`
+/// matrix (FasterPAM / Alternate) or resample every round (BanditPAM++);
+/// above this many rows the serving surfaces reject them instead of
+/// stalling a worker (see [`MethodSpec::feasible_large_scale`]).
+pub const FULL_MATRIX_LIMIT: usize = 20_000;
+
 /// Run `spec.method` on `x` and validate the result invariants
-/// (`k` unique in-range medoids).
+/// (`k` unique in-range medoids).  The backend's metric must agree with
+/// `spec.metric` — surfaces build the backend from the spec.
 ///
 /// This is the single entry point behind the CLI, the bench harness,
 /// the job server and the examples.
 pub fn solve(x: &Matrix, spec: &SolveSpec, backend: &dyn ComputeBackend) -> Result<KMedoidsResult> {
+    anyhow::ensure!(
+        backend.metric() == spec.metric,
+        "spec metric '{}' does not match backend metric '{}'",
+        spec.metric.name(),
+        backend.metric().name()
+    );
     let r = spec.method.solver().solve(x, spec, backend)?;
     r.validate(x.rows, spec.k);
     Ok(r)
@@ -323,7 +354,8 @@ impl MethodSpec {
         backend: &dyn ComputeBackend,
         threads: usize,
     ) -> Result<RunOutput> {
-        let spec = SolveSpec { threads, ..SolveSpec::new(self.clone(), k, seed) };
+        let spec =
+            SolveSpec { threads, metric: backend.metric(), ..SolveSpec::new(self.clone(), k, seed) };
         Ok(solve(x, &spec, backend)?.into())
     }
 }
@@ -464,6 +496,41 @@ mod tests {
             let par = m.run_threaded(&x, 3, Metric::L1, 11, 4).unwrap();
             assert_eq!(serial.medoids, par.medoids, "{}", m.label());
             assert_eq!(serial.dissim_count, par.dissim_count, "{}", m.label());
+        }
+    }
+
+    #[test]
+    fn solve_rejects_metric_mismatch() {
+        let mut rng = Rng::new(4);
+        let x = synth::gen_gaussian_mixture(&mut rng, 120, 4, 3, 0.15, 1.0);
+        let spec = SolveSpec { metric: Metric::L2, ..SolveSpec::new(MethodSpec::KMeansPp, 3, 1) };
+        let err = solve(&x, &spec, &NativeBackend::new(Metric::L1)).unwrap_err().to_string();
+        assert!(err.contains("does not match backend metric"), "{err}");
+        // agreeing metric runs fine
+        assert!(solve(&x, &spec, &NativeBackend::new(Metric::L2)).is_ok());
+    }
+
+    #[test]
+    fn spec_metric_drives_the_computation() {
+        // FasterPAM's est_objective is exact, so it must equal a fresh
+        // evaluation under spec.metric — for every metric, not just the
+        // L1 the surfaces used to hardcode.
+        let mut rng = Rng::new(5);
+        let x = synth::gen_gaussian_mixture(&mut rng, 150, 5, 3, 0.3, 2.0);
+        for metric in [Metric::L1, Metric::L2, Metric::Chebyshev] {
+            let spec = SolveSpec { metric, ..SolveSpec::new(MethodSpec::FasterPam, 4, 3) };
+            let r = solve(&x, &spec, &NativeBackend::new(metric)).unwrap();
+            let exact = crate::eval::objective(
+                &x,
+                &r.medoids,
+                &crate::dissim::DissimCounter::new(metric),
+            );
+            assert!(
+                (exact - r.est_objective).abs() < 1e-3 * exact.max(1.0),
+                "{}: est {} != exact {exact}",
+                metric.name(),
+                r.est_objective
+            );
         }
     }
 

@@ -1,0 +1,174 @@
+//! Protocol-v3 wire surface: URI-addressed dataset sources end-to-end.
+//!
+//! Covers the new `DataSource` pipeline from the outside: URI
+//! round-trips, `metric=` / `scale_features=` validation, `file:`
+//! datasets served through the sharded cache (miss-then-hit with
+//! identical medoids), fingerprint invalidation when the file changes on
+//! disk, and a full TCP smoke test (the CI end-to-end step).
+
+use obpam::data::DataSource;
+use obpam::server::{handle_line, request, serve, ServerConfig, ServerState};
+use std::path::PathBuf;
+
+fn fresh_state() -> ServerState {
+    ServerState::new(&ServerConfig::default())
+}
+
+/// Write a small 3-cluster CSV (header + `rows` numeric lines) and
+/// return its path.  Content is deterministic in `rows`.
+fn temp_csv(tag: &str, rows: usize) -> PathBuf {
+    let dir = std::env::temp_dir().join("obpam_wire_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}_{}.csv", std::process::id()));
+    let mut s = String::from("x,y\n");
+    for i in 0..rows {
+        let c = (i % 3) as f64 * 25.0;
+        s.push_str(&format!("{},{}\n", c + (i % 7) as f64 * 0.3, c - (i % 5) as f64 * 0.2));
+    }
+    std::fs::write(&path, s).unwrap();
+    path
+}
+
+fn medoids_of(reply: &str) -> String {
+    reply.split("medoids=").nth(1).unwrap().split_whitespace().next().unwrap().to_string()
+}
+
+#[test]
+fn uri_parse_canon_round_trip() {
+    for (input, canon) in [
+        ("abalone", "synth:abalone"),
+        ("synth:abalone", "synth:abalone"),
+        ("blobs_2000_8_5", "synth:blobs_2000_8_5"),
+        ("file:/data/points.csv", "file:/data/points.csv"),
+        ("file:/data/points.csv?rows=416153", "file:/data/points.csv?rows=416153"),
+    ] {
+        let src = DataSource::parse(input).unwrap();
+        assert_eq!(src.canon(), canon, "{input}");
+        assert_eq!(DataSource::parse(&src.canon()).unwrap(), src, "{input} canon round-trip");
+    }
+    for bad in ["", "s3:bucket/key", "synth:", "file:", "file:/x.csv?rows=nope"] {
+        assert!(DataSource::parse(bad).is_err(), "{bad:?} should not parse");
+    }
+}
+
+#[test]
+fn metric_accepted_and_rejected_on_the_wire() {
+    let st = fresh_state();
+    // every metric the native backend evaluates is wire-addressable
+    for metric in ["l1", "l2", "sqeuclidean", "chebyshev", "cosine"] {
+        let r = handle_line(&st, &format!("cluster dataset=blobs_300_4_3 k=3 seed=1 metric={metric}"));
+        assert!(r.starts_with("ok "), "{metric}: {r}");
+    }
+    // unknown spellings are protocol errors, not silent L1 fallbacks
+    for bad in ["bogus", "l3", "L1 "] {
+        let r = handle_line(&st, &format!("cluster dataset=blobs_300_4_3 k=3 metric={bad}"));
+        assert!(r.starts_with("err"), "{bad}: {r}");
+    }
+}
+
+#[test]
+fn file_cluster_miss_then_hit_identical_medoids() {
+    let path = temp_csv("hit", 60);
+    let st = fresh_state();
+    let line = format!("cluster dataset=file:{} metric=l2 k=3 seed=4", path.display());
+    let first = handle_line(&st, &line);
+    let second = handle_line(&st, &line);
+    assert!(first.starts_with("ok "), "{first}");
+    assert!(first.contains("cache=miss"), "{first}");
+    assert!(second.contains("cache=hit"), "{second}");
+    assert_eq!(medoids_of(&first), medoids_of(&second));
+    assert!(first.contains(&format!(" source=file:{}", path.display())), "{first}");
+    let s = st.cache.stats();
+    assert_eq!((s.hits, s.misses), (1, 1));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fingerprint_invalidation_when_file_changes_on_disk() {
+    let path = temp_csv("inval", 50);
+    let st = fresh_state();
+    let line = format!("cluster dataset=file:{} metric=l2 k=3 seed=4", path.display());
+    assert!(handle_line(&st, &line).contains("cache=miss"));
+    assert!(handle_line(&st, &line).contains("cache=hit"));
+    // rewrite the file with different content (row count changes the
+    // size, so the fingerprint flips regardless of mtime granularity)
+    std::fs::remove_file(&path).ok();
+    let path2 = temp_csv("inval", 55);
+    assert_eq!(path, path2, "same path, new bytes");
+    let third = handle_line(&st, &line);
+    assert!(third.contains("cache=miss"), "edited file must reload: {third}");
+    // and the refreshed entry is hit again afterwards
+    assert!(handle_line(&st, &line).contains("cache=hit"));
+    let s = st.cache.stats();
+    assert_eq!(s.misses, 2, "exactly one reload after the edit");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn scale_features_is_validated_and_cached_separately() {
+    let path = temp_csv("scalef", 40);
+    let st = fresh_state();
+    let base = format!("cluster dataset=file:{} metric=l2 k=3 seed=1", path.display());
+    assert!(handle_line(&st, &base).starts_with("ok "));
+    let scaled = handle_line(&st, &format!("{base} scale_features=minmax"));
+    assert!(scaled.starts_with("ok "), "{scaled}");
+    assert!(scaled.contains("cache=miss"), "scaled variant is its own entry: {scaled}");
+    assert!(handle_line(&st, &format!("{base} scale_features=bogus")).starts_with("err"));
+    assert_eq!(st.cache.stats().entries, 2);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn legacy_bare_name_requests_keep_v2_reply_shape() {
+    let st = fresh_state();
+    let r = handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 seed=5");
+    // v2 prefix byte-for-byte, then the v3 source= field appended
+    assert!(r.starts_with("ok method=OneBatch-nniw cache=miss medoids="), "{r}");
+    for field in ["objective=", "seconds=", "dissim=", "swaps="] {
+        assert!(r.contains(field), "{field}: {r}");
+    }
+    assert!(r.ends_with("source=synth:blobs_300_4_3"), "{r}");
+    // the schemed spelling of the same dataset shares the cache entry
+    let schemed = handle_line(&st, "cluster dataset=synth:blobs_300_4_3 k=3 seed=5");
+    assert!(schemed.contains("cache=hit"), "{schemed}");
+    assert_eq!(medoids_of(&r), medoids_of(&schemed));
+}
+
+#[test]
+fn stats_aggregates_per_method_across_file_and_synth() {
+    let path = temp_csv("stats", 40);
+    let st = fresh_state();
+    let file_line = format!("cluster dataset=file:{} metric=l2 k=3 seed=1", path.display());
+    assert!(handle_line(&st, &file_line).starts_with("ok "));
+    assert!(handle_line(&st, &file_line).starts_with("ok "));
+    assert!(handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 method=k-means++").starts_with("ok "));
+    let stats = handle_line(&st, "stats");
+    assert!(stats.starts_with("ok cache_hits=1 cache_misses=2 cache_entries=2"), "{stats}");
+    assert!(stats.contains("method.OneBatch-nniw.count=2"), "{stats}");
+    assert!(stats.contains("method.k-means++.count=1"), "{stats}");
+    assert!(stats.contains("method.k-means++.ms_mean="), "{stats}");
+    assert!(stats.contains("method.OneBatch-nniw.dissim_max="), "{stats}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// CI end-to-end smoke: write a CSV, start the real TCP server, drive
+/// `cluster dataset=file:... metric=l2 k=3` twice over the wire, and
+/// require a cache hit with identical medoids on the second request.
+#[test]
+fn e2e_smoke_file_dataset_through_tcp_server() {
+    let path = temp_csv("e2e", 80);
+    let h = serve(ServerConfig::default()).unwrap();
+    let line = format!("cluster dataset=file:{} metric=l2 k=3 seed=7", path.display());
+    let first = request(h.addr, &line).unwrap();
+    let second = request(h.addr, &line).unwrap();
+    assert!(first.starts_with("ok "), "{first}");
+    assert!(first.contains("cache=miss"), "{first}");
+    assert!(second.contains("cache=hit"), "{second}");
+    assert_eq!(medoids_of(&first), medoids_of(&second));
+    // and the stats surface saw exactly this traffic
+    let stats = request(h.addr, "stats").unwrap();
+    assert!(stats.starts_with("ok cache_hits=1 cache_misses=1"), "{stats}");
+    assert!(stats.contains("method.OneBatch-nniw.count=2"), "{stats}");
+    h.shutdown();
+    std::fs::remove_file(&path).ok();
+}
