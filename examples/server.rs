@@ -12,11 +12,15 @@ use obpam::server::{request, serve, ServerConfig};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
+    // workers/queue_cap/budget accept 0 = auto; the default admission
+    // budget admits this whole mixed burst (each job's `cost=` work
+    // units are visible in its reply)
     let handle = serve(ServerConfig {
         addr: "127.0.0.1:0".into(),
         workers: 2,
         queue_cap: 8,
         cache_cap: 32,
+        ..Default::default()
     })?;
     println!("server on {}", handle.addr);
     assert_eq!(request(handle.addr, "ping")?.split_whitespace().next(), Some("pong"));

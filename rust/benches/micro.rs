@@ -8,6 +8,9 @@
 //!   * swap-gain evaluation: native inner loop (1 thread vs all cores);
 //!   * SwapState::eval_candidate / apply_swap latency;
 //!   * end-to-end OneBatchPAM at a fixed workload, serial vs threaded;
+//!   * per-region dispatch overhead on a tiny workload: the persistent
+//!     pool (wake parked workers) vs the old scoped-spawn-per-region
+//!     shape (spawn + join `threads` OS threads every region);
 //!   * (feature `xla`) XLA pairwise/gains: Pallas kernel vs plain-XLA.
 
 use obpam::backend::{ComputeBackend, NativeBackend};
@@ -163,6 +166,53 @@ fn main() {
                 break;
             }
         }
+    }
+
+    // ---- per-region dispatch: persistent pool vs scoped spawn -----------
+    // A deliberately tiny region (the worst case for dispatch overhead):
+    // the work per range is microseconds, so the measured time is mostly
+    // the cost of getting the region onto the workers and back.
+    {
+        let rows = 16 * 1024;
+        let data: Vec<f32> = (0..rows).map(|i| (i % 97) as f32).collect();
+        let data = &data;
+        let threads = cores.max(2);
+        let pool = Pool::new(threads);
+        let (t_persist, mad_p) = time_median(50, 200, || {
+            let parts = pool.map_ranges(rows, |r| data[r].iter().sum::<f32>());
+            std::hint::black_box(parts);
+        });
+        report(
+            &format!("region dispatch: persistent pool t={threads}"),
+            t_persist,
+            mad_p,
+            None,
+        );
+        // the pre-persistent-pool shape: scoped spawn + join per region
+        let ranges = pool.ranges(rows);
+        let (t_scoped, mad_s) = time_median(50, 200, || {
+            let parts: Vec<f32> = std::thread::scope(|s| {
+                let handles: Vec<_> = ranges
+                    .iter()
+                    .cloned()
+                    .map(|r| s.spawn(move || data[r].iter().sum::<f32>()))
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            std::hint::black_box(parts);
+        });
+        report(
+            &format!("region dispatch: scoped spawn t={threads}"),
+            t_scoped,
+            mad_s,
+            None,
+        );
+        println!(
+            "  -> per-region dispatch {:.1} us (persistent) vs {:.1} us (scoped), {:.2}x",
+            t_persist * 1e6,
+            t_scoped * 1e6,
+            t_scoped / t_persist.max(1e-12)
+        );
     }
 
     // ---- XLA artifact paths ---------------------------------------------

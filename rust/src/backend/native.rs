@@ -3,7 +3,8 @@
 //! The CPU fast path and the reference the XLA path is checked against.
 //! Hot loops are branch-light and allocation-free; the pairwise matrix
 //! is cache-blocked (see dissim::cross_matrix) and every tile op is
-//! row-partitioned across the backend's [`Pool`] — results are
+//! row-partitioned across the backend's [`Pool`] of persistent workers
+//! (one backend runs many tile ops on one reused pool) — results are
 //! bit-identical at any thread count because rows are independent and
 //! chunk stitching preserves row order.
 

@@ -27,9 +27,9 @@ pub fn tolerance(est_objective: f64) -> f64 {
 }
 
 /// Candidates evaluated per worker thread per parallel round.  Large
-/// enough to amortise the scoped-spawn cost (each evaluation is
-/// `O(m + k)`), small enough that an accepted swap does not discard
-/// much speculative work.
+/// enough to amortise the pool's per-region dispatch cost (each
+/// evaluation is `O(m + k)`), small enough that an accepted swap does
+/// not discard much speculative work.
 const SCAN_CHUNK: usize = 256;
 
 /// Eager (Algorithm 2) swap search, serial.  Returns the number of

@@ -10,16 +10,28 @@
 //!   FasterPAM swap engine over one `n x m` distance matrix, every
 //!   baseline from the paper's evaluation, the experiment harness that
 //!   regenerates each table/figure, and a clustering job server
-//!   (protocol v3: any method by name, any dataset by URI, any metric,
-//!   over a sharded dataset cache with per-method serving metrics).
+//!   (protocol v4: any method by name, any dataset by URI, any metric,
+//!   with **cost-weighted admission** and a sharded dataset cache that
+//!   loads cold misses outside its locks).
 //!
 //! Both dominant costs — the `O(nmp)` pairwise pass and the
 //! `O(n(m+k))` eager swap scan — are row-parallel over the
-//! [`runtime::Pool`] execution layer.  The thread count is one knob
-//! (`OneBatchConfig::threads` / `NativeBackend::with_pool` /
-//! `--threads` on the CLI / `threads=` on the server protocol); for a
+//! [`runtime::Pool`] execution layer: a **persistent pool** of parked
+//! workers, so a parallel region costs a wakeup rather than a thread
+//! spawn and one pool serves every region of a job.  The thread count
+//! is one knob (`OneBatchConfig::threads` / `NativeBackend::with_pool`
+//! / `--threads` on the CLI / `threads=` on the server protocol); for a
 //! fixed seed the selected medoids are **bit-identical at any thread
-//! count**, so parallelism never costs reproducibility.
+//! count and across pool reuse**, so parallelism never costs
+//! reproducibility.
+//!
+//! Serving leans on the paper's asymmetry: OneBatchPAM prices at
+//! `~ n*m` work units while full-matrix baselines price at `~ n^2`
+//! ([`solver::MethodSpec::cost`] / [`solver::JobCost`]), so the server
+//! admits many cheap OneBatch jobs concurrently against one weighted
+//! budget where a single FasterPAM job would consume most of it —
+//! replies carry `cost=` and `queue_ms=`, and `stats` exports
+//! per-method latency histograms (solve + queue wait).
 //!
 //! Quick start (see `examples/quickstart.rs`): every algorithm —
 //! OneBatchPAM and all eight paper baselines — runs through the unified

@@ -10,6 +10,7 @@
 //!                [--threads T] [--config file.toml]
 //! obpam bench    --table 3|5|7 | --fig 1|pareto  (thin wrapper; prefer `cargo bench`)
 //! obpam serve    [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 16] [--cache-cap 32]
+//!                [--budget UNITS]
 //! obpam gen      --list | --dataset SOURCE [--scale S] [--out file.csv]
 //! obpam artifacts-check   (requires the `xla` build feature)
 //! ```
@@ -33,6 +34,13 @@
 //! the pairwise pass and the eager swap scan; `0` auto-detects the core
 //! count and `1` (the default) is the serial path.  Medoids are
 //! bit-identical at any thread count for a fixed seed.
+//!
+//! `serve` knobs follow the same `0 = auto` convention: `--workers 0`
+//! auto-detects cores, `--queue-cap 0` scales with the workers, and
+//! `--budget 0` takes the default cost-weighted admission budget (jobs
+//! are priced in work units via `MethodSpec::cost`; see the
+//! `obpam::server` docs for protocol v4's `cost=` / `queue_ms=` reply
+//! fields and the `stats reset` command).
 
 use anyhow::{bail, Context, Result};
 use obpam::backend::NativeBackend;
@@ -239,11 +247,15 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    // `--workers 0` auto-detects cores and `--queue-cap 0` follows the
+    // worker count, matching the `--threads 0` convention; `--budget 0`
+    // takes the default weighted-admission budget (4x MAX_JOB_COST).
     let cfg = obpam::server::ServerConfig {
         addr: flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".into()),
         workers: flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2),
         queue_cap: flags.get("queue-cap").and_then(|s| s.parse().ok()).unwrap_or(16),
         cache_cap: flags.get("cache-cap").and_then(|s| s.parse().ok()).unwrap_or(32),
+        budget: flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(0),
     };
     let handle = obpam::server::serve(cfg)?;
     println!("obpam server listening on {}", handle.addr);

@@ -1,9 +1,11 @@
 //! Execution-layer runtime: the thread pool used by every parallel hot
 //! path, plus the (feature-gated) PJRT bridge to the AOT XLA artifacts.
 //!
-//! * [`pool`] — the [`Pool`] abstraction: row-chunked scoped-thread
-//!   parallelism with a configurable thread count (`1` = the serial
-//!   path, `0` = auto).  Used by `dissim::cross_matrix_pool`, the
+//! * [`pool`] — the [`Pool`] abstraction: row-chunked parallelism over
+//!   a **persistent pool of parked workers** with a configurable thread
+//!   count (`1` = the serial path, `0` = auto); dispatching a region is
+//!   a wakeup, not a spawn, and results are bit-identical at any width
+//!   and across pool reuse.  Used by `dissim::cross_matrix_pool`, the
 //!   `NativeBackend` tile ops, the eager swap scan and the job server.
 //! * [`pjrt`] (feature `xla`) — load AOT artifacts (HLO text produced
 //!   by `python/compile/aot.py`) and execute them through a PJRT CPU

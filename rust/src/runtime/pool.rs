@@ -1,4 +1,5 @@
-//! Row-chunked thread pool for the embarrassingly parallel hot paths.
+//! Persistent row-chunked worker pool for the embarrassingly parallel
+//! hot paths.
 //!
 //! Every expensive loop in the crate (the `O(nmp)` pairwise pass, the
 //! per-row `top2` / `gains` / `argmin` tile ops, the `O(n(m+k))` eager
@@ -7,32 +8,148 @@
 //! and two execution shapes:
 //!
 //! * [`Pool::map_ranges`] — split `0..n` into at most `threads`
-//!   contiguous ranges, run a closure per range on scoped threads, and
-//!   return the results *in range order*;
-//! * [`Pool::for_each_row_chunk`] — hand each thread a disjoint
+//!   contiguous ranges, run a closure per range on the pool's workers,
+//!   and return the results *in range order*;
+//! * [`Pool::for_each_row_chunk`] — hand each worker a disjoint
 //!   `&mut` window of a row-major buffer (no result stitching).
 //!
-//! Determinism: ranges are contiguous and results are stitched in
-//! order, and every per-row computation in the crate is independent of
-//! its chunk boundaries, so all outputs are **bit-identical at any
-//! thread count** (asserted by rust/tests/parallel_equivalence.rs).
+//! Determinism: ranges are contiguous, each task writes only its own
+//! result slot, results are stitched in range order, and every per-row
+//! computation in the crate is independent of its chunk boundaries, so
+//! all outputs are **bit-identical at any thread count and across any
+//! number of regions on one reused pool** (asserted by
+//! rust/tests/parallel_equivalence.rs).
 //!
 //! `threads == 1` never spawns: closures run inline on the caller's
 //! thread, which is exactly the pre-parallel serial path.
 //!
-//! Implementation note: this is `std::thread::scope` per parallel
-//! region rather than a persistent rayon-style pool — rayon is not in
-//! the offline vendor set (same reason rand/clap/serde are hand-rolled
-//! here).  Scoped-spawn overhead is tens of microseconds, amortised by
-//! the chunk sizes used at the call sites.
+//! # Implementation
+//!
+//! A `threads`-wide pool owns `threads - 1` long-lived parked workers
+//! (the caller is the remaining executor — it always participates, so
+//! no core idles while the region runs).  Publishing a region is one
+//! mutex store + `notify_all`; workers then claim task indices from a
+//! shared atomic counter and park again when the region drains.  This
+//! replaced the original `std::thread::scope`-per-region design: the
+//! facade and the bit-identical guarantee are unchanged, but a region
+//! dispatch costs a wakeup instead of `threads - 1` thread spawns +
+//! joins (benches/micro.rs reports both shapes side by side).  Rayon
+//! would provide this off the shelf, but it is not in the offline
+//! vendor set — same reason rand/clap/serde are hand-rolled here.
+//!
+//! Cloning a [`Pool`] shares the same workers (the handle is an `Arc`);
+//! the workers shut down and are joined when the last handle drops.
+//! One region runs at a time per pool: a nested or concurrent region on
+//! the same pool runs inline on its caller instead of deadlocking —
+//! results are identical either way, only the parallelism differs.
 
 use std::num::NonZeroUsize;
 use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, TryLockError};
 
-/// A configurable-width scoped thread pool (see module docs).
-#[derive(Clone, Debug)]
+/// Type-erased descriptor of one parallel region, published to the
+/// workers through [`Shared::job`].  All pointers target the region
+/// caller's stack frame.
+#[derive(Clone, Copy)]
+struct JobRef {
+    /// Runs task `t` through the erased closure behind `ctx`.
+    call: unsafe fn(*const (), usize),
+    /// Points at the caller-stack `&(dyn Fn(usize) + Sync)` fat
+    /// reference (a thin pointer to it, since fat pointers do not fit
+    /// in `*const ()`).
+    ctx: *const (),
+    /// Next unclaimed task index.
+    next: *const AtomicUsize,
+    /// Set when any worker task panicked (the caller re-raises).
+    panicked: *const AtomicBool,
+    /// Task count of the region.
+    total: usize,
+}
+
+// SAFETY: the pointers target the region caller's stack frame, which
+// outlives every worker's use of them — `run_region` cannot return (or
+// unwind) past its quiesce guard until `Shared::active == 0`, i.e.
+// until no worker is inside the region anymore.
+unsafe impl Send for JobRef {}
+
+/// Trampoline from the erased `ctx` back to the region closure.
+unsafe fn call_erased(ctx: *const (), t: usize) {
+    let f: &&(dyn Fn(usize) + Sync) = unsafe { &*(ctx as *const &(dyn Fn(usize) + Sync)) };
+    f(t)
+}
+
+/// Worker-visible pool state, guarded by one mutex (never held while a
+/// task runs).
+struct Shared {
+    /// The region currently open for claiming, if any.
+    job: Option<JobRef>,
+    /// Bumped once per published region so a parked worker can tell a
+    /// fresh job from the one it already drained.
+    seq: u64,
+    /// Workers currently inside a region's claim loop.
+    active: usize,
+    /// Set once, by the last pool handle's drop.
+    shutdown: bool,
+}
+
+struct Inner {
+    shared: Mutex<Shared>,
+    /// Workers park here waiting for a region (or shutdown).
+    work_cv: Condvar,
+    /// The region caller parks here waiting for `active == 0`.
+    done_cv: Condvar,
+    /// Serialises regions; `try_lock` failure = nested/concurrent
+    /// region, which runs inline instead.
+    region: Mutex<()>,
+}
+
+/// Owns the worker threads; dropping the last [`Pool`] handle drops
+/// this, which signals shutdown and joins every worker.
+struct PoolCore {
+    inner: Arc<Inner>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for PoolCore {
+    fn drop(&mut self) {
+        {
+            let mut s = self.inner.shared.lock().unwrap_or_else(|e| e.into_inner());
+            s.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for h in self.handles.lock().unwrap_or_else(|e| e.into_inner()).drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw-pointer wrapper that lets disjoint-index writers share one base
+/// pointer across worker threads (each task touches only its own slot /
+/// row window, so the aliasing is by construction disjoint).
+struct SyncPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SyncPtr<T> {}
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
+impl<T> Clone for SyncPtr<T> {
+    fn clone(&self) -> Self {
+        SyncPtr(self.0)
+    }
+}
+impl<T> Copy for SyncPtr<T> {}
+
+/// A configurable-width persistent thread pool (see module docs).
+#[derive(Clone)]
 pub struct Pool {
     threads: usize,
+    /// `None` for the serial pool — no threads exist at width 1.
+    core: Option<Arc<PoolCore>>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
 }
 
 impl Default for Pool {
@@ -45,18 +162,37 @@ impl Default for Pool {
 impl Pool {
     /// Pool with `threads` workers; `0` means auto-detect
     /// (`std::thread::available_parallelism`, falling back to 1).
+    ///
+    /// A width-`t` pool spawns `t - 1` parked worker threads (the
+    /// caller of each region is the remaining executor); they live
+    /// until the last clone of this handle drops.
     pub fn new(threads: usize) -> Self {
         let t = if threads == 0 {
             std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
         } else {
             threads
-        };
-        Pool { threads: t.max(1) }
+        }
+        .max(1);
+        if t == 1 {
+            return Pool { threads: 1, core: None };
+        }
+        let inner = Arc::new(Inner {
+            shared: Mutex::new(Shared { job: None, seq: 0, active: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            region: Mutex::new(()),
+        });
+        let mut handles = Vec::with_capacity(t - 1);
+        for _ in 0..t - 1 {
+            let inner = inner.clone();
+            handles.push(std::thread::spawn(move || worker_loop(&inner)));
+        }
+        Pool { threads: t, core: Some(Arc::new(PoolCore { inner, handles: Mutex::new(handles) })) }
     }
 
     /// The single-threaded pool: every call runs inline on the caller.
     pub fn serial() -> Self {
-        Pool { threads: 1 }
+        Pool { threads: 1, core: None }
     }
 
     /// Pool sized to the machine (`available_parallelism`).
@@ -105,17 +241,24 @@ impl Pool {
             return vec![f(0..n)];
         }
         let ranges = self.ranges(n);
-        let f = &f; // share one &F across the spawned closures
-        std::thread::scope(|s| {
-            let handles: Vec<_> = ranges
-                .into_iter()
-                .map(|r| s.spawn(move || f(r)))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("pool worker panicked"))
-                .collect()
-        })
+        if ranges.len() == 1 {
+            return vec![f(0..n)];
+        }
+        let total = ranges.len();
+        let mut out: Vec<Option<R>> = (0..total).map(|_| None).collect();
+        {
+            let slots = SyncPtr(out.as_mut_ptr());
+            let ranges = &ranges;
+            let f = &f;
+            let task = move |t: usize| {
+                let r = f(ranges[t].clone());
+                // SAFETY: task index t writes exactly slot t; indices are
+                // claimed at most once, so no two writers alias.
+                unsafe { *slots.0.add(t) = Some(r) };
+            };
+            self.run_region(total, &task);
+        }
+        out.into_iter().map(|r| r.expect("pool task completed")).collect()
     }
 
     /// Partition the row-major buffer `data` (`rows x cols`) into
@@ -131,15 +274,145 @@ impl Pool {
             return;
         }
         let ranges = self.ranges(rows);
-        let f = &f; // share one &F across the spawned closures
-        std::thread::scope(|s| {
-            let mut rest: &mut [f32] = data;
-            for r in ranges {
-                let (head, tail) = rest.split_at_mut((r.end - r.start) * cols);
-                rest = tail;
-                s.spawn(move || f(r.start, head));
+        if ranges.len() == 1 {
+            f(0, data);
+            return;
+        }
+        let base = SyncPtr(data.as_mut_ptr());
+        let ranges = &ranges;
+        let f = &f;
+        let task = move |t: usize| {
+            let r = &ranges[t];
+            // SAFETY: row ranges are disjoint, so the chunks never alias.
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(r.start * cols), (r.end - r.start) * cols)
+            };
+            f(r.start, chunk);
+        };
+        self.run_region(ranges.len(), &task);
+    }
+
+    /// Execute one parallel region: publish `total` tasks to the parked
+    /// workers, claim tasks on the calling thread too, and return only
+    /// once every task ran and every worker left the region.
+    fn run_region(&self, total: usize, task: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        let Some(core) = &self.core else {
+            for t in 0..total {
+                task(t);
             }
-        });
+            return;
+        };
+        if total == 1 {
+            task(0);
+            return;
+        }
+        // One region at a time: a nested or concurrent region on the
+        // same pool runs inline on its caller instead of deadlocking on
+        // workers that are busy with the outer region.  (Poisoning can
+        // only come from a past caller-side task panic; the pool state
+        // itself is still consistent, so recover the guard.)
+        let _region = match core.inner.region.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                for t in 0..total {
+                    task(t);
+                }
+                return;
+            }
+        };
+        let next = AtomicUsize::new(0);
+        let panicked = AtomicBool::new(false);
+        let task_ref: &(dyn Fn(usize) + Sync) = task;
+        let job = JobRef {
+            call: call_erased,
+            ctx: (&task_ref) as *const &(dyn Fn(usize) + Sync) as *const (),
+            next: &next,
+            panicked: &panicked,
+            total,
+        };
+        {
+            let mut s = core.inner.shared.lock().unwrap_or_else(|e| e.into_inner());
+            s.job = Some(job);
+            s.seq = s.seq.wrapping_add(1);
+        }
+        core.inner.work_cv.notify_all();
+        {
+            // The guard quiesces on every exit path — including a task
+            // panicking on this thread — so no worker can touch the
+            // job's stack pointers after this frame starts unwinding.
+            let _quiesce = Quiesce { inner: &core.inner };
+            loop {
+                let t = next.fetch_add(1, Ordering::SeqCst);
+                if t >= total {
+                    break;
+                }
+                task(t);
+            }
+        }
+        if panicked.load(Ordering::SeqCst) {
+            panic!("pool worker panicked");
+        }
+    }
+}
+
+/// Waits until no worker is inside the current region, then retires the
+/// job.  Runs on drop so unwinding callers still quiesce.
+struct Quiesce<'a> {
+    inner: &'a Inner,
+}
+
+impl Drop for Quiesce<'_> {
+    fn drop(&mut self) {
+        let mut s = self.inner.shared.lock().unwrap_or_else(|e| e.into_inner());
+        while s.active > 0 {
+            s = self.inner.done_cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        s.job = None;
+    }
+}
+
+/// A worker: park on `work_cv`, drain any newly published region by
+/// claiming task indices, park again.  A panicking task is caught and
+/// flagged (the region caller re-raises), so one bad task never shrinks
+/// the pool.
+fn worker_loop(inner: &Inner) {
+    let mut seen = 0u64;
+    let mut s = inner.shared.lock().unwrap_or_else(|e| e.into_inner());
+    loop {
+        if s.shutdown {
+            return;
+        }
+        if s.seq != seen {
+            seen = s.seq;
+            if let Some(job) = s.job {
+                s.active += 1;
+                drop(s);
+                loop {
+                    // SAFETY: run_region keeps these pointers alive while
+                    // `active > 0` (its quiesce guard waits for us).
+                    let t = unsafe { &*job.next }.fetch_add(1, Ordering::SeqCst);
+                    if t >= job.total {
+                        break;
+                    }
+                    if catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.ctx, t) }))
+                        .is_err()
+                    {
+                        unsafe { &*job.panicked }.store(true, Ordering::SeqCst);
+                    }
+                }
+                s = inner.shared.lock().unwrap_or_else(|e| e.into_inner());
+                s.active -= 1;
+                if s.active == 0 {
+                    inner.done_cv.notify_all();
+                }
+                continue;
+            }
+        }
+        s = inner.work_cv.wait(s).unwrap_or_else(|e| e.into_inner());
     }
 }
 
@@ -203,5 +476,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn one_pool_serves_many_regions() {
+        // the persistent-pool contract: repeated regions of different
+        // shapes reuse the same parked workers and stay correct
+        for threads in [2, 3, 8] {
+            let pool = Pool::new(threads);
+            for round in 0..50 {
+                let n = 7 + round % 40;
+                let parts = pool.map_ranges(n, |r| r.sum::<usize>());
+                let total: usize = parts.into_iter().sum();
+                assert_eq!(total, n * (n - 1) / 2, "round {round} t={threads}");
+                let mut buf = vec![0.0f32; n * 3];
+                pool.for_each_row_chunk(&mut buf, n, 3, |row0, chunk| {
+                    for (di, row) in chunk.chunks_mut(3).enumerate() {
+                        row.iter_mut().for_each(|v| *v = (row0 + di) as f32);
+                    }
+                });
+                for i in 0..n {
+                    assert_eq!(buf[i * 3], i as f32, "round {round} t={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clones_share_the_same_workers() {
+        let pool = Pool::new(4);
+        let clone = pool.clone();
+        let a = pool.map_ranges(33, |r| r.len());
+        let b = clone.map_ranges(33, |r| r.len());
+        assert_eq!(a, b);
+        drop(pool);
+        // workers outlive the original handle while a clone exists
+        assert_eq!(clone.map_ranges(10, |r| r.len()).iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn nested_region_runs_inline_not_deadlocked() {
+        let pool = Pool::new(2);
+        let outer = pool.map_ranges(4, |r| {
+            // a nested region on the same pool must complete (inline)
+            let inner: usize = pool.map_ranges(6, |q| q.len()).into_iter().sum();
+            (r.len(), inner)
+        });
+        let total_rows: usize = outer.iter().map(|(len, _)| len).sum();
+        assert_eq!(total_rows, 4, "outer ranges must cover 0..4");
+        for (_, inner) in outer {
+            assert_eq!(inner, 6, "nested region must cover 0..6");
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::new(4);
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map_ranges(64, |r| {
+                if r.start >= 16 {
+                    panic!("task boom");
+                }
+                r.len()
+            })
+        }));
+        assert!(boom.is_err(), "panic in a task must propagate to the caller");
+        // the pool is still usable afterwards (workers caught the panic)
+        let parts = pool.map_ranges(20, |r| r.len());
+        assert_eq!(parts.into_iter().sum::<usize>(), 20);
     }
 }

@@ -18,21 +18,22 @@
 //!   of the key — a seed sweep over one CSV shares a single resident
 //!   copy.
 //!
-//! A shard loads a missing dataset *while holding its lock*: a burst of
-//! identical requests costs exactly one load (no thundering herd), at
-//! the price of blocking other keys that hash to the same shard for the
-//! duration of the load.  That window was sized for fast in-memory
-//! synthetic generation; a cold multi-GB `file:` load stretches it, so
-//! for big-file workloads either raise [`SHARDS`] or pre-warm the entry
-//! (a per-key in-flight marker that loads outside the lock is the
-//! recorded follow-up).  Load failures (unknown synth names, unreadable
-//! files) are returned to the caller and never cached.
+//! A cold miss loads *outside* the shard lock behind a per-key
+//! in-flight marker: the first requester of a key marks it loading,
+//! releases the lock, and loads; concurrent requesters of the *same*
+//! key park on the shard's condvar and are served the finished entry
+//! (single-load-per-burst, no thundering herd), while requesters of
+//! *other* keys on the same shard sail through — a cold multi-GB
+//! `file:` load no longer stalls unrelated datasets that hash to the
+//! same shard.  Load failures (unknown synth names, unreadable files)
+//! clear the marker, wake the waiters (the next one retries the load),
+//! and are never cached.
 
 use crate::data::{DataSource, FeatureScaling};
 use crate::linalg::Matrix;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of independently locked shards.
 pub const SHARDS: usize = 8;
@@ -55,14 +56,24 @@ struct DataKey {
 }
 
 /// One shard: entries kept in most-recently-used-first order (caches are
-/// small — `cache_cap` datasets total — so a scan beats a linked map).
+/// small — `cache_cap` datasets total — so a scan beats a linked map),
+/// plus the keys currently being loaded outside the lock.
 struct Shard {
     entries: Vec<(DataKey, Arc<Matrix>)>,
+    /// Per-key in-flight markers: a key listed here has a loader running
+    /// outside the lock; same-key requesters wait on the shard condvar.
+    loading: Vec<DataKey>,
+}
+
+/// A shard and the condvar its same-key waiters park on.
+struct ShardSlot {
+    state: Mutex<Shard>,
+    loaded_cv: Condvar,
 }
 
 /// Sharded dataset cache; see the module docs.
 pub struct DatasetCache {
-    shards: Vec<Mutex<Shard>>,
+    shards: Vec<ShardSlot>,
     per_shard_cap: usize,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -85,7 +96,12 @@ impl DatasetCache {
     /// per shard), each evicting least-recently-used first.
     pub fn new(cap: usize) -> Self {
         DatasetCache {
-            shards: (0..SHARDS).map(|_| Mutex::new(Shard { entries: Vec::new() })).collect(),
+            shards: (0..SHARDS)
+                .map(|_| ShardSlot {
+                    state: Mutex::new(Shard { entries: Vec::new(), loading: Vec::new() }),
+                    loaded_cv: Condvar::new(),
+                })
+                .collect(),
             per_shard_cap: cap.div_ceil(SHARDS).max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -118,18 +134,43 @@ impl DatasetCache {
             seed: kseed,
             scaling,
         };
-        let shard = &self.shards[shard_of(&key)];
-        let mut guard = shard.lock().unwrap_or_else(|e| e.into_inner());
-        if let Some(pos) = guard.entries.iter().position(|(k, _)| *k == key) {
-            let entry = guard.entries.remove(pos);
-            let x = entry.1.clone();
-            guard.entries.insert(0, entry);
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok((x, true));
+        let slot = &self.shards[shard_of(&key)];
+        let mut guard = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(pos) = guard.entries.iter().position(|(k, _)| *k == key) {
+                let entry = guard.entries.remove(pos);
+                let x = entry.1.clone();
+                guard.entries.insert(0, entry);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((x, true));
+            }
+            if !guard.loading.contains(&key) {
+                break;
+            }
+            // someone else is loading exactly this key: park until the
+            // loader finishes (success -> hit above; failure -> the
+            // marker is gone and we become the loader)
+            guard = slot.loaded_cv.wait(guard).unwrap_or_else(|e| e.into_inner());
         }
-        let mut d = src.load(scale, seed)?;
-        scaling.apply(&mut d);
-        let x = Arc::new(d.x);
+        // mark the key in flight and load OUTSIDE the shard lock, so a
+        // slow cold load never stalls other keys on this shard; the
+        // guard clears the marker and wakes waiters on every exit path
+        // (success, load error, even a panicking loader)
+        guard.loading.push(key.clone());
+        drop(guard);
+        let unmark = UnmarkOnDrop { slot, key: &key };
+        let loaded = src.load(scale, seed).map(|mut d| {
+            scaling.apply(&mut d);
+            Arc::new(d.x)
+        });
+        // finish under one critical section — entry in, marker out — so
+        // a woken same-key waiter can never observe "no entry, no
+        // marker" after a successful load and reload it
+        let mut guard = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        std::mem::forget(unmark);
+        guard.loading.retain(|k| k != &key);
+        slot.loaded_cv.notify_all();
+        let x = loaded?;
         // a fingerprint change (edited file) makes old entries for this
         // same provenance unreachable — evict them now instead of letting
         // dead matrices squat in the LRU and inflate `entries`
@@ -150,13 +191,38 @@ impl DatasetCache {
         let entries = self
             .shards
             .iter()
-            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).entries.len())
+            .map(|s| s.state.lock().unwrap_or_else(|e| e.into_inner()).entries.len())
             .sum();
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             entries,
         }
+    }
+
+    /// Zero the hit/miss counters (the `stats reset` wire command).
+    /// Resident entries are untouched — reset re-bases the counters, it
+    /// does not cold-start the cache.
+    pub fn reset_counters(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Clears a key's in-flight marker and wakes its waiters if the loader
+/// unwinds (a panicking generator must not wedge the key forever); the
+/// normal paths disarm it with `mem::forget` and clear the marker under
+/// the same critical section that publishes the outcome.
+struct UnmarkOnDrop<'a> {
+    slot: &'a ShardSlot,
+    key: &'a DataKey,
+}
+
+impl Drop for UnmarkOnDrop<'_> {
+    fn drop(&mut self) {
+        let mut s = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.loading.retain(|k| k != self.key);
+        self.slot.loaded_cv.notify_all();
     }
 }
 
@@ -344,6 +410,65 @@ mod tests {
         }
         let s = cache.stats();
         assert_eq!((s.misses, s.hits), (1, 4));
+    }
+
+    #[test]
+    fn concurrent_cold_burst_loads_exactly_once() {
+        // 8 threads race on one cold key: the in-flight marker must
+        // collapse the burst to a single load, with every caller handed
+        // the same allocation (7 hits, 1 miss)
+        let cache = std::sync::Arc::new(DatasetCache::new(8));
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let cache = cache.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let (x, _) = cache
+                        .get_or_load(
+                            &DataSource::parse("blobs_400_4_3").unwrap(),
+                            1.0,
+                            3,
+                            FeatureScaling::None,
+                        )
+                        .unwrap();
+                    x
+                })
+            })
+            .collect();
+        let mats: Vec<Arc<Matrix>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for m in &mats[1..] {
+            assert!(Arc::ptr_eq(&mats[0], m), "burst must share one allocation");
+        }
+        let s = cache.stats();
+        assert_eq!((s.misses, s.hits, s.entries), (1, 7, 1));
+    }
+
+    #[test]
+    fn failed_load_unblocks_same_key_waiters() {
+        // a failing key must not wedge later requests for it (the
+        // marker is cleared and the next caller retries)
+        let cache = DatasetCache::new(8);
+        for _ in 0..3 {
+            assert!(get(&cache, "doesnotexist", 1.0, 0).is_err());
+        }
+        assert_eq!(cache.stats(), CacheStats::default());
+        // a real key on the same cache still works afterwards
+        assert!(get(&cache, "blobs_100_4_2", 1.0, 0).is_ok());
+    }
+
+    #[test]
+    fn reset_counters_keeps_entries() {
+        let cache = DatasetCache::new(8);
+        get(&cache, "blobs_200_4_3", 1.0, 7).unwrap();
+        get(&cache, "blobs_200_4_3", 1.0, 7).unwrap();
+        cache.reset_counters();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+        assert_eq!(s.entries, 1, "reset re-bases counters, it does not evict");
+        // the resident entry still hits
+        assert!(get(&cache, "blobs_200_4_3", 1.0, 7).unwrap().1);
     }
 
     #[test]

@@ -1,14 +1,72 @@
-//! Per-method serving metrics (protocol v3 `stats`).
+//! Per-method serving metrics (protocol v4 `stats`).
 //!
 //! Every successful `cluster` reply records its method's solve+eval
-//! latency and dissimilarity count here; the `stats` wire command
-//! exports count/min/mean/max per [`crate::solver::MethodSpec`] label.
+//! latency, its queue wait and its dissimilarity count here; the
+//! `stats` wire command exports, per [`crate::solver::MethodSpec`]
+//! label, count/min/mean/max aggregates *and* fixed-bucket latency
+//! histograms for both the solve latency and the queue wait (the
+//! aggregates show the centre, the buckets show the tail).  `stats
+//! reset` clears everything via [`MethodMetrics::reset`].
+//!
 //! One mutex over a small BTreeMap is plenty: the critical section is a
 //! map insert, vastly cheaper than the clustering job that precedes it,
 //! and the BTreeMap keeps the `stats` line deterministically ordered.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
+
+/// Upper bucket edges (milliseconds, `le` semantics) of every latency
+/// histogram; one implicit `+inf` overflow bucket follows, so each
+/// histogram has [`HIST_BUCKETS`] counts.
+pub const HIST_LE_MS: [f64; 11] =
+    [1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0];
+
+/// Bucket count of one latency histogram (the edges plus `+inf`).
+pub const HIST_BUCKETS: usize = HIST_LE_MS.len() + 1;
+
+/// The edges as a wire string (`stats` exports it once as
+/// `hist_le_ms=...` so clients need not hardcode the layout).
+pub fn hist_edges_wire() -> String {
+    let mut s = HIST_LE_MS.iter().map(|e| format!("{e}")).collect::<Vec<_>>().join(",");
+    s.push_str(",inf");
+    s
+}
+
+/// Fixed-bucket latency histogram (non-cumulative counts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LatencyHist {
+    counts: [u64; HIST_BUCKETS],
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist { counts: [0; HIST_BUCKETS] }
+    }
+}
+
+impl LatencyHist {
+    /// Count one observation of `ms` into its bucket.
+    pub fn record(&mut self, ms: f64) {
+        let b = HIST_LE_MS.iter().position(|&edge| ms <= edge).unwrap_or(HIST_LE_MS.len());
+        self.counts[b] += 1;
+    }
+
+    /// Per-bucket counts (`HIST_LE_MS` order, then the `+inf` bucket).
+    pub fn counts(&self) -> &[u64; HIST_BUCKETS] {
+        &self.counts
+    }
+
+    /// Total observations.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Wire form: the bucket counts comma-joined (same order as
+    /// [`hist_edges_wire`]).
+    pub fn wire(&self) -> String {
+        self.counts.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+    }
+}
 
 /// Aggregate for one method label.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -27,11 +85,15 @@ pub struct MethodAgg {
     pub dissim_sum: u64,
     /// Largest dissimilarity count of one job.
     pub dissim_max: u64,
+    /// Solve+eval latency distribution.
+    pub solve_hist: LatencyHist,
+    /// Queue-wait distribution (time between accept and worker pickup).
+    pub queue_hist: LatencyHist,
 }
 
 impl MethodAgg {
-    fn first(ms: f64, dissim: u64) -> Self {
-        MethodAgg {
+    fn first(ms: f64, dissim: u64, queue_ms: f64) -> Self {
+        let mut agg = MethodAgg {
             count: 1,
             ms_min: ms,
             ms_sum: ms,
@@ -39,10 +101,15 @@ impl MethodAgg {
             dissim_min: dissim,
             dissim_sum: dissim,
             dissim_max: dissim,
-        }
+            solve_hist: LatencyHist::default(),
+            queue_hist: LatencyHist::default(),
+        };
+        agg.solve_hist.record(ms);
+        agg.queue_hist.record(queue_ms);
+        agg
     }
 
-    fn add(&mut self, ms: f64, dissim: u64) {
+    fn add(&mut self, ms: f64, dissim: u64, queue_ms: f64) {
         self.count += 1;
         self.ms_min = self.ms_min.min(ms);
         self.ms_sum += ms;
@@ -50,6 +117,8 @@ impl MethodAgg {
         self.dissim_min = self.dissim_min.min(dissim);
         self.dissim_sum += dissim;
         self.dissim_max = self.dissim_max.max(dissim);
+        self.solve_hist.record(ms);
+        self.queue_hist.record(queue_ms);
     }
 
     /// Mean latency in milliseconds.
@@ -75,13 +144,15 @@ impl MethodMetrics {
         Self::default()
     }
 
-    /// Record one served job for `label`.
-    pub fn record(&self, label: &str, ms: f64, dissim: u64) {
+    /// Record one served job for `label`: solve+eval latency `ms`,
+    /// dissimilarity count, and the job's queue wait `queue_ms`
+    /// (`0.0` when the request never queued, e.g. direct library calls).
+    pub fn record(&self, label: &str, ms: f64, dissim: u64, queue_ms: f64) {
         let mut map = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         match map.get_mut(label) {
-            Some(agg) => agg.add(ms, dissim),
+            Some(agg) => agg.add(ms, dissim, queue_ms),
             None => {
-                map.insert(label.to_string(), MethodAgg::first(ms, dissim));
+                map.insert(label.to_string(), MethodAgg::first(ms, dissim, queue_ms));
             }
         }
     }
@@ -90,6 +161,11 @@ impl MethodMetrics {
     pub fn snapshot(&self) -> Vec<(String, MethodAgg)> {
         let map = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         map.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Drop every aggregate (the `stats reset` wire command).
+    pub fn reset(&self) {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).clear();
     }
 }
 
@@ -100,9 +176,9 @@ mod tests {
     #[test]
     fn aggregates_count_min_mean_max() {
         let m = MethodMetrics::new();
-        m.record("OneBatch-nniw", 2.0, 100);
-        m.record("OneBatch-nniw", 6.0, 300);
-        m.record("OneBatch-nniw", 4.0, 200);
+        m.record("OneBatch-nniw", 2.0, 100, 0.0);
+        m.record("OneBatch-nniw", 6.0, 300, 0.0);
+        m.record("OneBatch-nniw", 4.0, 200, 0.0);
         let snap = m.snapshot();
         assert_eq!(snap.len(), 1);
         let (label, a) = &snap[0];
@@ -117,9 +193,9 @@ mod tests {
     #[test]
     fn snapshot_is_sorted_by_label() {
         let m = MethodMetrics::new();
-        m.record("kmc2-20", 1.0, 1);
-        m.record("FasterPAM", 1.0, 1);
-        m.record("OneBatch-nniw", 1.0, 1);
+        m.record("kmc2-20", 1.0, 1, 0.0);
+        m.record("FasterPAM", 1.0, 1, 0.0);
+        m.record("OneBatch-nniw", 1.0, 1, 0.0);
         let labels: Vec<String> = m.snapshot().into_iter().map(|(l, _)| l).collect();
         assert_eq!(labels, vec!["FasterPAM", "OneBatch-nniw", "kmc2-20"]);
     }
@@ -132,7 +208,7 @@ mod tests {
                 let m = m.clone();
                 std::thread::spawn(move || {
                     for _ in 0..50 {
-                        m.record("Random", i as f64, 10);
+                        m.record("Random", i as f64, 10, 0.5);
                     }
                 })
             })
@@ -143,5 +219,51 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap[0].1.count, 400);
         assert_eq!(snap[0].1.dissim_sum, 4000);
+        assert_eq!(snap[0].1.solve_hist.total(), 400);
+        assert_eq!(snap[0].1.queue_hist.total(), 400);
+    }
+
+    #[test]
+    fn histogram_buckets_latencies() {
+        let mut h = LatencyHist::default();
+        // one per edge-bounded bucket boundary case, plus the overflow
+        h.record(0.5); // le 1
+        h.record(1.0); // le 1 (le semantics: boundary counts down)
+        h.record(1.5); // le 2
+        h.record(9.0); // le 10
+        h.record(99_999.0); // +inf
+        let c = h.counts();
+        assert_eq!(c[0], 2);
+        assert_eq!(c[1], 1);
+        assert_eq!(c[3], 1);
+        assert_eq!(c[HIST_BUCKETS - 1], 1);
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.wire().split(',').count(), HIST_BUCKETS);
+        assert_eq!(hist_edges_wire().split(',').count(), HIST_BUCKETS);
+        assert!(hist_edges_wire().ends_with(",inf"));
+    }
+
+    #[test]
+    fn solve_and_queue_histograms_fill_separately() {
+        let m = MethodMetrics::new();
+        m.record("OneBatch-nniw", 30.0, 10, 0.2); // solve: le 50, queue: le 1
+        m.record("OneBatch-nniw", 600.0, 10, 40.0); // solve: le 1000, queue: le 50
+        let (_, a) = &m.snapshot()[0];
+        assert_eq!(a.solve_hist.counts()[5], 1, "30 ms -> le 50");
+        assert_eq!(a.solve_hist.counts()[9], 1, "600 ms -> le 1000");
+        assert_eq!(a.queue_hist.counts()[0], 1, "0.2 ms -> le 1");
+        assert_eq!(a.queue_hist.counts()[5], 1, "40 ms -> le 50");
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let m = MethodMetrics::new();
+        m.record("Random", 1.0, 1, 0.0);
+        assert_eq!(m.snapshot().len(), 1);
+        m.reset();
+        assert!(m.snapshot().is_empty());
+        // and the registry is usable again afterwards
+        m.record("Random", 2.0, 2, 0.0);
+        assert_eq!(m.snapshot()[0].1.count, 1);
     }
 }

@@ -1,20 +1,32 @@
 //! Clustering job server: a std::net TCP service with a bounded job
 //! queue, a fixed worker pool (tokio is unavailable offline;
 //! thread-per-worker over a bounded queue is the right shape for
-//! CPU-bound jobs anyway), and a sharded dataset cache.
+//! CPU-bound jobs anyway), cost-weighted admission, and a sharded
+//! dataset cache that loads cold misses outside its locks.
 //!
-//! # Line protocol v3 (one request line per connection, one reply line)
+//! # Line protocol v4 (one request line per connection, one reply line)
 //!
 //! ```text
 //! -> cluster dataset=blobs_2000_8_5 k=5 method=FasterPAM seed=3 threads=4
-//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 source=synth:blobs_2000_8_5 served_ms=50.1
+//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 source=synth:blobs_2000_8_5 cost=4000000 queue_ms=0.2 served_ms=50.1
 //! -> cluster dataset=file:/data/points.csv metric=l2 scale_features=minmax k=3
-//! <- ok method=OneBatch-nniw cache=hit medoids=... objective=... seconds=... dissim=... swaps=... source=file:/data/points.csv served_ms=1.9
+//! <- ok method=OneBatch-nniw cache=hit medoids=... objective=... seconds=... dissim=... swaps=... source=file:/data/points.csv cost=61200 queue_ms=0.1 served_ms=1.9
 //! -> stats
-//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 method.FasterPAM.count=2 method.FasterPAM.ms_min=... method.FasterPAM.ms_mean=... method.FasterPAM.ms_max=... method.FasterPAM.dissim_min=... method.FasterPAM.dissim_mean=... method.FasterPAM.dissim_max=... served_ms=0.0
+//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 budget_total=... budget_used=... hist_le_ms=1,2,... method.FasterPAM.count=2 ... method.FasterPAM.ms_hist=0,1,... method.FasterPAM.queue_hist=2,0,... queue_ms=0.0 served_ms=0.0
+//! -> stats reset
+//! <- ok queue_ms=0.0 served_ms=0.0
 //! -> ping
-//! <- pong
+//! <- pong queue_ms=0.0 served_ms=0.0
 //! ```
+//!
+//! v4 over v3: every v3 reply field is byte-identical and in the same
+//! position; `cluster` replies append `cost=` (the work units the job
+//! was admitted at, see [`JobCost`]), every connection-served reply
+//! appends `queue_ms=` (accept-to-worker-pickup wait) before
+//! `served_ms=`, `stats` gains the admission-budget gauges, fixed
+//! latency histograms per method (solve + queue wait; bucket edges in
+//! `hist_le_ms=`), and a `stats reset` subcommand that re-bases the
+//! method aggregates and cache counters.
 //!
 //! `cluster` keys:
 //!
@@ -54,23 +66,41 @@
 //!   `method=` is an error, not silently ignored — as is any
 //!   present-but-unparsable value (`err ...` replies).
 //!
-//! `stats` reports the cache counters plus, per served method label,
-//! count/min/mean/max aggregates of solve+eval latency (ms) and
-//! dissimilarity computations ([`MethodMetrics`]).
+//! `stats` reports the cache counters and admission-budget gauges plus,
+//! per served method label, count/min/mean/max aggregates of solve+eval
+//! latency (ms) and dissimilarity computations, and fixed-bucket
+//! histograms of solve latency and queue wait ([`MethodMetrics`]).
+//! `stats reset` zeroes the method aggregates and cache counters.
 //!
 //! # Concurrency model
 //!
-//! * [`ServerConfig::workers`] long-lived worker threads drain accepted
+//! * [`ServerConfig::workers`] long-lived worker threads (`0` =
+//!   auto-detect, like `Pool::new(0)` / `--threads 0`) drain accepted
 //!   connections from an mpsc queue — cross-job parallelism;
 //! * each `cluster` job may additionally ask for data parallelism via
-//!   the `threads=` key (a [`crate::runtime::Pool`] per job);
-//! * admission is a **single atomic** `fetch_update` on the in-flight
-//!   counter (queued + running): a burst of connections can never push
-//!   it past `queue_cap`, and rejected connections get an immediate
-//!   `err queue full` line instead of unbounded queueing;
-//! * the dataset cache is sharded ([`cache::SHARDS`] locks), so jobs for
-//!   different datasets never contend on one mutex, and a burst for the
-//!   same new dataset generates it exactly once.
+//!   the `threads=` key (a [`crate::runtime::Pool`] of persistent
+//!   workers per job);
+//! * connection admission is a **single atomic** `fetch_update` on the
+//!   in-flight counter (queued + running): a burst of connections can
+//!   never push it past `queue_cap` (`0` = 4x workers), and rejected
+//!   connections get an immediate `err queue full` line instead of
+//!   unbounded queueing;
+//! * **job admission is weighted by cost**: every `cluster` job is
+//!   priced via [`MethodSpec::cost`] over the source's predicted rows
+//!   ([`crate::data::DataSource::expected_rows`] — catalogue names and
+//!   `file:...?rows=N` hints price *before any I/O*; unpredictable
+//!   sources price right after the load) and must reserve its work
+//!   units from the [`AdmissionBudget`] ([`ServerConfig::budget`]).
+//!   Many cheap OneBatch jobs are admitted concurrently; one huge
+//!   full-matrix job consumes most of the budget; an over-budget job
+//!   gets an immediate `err over budget ... cost=...` reply.  An
+//!   oversized job may still run when the budget is completely idle, so
+//!   a small budget can never brick a legitimate lone job;
+//! * the dataset cache is sharded ([`cache::SHARDS`] locks) and loads
+//!   cold misses *outside* the shard lock behind per-key in-flight
+//!   markers: a burst for the same new dataset loads it exactly once,
+//!   and a slow cold `file:` load no longer stalls unrelated datasets
+//!   on the same shard.
 
 pub mod cache;
 pub mod metrics;
@@ -84,11 +114,12 @@ use crate::data::{DataSource, FeatureScaling};
 use crate::dissim::{DissimCounter, Metric};
 use crate::eval;
 use crate::runtime::Pool;
-use crate::solver::{self, MethodSpec, SolveSpec};
+use crate::solver::{self, JobCost, MethodSpec, SolveSpec, MAX_JOB_COST};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::num::NonZeroUsize;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
@@ -97,17 +128,151 @@ use std::time::Instant;
 pub struct ServerConfig {
     /// Bind address, e.g. "127.0.0.1:7878" (port 0 = ephemeral).
     pub addr: String,
-    /// Worker threads draining the job queue (>= 1).
+    /// Worker threads draining the job queue; `0` = auto-detect
+    /// (`available_parallelism`), matching `Pool::new(0)` / `--threads 0`.
     pub workers: usize,
-    /// Max in-flight jobs (queued + running) before backpressure.
+    /// Max in-flight connections (queued + running) before backpressure;
+    /// `0` = 4x the resolved worker count.
     pub queue_cap: usize,
     /// Dataset-cache budget in datasets (split across shards, LRU).
     pub cache_cap: usize,
+    /// Weighted-admission budget in work units (see [`JobCost`]);
+    /// `0` = 4x [`MAX_JOB_COST`] (room for one limit-sized full-matrix
+    /// job plus plenty of cheap OneBatch traffic).
+    pub budget: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, queue_cap: 16, cache_cap: 32 }
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            queue_cap: 16,
+            cache_cap: 32,
+            budget: 0,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// `workers` with `0` resolved to the detected core count.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+        } else {
+            self.workers
+        }
+    }
+
+    /// `queue_cap` with `0` resolved to 4x the resolved worker count.
+    pub fn resolved_queue_cap(&self) -> usize {
+        if self.queue_cap == 0 {
+            self.resolved_workers() * 4
+        } else {
+            self.queue_cap
+        }
+    }
+
+    /// `budget` with `0` resolved to the default (4x [`MAX_JOB_COST`]).
+    pub fn resolved_budget(&self) -> u64 {
+        if self.budget == 0 {
+            4 * MAX_JOB_COST
+        } else {
+            self.budget
+        }
+    }
+}
+
+/// The weighted-admission budget: a pool of work units that every
+/// in-flight `cluster` job holds its [`JobCost::units`] from, released
+/// when the job's [`AdmissionPermit`] drops.
+///
+/// A job is admitted when its units fit the remaining budget — or when
+/// the budget is completely idle, so one oversized-but-admissible job
+/// (e.g. OneBatchPAM over millions of rows) can still run alone instead
+/// of being starved forever by a budget smaller than itself.
+pub struct AdmissionBudget {
+    total: u64,
+    used: AtomicU64,
+}
+
+impl AdmissionBudget {
+    /// Budget of `total` work units.
+    pub fn new(total: u64) -> Self {
+        AdmissionBudget { total: total.max(1), used: AtomicU64::new(0) }
+    }
+
+    /// Total work units.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Units currently held by in-flight jobs.
+    pub fn used(&self) -> u64 {
+        self.used.load(Ordering::SeqCst)
+    }
+
+    /// Reserve `units` (single-RMW, no check-then-increment window) or
+    /// fail with the units currently in use.
+    pub fn try_admit(&self, units: u64) -> Result<AdmissionPermit<'_>, u64> {
+        self.used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
+                if used == 0 || used.saturating_add(units) <= self.total {
+                    Some(used.saturating_add(units))
+                } else {
+                    None
+                }
+            })
+            .map(|_| AdmissionPermit { budget: self, units })
+    }
+}
+
+/// RAII hold on [`AdmissionBudget`] units; released on drop (job end).
+pub struct AdmissionPermit<'a> {
+    budget: &'a AdmissionBudget,
+    units: u64,
+}
+
+impl AdmissionPermit<'_> {
+    /// The units this permit reserved (the reply's `cost=` field).
+    pub fn units(&self) -> u64 {
+        self.units
+    }
+
+    /// Atomically swap this permit's reservation for `new_units` — one
+    /// RMW, so there is no window where the old units read as released
+    /// (a release-then-readmit would let a concurrent oversized job in
+    /// through the idle exception while this job is still in flight).
+    /// Succeeds when the new units fit alongside the *other* holders,
+    /// or when this permit is the only holder (the same lone-job
+    /// exception as [`AdmissionBudget::try_admit`]).  On failure the
+    /// old reservation is kept and the other holders' units are
+    /// returned.
+    pub fn reprice(&mut self, new_units: u64) -> Result<(), u64> {
+        let old = self.units;
+        let total = self.budget.total;
+        self.budget
+            .used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
+                let others = used.saturating_sub(old);
+                if others == 0 || others.saturating_add(new_units) <= total {
+                    Some(others.saturating_add(new_units))
+                } else {
+                    None
+                }
+            })
+            .map(|_| self.units = new_units)
+            .map_err(|used| used.saturating_sub(old))
+    }
+}
+
+impl Drop for AdmissionPermit<'_> {
+    fn drop(&mut self) {
+        // saturating: an idle-exception admit may have pushed `used`
+        // past `total`, but it can never underflow on release
+        let _ = self.budget.used.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
+            Some(used.saturating_sub(self.units))
+        });
     }
 }
 
@@ -118,12 +283,18 @@ pub struct ServerState {
     pub cache: DatasetCache,
     /// Per-method latency / dissim aggregates (the `stats` command).
     pub methods: MethodMetrics,
+    /// Weighted admission budget every `cluster` job reserves from.
+    pub admission: AdmissionBudget,
 }
 
 impl ServerState {
     /// Fresh state sized from the config.
     pub fn new(cfg: &ServerConfig) -> Self {
-        ServerState { cache: DatasetCache::new(cfg.cache_cap), methods: MethodMetrics::new() }
+        ServerState {
+            cache: DatasetCache::new(cfg.cache_cap),
+            methods: MethodMetrics::new(),
+            admission: AdmissionBudget::new(cfg.resolved_budget()),
+        }
     }
 }
 
@@ -180,8 +351,62 @@ fn parse_key<T: std::str::FromStr>(
 /// apply the same bound without depending on the server).
 pub use crate::solver::FULL_MATRIX_LIMIT;
 
+/// Format the one admission error a priced-but-rejected job receives.
+fn over_budget(cost: JobCost, used: u64, budget: &AdmissionBudget) -> String {
+    format!(
+        "over budget: cost={} exceeds the {} free of {} work units (in use {used})",
+        cost.units,
+        budget.total().saturating_sub(used),
+        budget.total(),
+    )
+}
+
+/// Price one job at `n` rows and apply the feasibility ceiling
+/// ([`JobCost::admissible`] — the old `FULL_MATRIX_LIMIT` rule).
+fn checked_cost(
+    method: &MethodSpec,
+    n: usize,
+    k: usize,
+    m: Option<usize>,
+) -> Result<JobCost, String> {
+    let cost = method.cost(n, k, m);
+    if !cost.admissible() {
+        return Err(format!(
+            "method {} infeasible at n={n} (limit {FULL_MATRIX_LIMIT}, cost={})",
+            method.label(),
+            cost.units
+        ));
+    }
+    Ok(cost)
+}
+
+/// The admission decision for one job at `n` rows: price it, apply the
+/// feasibility ceiling, and reserve the units from the budget.  Shared
+/// by the predicted (pre-I/O) and post-load paths so the two can never
+/// diverge.
+fn price_and_admit<'a>(
+    state: &'a ServerState,
+    method: &MethodSpec,
+    n: usize,
+    k: usize,
+    m: Option<usize>,
+) -> Result<AdmissionPermit<'a>, String> {
+    let cost = checked_cost(method, n, k, m)?;
+    state
+        .admission
+        .try_admit(cost.units)
+        .map_err(|used| over_budget(cost, used, &state.admission))
+}
+
 /// Execute one `cluster` request (shared by server workers and tests).
-pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Result<String, String> {
+/// `queue_ms` is the accept-to-pickup wait the connection experienced
+/// (`0.0` for direct library calls); it feeds the per-method queue-wait
+/// histogram.
+pub fn handle_cluster(
+    state: &ServerState,
+    kv: &HashMap<String, String>,
+    queue_ms: f64,
+) -> Result<String, String> {
     let dataset = kv.get("dataset").cloned().unwrap_or_else(|| "blobs_1000_8_5".into());
     let src = DataSource::parse(&dataset).map_err(|e| e.to_string())?;
     let k: usize = parse_key(kv, "k")?.unwrap_or(10);
@@ -257,33 +482,42 @@ pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Resu
         return Err("max_passes must be >= 1".into());
     }
 
-    // reject infeasible (method, size) combinations *before* paying for
-    // a load or touching the cache — the size is predictable for every
-    // catalogue source and for files carrying a `?rows=` hint
-    if !method.feasible_large_scale() {
-        if let Some(n) = src.expected_rows(scale) {
-            if n > FULL_MATRIX_LIMIT {
-                return Err(format!(
-                    "method {} infeasible at n={n} (limit {FULL_MATRIX_LIMIT})",
-                    method.label()
-                ));
-            }
-        }
-    }
+    // price the job *before* paying for a load or touching the cache —
+    // the size is predictable for every catalogue source and for files
+    // carrying a `?rows=` hint, so both the per-job feasibility ceiling
+    // (the old FULL_MATRIX_LIMIT rule, now a special case of pricing)
+    // and the weighted budget apply with zero I/O
+    let expected = src.expected_rows(scale);
+    let mut permit = match expected {
+        Some(n) => Some(price_and_admit(state, &method, n, k, m)?),
+        None => None,
+    };
 
     let (x, hit) = state.cache.get_or_load(&src, scale, seed, scaling).map_err(|e| e.to_string())?;
     if x.rows <= k + 1 {
         return Err(format!("dataset too small (n={}) for k={k}", x.rows));
     }
-    if !method.feasible_large_scale() && x.rows > FULL_MATRIX_LIMIT {
-        // backstop for sources without a size prediction (hint-less
-        // files, unknown synth names that still loaded)
-        return Err(format!(
-            "method {} infeasible at n={} (limit {FULL_MATRIX_LIMIT})",
-            method.label(),
-            x.rows
-        ));
+    if expected != Some(x.rows) {
+        // the prediction was absent (hint-less file, unknown synth name)
+        // or wrong (a client-supplied ?rows= hint is never validated
+        // against the loaded bytes): reprice at the actual row count so
+        // a lying hint cannot smuggle a full-matrix job past the
+        // feasibility ceiling or hold a too-small reservation
+        match permit.as_mut() {
+            // atomic swap — no window where this job's units read as
+            // released (which would let an oversized job in through the
+            // budget's idle exception while this one is still in flight)
+            Some(p) => {
+                let cost = checked_cost(&method, x.rows, k, m)?;
+                p.reprice(cost.units)
+                    .map_err(|used| over_budget(cost, used, &state.admission))?;
+            }
+            None => permit = Some(price_and_admit(state, &method, x.rows, k, m)?),
+        }
     }
+    // the permit's units are the reply's cost=; held until the solve
+    // finishes (end of this function), when the drop releases them
+    let permit = permit.expect("job priced and admitted");
 
     let mut spec = SolveSpec::new(method, k, seed);
     spec.metric = metric;
@@ -300,15 +534,17 @@ pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Resu
     let r = solver::solve(&x, &spec, &backend).map_err(|e| e.to_string())?;
     let obj = eval::objective(&x, &r.medoids, &DissimCounter::new(metric));
     // per-method aggregates cover solve + eval (time attributable to the
-    // method), not the dataset load a cache miss happens to pay
+    // method), not the dataset load a cache miss happens to pay; the
+    // queue wait is recorded alongside for the tail histograms
     state.methods.record(
         &spec.method.label(),
         solve_started.elapsed().as_secs_f64() * 1e3,
         r.stats.dissim_count,
+        queue_ms,
     );
     let meds: Vec<String> = r.medoids.iter().map(|m| m.to_string()).collect();
     Ok(format!(
-        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={} source={}",
+        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={} source={} cost={}",
         spec.method.label(),
         if hit { "hit" } else { "miss" },
         meds.join(","),
@@ -316,38 +552,63 @@ pub fn handle_cluster(state: &ServerState, kv: &HashMap<String, String>) -> Resu
         r.stats.dissim_count,
         r.stats.swap_count,
         src.canon(),
+        permit.units(),
     ))
 }
 
-/// Dispatch one request line to a reply line.
+/// Dispatch one request line to a reply line (no queue: direct library
+/// callers and tests; wire connections go through [`handle_line_queued`]
+/// so the queue wait reaches the histograms).
 pub fn handle_line(state: &ServerState, line: &str) -> String {
+    handle_line_queued(state, line, 0.0)
+}
+
+/// Dispatch one request line to a reply line, carrying the queue wait
+/// the connection experienced before a worker picked it up.
+pub fn handle_line_queued(state: &ServerState, line: &str, queue_ms: f64) -> String {
     let parts: Vec<&str> = line.split_whitespace().collect();
     match parts.first().copied() {
         Some("ping") => "pong".into(),
-        Some("cluster") => match handle_cluster(state, &parse_kv(&parts[1..])) {
+        Some("cluster") => match handle_cluster(state, &parse_kv(&parts[1..]), queue_ms) {
             Ok(r) => r,
             Err(e) => format!("err {e}"),
         },
+        // v4: `stats reset` re-bases the method aggregates + cache
+        // counters (entries stay resident; the budget gauge is live)
+        Some("stats") if parts.get(1).copied() == Some("reset") => {
+            state.methods.reset();
+            state.cache.reset_counters();
+            "ok".into()
+        }
         Some("stats") => {
             let s = state.cache.stats();
             let mut line = format!(
-                "ok cache_hits={} cache_misses={} cache_entries={}",
-                s.hits, s.misses, s.entries
+                "ok cache_hits={} cache_misses={} cache_entries={} \
+                 budget_total={} budget_used={} hist_le_ms={}",
+                s.hits,
+                s.misses,
+                s.entries,
+                state.admission.total(),
+                state.admission.used(),
+                metrics::hist_edges_wire(),
             );
-            // v3: per-method aggregates, label-sorted for determinism
+            // per-method aggregates, label-sorted for determinism
             for (label, a) in state.methods.snapshot() {
                 line.push_str(&format!(
                     " method.{label}.count={} \
                      method.{label}.ms_min={:.3} method.{label}.ms_mean={:.3} \
                      method.{label}.ms_max={:.3} method.{label}.dissim_min={} \
-                     method.{label}.dissim_mean={:.1} method.{label}.dissim_max={}",
+                     method.{label}.dissim_mean={:.1} method.{label}.dissim_max={} \
+                     method.{label}.ms_hist={} method.{label}.queue_hist={}",
                     a.count,
                     a.ms_min,
                     a.ms_mean(),
                     a.ms_max,
                     a.dissim_min,
                     a.dissim_mean(),
-                    a.dissim_max
+                    a.dissim_max,
+                    a.solve_hist.wire(),
+                    a.queue_hist.wire(),
                 ));
             }
             line
@@ -371,7 +632,10 @@ pub fn handle_line(state: &ServerState, line: &str) -> String {
 const IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
 
 /// Serve one accepted connection: read a line, dispatch, reply.
-fn handle_connection(state: &ServerState, stream: TcpStream) {
+/// `queued_at` is when the accept loop enqueued the connection; the
+/// difference to now is the job's reported + histogrammed queue wait.
+fn handle_connection(state: &ServerState, stream: TcpStream, queued_at: Instant) {
+    let queue_ms = queued_at.elapsed().as_secs_f64() * 1e3;
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let Ok(clone) = stream.try_clone() else { return };
@@ -379,9 +643,13 @@ fn handle_connection(state: &ServerState, stream: TcpStream) {
     let mut line = String::new();
     if reader.read_line(&mut line).is_ok() && !line.trim().is_empty() {
         let started = Instant::now();
-        let reply = handle_line(state, line.trim());
+        let reply = handle_line_queued(state, line.trim(), queue_ms);
         let mut s = stream;
-        let _ = writeln!(s, "{reply} served_ms={:.1}", started.elapsed().as_secs_f64() * 1e3);
+        let _ = writeln!(
+            s,
+            "{reply} queue_ms={queue_ms:.1} served_ms={:.1}",
+            started.elapsed().as_secs_f64() * 1e3
+        );
     }
 }
 
@@ -392,13 +660,14 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
     let stop = Arc::new(AtomicBool::new(false));
     let inflight = Arc::new(AtomicUsize::new(0));
     let state = Arc::new(ServerState::new(&cfg));
-    let queue_cap = cfg.queue_cap.max(1);
-    let worker_count = cfg.workers.max(1);
+    // the resolved_* accessors own the >= 1 invariant (0 means auto)
+    let queue_cap = cfg.resolved_queue_cap();
+    let worker_count = cfg.resolved_workers();
 
     // Bounded job queue: admission reserves a slot in `inflight` before
     // enqueueing; the worker releases it when the job finishes, so
     // queued + running <= queue_cap always holds.
-    let (tx, rx) = mpsc::channel::<TcpStream>();
+    let (tx, rx) = mpsc::channel::<(TcpStream, Instant)>();
     let rx = Arc::new(Mutex::new(rx));
     let mut workers = Vec::with_capacity(worker_count);
     for _ in 0..worker_count {
@@ -409,11 +678,11 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
             // the guard temporary drops at the end of this statement, so
             // workers do not hold the lock while serving
             let job = rx.lock().expect("queue receiver poisoned").recv();
-            let Ok(stream) = job else { break };
+            let Ok((stream, queued_at)) = job else { break };
             let _slot = DecrementOnDrop(inflight.clone());
             // a panicking job must not shrink the long-lived pool
             let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                handle_connection(&state, stream);
+                handle_connection(&state, stream, queued_at);
             }));
         }));
     }
@@ -442,7 +711,7 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
                 let _ = writeln!(s, "err queue full");
                 continue;
             }
-            if tx.send(stream).is_err() {
+            if tx.send((stream, Instant::now())).is_err() {
                 break;
             }
         }
@@ -670,8 +939,8 @@ mod tests {
         // timing field (wall-clock varies run to run)
         let stable = |r: String| r.split(" seconds=").next().unwrap().to_string();
         assert_eq!(
-            stable(handle_cluster(&fresh_state(), &args).unwrap()),
-            stable(handle_cluster(&fresh_state(), &args).unwrap())
+            stable(handle_cluster(&fresh_state(), &args, 0.0).unwrap()),
+            stable(handle_cluster(&fresh_state(), &args, 0.0).unwrap())
         );
     }
 
@@ -684,10 +953,115 @@ mod tests {
                 ("seed", "6"),
                 ("threads", threads),
             ]);
-            let r = handle_cluster(&fresh_state(), &args).unwrap();
+            let r = handle_cluster(&fresh_state(), &args, 0.0).unwrap();
             r.split(" seconds=").next().unwrap().to_string()
         };
         assert_eq!(mk("1"), mk("4"));
+    }
+
+    #[test]
+    fn config_resolves_auto_knobs() {
+        let auto = ServerConfig { workers: 0, queue_cap: 0, budget: 0, ..Default::default() };
+        assert!(auto.resolved_workers() >= 1);
+        assert_eq!(auto.resolved_queue_cap(), auto.resolved_workers() * 4);
+        assert_eq!(auto.resolved_budget(), 4 * MAX_JOB_COST);
+        let fixed = ServerConfig { workers: 3, queue_cap: 7, budget: 99, ..Default::default() };
+        assert_eq!(fixed.resolved_workers(), 3);
+        assert_eq!(fixed.resolved_queue_cap(), 7);
+        assert_eq!(fixed.resolved_budget(), 99);
+        // workers=0 actually serves (auto-detected pool)
+        let h = serve(auto).unwrap();
+        assert!(request(h.addr, "ping").unwrap().starts_with("pong"));
+        h.shutdown();
+    }
+
+    #[test]
+    fn admission_budget_reserves_and_releases() {
+        let b = AdmissionBudget::new(100);
+        let p1 = b.try_admit(60).unwrap();
+        assert_eq!((p1.units(), b.used()), (60, 60));
+        // over the remaining budget -> rejected with the in-use units
+        assert_eq!(b.try_admit(50).unwrap_err(), 60);
+        let p2 = b.try_admit(40).unwrap();
+        drop(p1);
+        assert_eq!(b.used(), 40);
+        drop(p2);
+        assert_eq!(b.used(), 0);
+        // idle exception: an oversized job may run alone...
+        let big = b.try_admit(1000).unwrap();
+        // ...but blocks everything else until it finishes
+        assert!(b.try_admit(1).is_err());
+        drop(big);
+        assert_eq!(b.used(), 0);
+    }
+
+    #[test]
+    fn permit_reprice_is_atomic_and_keeps_old_hold_on_failure() {
+        let b = AdmissionBudget::new(100);
+        let mut p1 = b.try_admit(40).unwrap();
+        let p2 = b.try_admit(40).unwrap();
+        // over the other holder's headroom -> rejected, old hold kept
+        assert_eq!(p1.reprice(70).unwrap_err(), 40, "reports the other holders' units");
+        assert_eq!((p1.units(), b.used()), (40, 80));
+        // fits alongside the other holder -> swapped in one step
+        assert!(p1.reprice(60).is_ok());
+        assert_eq!((p1.units(), b.used()), (60, 100));
+        drop(p2);
+        // lone holder: the lone-job exception applies to repricing too
+        assert!(p1.reprice(5_000).is_ok());
+        assert_eq!(b.used(), 5_000);
+        drop(p1);
+        assert_eq!(b.used(), 0, "drop releases the repriced amount, not the original");
+    }
+
+    #[test]
+    fn cluster_replies_report_cost_and_hold_no_budget_after() {
+        let st = fresh_state();
+        let r = handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 seed=1");
+        assert!(r.starts_with("ok "), "{r}");
+        let cost: u64 = r.split(" cost=").nth(1).unwrap().trim().parse().unwrap();
+        // OneBatch prices its n*m pass; blobs_300 caps m at n=300
+        assert_eq!(cost, MethodSpec::default().cost(300, 3, None).units, "{r}");
+        assert_eq!(st.admission.used(), 0, "permit must release when the job ends");
+    }
+
+    #[test]
+    fn stats_reports_budget_and_histograms_and_resets() {
+        let st = fresh_state();
+        assert!(handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 seed=1").starts_with("ok "));
+        let stats = handle_line(&st, "stats");
+        assert!(stats.contains(" budget_total="), "{stats}");
+        assert!(stats.contains(" budget_used=0 "), "{stats}");
+        assert!(stats.contains(" hist_le_ms=1,2,5,"), "{stats}");
+        assert!(stats.contains("method.OneBatch-nniw.ms_hist="), "{stats}");
+        assert!(stats.contains("method.OneBatch-nniw.queue_hist="), "{stats}");
+        // the solve histogram holds exactly the one served job
+        let hist = stats
+            .split("method.OneBatch-nniw.ms_hist=")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap();
+        let total: u64 = hist.split(',').map(|c| c.parse::<u64>().unwrap()).sum();
+        assert_eq!(total, 1, "{stats}");
+        // reset re-bases method aggregates and cache counters
+        assert_eq!(handle_line(&st, "stats reset"), "ok");
+        let after = handle_line(&st, "stats");
+        assert!(after.starts_with("ok cache_hits=0 cache_misses=0 cache_entries=1"), "{after}");
+        assert!(!after.contains("method.OneBatch-nniw"), "{after}");
+    }
+
+    #[test]
+    fn over_budget_requests_err_with_cost() {
+        let st = ServerState::new(&ServerConfig { budget: 1_000, ..Default::default() });
+        // occupy the budget so the idle exception cannot apply
+        let _held = st.admission.try_admit(900).unwrap();
+        let r = handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 seed=1");
+        assert!(r.starts_with("err over budget"), "{r}");
+        assert!(r.contains("cost="), "{r}");
+        // nothing was loaded for the rejected job
+        assert_eq!(st.cache.stats(), CacheStats::default());
     }
 
     #[test]

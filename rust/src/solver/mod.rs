@@ -125,6 +125,43 @@ impl Default for SolveSpec {
 /// stalling a worker (see [`MethodSpec::feasible_large_scale`]).
 pub const FULL_MATRIX_LIMIT: usize = 20_000;
 
+/// The largest single-job price a serving surface accepts: the price of
+/// a full-matrix method at exactly [`FULL_MATRIX_LIMIT`] rows.  The old
+/// one-off "reject full-matrix methods above `FULL_MATRIX_LIMIT` rows"
+/// rule is exactly [`JobCost::admissible`] under this cap — pricing
+/// subsumes it (asserted in rust/tests/admission.rs).
+pub const MAX_JOB_COST: u64 = (FULL_MATRIX_LIMIT as u64).pow(2);
+
+/// Admission price of one solve, in abstract work units (one unit ~ one
+/// dissimilarity evaluation / distance-matrix cell).
+///
+/// Produced by [`MethodSpec::cost`]; consumed by the job server's
+/// weighted admission budget (`crate::server`), which replaced the flat
+/// one-slot-per-job accounting: a burst of cheap OneBatch jobs
+/// (`~ n*m` units each) fits the budget many times over, while one
+/// full-matrix job (`~ n^2` units) consumes most of it.  Prices are
+/// order-of-magnitude estimates for *admission weighting*, not exact
+/// dissimilarity predictions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobCost {
+    /// Estimated work units the solve will consume.
+    pub units: u64,
+    /// Does the price grow quadratically in `n`?  True exactly for the
+    /// methods the paper marks "Na" at large scale
+    /// (`!feasible_large_scale()`).
+    pub quadratic: bool,
+}
+
+impl JobCost {
+    /// Is this job small enough to serve at all?  Linear-cost methods
+    /// always are (OneBatchPAM's point: `O(mn)` stays cheap at any
+    /// paper scale); quadratic ones only below [`MAX_JOB_COST`] — which
+    /// is precisely the historical `n <= FULL_MATRIX_LIMIT` rule.
+    pub fn admissible(&self) -> bool {
+        !self.quadratic || self.units <= MAX_JOB_COST
+    }
+}
+
 /// Run `spec.method` on `x` and validate the result invariants
 /// (`k` unique in-range medoids).  The backend's metric must agree with
 /// `spec.metric` — surfaces build the backend from the spec.
@@ -278,11 +315,68 @@ impl MethodSpec {
 
     /// Does the paper run this method on large-scale datasets?
     /// (FasterPAM / Alternate / BanditPAM++ are "Na" there.)
+    ///
+    /// Equivalent to `!self.cost(n, k, m).quadratic` for any arguments —
+    /// kept as the semantic spelling for callers that do not price.
     pub fn feasible_large_scale(&self) -> bool {
         !matches!(
             self,
             MethodSpec::FasterPam | MethodSpec::Alternate | MethodSpec::BanditPam { .. }
         )
+    }
+
+    /// Price one solve of this method over `n` rows with `k` medoids in
+    /// work units (~ dissimilarity evaluations).  `m` is the OneBatch
+    /// batch-size override (`None` -> the paper default `100 ln(kn)`),
+    /// ignored by every other method.
+    ///
+    /// The dominant terms per family: full-matrix methods (FasterPAM /
+    /// Alternate) and per-round resamplers (BanditPAM++) price `n^2`;
+    /// OneBatchPAM prices its single `n x m` pairwise pass; FasterCLARA
+    /// prices `reps` subsample matrices; the seeding family prices its
+    /// `O(nk)`-ish passes.  See [`JobCost`] for what the price is for.
+    pub fn cost(&self, n: usize, k: usize, m: Option<usize>) -> JobCost {
+        let n64 = n as u64;
+        let k64 = k.max(1) as u64;
+        match self {
+            MethodSpec::Random => JobCost { units: n64.max(1), quadratic: false },
+            MethodSpec::FasterPam | MethodSpec::Alternate => {
+                JobCost { units: n64.saturating_mul(n64), quadratic: true }
+            }
+            // BanditPAM++ re-samples distances every swap round; its
+            // serving cost scales with the full matrix it keeps touching
+            MethodSpec::BanditPam { .. } => {
+                JobCost { units: n64.saturating_mul(n64), quadratic: true }
+            }
+            MethodSpec::FasterClara { reps } => {
+                // `reps` FasterPAM runs on subsamples of `80 + 4k` rows,
+                // plus the final full-data assignment
+                let s = (80 + 4 * k).min(n.max(1)) as u64;
+                let units = ((*reps).max(1) as u64)
+                    .saturating_mul(s.saturating_mul(s))
+                    .saturating_add(n64.saturating_mul(k64));
+                JobCost { units: units.max(1), quadratic: false }
+            }
+            MethodSpec::Kmc2 { chain } => {
+                // one O(n) proposal distribution + k chains of length L
+                let units = n64.saturating_add(k64.saturating_mul(*chain as u64));
+                JobCost { units: units.max(1), quadratic: false }
+            }
+            MethodSpec::KMeansPp => {
+                JobCost { units: n64.saturating_mul(k64).max(1), quadratic: false }
+            }
+            MethodSpec::LsKMeansPp { steps } => {
+                let units = n64.saturating_mul(k64.saturating_add(*steps as u64));
+                JobCost { units: units.max(1), quadratic: false }
+            }
+            MethodSpec::OneBatch { .. } => {
+                // the single O(n m) pairwise pass dominates (Algorithm 1)
+                let m_eff = m
+                    .unwrap_or_else(|| crate::coordinator::sampler::default_batch_size(n.max(2), k))
+                    .min(n.max(1)) as u64;
+                JobCost { units: n64.saturating_mul(m_eff).max(1), quadratic: false }
+            }
+        }
     }
 
     /// The full 18-row method grid of Table 3.
@@ -462,6 +556,38 @@ mod tests {
     fn solver_labels_agree_with_spec_labels() {
         for m in MethodSpec::table3_grid() {
             assert_eq!(m.label(), m.solver().label());
+        }
+    }
+
+    #[test]
+    fn cost_prices_families_in_the_right_order() {
+        let (n, k) = (100_000, 10);
+        let ob = MethodSpec::default().cost(n, k, None);
+        let fp = MethodSpec::FasterPam.cost(n, k, None);
+        let seed = MethodSpec::KMeansPp.cost(n, k, None);
+        assert!(!ob.quadratic && fp.quadratic && !seed.quadratic);
+        assert_eq!(fp.units, (n as u64) * (n as u64));
+        // OneBatch prices its n*m pass with the paper-default m
+        let m = crate::coordinator::sampler::default_batch_size(n, k) as u64;
+        assert_eq!(ob.units, n as u64 * m);
+        // an explicit m override reprices the job
+        assert_eq!(MethodSpec::default().cost(n, k, Some(200)).units, n as u64 * 200);
+        // full-matrix at this n is far above OneBatch (n/m ~ 72x here)
+        assert!(fp.units > 10 * ob.units);
+        assert!(ob.admissible() && seed.admissible() && !fp.admissible());
+    }
+
+    #[test]
+    fn cost_quadratic_flag_matches_feasibility_and_old_limit_rule() {
+        for m in MethodSpec::table3_grid() {
+            for n in [FULL_MATRIX_LIMIT - 1, FULL_MATRIX_LIMIT, FULL_MATRIX_LIMIT + 1] {
+                let c = m.cost(n, 10, None);
+                assert_eq!(c.quadratic, !m.feasible_large_scale(), "{}", m.label());
+                // pricing subsumes the historical limit check exactly
+                let old_rule = m.feasible_large_scale() || n <= FULL_MATRIX_LIMIT;
+                assert_eq!(c.admissible(), old_rule, "{} at n={n}", m.label());
+                assert!(c.units > 0, "{} at n={n}", m.label());
+            }
         }
     }
 

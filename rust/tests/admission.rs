@@ -1,0 +1,162 @@
+//! Cost-weighted admission from the outside: jobs are priced in work
+//! units via `MethodSpec::cost` (full-matrix methods ~ n^2, OneBatchPAM
+//! ~ n*m), the old `FULL_MATRIX_LIMIT` rule is the pricing ceiling, and
+//! the server's weighted budget admits many cheap OneBatch jobs
+//! concurrently while an over-budget full-matrix request is rejected
+//! immediately — before any dataset I/O when the source predicts its
+//! rows (catalogue names, `file:...?rows=N` hints).
+
+use obpam::server::{
+    handle_line, request, serve, AdmissionPermit, CacheStats, ServerConfig, ServerState,
+};
+use obpam::solver::{MethodSpec, FULL_MATRIX_LIMIT, MAX_JOB_COST};
+
+fn state_with_budget(budget: u64) -> ServerState {
+    ServerState::new(&ServerConfig { budget, ..Default::default() })
+}
+
+#[test]
+fn pricing_subsumes_the_full_matrix_limit() {
+    // the one-off limit check is now a special case of pricing: a
+    // quadratic method is admissible exactly up to FULL_MATRIX_LIMIT
+    let fp = MethodSpec::FasterPam;
+    assert!(fp.cost(FULL_MATRIX_LIMIT, 10, None).admissible());
+    assert!(!fp.cost(FULL_MATRIX_LIMIT + 1, 10, None).admissible());
+    assert_eq!(fp.cost(FULL_MATRIX_LIMIT, 10, None).units, MAX_JOB_COST);
+    // linear methods are admissible at any paper scale
+    assert!(MethodSpec::default().cost(5_000_000, 100, None).admissible());
+}
+
+#[test]
+fn rows_hint_prices_the_job_before_any_io() {
+    // the path does not exist: with a rows hint, both the feasibility
+    // ceiling and the budget apply on the hint alone — rejection must
+    // happen with zero stat/load (the cache counters stay zeroed and
+    // the error is about cost, not about the missing file)
+    let st = state_with_budget(1_000_000);
+    let _held = st.admission.try_admit(900_000).unwrap();
+    let line = "cluster dataset=file:/definitely/not/here.csv?rows=2000 k=5 method=FasterPAM";
+    let r = handle_line(&st, line);
+    assert!(r.starts_with("err over budget"), "{r}");
+    let expect = MethodSpec::FasterPam.cost(2000, 5, None).units;
+    assert!(r.contains(&format!("cost={expect}")), "{r}");
+    assert_eq!(st.cache.stats(), CacheStats::default(), "no I/O for a rejected job");
+}
+
+#[test]
+fn full_budget_of_cheap_jobs_rejects_expensive_admits_cheap() {
+    // the acceptance scenario: the budget is mostly held by in-flight
+    // cheap OneBatch jobs; a further cheap OneBatch request is admitted
+    // concurrently, while an admissible-but-over-budget full-matrix
+    // request gets an immediate err carrying its computed cost
+    let st = state_with_budget(600_000);
+    let cheap = MethodSpec::default().cost(300, 3, None).units; // 300 * 300
+    assert_eq!(cheap, 90_000);
+    let permits: Vec<AdmissionPermit<'_>> =
+        (0..5).map(|_| st.admission.try_admit(cheap).unwrap()).collect();
+    assert_eq!(st.admission.used(), 450_000);
+
+    // cheap OneBatch: fits the remaining budget, runs to completion
+    let ok = handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 seed=1");
+    assert!(ok.starts_with("ok "), "{ok}");
+    assert!(ok.contains(&format!(" cost={cheap}")), "{ok}");
+
+    // full-matrix at n=1500: admissible per-job (1500 <= limit) but its
+    // 2.25M units exceed the 150k free -> immediate err, no I/O
+    let fp_line = "cluster dataset=file:/definitely/not/here.csv?rows=1500 k=5 method=FasterPAM";
+    let r = handle_line(&st, fp_line);
+    assert!(r.starts_with("err over budget"), "{r}");
+    assert!(r.contains("cost=2250000"), "{r}");
+    // only the successful cheap job touched the cache
+    let s = st.cache.stats();
+    assert_eq!((s.misses, s.entries), (1, 1), "{s:?}");
+
+    // once the cheap jobs finish, the budget idles; the idle exception
+    // lets the oversized job in, so now the request fails on the
+    // missing file (i.e. admission is no longer what stops it)
+    drop(permits);
+    assert_eq!(st.admission.used(), 0);
+    let r2 = handle_line(&st, fp_line);
+    assert!(r2.starts_with("err"), "{r2}");
+    assert!(!r2.contains("over budget"), "{r2}");
+}
+
+#[test]
+fn infeasible_methods_report_cost_in_the_rejection() {
+    let st = state_with_budget(0);
+    let r = handle_line(
+        &st,
+        "cluster dataset=file:/nope.csv?rows=50000 k=5 method=FasterPAM",
+    );
+    assert!(r.starts_with("err"), "{r}");
+    assert!(r.contains("infeasible at n=50000"), "{r}");
+    assert!(r.contains("cost=2500000000"), "{r}");
+    assert_eq!(st.cache.stats(), CacheStats::default());
+}
+
+#[test]
+fn lying_rows_hint_is_repriced_after_the_load() {
+    // the ?rows= hint is client-supplied and never validated against
+    // the file: a hint claiming 100 rows must not smuggle a full-matrix
+    // job over a FULL_MATRIX_LIMIT+1-row CSV past the pricing ceiling —
+    // the post-load reprice at the actual row count catches it
+    let dir = std::env::temp_dir().join("obpam_admission_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("lying_{}.csv", std::process::id()));
+    let rows = FULL_MATRIX_LIMIT + 1;
+    let mut csv = String::from("a,b\n");
+    for i in 0..rows {
+        csv.push_str(&format!("{}.0,{}.5\n", i % 7, (i * 3) % 5));
+    }
+    std::fs::write(&path, csv).unwrap();
+    let st = ServerState::new(&ServerConfig::default());
+    let r = handle_line(
+        &st,
+        &format!("cluster dataset=file:{}?rows=100 k=5 method=FasterPAM", path.display()),
+    );
+    assert!(r.starts_with("err"), "{r}");
+    assert!(r.contains(&format!("infeasible at n={rows}")), "{r}");
+    assert_eq!(st.admission.used(), 0, "the provisional permit must be released");
+    // an honest linear-cost job over the same oversized file still runs
+    let ok = handle_line(&st, &format!("cluster dataset=file:{} k=5 m=50", path.display()));
+    assert!(ok.starts_with("ok "), "{ok}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn concurrent_burst_over_a_tight_budget_stays_consistent() {
+    // a real TCP burst against a budget sized for about one job at a
+    // time: every connection gets exactly one well-formed reply (ok
+    // with cost=, or err over budget with cost=), at least one job is
+    // served, and the budget fully drains afterwards
+    let cheap = MethodSpec::default().cost(300, 3, None).units;
+    let h = serve(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 4,
+        queue_cap: 16,
+        budget: cheap + cheap / 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let addr = h.addr;
+            std::thread::spawn(move || {
+                request(addr, &format!("cluster dataset=blobs_300_4_3 k=3 seed={}", i % 2))
+                    .unwrap()
+            })
+        })
+        .collect();
+    let replies: Vec<String> = handles.into_iter().map(|t| t.join().unwrap()).collect();
+    let served = replies.iter().filter(|r| r.starts_with("ok ")).count();
+    for r in &replies {
+        assert!(
+            r.starts_with("ok ") || r.starts_with("err over budget"),
+            "unexpected reply: {r}"
+        );
+        assert!(r.contains("cost="), "every decision is priced: {r}");
+    }
+    assert!(served >= 1, "at least one job must be admitted: {replies:?}");
+    assert_eq!(h.state.admission.used(), 0, "budget must drain when jobs finish");
+    h.shutdown();
+}

@@ -122,12 +122,14 @@ fn scale_features_is_validated_and_cached_separately() {
 fn legacy_bare_name_requests_keep_v2_reply_shape() {
     let st = fresh_state();
     let r = handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 seed=5");
-    // v2 prefix byte-for-byte, then the v3 source= field appended
+    // v2 prefix byte-for-byte, then v3's source= and v4's cost= appended
     assert!(r.starts_with("ok method=OneBatch-nniw cache=miss medoids="), "{r}");
     for field in ["objective=", "seconds=", "dissim=", "swaps="] {
         assert!(r.contains(field), "{field}: {r}");
     }
-    assert!(r.ends_with("source=synth:blobs_300_4_3"), "{r}");
+    assert!(r.contains(" source=synth:blobs_300_4_3 cost="), "{r}");
+    let cost: u64 = r.split(" cost=").nth(1).unwrap().trim().parse().unwrap();
+    assert!(cost > 0, "{r}");
     // the schemed spelling of the same dataset shares the cache entry
     let schemed = handle_line(&st, "cluster dataset=synth:blobs_300_4_3 k=3 seed=5");
     assert!(schemed.contains("cache=hit"), "{schemed}");
@@ -154,21 +156,45 @@ fn stats_aggregates_per_method_across_file_and_synth() {
 /// CI end-to-end smoke: write a CSV, start the real TCP server, drive
 /// `cluster dataset=file:... metric=l2 k=3` twice over the wire, and
 /// require a cache hit with identical medoids on the second request.
+/// CI runs this under an `OBPAM_THREADS` matrix (1 and 4) so every push
+/// exercises the persistent pool's reuse determinism end to end.
 #[test]
 fn e2e_smoke_file_dataset_through_tcp_server() {
+    let threads: usize =
+        std::env::var("OBPAM_THREADS").ok().and_then(|s| s.parse().ok()).unwrap_or(2);
     let path = temp_csv("e2e", 80);
     let h = serve(ServerConfig::default()).unwrap();
-    let line = format!("cluster dataset=file:{} metric=l2 k=3 seed=7", path.display());
+    let line = format!(
+        "cluster dataset=file:{} metric=l2 k=3 seed=7 threads={threads}",
+        path.display()
+    );
     let first = request(h.addr, &line).unwrap();
     let second = request(h.addr, &line).unwrap();
     assert!(first.starts_with("ok "), "{first}");
     assert!(first.contains("cache=miss"), "{first}");
     assert!(second.contains("cache=hit"), "{second}");
     assert_eq!(medoids_of(&first), medoids_of(&second));
+    // medoids are thread-count independent: a serial run over the same
+    // wire selects the same rows the threaded run did
+    let serial = request(
+        h.addr,
+        &format!("cluster dataset=file:{} metric=l2 k=3 seed=7 threads=1", path.display()),
+    )
+    .unwrap();
+    assert_eq!(medoids_of(&first), medoids_of(&serial), "{serial}");
+    // v4 reply fields reach the wire on every served connection
+    assert!(first.contains(" cost="), "{first}");
+    assert!(first.contains(" queue_ms="), "{first}");
     // and the stats surface saw exactly this traffic
     let stats = request(h.addr, "stats").unwrap();
-    assert!(stats.starts_with("ok cache_hits=1 cache_misses=1"), "{stats}");
-    assert!(stats.contains("method.OneBatch-nniw.count=2"), "{stats}");
+    assert!(stats.starts_with("ok cache_hits=2 cache_misses=1"), "{stats}");
+    assert!(stats.contains("method.OneBatch-nniw.count=3"), "{stats}");
+    assert!(stats.contains("method.OneBatch-nniw.ms_hist="), "{stats}");
+    assert!(stats.contains("method.OneBatch-nniw.queue_hist="), "{stats}");
+    // stats reset re-bases the counters over the wire, too
+    assert!(request(h.addr, "stats reset").unwrap().starts_with("ok"));
+    let after = request(h.addr, "stats").unwrap();
+    assert!(after.starts_with("ok cache_hits=0 cache_misses=0"), "{after}");
     h.shutdown();
     std::fs::remove_file(&path).ok();
 }

@@ -4,7 +4,13 @@
 //! The parallel layer's promise is strict: for a fixed seed, every
 //! result — the pairwise matrix, the tile ops, the full `one_batch_pam`
 //! medoid selection — is **bit-identical** at any thread count.  These
-//! tests pin that promise at {1, 2, 4} threads (and auto).
+//! tests pin that promise at {1, 2, 4, 8} threads (and auto), and —
+//! since the pool is a persistent set of parked workers rather than
+//! scoped spawns — also across **many parallel regions reusing one pool
+//! instance** (the shape a served job actually runs: one pool, many
+//! pairwise/tile/scan regions).  CI repeats the suite under an
+//! `OBPAM_THREADS` matrix (1 and 4); the env count joins the compared
+//! widths below.
 
 use obpam::backend::{ComputeBackend, NativeBackend};
 use obpam::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
@@ -121,6 +127,92 @@ fn backend_tile_ops_identical_across_thread_counts() {
         let gains_p = par.gains(&d, &dn, &ds, &near, k, &w).unwrap();
         assert_eq!(gains_p.0, gains_s.0, "shared gains at {threads} threads");
         assert_eq!(gains_p.1.data, gains_s.1.data, "permedoid gains at {threads} threads");
+    }
+}
+
+/// Thread counts the reuse tests compare against serial: the acceptance
+/// set {1, 2, 8} plus whatever width CI's `OBPAM_THREADS` matrix asks
+/// for on this run.
+fn reuse_thread_counts() -> Vec<usize> {
+    let mut counts = vec![1, 2, 8];
+    if let Some(t) = std::env::var("OBPAM_THREADS").ok().and_then(|s| s.parse::<usize>().ok()) {
+        if t != 0 && !counts.contains(&t) {
+            counts.push(t);
+        }
+    }
+    counts
+}
+
+#[test]
+fn reused_pool_repeated_regions_bit_identical() {
+    // ONE pool instance per width drives repeated parallel regions of
+    // several shapes (pairwise, argmin, top2); every round must be
+    // bit-identical to the serial result — pool reuse must not leak any
+    // state from region to region
+    let mut rng = Rng::new(0xA15);
+    let x = rand_matrix(&mut rng, 257, 13);
+    let b = rand_matrix(&mut rng, 41, 13);
+    let serial = NativeBackend::new(Metric::L1);
+    let d_s = cross_matrix_pool(&DissimCounter::new(Metric::L1), &x, &b, &Pool::serial());
+    let argmin_s = serial.argmin_rows(&d_s).unwrap();
+    let top2_s = serial.top2(&d_s).unwrap();
+    for threads in reuse_thread_counts() {
+        let pool = Pool::new(threads);
+        let backend = NativeBackend::with_pool(Metric::L1, pool.clone());
+        for round in 0..5 {
+            let d = cross_matrix_pool(&DissimCounter::new(Metric::L1), &x, &b, &pool);
+            assert_eq!(d.data, d_s.data, "pairwise round {round} at {threads} threads");
+            assert_eq!(
+                backend.argmin_rows(&d).unwrap(),
+                argmin_s,
+                "argmin round {round} at {threads} threads"
+            );
+            assert_eq!(
+                backend.top2(&d).unwrap(),
+                top2_s,
+                "top2 round {round} at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_solves_on_one_reused_pool_identical() {
+    // the serving shape: one pool (via one backend) runs several full
+    // OneBatchPAM solves back to back; medoids and objective bits must
+    // match the serial solve every time, at 1, 2 and 8 threads
+    let mut rng = Rng::new(0xA16);
+    let x = rand_matrix(&mut rng, 500, 10);
+    let solve = |backend: &NativeBackend, threads: usize| {
+        let cfg = OneBatchConfig {
+            k: 5,
+            sampler: SamplerKind::Nniw,
+            m: Some(100),
+            seed: 21,
+            threads,
+            ..Default::default()
+        };
+        one_batch_pam(&x, &cfg, backend).unwrap()
+    };
+    let serial = solve(&NativeBackend::new(Metric::L1), 1);
+    for threads in reuse_thread_counts() {
+        let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
+        for round in 0..3 {
+            let r = solve(&backend, threads);
+            assert_eq!(
+                r.medoids, serial.medoids,
+                "medoids differ on round {round} at {threads} threads"
+            );
+            assert_eq!(
+                r.est_objective.to_bits(),
+                serial.est_objective.to_bits(),
+                "objective bits differ on round {round} at {threads} threads"
+            );
+            assert_eq!(
+                r.stats.dissim_count, serial.stats.dissim_count,
+                "dissim count differs on round {round} at {threads} threads"
+            );
+        }
     }
 }
 
