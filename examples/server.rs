@@ -1,10 +1,14 @@
-//! Clustering service demo (protocol v3): start the TCP job server,
+//! Clustering service demo (protocol v5): start the TCP job server,
 //! fire a burst of *mixed-method* clustering requests at it (any paper
 //! row label is addressable with `method=`), then repeat the burst to
 //! show the sharded dataset cache at work — the warm round reports
-//! `cache=hit` on every job.  A final round clusters a CSV written to
-//! disk through the same cache (`dataset=file:... metric=l2`), and the
-//! closing `stats` line shows the per-method serving aggregates.
+//! `cache=hit` on every job.  A middle section demos the asynchronous
+//! job-handle API: `submit` returns `job=j<id>` immediately, `poll`
+//! probes without blocking, and `wait` collects each result — the
+//! submitting loop finishes before any solve does, which is the whole
+//! point.  A final round clusters a CSV written to disk through the
+//! same cache (`dataset=file:... metric=l2`), and the closing `jobs` /
+//! `stats` lines show the registry gauges and per-method aggregates.
 //!
 //! Run: `cargo run --release --example server`
 
@@ -75,6 +79,41 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- async job handles: submit now, collect whenever -------------
+    // One-shot `cluster` lines above block their connection for the
+    // whole solve; `submit` returns a handle immediately, so all six
+    // jobs are in flight before the first one finishes.
+    let t0 = Instant::now();
+    let mut ids = Vec::new();
+    for (i, m) in methods.iter().enumerate() {
+        let line =
+            format!("submit dataset=blobs_2500_8_4 k=4 method={m} seed={i} deadline_ms=60000");
+        let reply = request(handle.addr, &line)?;
+        let id = reply
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("job="))
+            .map(str::to_string);
+        println!("submit {m:<14} -> {reply}");
+        match id {
+            Some(id) => ids.push(id),
+            None => println!("  (not admitted; skipping)"),
+        }
+    }
+    println!(
+        "all {} submits returned in {:.3}s (solves still running)",
+        ids.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(first) = ids.first() {
+        println!("poll   {first:<14} -> {}", request(handle.addr, &format!("poll job={first}"))?);
+    }
+    for id in &ids {
+        let reply = request(handle.addr, &format!("wait job={id} timeout_ms=120000"))?;
+        let brief: String = reply.split_whitespace().take(3).collect::<Vec<_>>().join(" ");
+        println!("wait   {id:<14} -> {brief} ...");
+    }
+    println!("{}\n", request(handle.addr, "jobs")?);
+
     // --- loaded data over the same wire: dataset=file:... ------------
     let csv_path = std::env::temp_dir().join("obpam_server_demo.csv");
     let mut csv = String::from("x,y,z\n");
@@ -101,8 +140,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     // cache_misses equals the number of distinct (source, scale, seed)
-    // keys; the warm rounds reloaded nothing, and the per-method
-    // aggregates (count / latency / dissim) close out the demo.
+    // keys; the warm rounds reloaded nothing, and the jobs.* lifecycle
+    // counters + per-method aggregates close out the demo.
     println!("{}", request(handle.addr, "stats")?);
 
     handle.shutdown();

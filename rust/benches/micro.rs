@@ -215,6 +215,50 @@ fn main() {
         );
     }
 
+    // ---- per-job pool build vs server-cached pool dispatch ---------------
+    // The v5 server hands every job a clone of one persistent pool per
+    // width (server::PoolCache) instead of letting each job build its
+    // own.  Measure the difference for a small job-sized region: the
+    // per-job shape pays `threads - 1` thread spawns + joins, the
+    // cached shape pays a map lookup + clone + wakeup.
+    {
+        let rows = 16 * 1024;
+        let data: Vec<f32> = (0..rows).map(|i| (i % 89) as f32).collect();
+        let data = &data;
+        let threads = cores.max(2);
+        let (t_build, mad_b) = time_median(20, 100, || {
+            // what each served job paid before the cache: build, use, drop
+            let pool = Pool::new(threads);
+            let parts = pool.map_ranges(rows, |r| data[r].iter().sum::<f32>());
+            std::hint::black_box(parts);
+        });
+        report(
+            &format!("job dispatch: per-job pool build t={threads}"),
+            t_build,
+            mad_b,
+            None,
+        );
+        let cache = obpam::server::PoolCache::new();
+        let _warm = cache.get(threads); // first job pays the build once
+        let (t_cached, mad_c) = time_median(20, 100, || {
+            let pool = cache.get(threads);
+            let parts = pool.map_ranges(rows, |r| data[r].iter().sum::<f32>());
+            std::hint::black_box(parts);
+        });
+        report(
+            &format!("job dispatch: cached-pool reuse t={threads}"),
+            t_cached,
+            mad_c,
+            None,
+        );
+        println!(
+            "  -> per-job dispatch {:.1} us (cached) vs {:.1} us (build+drop), {:.2}x",
+            t_cached * 1e6,
+            t_build * 1e6,
+            t_build / t_cached.max(1e-12)
+        );
+    }
+
     // ---- XLA artifact paths ---------------------------------------------
     #[cfg(feature = "xla")]
     xla_section(&mut rng, &d, &dn, &ds, &near, k, &w);

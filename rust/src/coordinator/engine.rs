@@ -68,9 +68,44 @@ pub fn eager_loop_eps(
     counters: &Counters,
     pool: &Pool,
 ) -> usize {
-    let n = d.rows;
-    let mut order: Vec<usize> = (0..n).collect();
+    let mut order: Vec<usize> = (0..d.rows).collect();
     let mut swaps = 0usize;
+    for _pass in 0..max_passes {
+        let pass_swaps = eager_pass(d, state, eps, rng, counters, pool, &mut order);
+        swaps += pass_swaps;
+        if pass_swaps == 0 {
+            break;
+        }
+    }
+    swaps
+}
+
+/// One eager pass over a caller-held candidate order: shuffle `order`
+/// in place, scan it, return the swaps applied this pass (`0` = local
+/// optimum, the loop's stop condition).
+///
+/// The order slice *persists across passes on the caller's side*: pass
+/// `p` scans the `p`-times-shuffled permutation, exactly like the
+/// historical in-loop behaviour of [`eager_loop_eps`] — callers that
+/// drive passes one at a time (the cancellation-aware loop in
+/// `one_batch_pam`) must reuse one order vector across calls, or the
+/// swap sequence diverges from the multi-pass call.  The acceptance
+/// threshold is a pure function of the current state (recomputing it at
+/// pass entry equals carrying it across passes), so pass-at-a-time
+/// driving is bit-identical — asserted by
+/// `external_pass_loop_matches_internal_loop_exactly` below.
+#[allow(clippy::too_many_arguments)]
+pub fn eager_pass(
+    d: &Matrix,
+    state: &mut SwapState,
+    eps: f64,
+    rng: &mut Rng,
+    counters: &Counters,
+    pool: &Pool,
+    order: &mut [usize],
+) -> usize {
+    let n = d.rows;
+    debug_assert_eq!(order.len(), n, "order must cover every candidate row");
     // The acceptance threshold only changes when the objective changes,
     // i.e. on a swap — recompute it then, not per candidate (the O(m)
     // est_objective per candidate doubled the scan cost; §Perf).
@@ -82,67 +117,60 @@ pub fn eager_loop_eps(
     };
     let mut threshold = threshold_of(state);
     let window = pool.threads() * SCAN_CHUNK;
-    for _pass in 0..max_passes {
-        rng.shuffle(&mut order);
-        let mut improved = false;
-        if pool.is_serial() {
-            // exactly the pre-parallel scan: zero overhead at 1 thread
-            for &i in &order {
-                if state.is_medoid(i) {
-                    continue;
-                }
-                let (l, gain) = state.eval_candidate(d.row(i));
-                if gain > threshold {
-                    state.apply_swap(d, l, i);
-                    counters.add_swap();
-                    swaps += 1;
-                    improved = true;
-                    threshold = threshold_of(state);
-                }
+    let mut swaps = 0usize;
+    rng.shuffle(order);
+    if pool.is_serial() {
+        // exactly the pre-parallel scan: zero overhead at 1 thread
+        for &i in order.iter() {
+            if state.is_medoid(i) {
+                continue;
             }
-        } else {
-            let mut start = 0usize;
-            while start < n {
-                let end = (start + window).min(n);
-                let idxs = &order[start..end];
-                // Parallel speculative evaluation against the current
-                // state; candidates that are (currently) medoids get -inf.
-                let frozen: &SwapState = state;
-                let evals: Vec<(usize, f64)> = pool
-                    .map_ranges(idxs.len(), |r| {
-                        let mut scratch: Vec<f32> = Vec::with_capacity(frozen.k());
-                        r.map(|t| {
-                            let i = idxs[t];
-                            if frozen.is_medoid(i) {
-                                (0usize, f64::NEG_INFINITY)
-                            } else {
-                                frozen.eval_candidate_at(d.row(i), &mut scratch)
-                            }
-                        })
-                        .collect::<Vec<_>>()
-                    })
-                    .into_iter()
-                    .flatten()
-                    .collect();
-                // Sequential application: first improving candidate in
-                // scan order wins; everything after it is stale and is
-                // re-evaluated on the next round of the window loop.
-                match evals.iter().position(|&(_, gain)| gain > threshold) {
-                    Some(off) => {
-                        let (l, _) = evals[off];
-                        state.apply_swap(d, l, order[start + off]);
-                        counters.add_swap();
-                        swaps += 1;
-                        improved = true;
-                        threshold = threshold_of(state);
-                        start += off + 1;
-                    }
-                    None => start = end,
-                }
+            let (l, gain) = state.eval_candidate(d.row(i));
+            if gain > threshold {
+                state.apply_swap(d, l, i);
+                counters.add_swap();
+                swaps += 1;
+                threshold = threshold_of(state);
             }
         }
-        if !improved {
-            break;
+    } else {
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + window).min(n);
+            let idxs = &order[start..end];
+            // Parallel speculative evaluation against the current
+            // state; candidates that are (currently) medoids get -inf.
+            let frozen: &SwapState = state;
+            let evals: Vec<(usize, f64)> = pool
+                .map_ranges(idxs.len(), |r| {
+                    let mut scratch: Vec<f32> = Vec::with_capacity(frozen.k());
+                    r.map(|t| {
+                        let i = idxs[t];
+                        if frozen.is_medoid(i) {
+                            (0usize, f64::NEG_INFINITY)
+                        } else {
+                            frozen.eval_candidate_at(d.row(i), &mut scratch)
+                        }
+                    })
+                    .collect::<Vec<_>>()
+                })
+                .into_iter()
+                .flatten()
+                .collect();
+            // Sequential application: first improving candidate in
+            // scan order wins; everything after it is stale and is
+            // re-evaluated on the next round of the window loop.
+            match evals.iter().position(|&(_, gain)| gain > threshold) {
+                Some(off) => {
+                    let (l, _) = evals[off];
+                    state.apply_swap(d, l, order[start + off]);
+                    counters.add_swap();
+                    swaps += 1;
+                    threshold = threshold_of(state);
+                    start += off + 1;
+                }
+                None => start = end,
+            }
         }
     }
     swaps
@@ -281,6 +309,43 @@ mod tests {
             assert_eq!(
                 st_serial.est_objective().to_bits(),
                 st_par.est_objective().to_bits(),
+                "objective bits differ at {threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn external_pass_loop_matches_internal_loop_exactly() {
+        // the cancellation-aware caller drives eager_pass one pass at a
+        // time over a persistent order vector; that must reproduce the
+        // multi-pass eager_loop_eps swap-for-swap (several passes here)
+        let (d, st0, _) = instance(80, 20, 4, 12);
+        let counters = Counters::default();
+        for threads in [1, 3] {
+            let pool = Pool::new(threads);
+            let mut a = st0.clone();
+            let mut rng_a = Rng::new(9);
+            let sa = eager_loop_eps(&d, &mut a, 50, 0.0, &mut rng_a, &counters, &pool);
+            let mut b = st0.clone();
+            let mut rng_b = Rng::new(9);
+            let mut order: Vec<usize> = (0..80).collect();
+            let mut sb = 0usize;
+            for _ in 0..50 {
+                let s = eager_pass(&d, &mut b, 0.0, &mut rng_b, &counters, &pool, &mut order);
+                sb += s;
+                if s == 0 {
+                    break;
+                }
+            }
+            // any swap at all forces a second pass (the terminating
+            // zero-swap one), which is exactly where a from-identity
+            // reshuffle would diverge from the cumulative permutation
+            assert!(sa >= 1, "instance should admit at least one swap");
+            assert_eq!(sa, sb, "swap counts differ at {threads} threads");
+            assert_eq!(a.med, b.med, "medoids differ at {threads} threads");
+            assert_eq!(
+                a.est_objective().to_bits(),
+                b.est_objective().to_bits(),
                 "objective bits differ at {threads} threads"
             );
         }

@@ -13,8 +13,9 @@ use crate::dissim::DissimCounter;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 use crate::runtime::Pool;
+use crate::solver::{CancelToken, CANCELLED};
 use crate::telemetry::{RunStats, Timer};
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Which swap engine drives the local search.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,6 +69,14 @@ pub struct OneBatchConfig {
     /// fixed seed; pair with [`crate::backend::NativeBackend::with_pool`]
     /// to also parallelise the pairwise pass.
     pub threads: usize,
+    /// Cooperative cancellation: checked between swap passes; a
+    /// cancelled run fails with [`crate::solver::CANCELLED`] and
+    /// discards its partial work.  Default: the inert token.
+    pub cancel: CancelToken,
+    /// Pre-built pool for the eager scan (`None` builds a
+    /// `threads`-wide pool per run).  Serving surfaces pass their
+    /// cached pool so repeated jobs reuse parked workers.
+    pub pool: Option<Pool>,
 }
 
 impl Default for OneBatchConfig {
@@ -81,6 +90,8 @@ impl Default for OneBatchConfig {
             eps: 0.0,
             seed: 0,
             threads: 1,
+            cancel: CancelToken::none(),
+            pool: None,
         }
     }
 }
@@ -126,21 +137,46 @@ pub fn one_batch_pam(
     // --- Random init + swap search (Algorithm 1, lines 7-8) ------------
     let med = rng.sample_distinct(n, cfg.k);
     let mut state = SwapState::init(&d, med, w, n);
+    // Both engines run one pass per call so the cancellation token is
+    // honoured between passes.  The candidate order vector persists
+    // across eager passes (pass p scans the p-times-shuffled
+    // permutation) and the acceptance threshold is a pure function of
+    // the current state, so the swap sequence is bit-identical to the
+    // historical multi-pass `eager_loop_eps` call — asserted by
+    // engine::tests::external_pass_loop_matches_internal_loop_exactly.
     match cfg.strategy {
         SwapStrategy::Eager => {
-            let pool = Pool::new(cfg.threads);
-            engine::eager_loop_eps(
-                &d,
-                &mut state,
-                cfg.max_passes,
-                cfg.eps,
-                &mut rng,
-                &counters,
-                &pool,
-            );
+            let pool = cfg.pool.clone().unwrap_or_else(|| Pool::new(cfg.threads));
+            let mut order: Vec<usize> = (0..n).collect();
+            for _ in 0..cfg.max_passes {
+                if cfg.cancel.is_cancelled() {
+                    bail!(CANCELLED);
+                }
+                let swaps = engine::eager_pass(
+                    &d,
+                    &mut state,
+                    cfg.eps,
+                    &mut rng,
+                    &counters,
+                    &pool,
+                    &mut order,
+                );
+                if swaps == 0 {
+                    break; // a full pass without a swap: local optimum
+                }
+            }
         }
         SwapStrategy::Steepest => {
-            engine::steepest_loop(backend, &d, &mut state, cfg.max_passes * cfg.k, &counters)?;
+            for _ in 0..cfg.max_passes {
+                if cfg.cancel.is_cancelled() {
+                    bail!(CANCELLED);
+                }
+                // a chunk of k swaps per "pass"; a short chunk means the
+                // engine hit its tolerance -> converged
+                if engine::steepest_loop(backend, &d, &mut state, cfg.k, &counters)? < cfg.k {
+                    break;
+                }
+            }
         }
     }
 
@@ -188,6 +224,8 @@ impl crate::solver::Solver for OneBatchSolver {
             eps: spec.eps,
             seed: spec.seed,
             threads: spec.threads,
+            cancel: spec.cancel.clone(),
+            pool: spec.pool.clone(),
         };
         one_batch_pam(x, &cfg, backend)
     }
@@ -345,6 +383,32 @@ mod tests {
             let cfg = OneBatchConfig { threads, ..base.clone() };
             let r = run(&cfg, &x);
             assert_eq!(r.medoids, serial.medoids, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn cancelled_token_aborts_between_passes() {
+        let x = blobs(200, 5);
+        let backend = NativeBackend::new(Metric::L1);
+        let token = CancelToken::new();
+        token.cancel();
+        let cfg =
+            OneBatchConfig { k: 3, m: Some(40), seed: 2, cancel: token, ..Default::default() };
+        let err = one_batch_pam(&x, &cfg, &backend).unwrap_err().to_string();
+        assert_eq!(err, CANCELLED);
+    }
+
+    #[test]
+    fn caller_supplied_pool_selects_identical_medoids_across_reuse() {
+        // the serving shape: one cached pool drives repeated solves
+        let x = blobs(250, 6);
+        let base = OneBatchConfig { k: 4, m: Some(50), seed: 3, ..Default::default() };
+        let serial = run(&base, &x);
+        let pool = Pool::new(4);
+        for round in 0..3 {
+            let cfg = OneBatchConfig { threads: 4, pool: Some(pool.clone()), ..base.clone() };
+            let r = run(&cfg, &x);
+            assert_eq!(r.medoids, serial.medoids, "round {round}");
         }
     }
 

@@ -10,9 +10,10 @@
 //!   FasterPAM swap engine over one `n x m` distance matrix, every
 //!   baseline from the paper's evaluation, the experiment harness that
 //!   regenerates each table/figure, and a clustering job server
-//!   (protocol v4: any method by name, any dataset by URI, any metric,
-//!   with **cost-weighted admission** and a sharded dataset cache that
-//!   loads cold misses outside its locks).
+//!   (protocol v5: any method by name, any dataset by URI, any metric,
+//!   with an **asynchronous job-handle API**, **cost-weighted
+//!   admission** with queue-wait deadlines, and a sharded dataset
+//!   cache that loads cold misses outside its locks).
 //!
 //! Both dominant costs — the `O(nmp)` pairwise pass and the
 //! `O(n(m+k))` eager swap scan — are row-parallel over the
@@ -32,6 +33,19 @@
 //! budget where a single FasterPAM job would consume most of it —
 //! replies carry `cost=` and `queue_ms=`, and `stats` exports
 //! per-method latency histograms (solve + queue wait).
+//!
+//! Since protocol v5 the wire API is **asynchronous**: `submit` admits
+//! a job and returns a `job=j<id>` handle immediately, `poll` / `wait`
+//! / `cancel` drive it from any later connection, `deadline_ms=` sheds
+//! jobs whose queue wait exceeds their deadline, and solver workers
+//! drain *jobs* rather than connections — a slow client or a
+//! long-running full-matrix baseline no longer pins a worker.  The
+//! legacy one-shot `cluster` line is served as `submit`+`wait`
+//! internally with byte-identical replies; cancellation is cooperative
+//! via [`solver::CancelToken`] (checked between OneBatch swap passes),
+//! and jobs reuse server-owned persistent execution pools keyed by
+//! thread width ([`server::PoolCache`]).  See [`server`] for the full
+//! protocol.
 //!
 //! Quick start (see `examples/quickstart.rs`): every algorithm —
 //! OneBatchPAM and all eight paper baselines — runs through the unified

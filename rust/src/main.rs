@@ -10,7 +10,12 @@
 //!                [--threads T] [--config file.toml]
 //! obpam bench    --table 3|5|7 | --fig 1|pareto  (thin wrapper; prefer `cargo bench`)
 //! obpam serve    [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 16] [--cache-cap 32]
-//!                [--budget UNITS]
+//!                [--budget UNITS] [--strict-budget] [--retain-cap N]
+//! obpam submit   [--addr HOST:PORT] key=value...   (async: returns job=j<id>)
+//! obpam poll     [--addr HOST:PORT] --job j3
+//! obpam wait     [--addr HOST:PORT] --job j3 [--timeout-ms N]
+//! obpam cancel   [--addr HOST:PORT] --job j3
+//! obpam jobs     [--addr HOST:PORT]
 //! obpam gen      --list | --dataset SOURCE [--scale S] [--out file.csv]
 //! obpam artifacts-check   (requires the `xla` build feature)
 //! ```
@@ -36,11 +41,19 @@
 //! bit-identical at any thread count for a fixed seed.
 //!
 //! `serve` knobs follow the same `0 = auto` convention: `--workers 0`
-//! auto-detects cores, `--queue-cap 0` scales with the workers, and
-//! `--budget 0` takes the default cost-weighted admission budget (jobs
-//! are priced in work units via `MethodSpec::cost`; see the
-//! `obpam::server` docs for protocol v4's `cost=` / `queue_ms=` reply
-//! fields and the `stats reset` command).
+//! auto-detects cores, `--queue-cap 0` scales with the workers,
+//! `--budget 0` takes the default cost-weighted admission budget and
+//! `--retain-cap 0` the default finished-job retention.
+//! `--strict-budget` disables the lone-job idle-admit exception.
+//!
+//! The `submit` / `poll` / `wait` / `cancel` / `jobs` subcommands are
+//! thin wire clients for protocol v5's asynchronous job handles:
+//! `submit` takes the same `key=value` tokens as a `cluster` request
+//! line (plus `deadline_ms=`), prints the `ok job=j<id> cost=...`
+//! reply, and the handle verbs drive that job from any later
+//! connection.  Values containing spaces are quoted automatically
+//! (`dataset=file:/data/my points.csv` works as one shell argument).
+//! See the `obpam::server` docs for the full protocol.
 
 use anyhow::{bail, Context, Result};
 use obpam::backend::NativeBackend;
@@ -82,7 +95,7 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: obpam <cluster|serve|gen|artifacts-check> [--flags]\n\
+        "usage: obpam <cluster|serve|submit|poll|wait|cancel|jobs|gen|artifacts-check> [--flags]\n\
          see `cargo doc` or README.md for details"
     );
     std::process::exit(2)
@@ -96,9 +109,58 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "cluster" => cmd_cluster(&flags, &rest),
         "serve" => cmd_serve(&flags),
+        "submit" | "poll" | "wait" | "cancel" | "jobs" => cmd_client(cmd, &flags, &rest),
         "gen" => cmd_gen(&flags),
         "artifacts-check" => cmd_artifacts_check(),
         _ => usage(),
+    }
+}
+
+/// Thin wire client for the v5 job-handle verbs: assemble one request
+/// line from the flags + trailing `key=value` tokens, send it, print
+/// the reply.  Values containing whitespace are double-quoted so
+/// `file:` paths with spaces survive the wire tokenizer.
+fn cmd_client(verb: &str, flags: &HashMap<String, String>, rest: &[String]) -> Result<()> {
+    use std::net::ToSocketAddrs;
+    let addr_s = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".into());
+    let addr = addr_s
+        .to_socket_addrs()
+        .with_context(|| format!("bad --addr {addr_s}"))?
+        .next()
+        .with_context(|| format!("--addr {addr_s} resolved to no address"))?;
+    let mut line = verb.to_string();
+    if let Some(job) = flags.get("job") {
+        line.push_str(&format!(" job={job}"));
+    }
+    if let Some(t) = flags.get("timeout-ms") {
+        line.push_str(&format!(" timeout_ms={t}"));
+    }
+    if let Some(d) = flags.get("deadline-ms") {
+        line.push_str(&format!(" deadline_ms={d}"));
+    }
+    for tok in rest {
+        // the wire tokenizer has no escape character, so a value
+        // containing a literal quote has no valid wire spelling
+        anyhow::ensure!(
+            !tok.contains('"'),
+            "values containing a literal \" are not addressable on the wire (token {tok:?})"
+        );
+        line.push(' ');
+        line.push_str(&quote_token(tok));
+    }
+    println!("{}", obpam::server::request(addr, &line)?);
+    Ok(())
+}
+
+/// Quote a `key=value` token for the wire if its value contains
+/// whitespace (the v5 tokenizer strips the quotes back out).
+fn quote_token(tok: &str) -> String {
+    if !tok.chars().any(char::is_whitespace) {
+        return tok.to_string();
+    }
+    match tok.split_once('=') {
+        Some((k, v)) => format!("{k}=\"{v}\""),
+        None => format!("\"{tok}\""),
     }
 }
 
@@ -210,7 +272,7 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
         Pool::new(threads).threads()
     );
 
-    let spec = SolveSpec { method, k, seed, metric, threads, m, eps, max_passes };
+    let spec = SolveSpec { metric, threads, m, eps, max_passes, ..SolveSpec::new(method, k, seed) };
     let result = match backend_name.as_str() {
         "native" => {
             let backend = NativeBackend::with_pool(metric, Pool::new(threads));
@@ -249,13 +311,16 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // `--workers 0` auto-detects cores and `--queue-cap 0` follows the
     // worker count, matching the `--threads 0` convention; `--budget 0`
-    // takes the default weighted-admission budget (4x MAX_JOB_COST).
+    // takes the default weighted-admission budget (4x MAX_JOB_COST) and
+    // `--retain-cap 0` the default finished-job retention (64).
     let cfg = obpam::server::ServerConfig {
         addr: flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".into()),
         workers: flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2),
         queue_cap: flags.get("queue-cap").and_then(|s| s.parse().ok()).unwrap_or(16),
         cache_cap: flags.get("cache-cap").and_then(|s| s.parse().ok()).unwrap_or(32),
         budget: flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(0),
+        strict_budget: matches!(flags.get("strict-budget"), Some(v) if v != "false"),
+        retain_cap: flags.get("retain-cap").and_then(|s| s.parse().ok()).unwrap_or(0),
     };
     let handle = obpam::server::serve(cfg)?;
     println!("obpam server listening on {}", handle.addr);
@@ -263,6 +328,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         "try: printf 'cluster dataset=blobs_2000_8_5 k=5 method=FasterPAM\\n' | nc {} {}",
         handle.addr.ip(),
         handle.addr.port()
+    );
+    println!(
+        "or async: obpam submit --addr {} dataset=blobs_2000_8_5 k=5 deadline_ms=5000",
+        handle.addr
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -167,12 +167,7 @@ impl Pool {
     /// caller of each region is the remaining executor); they live
     /// until the last clone of this handle drops.
     pub fn new(threads: usize) -> Self {
-        let t = if threads == 0 {
-            std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
-        } else {
-            threads
-        }
-        .max(1);
+        let t = Pool::resolve(threads);
         if t == 1 {
             return Pool { threads: 1, core: None };
         }
@@ -188,6 +183,19 @@ impl Pool {
             handles.push(std::thread::spawn(move || worker_loop(&inner)));
         }
         Pool { threads: t, core: Some(Arc::new(PoolCore { inner, handles: Mutex::new(handles) })) }
+    }
+
+    /// The worker count [`Pool::new`] would resolve `threads` to
+    /// (`0` = auto-detect), without building a pool.  Lets pool caches
+    /// key on the effective width so `threads=0` and an explicit
+    /// `threads=<cores>` share one cached pool.
+    pub fn resolve(threads: usize) -> usize {
+        if threads == 0 {
+            std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+        } else {
+            threads
+        }
+        .max(1)
     }
 
     /// The single-threaded pool: every call runs inline on the caller.
@@ -424,6 +432,10 @@ mod tests {
     fn new_zero_is_auto_and_nonzero() {
         assert!(Pool::new(0).threads() >= 1);
         assert_eq!(Pool::new(3).threads(), 3);
+        // resolve() predicts the width new() builds, without spawning
+        assert_eq!(Pool::resolve(0), Pool::new(0).threads());
+        assert_eq!(Pool::resolve(5), 5);
+        assert_eq!(Pool::resolve(1), 1);
         assert!(Pool::serial().is_serial());
         assert!(!Pool::new(2).is_serial());
     }

@@ -1,0 +1,569 @@
+//! The asynchronous job registry behind protocol v5's handle verbs
+//! (`submit` / `poll` / `wait` / `cancel` / `jobs`).
+//!
+//! A [`JobRegistry`] decouples *connection* lifetime from *job*
+//! lifetime: `submit` prices and admits a clustering job, enqueues it,
+//! and returns a monotonic `job=j<id>` handle immediately; the server's
+//! worker threads drain the queue and
+//! publish each job's terminal state back through the registry, where
+//! any later connection can observe it.  A slow client holds only its
+//! own socket — never a solver worker.
+//!
+//! # Job lifecycle
+//!
+//! ```text
+//!            submit                 pickup                 finish
+//! (admitted) ------> Queued ----------------> Running -----------> Done | Failed | Cancelled
+//!                      |                         |
+//!                      | cancel / deadline       | cancel -> cooperative token,
+//!                      v                         v           lands as Cancelled
+//!                  Cancelled / Expired        (runs on)
+//! ```
+//!
+//! * a **queued** job holds its [`crate::server::JobPermit`] (admission
+//!   budget units); cancelling or deadline-shedding it releases the
+//!   permit immediately — the budget gauge returns to baseline without
+//!   the job ever running;
+//! * a **running** job is cancelled cooperatively: `cancel` flips the
+//!   job's [`CancelToken`], which the solver checks between swap
+//!   passes; the job then lands as `Cancelled` (or `Done`, if it
+//!   finished first — cancellation is a request, not preemption);
+//! * a job whose `deadline_ms=` elapses while still queued is **shed**:
+//!   state `Expired`, result `err deadline ... queue_ms=...`, permit
+//!   released, recorded in [`JobCounters::expired`] (the `shed=` stats
+//!   field).  Deadlines bound *queue wait*, not run time — a job that
+//!   started in time runs to completion.
+//!
+//! # Retention
+//!
+//! Terminal jobs are retained for later `poll`/`wait` calls, bounded by
+//! [`JobRegistry::new`]'s `retain_cap` with LRU eviction: each finished
+//! job joins the back of the retention queue, a `poll`/`wait` touch
+//! moves it back there, and admitting a finished job beyond the cap
+//! evicts the coldest one (its handle then reports `err unknown job`).
+//! Queued and running jobs are never evicted.
+//!
+//! All registry state sits behind one mutex; the critical sections are
+//! map/queue edits, vastly cheaper than the solves around them.  Two
+//! condvars separate the wakeup targets: workers park on `queue_cv`
+//! for new jobs, `wait` callers park on `state_cv` for state changes.
+
+use super::metrics::JobCounters;
+use super::JobWork;
+use crate::solver::CancelToken;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Where a job is in its lifecycle (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted and waiting for a worker.
+    Queued,
+    /// A worker is executing the solve.
+    Running,
+    /// Finished with a result (the stored `cluster` reply).
+    Done,
+    /// Finished with an error (load / admission-after-load / solver).
+    Failed,
+    /// Cancelled while queued, or a running job whose cooperative
+    /// cancellation landed.
+    Cancelled,
+    /// Shed because its `deadline_ms=` passed while still queued.
+    Expired,
+}
+
+impl JobState {
+    /// Wire spelling (`state=` field values).
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+            JobState::Expired => "expired",
+        }
+    }
+
+    /// Has the job reached a final state (result available, permit
+    /// released)?
+    pub fn is_terminal(self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
+}
+
+/// A point-in-time snapshot of one job, safe to format outside the
+/// registry lock.
+#[derive(Clone, Debug)]
+pub struct JobView {
+    /// The numeric part of the `j<id>` handle.
+    pub id: u64,
+    /// Lifecycle state at snapshot time.
+    pub state: JobState,
+    /// Admitted work units.  An unpredictable source submits at `0`;
+    /// the worker reports the real price once the post-load pricing
+    /// lands, so only the pre-pickup window reads `0`.
+    pub cost: u64,
+    /// Queue wait in milliseconds: so-far for a queued job, frozen at
+    /// pickup / shed time otherwise.
+    pub queue_ms: f64,
+    /// The stored reply line for terminal jobs (`ok ...` for done,
+    /// `err ...` otherwise); `None` while queued / running.
+    pub result: Option<String>,
+}
+
+/// Point-in-time occupancy of the registry (the `jobs` wire verb).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobGauges {
+    /// Jobs waiting for a worker.
+    pub queued: usize,
+    /// Jobs being executed right now.
+    pub running: usize,
+    /// Terminal jobs retained for `poll`/`wait` (bounded, LRU).
+    pub retained: usize,
+}
+
+/// What [`JobRegistry::wait`] observed.
+pub enum WaitOutcome {
+    /// No job with this id (never submitted, or evicted).
+    Unknown,
+    /// The job reached a terminal state; the view carries its result.
+    Terminal(JobView),
+    /// `timeout_ms=` elapsed first; the view shows the live state.
+    TimedOut(JobView),
+}
+
+/// One queued-or-running job a worker picked up.
+pub(crate) struct PickedJob {
+    pub(crate) id: u64,
+    pub(crate) work: Box<JobWork>,
+    /// Submit-to-pickup wait (milliseconds) — the v5 successor of the
+    /// v4 accept-to-pickup measure, fed to the queue-wait histograms.
+    pub(crate) queue_ms: f64,
+}
+
+struct Job {
+    state: JobState,
+    /// The solve request + admission permit; `Some` while queued, taken
+    /// by the worker at pickup (or dropped on cancel / shed, which
+    /// releases the permit).
+    work: Option<Box<JobWork>>,
+    cancel: CancelToken,
+    result: Option<String>,
+    submitted: Instant,
+    deadline: Option<Duration>,
+    cost: u64,
+    queue_ms: f64,
+}
+
+struct Inner {
+    jobs: HashMap<u64, Job>,
+    /// Queued job ids in submit order (ids whose job left `Queued` by
+    /// cancel / shed are skipped at pickup).
+    queue: VecDeque<u64>,
+    /// Terminal job ids, coldest first (LRU retention order).
+    finished: VecDeque<u64>,
+    shutdown: bool,
+}
+
+/// The registry: owns every job from submit to eviction.
+pub struct JobRegistry {
+    inner: Mutex<Inner>,
+    /// Workers park here for new queue entries (or shutdown).
+    queue_cv: Condvar,
+    /// `wait` callers park here for job state changes.
+    state_cv: Condvar,
+    next_id: AtomicU64,
+    retain_cap: usize,
+    /// Max *queued* jobs before `submit` backpressures — the v5
+    /// successor of v4's connection-held queue slots: a `submit` frees
+    /// its connection immediately, so without this bound a client loop
+    /// could grow the queue (and, for unpriced hint-less `file:`
+    /// sources, bypass the admission budget entirely) without limit.
+    queue_cap: usize,
+    /// Worker threads draining this registry (0 = none running, e.g. a
+    /// direct-library [`crate::server::ServerState`] without `serve`).
+    workers: AtomicUsize,
+    counters: JobCounters,
+}
+
+impl JobRegistry {
+    /// Empty registry retaining at most `retain_cap` finished jobs and
+    /// accepting at most `queue_cap` queued (not-yet-running) jobs.
+    pub fn new(retain_cap: usize, queue_cap: usize) -> Self {
+        JobRegistry {
+            inner: Mutex::new(Inner {
+                jobs: HashMap::new(),
+                queue: VecDeque::new(),
+                finished: VecDeque::new(),
+                shutdown: false,
+            }),
+            queue_cv: Condvar::new(),
+            state_cv: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            retain_cap: retain_cap.max(1),
+            queue_cap: queue_cap.max(1),
+            workers: AtomicUsize::new(0),
+            counters: JobCounters::new(),
+        }
+    }
+
+    /// Lifetime counters (the `jobs.*` / `shed=` stats fields).
+    pub fn counters(&self) -> &JobCounters {
+        &self.counters
+    }
+
+    /// Declare `n` worker threads are draining this registry.
+    pub(crate) fn set_workers(&self, n: usize) {
+        self.workers.store(n, Ordering::SeqCst);
+    }
+
+    /// Are any worker threads draining this registry?  `cluster` lines
+    /// route through the queue exactly when this holds; a direct
+    /// library state runs them inline instead.
+    pub fn has_workers(&self) -> bool {
+        self.workers.load(Ordering::SeqCst) > 0
+    }
+
+    /// Enqueue an admitted job; returns its handle id.  Fails once
+    /// [`JobRegistry::shutdown`] ran (a job enqueued then could never
+    /// be drained), and backpressures with `queue full` once
+    /// `queue_cap` jobs are already queued.
+    pub(crate) fn submit(
+        &self,
+        work: Box<JobWork>,
+        deadline_ms: Option<u64>,
+        cancel: CancelToken,
+        cost: u64,
+    ) -> Result<u64, String> {
+        let mut inner = self.lock();
+        if inner.shutdown {
+            return Err("server shutting down".into());
+        }
+        // cancel/expire/pickup keep `queue` exactly in sync with the
+        // Queued state (all under this lock), so its length IS the
+        // queued-job count — no map scan on the submit path
+        let queued = inner.queue.len();
+        if queued >= self.queue_cap {
+            return Err(format!("queue full ({queued} jobs queued)"));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        inner.jobs.insert(
+            id,
+            Job {
+                state: JobState::Queued,
+                work: Some(work),
+                cancel,
+                result: None,
+                submitted: Instant::now(),
+                deadline: deadline_ms.map(Duration::from_millis),
+                cost,
+                queue_ms: 0.0,
+            },
+        );
+        inner.queue.push_back(id);
+        self.counters.record_submitted();
+        drop(inner);
+        self.queue_cv.notify_one();
+        Ok(id)
+    }
+
+    /// Worker loop: block until a runnable job is available and claim
+    /// it, shedding any queued job whose deadline already passed.
+    /// Returns `None` on shutdown *after* the queue drained, so jobs
+    /// accepted before shutdown still complete.
+    pub(crate) fn next_job(&self) -> Option<PickedJob> {
+        let mut inner = self.lock();
+        loop {
+            while let Some(id) = inner.queue.pop_front() {
+                if self.expire_if_due(&mut inner, id) {
+                    self.state_cv.notify_all();
+                    continue;
+                }
+                let picked = {
+                    let Some(job) = inner.jobs.get_mut(&id) else { continue };
+                    if job.state != JobState::Queued {
+                        continue; // cancelled while queued
+                    }
+                    let waited = job.submitted.elapsed().as_secs_f64() * 1e3;
+                    job.state = JobState::Running;
+                    job.queue_ms = waited;
+                    PickedJob {
+                        id,
+                        work: job.work.take().expect("queued job carries its work"),
+                        queue_ms: waited,
+                    }
+                };
+                self.state_cv.notify_all();
+                return Some(picked);
+            }
+            if inner.shutdown {
+                return None;
+            }
+            inner = self.queue_cv.wait(inner).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Publish a picked job's outcome.  An error equal to
+    /// [`crate::solver::CANCELLED`] records the job as cancelled (the
+    /// cooperative token landed); any other error is a failure.
+    pub(crate) fn finish(&self, id: u64, outcome: Result<String, String>) {
+        let mut inner = self.lock();
+        let landed = {
+            let Some(job) = inner.jobs.get_mut(&id) else { return };
+            let state = match &outcome {
+                Ok(_) => JobState::Done,
+                Err(e) if e.as_str() == crate::solver::CANCELLED => JobState::Cancelled,
+                Err(_) => JobState::Failed,
+            };
+            job.state = state;
+            job.result = Some(match outcome {
+                Ok(reply) => reply,
+                Err(_) if state == JobState::Cancelled => format!("err cancelled job=j{id}"),
+                Err(e) => format!("err {e}"),
+            });
+            state
+        };
+        match landed {
+            JobState::Done => self.counters.record_done(),
+            JobState::Cancelled => self.counters.record_cancelled(),
+            _ => self.counters.record_failed(),
+        }
+        self.retire(&mut inner, id);
+        drop(inner);
+        self.state_cv.notify_all();
+    }
+
+    /// Non-blocking snapshot of one job (`None`: unknown / evicted).
+    /// Applies lazy deadline expiry and counts as an LRU touch on
+    /// terminal jobs.
+    pub fn poll(&self, id: u64) -> Option<JobView> {
+        let mut inner = self.lock();
+        let expired = self.expire_if_due(&mut inner, id);
+        let (view, terminal) = {
+            let job = inner.jobs.get(&id)?;
+            (view_of(id, job), job.state.is_terminal())
+        };
+        if terminal {
+            touch(&mut inner, id);
+        }
+        if expired {
+            drop(inner);
+            self.state_cv.notify_all();
+        }
+        Some(view)
+    }
+
+    /// Block until the job reaches a terminal state, or `timeout`
+    /// elapses.  The wait wakes itself at the job's own deadline, so a
+    /// queued job sheds on time even with no worker ever picking it up.
+    pub fn wait(&self, id: u64, timeout: Option<Duration>) -> WaitOutcome {
+        let wait_until = timeout.map(|t| Instant::now() + t);
+        let mut inner = self.lock();
+        loop {
+            let expired = self.expire_if_due(&mut inner, id);
+            if expired {
+                self.state_cv.notify_all();
+            }
+            let Some(job) = inner.jobs.get(&id) else { return WaitOutcome::Unknown };
+            let view = view_of(id, job);
+            let (state, submitted, deadline) = (job.state, job.submitted, job.deadline);
+            if state.is_terminal() {
+                touch(&mut inner, id);
+                return WaitOutcome::Terminal(view);
+            }
+            // next wakeup: the job's own deadline (queued only) and/or
+            // the caller's timeout — whichever comes first
+            let now = Instant::now();
+            let mut sleep: Option<Duration> = match (state, deadline) {
+                (JobState::Queued, Some(d)) => {
+                    Some((submitted + d).saturating_duration_since(now))
+                }
+                _ => None,
+            };
+            if let Some(until) = wait_until {
+                if now >= until {
+                    return WaitOutcome::TimedOut(view);
+                }
+                let left = until - now;
+                sleep = Some(sleep.map_or(left, |s| s.min(left)));
+            }
+            inner = match sleep {
+                Some(d) => {
+                    self.state_cv.wait_timeout(inner, d).unwrap_or_else(|e| e.into_inner()).0
+                }
+                None => self.state_cv.wait(inner).unwrap_or_else(|e| e.into_inner()),
+            };
+        }
+    }
+
+    /// Cancel a job: a queued one is terminal immediately (permit
+    /// released), a running one gets its cooperative token flipped, a
+    /// terminal one is left as-is.  Returns the state observed *after*
+    /// the call and whether this call changed anything; `None` for an
+    /// unknown handle.
+    pub fn cancel(&self, id: u64) -> Option<(JobState, bool)> {
+        let mut inner = self.lock();
+        let _ = self.expire_if_due(&mut inner, id);
+        enum Effect {
+            CancelledQueued,
+            FlaggedRunning,
+            Already(JobState),
+        }
+        let effect = {
+            let job = inner.jobs.get_mut(&id)?;
+            match job.state {
+                JobState::Queued => {
+                    job.state = JobState::Cancelled;
+                    job.queue_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
+                    job.work = None; // drops the JobWork -> permit released
+                    job.result = Some(format!("err cancelled job=j{id}"));
+                    Effect::CancelledQueued
+                    // the stale queue entry is dropped below, once the
+                    // job borrow ends
+                }
+                JobState::Running => {
+                    job.cancel.cancel();
+                    Effect::FlaggedRunning
+                }
+                s => Effect::Already(s),
+            }
+        };
+        match effect {
+            Effect::CancelledQueued => {
+                inner.queue.retain(|&x| x != id);
+                self.counters.record_cancelled();
+                self.retire(&mut inner, id);
+                drop(inner);
+                self.state_cv.notify_all();
+                Some((JobState::Cancelled, true))
+            }
+            Effect::FlaggedRunning => Some((JobState::Running, true)),
+            Effect::Already(s) => Some((s, false)),
+        }
+    }
+
+    /// Record the job's post-load price (unpredictable sources submit
+    /// at `cost=0`; the worker reports the real units once the permit
+    /// is priced, so `poll` on a running job shows what it holds).
+    pub(crate) fn set_cost(&self, id: u64, units: u64) {
+        if let Some(job) = self.lock().jobs.get_mut(&id) {
+            job.cost = units;
+        }
+    }
+
+    /// Shed every queued job whose deadline already passed.  Expiry is
+    /// otherwise lazy (applied when a job is observed), so the submit
+    /// path and the gauges run this sweep first — a logically dead job
+    /// must not hold budget units against a new submit or count as
+    /// queued in `jobs`/`stats`.  O(queued), bounded by `queue_cap`.
+    pub(crate) fn shed_expired(&self) {
+        let mut inner = self.lock();
+        let queued: Vec<u64> = inner.queue.iter().copied().collect();
+        let mut any = false;
+        for id in queued {
+            any |= self.expire_if_due(&mut inner, id);
+        }
+        if any {
+            drop(inner);
+            self.state_cv.notify_all();
+        }
+    }
+
+    /// Registry occupancy (the `jobs` wire verb and `jobs.*` gauges).
+    /// Sweeps overdue queued jobs first, so a dead job never reads as
+    /// queued.
+    pub fn gauges(&self) -> JobGauges {
+        self.shed_expired();
+        let inner = self.lock();
+        let (mut queued, mut running) = (0, 0);
+        for job in inner.jobs.values() {
+            match job.state {
+                JobState::Queued => queued += 1,
+                JobState::Running => running += 1,
+                _ => {}
+            }
+        }
+        JobGauges { queued, running, retained: inner.finished.len() }
+    }
+
+    /// Begin shutdown: reject new submits, wake parked workers (they
+    /// drain the remaining queue, then exit) and every `wait` caller.
+    pub fn shutdown(&self) {
+        self.lock().shutdown = true;
+        self.queue_cv.notify_all();
+        self.state_cv.notify_all();
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Shed the job if it is queued past its deadline: terminal
+    /// `Expired`, permit released, shed counted.  Returns whether it
+    /// expired on this call.
+    fn expire_if_due(&self, inner: &mut Inner, id: u64) -> bool {
+        let due = {
+            let Some(job) = inner.jobs.get_mut(&id) else { return false };
+            if job.state != JobState::Queued {
+                return false;
+            }
+            let Some(deadline) = job.deadline else { return false };
+            let waited = job.submitted.elapsed();
+            if waited < deadline {
+                return false;
+            }
+            let queue_ms = waited.as_secs_f64() * 1e3;
+            job.state = JobState::Expired;
+            job.queue_ms = queue_ms;
+            job.work = None; // releases the admission permit
+            job.result = Some(format!(
+                "err deadline job=j{id} deadline_ms={} queue_ms={queue_ms:.1}",
+                deadline.as_millis()
+            ));
+            true
+        };
+        if due {
+            // drop the stale queue entry (no-op when the caller already
+            // popped it, i.e. the shed-at-pickup path)
+            inner.queue.retain(|&x| x != id);
+            self.counters.record_expired();
+            self.retire(inner, id);
+        }
+        due
+    }
+
+    /// Add a terminal job to the retention queue (warm end), evicting
+    /// the coldest beyond `retain_cap`.
+    fn retire(&self, inner: &mut Inner, id: u64) {
+        touch(inner, id);
+        if !inner.finished.contains(&id) {
+            inner.finished.push_back(id);
+        }
+        while inner.finished.len() > self.retain_cap {
+            if let Some(cold) = inner.finished.pop_front() {
+                inner.jobs.remove(&cold);
+            }
+        }
+    }
+}
+
+/// LRU touch: move `id` to the warm end of the retention queue (no-op
+/// for ids not yet retired).
+fn touch(inner: &mut Inner, id: u64) {
+    if let Some(pos) = inner.finished.iter().position(|&x| x == id) {
+        inner.finished.remove(pos);
+        inner.finished.push_back(id);
+    }
+}
+
+fn view_of(id: u64, job: &Job) -> JobView {
+    let queue_ms = if job.state == JobState::Queued {
+        job.submitted.elapsed().as_secs_f64() * 1e3
+    } else {
+        job.queue_ms
+    };
+    JobView { id, state: job.state, cost: job.cost, queue_ms, result: job.result.clone() }
+}

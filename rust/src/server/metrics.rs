@@ -1,4 +1,5 @@
-//! Per-method serving metrics (protocol v4 `stats`).
+//! Per-method serving metrics (protocol v4 `stats`) and job lifecycle
+//! counters (protocol v5 `jobs.*` / `shed=` stats fields).
 //!
 //! Every successful `cluster` reply records its method's solve+eval
 //! latency, its queue wait and its dissimilarity count here; the
@@ -8,11 +9,19 @@
 //! aggregates show the centre, the buckets show the tail).  `stats
 //! reset` clears everything via [`MethodMetrics::reset`].
 //!
+//! [`JobCounters`] tracks the v5 asynchronous job registry
+//! ([`crate::server::jobs`]): jobs submitted and how each one ended
+//! (done / failed / cancelled / deadline-expired).  The `stats` line
+//! exports them as `jobs.<outcome>=` fields plus the `shed=` alias for
+//! deadline expiries, and `stats reset` re-bases them alongside the
+//! method aggregates.
+//!
 //! One mutex over a small BTreeMap is plenty: the critical section is a
 //! map insert, vastly cheaper than the clustering job that precedes it,
 //! and the BTreeMap keeps the `stats` line deterministically ordered.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Upper bucket edges (milliseconds, `le` semantics) of every latency
@@ -169,9 +178,108 @@ impl MethodMetrics {
     }
 }
 
+/// Lifetime counters of the asynchronous job registry (protocol v5).
+///
+/// `submitted` counts every accepted `submit` (including the implicit
+/// one behind each served `cluster` line); the outcome counters
+/// partition the jobs that reached a terminal state.  A deadline
+/// expiry is a *shed*: the job was admitted but never ran, so
+/// [`JobCounters::shed`] aliases `expired` for the `shed=` stats
+/// field.  All counters are atomics — recording is lock-free.
+#[derive(Default)]
+pub struct JobCounters {
+    submitted: AtomicU64,
+    done: AtomicU64,
+    failed: AtomicU64,
+    cancelled: AtomicU64,
+    expired: AtomicU64,
+}
+
+impl JobCounters {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn record_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_done(&self) {
+        self.done.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_failed(&self) {
+        self.failed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Jobs accepted by `submit` (and the `cluster` compatibility path).
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::SeqCst)
+    }
+
+    /// Jobs that finished with a result.
+    pub fn done(&self) -> u64 {
+        self.done.load(Ordering::SeqCst)
+    }
+
+    /// Jobs that finished with an error (admission-after-load, solver
+    /// failure, worker panic).
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::SeqCst)
+    }
+
+    /// Jobs cancelled while queued or running.
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// Jobs shed because their `deadline_ms=` passed while queued.
+    pub fn expired(&self) -> u64 {
+        self.expired.load(Ordering::SeqCst)
+    }
+
+    /// Alias of [`JobCounters::expired`] — the `shed=` stats field.
+    pub fn shed(&self) -> u64 {
+        self.expired()
+    }
+
+    /// Zero every counter (the `stats reset` wire command).
+    pub fn reset(&self) {
+        for c in [&self.submitted, &self.done, &self.failed, &self.cancelled, &self.expired] {
+            c.store(0, Ordering::SeqCst);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn job_counters_record_and_reset() {
+        let c = JobCounters::new();
+        c.record_submitted();
+        c.record_submitted();
+        c.record_done();
+        c.record_cancelled();
+        c.record_expired();
+        assert_eq!(
+            (c.submitted(), c.done(), c.failed(), c.cancelled(), c.expired()),
+            (2, 1, 0, 1, 1)
+        );
+        assert_eq!(c.shed(), c.expired(), "shed= aliases deadline expiries");
+        c.reset();
+        assert_eq!((c.submitted(), c.done(), c.cancelled(), c.shed()), (0, 0, 0, 0));
+    }
 
     #[test]
     fn aggregates_count_min_mean_max() {

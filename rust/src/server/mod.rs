@@ -1,112 +1,145 @@
-//! Clustering job server: a std::net TCP service with a bounded job
-//! queue, a fixed worker pool (tokio is unavailable offline;
-//! thread-per-worker over a bounded queue is the right shape for
-//! CPU-bound jobs anyway), cost-weighted admission, and a sharded
-//! dataset cache that loads cold misses outside its locks.
+//! Clustering job server: a std::net TCP service with an asynchronous
+//! job registry (connection lifetime is decoupled from job lifetime),
+//! solver workers that drain *jobs* rather than connections,
+//! cost-weighted admission with deadlines, server-owned execution
+//! pools, and a sharded dataset cache that loads cold misses outside
+//! its locks.
 //!
-//! # Line protocol v4 (one request line per connection, one reply line)
+//! # Line protocol v5 (one request line per connection, one reply line)
 //!
 //! ```text
 //! -> cluster dataset=blobs_2000_8_5 k=5 method=FasterPAM seed=3 threads=4
 //! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 source=synth:blobs_2000_8_5 cost=4000000 queue_ms=0.2 served_ms=50.1
-//! -> cluster dataset=file:/data/points.csv metric=l2 scale_features=minmax k=3
-//! <- ok method=OneBatch-nniw cache=hit medoids=... objective=... seconds=... dissim=... swaps=... source=file:/data/points.csv cost=61200 queue_ms=0.1 served_ms=1.9
+//! -> submit dataset=blobs_2000_8_5 k=5 seed=3 deadline_ms=5000
+//! <- ok job=j7 cost=61200 queue_ms=0.0 served_ms=0.1
+//! -> poll job=j7
+//! <- ok job=j7 state=running cost=61200 waited_ms=1.4 queue_ms=0.0 served_ms=0.0
+//! -> wait job=j7 timeout_ms=30000
+//! <- ok method=OneBatch-nniw cache=hit medoids=... objective=... seconds=... dissim=... swaps=... source=... cost=61200 queue_ms=0.0 served_ms=48.9
+//! -> cancel job=j8
+//! <- ok job=j8 state=cancelled queue_ms=0.0 served_ms=0.0
+//! -> jobs
+//! <- ok queued=0 running=1 retained=4 submitted=9 done=6 failed=1 cancelled=1 expired=1 shed=1 queue_ms=0.0 served_ms=0.0
 //! -> stats
-//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 budget_total=... budget_used=... hist_le_ms=1,2,... method.FasterPAM.count=2 ... method.FasterPAM.ms_hist=0,1,... method.FasterPAM.queue_hist=2,0,... queue_ms=0.0 served_ms=0.0
-//! -> stats reset
-//! <- ok queue_ms=0.0 served_ms=0.0
+//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 budget_total=... budget_used=... hist_le_ms=1,2,... jobs.submitted=9 ... shed=1 pools=2 method.FasterPAM.count=2 ... queue_ms=0.0 served_ms=0.0
 //! -> ping
 //! <- pong queue_ms=0.0 served_ms=0.0
 //! ```
 //!
-//! v4 over v3: every v3 reply field is byte-identical and in the same
-//! position; `cluster` replies append `cost=` (the work units the job
-//! was admitted at, see [`JobCost`]), every connection-served reply
-//! appends `queue_ms=` (accept-to-worker-pickup wait) before
-//! `served_ms=`, `stats` gains the admission-budget gauges, fixed
-//! latency histograms per method (solve + queue wait; bucket edges in
-//! `hist_le_ms=`), and a `stats reset` subcommand that re-bases the
-//! method aggregates and cache counters.
+//! v5 over v4: every v4 request line — including the legacy v1–v3
+//! forms — still produces a byte-identical reply shape.  `cluster` is
+//! now sugar for `submit` + `wait` through the same job registry, so
+//! its reply bytes are exactly what the async verbs would assemble.
+//! The new surface:
 //!
-//! `cluster` keys:
+//! * `submit <cluster keys> [deadline_ms=N]` — validate, price and
+//!   admit the job (reserving its [`JobCost::units`] from the
+//!   [`AdmissionBudget`]), enqueue it, and reply immediately with a
+//!   monotonic handle: `ok job=j<id> cost=<units>`.  Sources that
+//!   cannot predict their row count (a hint-less `file:`) report
+//!   `cost=0` and are priced right after their load, inside the job
+//!   (`poll` reflects the settled price once the job runs).  The job
+//!   queue itself is bounded by [`ServerConfig::queue_cap`]: once that
+//!   many jobs are queued, further submits get `err queue full ...` —
+//!   without this, submit-and-disconnect traffic would be unbounded.
+//! * `poll job=j<id>` — non-blocking state probe:
+//!   `ok job=j<id> state=queued|running cost=... waited_ms=...` while
+//!   in flight (`waited_ms` is the queue wait so far — the trailing
+//!   `queue_ms=` every wire reply carries stays connection-level),
+//!   `state=done <full cluster reply body>` /
+//!   `state=failed|expired error=<message>` / `state=cancelled` once
+//!   terminal, `err unknown job j<id>` after eviction.
+//! * `wait job=j<id> [timeout_ms=N]` — block (condvar, no polling)
+//!   until the job is terminal or the timeout elapses.  A finished job
+//!   replies with its stored `cluster` reply verbatim; a failed one
+//!   with its stored `err ...`; a timeout with
+//!   `ok job=j<id> state=... timed_out=1`.
+//! * `cancel job=j<id>` — cooperative cancellation: a queued job is
+//!   cancelled on the spot (admission permit released), a running job
+//!   has its [`CancelToken`] flipped, which OneBatchPAM checks between
+//!   swap passes (`ok job=j<id> state=running cancel=requested`); a
+//!   terminal job is left unchanged (idempotent).
+//! * `jobs` — registry gauges: queued / running / retained occupancy
+//!   plus the lifetime submitted / done / failed / cancelled / expired
+//!   counters (`shed=` aliases `expired=`).
+//! * `deadline_ms=` — accepted by `submit` *and* `cluster`: the job is
+//!   shed if the deadline passes while it is still queued
+//!   (`err deadline job=j<id> deadline_ms=... queue_ms=...`), its
+//!   permit released and the shed recorded in the `shed=` stats field.
+//!   Deadlines bound queue wait, not run time.
+//! * request lines are tokenized with double-quote support, so `file:`
+//!   paths containing spaces are now wire-addressable:
+//!   `dataset="file:/data/my points.csv"` (quotes may wrap any value;
+//!   an unterminated quote is a protocol error).  This lifts the
+//!   documented v4 limitation.
+//! * `stats` additionally exports the `jobs.*` lifecycle fields,
+//!   `shed=`, and `pools=` (distinct execution-pool widths cached by
+//!   the server); `stats reset` re-bases the job counters along with
+//!   the method aggregates and cache counters.
+//!
+//! `cluster` keys (unchanged from v4, plus `deadline_ms=`):
 //!
 //! * `dataset=` — a [`DataSource`] URI: `synth:<name>` generates,
 //!   `file:<path>[?rows=N]` loads a numeric CSV from disk, and a bare
-//!   name aliases `synth:` (every v2 request line is still valid; v2
-//!   replies gained only the trailing `source=` field).  Request lines
-//!   are whitespace-tokenized, so paths containing spaces are not
-//!   addressable on the wire — use the CLI or library for those.
+//!   name aliases `synth:` (every v2 request line is still valid).
 //! * `scale=`, `seed=` — synthetic-generation knobs (`seed=` also seeds
 //!   the algorithm; a non-neutral `scale=` with a `file:` source is an
-//!   error — file bytes do not scale).  Requests route through a sharded
-//!   LRU dataset cache
-//!   keyed by `(source identity + fingerprint, scale, seed, scale_features)`
-//!   ([`DatasetCache`], bounded by [`ServerConfig::cache_cap`]), so
-//!   repeated traffic never reloads data; every reply reports
-//!   `cache=hit|miss`.  A `file:` fingerprint mixes size + mtime, so an
-//!   edit that changes either invalidates its entries automatically.
-//! * `method=` — any [`MethodSpec`] label (`FasterPAM`, `FasterCLARA-50`,
-//!   `BanditPAM++-2`, `OneBatch-nniw-steepest`, ...; see
-//!   [`MethodSpec::parse`]).  Omitted -> legacy v1 behaviour: OneBatchPAM
-//!   with `sampler=` (default `nniw`) and `strategy=` (default `eager`).
-//!   Methods the paper marks "Na" at large scale (full `n x n` matrix or
-//!   per-round resampling) are rejected above [`FULL_MATRIX_LIMIT`] rows,
-//!   *before* loading, using the source's row hint (catalogue prediction
-//!   or `?rows=N`).
+//!   error).  Requests route through a sharded LRU dataset cache
+//!   ([`DatasetCache`], bounded by [`ServerConfig::cache_cap`]); every
+//!   reply reports `cache=hit|miss`, and `file:` fingerprints mix size
+//!   + mtime so edits self-invalidate.
+//! * `method=` — any [`MethodSpec`] label (`FasterPAM`,
+//!   `FasterCLARA-50`, `BanditPAM++-2`, `OneBatch-nniw-steepest`, ...).
+//!   Omitted -> legacy v1 behaviour: OneBatchPAM with `sampler=`
+//!   (default `nniw`) and `strategy=` (default `eager`).  Methods the
+//!   paper marks "Na" at large scale are rejected above
+//!   [`FULL_MATRIX_LIMIT`] rows *before* loading, using the source's
+//!   row hint.
 //! * `metric=` — any [`Metric`] spelling (`l1` default, `l2`,
-//!   `sqeuclidean`, `chebyshev`, `cosine`); carried on
-//!   [`SolveSpec::metric`] so selection, evaluation and the backend all
-//!   agree.
-//! * `scale_features=` — `minmax` | `none` (default `none`): min-max
-//!   feature preprocessing applied once at admission and cached.
+//!   `sqeuclidean`, `chebyshev`, `cosine`).
+//! * `scale_features=` — `minmax` | `none` (default `none`).
 //! * `k=`, `threads=` — shared run parameters.
 //! * `m=`, `eps=`, `max_passes=`, `strategy=`, `sampler=` — OneBatch
-//!   knobs (batch size, swap-acceptance threshold, pass budget, swap
-//!   engine, batch variant).  Sending one alongside a non-OneBatch
-//!   `method=` is an error, not silently ignored — as is any
-//!   present-but-unparsable value (`err ...` replies).
-//!
-//! `stats` reports the cache counters and admission-budget gauges plus,
-//! per served method label, count/min/mean/max aggregates of solve+eval
-//! latency (ms) and dissimilarity computations, and fixed-bucket
-//! histograms of solve latency and queue wait ([`MethodMetrics`]).
-//! `stats reset` zeroes the method aggregates and cache counters.
+//!   knobs; sending one alongside a non-OneBatch `method=` is an
+//!   error, as is any present-but-unparsable value (`err ...` replies).
 //!
 //! # Concurrency model
 //!
-//! * [`ServerConfig::workers`] long-lived worker threads (`0` =
-//!   auto-detect, like `Pool::new(0)` / `--threads 0`) drain accepted
-//!   connections from an mpsc queue — cross-job parallelism;
-//! * each `cluster` job may additionally ask for data parallelism via
-//!   the `threads=` key (a [`crate::runtime::Pool`] of persistent
-//!   workers per job);
-//! * connection admission is a **single atomic** `fetch_update` on the
-//!   in-flight counter (queued + running): a burst of connections can
-//!   never push it past `queue_cap` (`0` = 4x workers), and rejected
-//!   connections get an immediate `err queue full` line instead of
-//!   unbounded queueing;
-//! * **job admission is weighted by cost**: every `cluster` job is
-//!   priced via [`MethodSpec::cost`] over the source's predicted rows
-//!   ([`crate::data::DataSource::expected_rows`] — catalogue names and
-//!   `file:...?rows=N` hints price *before any I/O*; unpredictable
-//!   sources price right after the load) and must reserve its work
-//!   units from the [`AdmissionBudget`] ([`ServerConfig::budget`]).
-//!   Many cheap OneBatch jobs are admitted concurrently; one huge
-//!   full-matrix job consumes most of the budget; an over-budget job
-//!   gets an immediate `err over budget ... cost=...` reply.  An
-//!   oversized job may still run when the budget is completely idle, so
-//!   a small budget can never brick a legitimate lone job;
-//! * the dataset cache is sharded ([`cache::SHARDS`] locks) and loads
-//!   cold misses *outside* the shard lock behind per-key in-flight
-//!   markers: a burst for the same new dataset loads it exactly once,
-//!   and a slow cold `file:` load no longer stalls unrelated datasets
-//!   on the same shard.
+//! * the accept loop admits connections against
+//!   [`ServerConfig::queue_cap`] (single-atomic reserve-or-reject, so a
+//!   burst can never overshoot) and hands each one to a short-lived
+//!   connection thread that parses, dispatches and replies.  A slow or
+//!   long-`wait`ing client therefore holds only its own socket — never
+//!   a solver worker, which was the v4 accept-path limitation;
+//! * [`ServerConfig::workers`] long-lived solver workers (`0` = auto)
+//!   drain the [`JobRegistry`] queue: pick a job, shed it if its
+//!   deadline passed while queued, otherwise run the solve and publish
+//!   the terminal state.  Queue wait (submit-to-pickup) feeds the
+//!   per-method queue histograms, succeeding v4's accept-to-pickup
+//!   measure;
+//! * **job admission is weighted by cost**: every job is priced via
+//!   [`MethodSpec::cost`] over the source's predicted rows and must
+//!   reserve its work units from the [`AdmissionBudget`]
+//!   ([`ServerConfig::budget`]) at submit time.  The permit is held
+//!   from admission to the job's terminal state — cancelled and
+//!   deadline-shed jobs release it without ever running.  An oversized
+//!   job may still run when the budget is completely idle, unless
+//!   [`ServerConfig::strict_budget`] disables that lone-job exception;
+//! * jobs reuse **server-owned execution pools**: a [`PoolCache`] keyed
+//!   by resolved thread width hands every job a clone of one persistent
+//!   [`Pool`] per width, so repeated `threads=4` jobs wake the same
+//!   parked workers instead of spawning fresh ones (results stay
+//!   bit-identical across reuse — rust/tests/parallel_equivalence.rs);
+//! * the dataset cache is sharded and loads cold misses *outside* the
+//!   shard lock behind per-key in-flight markers.
 
 pub mod cache;
+pub mod jobs;
 pub mod metrics;
 
 pub use cache::{CacheStats, DatasetCache};
-pub use metrics::{MethodAgg, MethodMetrics};
+pub use jobs::{JobGauges, JobRegistry, JobState, JobView, WaitOutcome};
+pub use metrics::{JobCounters, MethodAgg, MethodMetrics};
 
 use crate::backend::NativeBackend;
 use crate::coordinator::{SamplerKind, SwapStrategy};
@@ -114,25 +147,29 @@ use crate::data::{DataSource, FeatureScaling};
 use crate::dissim::{DissimCounter, Metric};
 use crate::eval;
 use crate::runtime::Pool;
-use crate::solver::{self, JobCost, MethodSpec, SolveSpec, MAX_JOB_COST};
-use std::collections::HashMap;
+use crate::solver::{self, CancelToken, JobCost, MethodSpec, SolveSpec, MAX_JOB_COST};
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::num::NonZeroUsize;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Bind address, e.g. "127.0.0.1:7878" (port 0 = ephemeral).
     pub addr: String,
-    /// Worker threads draining the job queue; `0` = auto-detect
-    /// (`available_parallelism`), matching `Pool::new(0)` / `--threads 0`.
+    /// Solver worker threads draining the job registry; `0` =
+    /// auto-detect (`available_parallelism`), matching `Pool::new(0)` /
+    /// `--threads 0`.
     pub workers: usize,
-    /// Max in-flight connections (queued + running) before backpressure;
-    /// `0` = 4x the resolved worker count.
+    /// Max in-flight connections *and* max queued (not-yet-running)
+    /// jobs before backpressure; `0` = 4x the resolved worker count.
+    /// The two bounds compose: a one-shot `cluster` holds a connection
+    /// for its whole job, an async `submit` frees its connection
+    /// immediately but still counts against the job-queue bound.
     pub queue_cap: usize,
     /// Dataset-cache budget in datasets (split across shards, LRU).
     pub cache_cap: usize,
@@ -140,6 +177,14 @@ pub struct ServerConfig {
     /// `0` = 4x [`MAX_JOB_COST`] (room for one limit-sized full-matrix
     /// job plus plenty of cheap OneBatch traffic).
     pub budget: u64,
+    /// Disable the lone-job idle exception of the admission budget:
+    /// when `true`, a job whose cost exceeds the budget is rejected
+    /// even when nothing else is in flight.  Default `false` preserves
+    /// the v4 behaviour (`--strict-budget` on the CLI).
+    pub strict_budget: bool,
+    /// How many *finished* jobs the registry retains for later
+    /// `poll`/`wait` calls (LRU eviction); `0` = 64.
+    pub retain_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -150,6 +195,8 @@ impl Default for ServerConfig {
             queue_cap: 16,
             cache_cap: 32,
             budget: 0,
+            strict_budget: false,
+            retain_cap: 0,
         }
     }
 }
@@ -181,25 +228,47 @@ impl ServerConfig {
             self.budget
         }
     }
+
+    /// `retain_cap` with `0` resolved to the default (64 finished jobs).
+    pub fn resolved_retain_cap(&self) -> usize {
+        if self.retain_cap == 0 {
+            64
+        } else {
+            self.retain_cap
+        }
+    }
 }
 
 /// The weighted-admission budget: a pool of work units that every
-/// in-flight `cluster` job holds its [`JobCost::units`] from, released
-/// when the job's [`AdmissionPermit`] drops.
+/// in-flight job holds its [`JobCost::units`] from — reserved at
+/// submit, released when the job reaches a terminal state (permit
+/// drop), whether it ran, failed, was cancelled or was shed.
 ///
 /// A job is admitted when its units fit the remaining budget — or when
 /// the budget is completely idle, so one oversized-but-admissible job
 /// (e.g. OneBatchPAM over millions of rows) can still run alone instead
-/// of being starved forever by a budget smaller than itself.
+/// of being starved forever by a budget smaller than itself.  That
+/// lone-job exception can be disabled ([`AdmissionBudget::with_strict`]
+/// / [`ServerConfig::strict_budget`]) for deployments that prefer a
+/// hard ceiling.
 pub struct AdmissionBudget {
     total: u64,
+    strict: bool,
     used: AtomicU64,
 }
 
 impl AdmissionBudget {
-    /// Budget of `total` work units.
+    /// Budget of `total` work units with the lone-job idle exception
+    /// enabled (the v4 behaviour).
     pub fn new(total: u64) -> Self {
-        AdmissionBudget { total: total.max(1), used: AtomicU64::new(0) }
+        AdmissionBudget::with_strict(total, false)
+    }
+
+    /// Budget of `total` work units; `strict` disables the lone-job
+    /// idle exception, so an over-budget job is rejected even when the
+    /// budget is idle.
+    pub fn with_strict(total: u64, strict: bool) -> Self {
+        AdmissionBudget { total: total.max(1), strict, used: AtomicU64::new(0) }
     }
 
     /// Total work units.
@@ -207,27 +276,76 @@ impl AdmissionBudget {
         self.total
     }
 
+    /// Is the lone-job idle exception disabled?
+    pub fn is_strict(&self) -> bool {
+        self.strict
+    }
+
     /// Units currently held by in-flight jobs.
     pub fn used(&self) -> u64 {
         self.used.load(Ordering::SeqCst)
     }
 
+    /// Would `units` be admitted alongside `others` already-held units?
+    fn fits(&self, others: u64, units: u64) -> bool {
+        (others == 0 && !self.strict) || others.saturating_add(units) <= self.total
+    }
+
     /// Reserve `units` (single-RMW, no check-then-increment window) or
     /// fail with the units currently in use.
-    pub fn try_admit(&self, units: u64) -> Result<AdmissionPermit<'_>, u64> {
+    fn reserve(&self, units: u64) -> Result<(), u64> {
         self.used
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
-                if used == 0 || used.saturating_add(units) <= self.total {
+                if self.fits(used, units) {
                     Some(used.saturating_add(units))
                 } else {
                     None
                 }
             })
-            .map(|_| AdmissionPermit { budget: self, units })
+            .map(|_| ())
+    }
+
+    /// Atomically swap a reservation of `old` units for `new` — one
+    /// RMW, so there is no window where the old units read as released
+    /// (a release-then-readmit would let a concurrent oversized job in
+    /// through the idle exception while this job is still in flight).
+    /// On failure the old reservation is kept and the *other* holders'
+    /// units are returned.
+    fn exchange(&self, old: u64, new: u64) -> Result<(), u64> {
+        self.used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
+                let others = used.saturating_sub(old);
+                if self.fits(others, new) {
+                    Some(others.saturating_add(new))
+                } else {
+                    None
+                }
+            })
+            .map(|_| ())
+            .map_err(|used| used.saturating_sub(old))
+    }
+
+    /// Release `units` (saturating: an idle-exception admit may have
+    /// pushed `used` past `total`, but it can never underflow).
+    fn release(&self, units: u64) {
+        let _ = self
+            .used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
+                Some(used.saturating_sub(units))
+            });
+    }
+
+    /// Reserve `units` behind a borrowed RAII permit, or fail with the
+    /// units currently in use.
+    pub fn try_admit(&self, units: u64) -> Result<AdmissionPermit<'_>, u64> {
+        self.reserve(units).map(|_| AdmissionPermit { budget: self, units })
     }
 }
 
-/// RAII hold on [`AdmissionBudget`] units; released on drop (job end).
+/// Borrowed RAII hold on [`AdmissionBudget`] units; released on drop.
+/// Synchronous callers use this; queued jobs hold the owned
+/// [`JobPermit`] instead (a job outlives the stack frame that admitted
+/// it).
 pub struct AdmissionPermit<'a> {
     budget: &'a AdmissionBudget,
     units: u64,
@@ -239,40 +357,112 @@ impl AdmissionPermit<'_> {
         self.units
     }
 
-    /// Atomically swap this permit's reservation for `new_units` — one
-    /// RMW, so there is no window where the old units read as released
-    /// (a release-then-readmit would let a concurrent oversized job in
-    /// through the idle exception while this job is still in flight).
-    /// Succeeds when the new units fit alongside the *other* holders,
-    /// or when this permit is the only holder (the same lone-job
-    /// exception as [`AdmissionBudget::try_admit`]).  On failure the
-    /// old reservation is kept and the other holders' units are
-    /// returned.
+    /// Atomically swap this permit's reservation for `new_units` (see
+    /// [`AdmissionBudget::exchange`] for the guarantees); on failure
+    /// the old reservation is kept.
     pub fn reprice(&mut self, new_units: u64) -> Result<(), u64> {
-        let old = self.units;
-        let total = self.budget.total;
-        self.budget
-            .used
-            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
-                let others = used.saturating_sub(old);
-                if others == 0 || others.saturating_add(new_units) <= total {
-                    Some(others.saturating_add(new_units))
-                } else {
-                    None
-                }
-            })
-            .map(|_| self.units = new_units)
-            .map_err(|used| used.saturating_sub(old))
+        self.budget.exchange(self.units, new_units).map(|_| self.units = new_units)
     }
 }
 
 impl Drop for AdmissionPermit<'_> {
     fn drop(&mut self) {
-        // saturating: an idle-exception admit may have pushed `used`
-        // past `total`, but it can never underflow on release
-        let _ = self.budget.used.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
-            Some(used.saturating_sub(self.units))
-        });
+        self.budget.release(self.units);
+    }
+}
+
+/// Owned RAII hold on [`AdmissionBudget`] units for asynchronous jobs:
+/// the permit travels inside the queued job (registry-owned, not tied
+/// to the submitting connection's stack) and releases its units when
+/// the job reaches a terminal state — including cancel-while-queued
+/// and deadline sheds, where the job never runs.
+pub struct JobPermit {
+    budget: Arc<AdmissionBudget>,
+    units: u64,
+}
+
+impl JobPermit {
+    /// Reserve `units` from `budget`, or fail with the units in use.
+    pub fn admit(budget: &Arc<AdmissionBudget>, units: u64) -> Result<JobPermit, u64> {
+        budget.reserve(units).map(|_| JobPermit { budget: budget.clone(), units })
+    }
+
+    /// The units this permit reserved (the reply's `cost=` field).
+    pub fn units(&self) -> u64 {
+        self.units
+    }
+
+    /// Atomically swap this permit's reservation for `new_units` (see
+    /// [`AdmissionBudget::exchange`]); on failure the old reservation
+    /// is kept and the other holders' units are returned.
+    pub fn reprice(&mut self, new_units: u64) -> Result<(), u64> {
+        self.budget.exchange(self.units, new_units).map(|_| self.units = new_units)
+    }
+}
+
+impl Drop for JobPermit {
+    fn drop(&mut self) {
+        self.budget.release(self.units);
+    }
+}
+
+/// How many distinct pool widths [`PoolCache`] keeps resident.  The
+/// `threads=` key is client-supplied (clamped to 64), so without a
+/// bound a width sweep would pin ~2000 parked worker threads for the
+/// server's lifetime; real traffic uses a handful of widths.
+pub const POOL_CACHE_CAP: usize = 8;
+
+/// Server-owned cache of execution pools, keyed by *resolved* thread
+/// width (`threads=0` and an explicit `threads=<cores>` share one
+/// entry).  Every job asking for `threads=T` gets a clone of the same
+/// persistent [`Pool`] — clones share workers — so worker spawn is paid
+/// once per width instead of once per job (the PR-4 follow-up;
+/// benches/micro.rs compares both shapes).  Pool reuse is
+/// deterministic: results are bit-identical across jobs at any width.
+///
+/// Bounded: at most [`POOL_CACHE_CAP`] widths stay resident, evicting
+/// the least recently used.  Evicting a pool only drops the cache's
+/// handle — in-flight jobs hold clones, so the parked workers join
+/// once the last job of that width finishes, never mid-solve.
+#[derive(Default)]
+pub struct PoolCache {
+    inner: Mutex<PoolCacheInner>,
+}
+
+#[derive(Default)]
+struct PoolCacheInner {
+    pools: HashMap<usize, Pool>,
+    /// Widths, coldest first (LRU order).
+    order: VecDeque<usize>,
+}
+
+impl PoolCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The shared pool for `threads` (`0` = auto): built on first use,
+    /// cloned for every subsequent job of the same width.
+    pub fn get(&self, threads: usize) -> Pool {
+        let width = Pool::resolve(threads);
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(pos) = inner.order.iter().position(|&w| w == width) {
+            inner.order.remove(pos);
+        }
+        inner.order.push_back(width);
+        let pool = inner.pools.entry(width).or_insert_with(|| Pool::new(width)).clone();
+        while inner.pools.len() > POOL_CACHE_CAP {
+            if let Some(cold) = inner.order.pop_front() {
+                inner.pools.remove(&cold);
+            }
+        }
+        pool
+    }
+
+    /// Distinct widths currently cached (the `pools=` stats field).
+    pub fn widths(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).pools.len()
     }
 }
 
@@ -283,8 +473,12 @@ pub struct ServerState {
     pub cache: DatasetCache,
     /// Per-method latency / dissim aggregates (the `stats` command).
     pub methods: MethodMetrics,
-    /// Weighted admission budget every `cluster` job reserves from.
-    pub admission: AdmissionBudget,
+    /// Weighted admission budget every job reserves from.
+    pub admission: Arc<AdmissionBudget>,
+    /// The asynchronous job registry (protocol v5 handle verbs).
+    pub jobs: JobRegistry,
+    /// Server-owned execution pools, keyed by thread width.
+    pub pools: PoolCache,
 }
 
 impl ServerState {
@@ -293,7 +487,12 @@ impl ServerState {
         ServerState {
             cache: DatasetCache::new(cfg.cache_cap),
             methods: MethodMetrics::new(),
-            admission: AdmissionBudget::new(cfg.resolved_budget()),
+            admission: Arc::new(AdmissionBudget::with_strict(
+                cfg.resolved_budget(),
+                cfg.strict_budget,
+            )),
+            jobs: JobRegistry::new(cfg.resolved_retain_cap(), cfg.resolved_queue_cap()),
+            pools: PoolCache::new(),
         }
     }
 }
@@ -302,7 +501,7 @@ impl ServerState {
 pub struct ServerHandle {
     /// The actually-bound address (useful with port 0).
     pub addr: std::net::SocketAddr,
-    /// The server's shared state (dataset cache and its counters).
+    /// The server's shared state (cache, registry, budget, pools).
     pub state: Arc<ServerState>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
@@ -310,23 +509,68 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Ask the server to stop, drain the queue and join every thread.
+    /// Ask the server to stop, drain the job queue and join every
+    /// thread.  Jobs already admitted still run to a terminal state;
+    /// new submits are rejected with `err server shutting down`.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        // reject new submits, wake the workers (they drain the queue
+        // and exit) and every blocked `wait` caller
+        self.state.jobs.shutdown();
         // unblock accept() with a dummy connection
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+            let _ = t.join(); // joins the per-connection threads too
         }
-        // the accept loop dropped the queue sender; workers drain and exit
         for t in self.workers.drain(..) {
             let _ = t.join();
         }
     }
 }
 
+/// Split a request line into tokens, honouring double quotes: a `"`
+/// opens a span in which whitespace is literal, the closing `"` ends
+/// it, and the quotes themselves are stripped — so
+/// `dataset="file:/data/my points.csv"` is one `key=value` token.
+/// Unquoted lines tokenize exactly like `split_whitespace` (every
+/// v1–v4 request is unchanged); an unterminated quote is a protocol
+/// error.  There is no escape character — a value containing a literal
+/// `"` has no wire spelling (the CLI client rejects such values with a
+/// clear error instead of sending garbage).
+fn tokenize(line: &str) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut has_content = false;
+    for c in line.chars() {
+        match c {
+            '"' => {
+                in_quotes = !in_quotes;
+                has_content = true; // `""` is a present-but-empty value
+            }
+            c if c.is_whitespace() && !in_quotes => {
+                if has_content {
+                    out.push(std::mem::take(&mut cur));
+                    has_content = false;
+                }
+            }
+            c => {
+                cur.push(c);
+                has_content = true;
+            }
+        }
+    }
+    if in_quotes {
+        return Err(format!("unterminated \" in request line {line:?}"));
+    }
+    if has_content {
+        out.push(cur);
+    }
+    Ok(out)
+}
+
 /// Parse `key=value` tokens after the command word.
-fn parse_kv(parts: &[&str]) -> HashMap<String, String> {
+fn parse_kv(parts: &[String]) -> HashMap<String, String> {
     parts
         .iter()
         .filter_map(|p| p.split_once('='))
@@ -384,29 +628,48 @@ fn checked_cost(
 /// feasibility ceiling, and reserve the units from the budget.  Shared
 /// by the predicted (pre-I/O) and post-load paths so the two can never
 /// diverge.
-fn price_and_admit<'a>(
-    state: &'a ServerState,
+fn price_and_admit(
+    state: &ServerState,
     method: &MethodSpec,
     n: usize,
     k: usize,
     m: Option<usize>,
-) -> Result<AdmissionPermit<'a>, String> {
+) -> Result<JobPermit, String> {
     let cost = checked_cost(method, n, k, m)?;
-    state
-        .admission
-        .try_admit(cost.units)
+    JobPermit::admit(&state.admission, cost.units)
         .map_err(|used| over_budget(cost, used, &state.admission))
 }
 
-/// Execute one `cluster` request (shared by server workers and tests).
-/// `queue_ms` is the accept-to-pickup wait the connection experienced
-/// (`0.0` for direct library calls); it feeds the per-method queue-wait
-/// histogram.
-pub fn handle_cluster(
-    state: &ServerState,
-    kv: &HashMap<String, String>,
-    queue_ms: f64,
-) -> Result<String, String> {
+/// A fully validated clustering request, ready to run: everything a
+/// worker needs, detached from the connection that submitted it.
+pub(crate) struct JobRequest {
+    src: DataSource,
+    k: usize,
+    scale: f64,
+    seed: u64,
+    threads: usize,
+    metric: Metric,
+    scaling: FeatureScaling,
+    method: MethodSpec,
+    m: Option<usize>,
+    eps: Option<f64>,
+    max_passes: Option<usize>,
+    deadline_ms: Option<u64>,
+    cancel: CancelToken,
+}
+
+/// What a queued job carries through the registry: the validated
+/// request plus its admission permit (released if the job is cancelled
+/// or shed before running).
+pub(crate) struct JobWork {
+    req: JobRequest,
+    permit: Option<JobPermit>,
+}
+
+/// Validate a `cluster`/`submit` key set into a runnable [`JobRequest`]
+/// (no I/O, no admission).  The checks and their error strings are the
+/// v4 `cluster` validation verbatim, plus the v5 `deadline_ms=` key.
+fn parse_cluster(kv: &HashMap<String, String>) -> Result<JobRequest, String> {
     let dataset = kv.get("dataset").cloned().unwrap_or_else(|| "blobs_1000_8_5".into());
     let src = DataSource::parse(&dataset).map_err(|e| e.to_string())?;
     let k: usize = parse_key(kv, "k")?.unwrap_or(10);
@@ -481,21 +744,63 @@ pub fn handle_cluster(
     if max_passes == Some(0) {
         return Err("max_passes must be >= 1".into());
     }
+    // v5: an end-to-end queue-wait deadline, validated at submit
+    let deadline_ms: Option<u64> = parse_key(kv, "deadline_ms")?;
+    if deadline_ms == Some(0) {
+        return Err("deadline_ms must be >= 1".into());
+    }
 
-    // price the job *before* paying for a load or touching the cache —
-    // the size is predictable for every catalogue source and for files
-    // carrying a `?rows=` hint, so both the per-job feasibility ceiling
-    // (the old FULL_MATRIX_LIMIT rule, now a special case of pricing)
-    // and the weighted budget apply with zero I/O
-    let expected = src.expected_rows(scale);
-    let mut permit = match expected {
-        Some(n) => Some(price_and_admit(state, &method, n, k, m)?),
-        None => None,
-    };
+    Ok(JobRequest {
+        src,
+        k,
+        scale,
+        seed,
+        threads,
+        metric,
+        scaling,
+        method,
+        m,
+        eps,
+        max_passes,
+        deadline_ms,
+        cancel: CancelToken::none(),
+    })
+}
 
-    let (x, hit) = state.cache.get_or_load(&src, scale, seed, scaling).map_err(|e| e.to_string())?;
-    if x.rows <= k + 1 {
-        return Err(format!("dataset too small (n={}) for k={k}", x.rows));
+/// Price the request *before* paying for a load or touching the cache —
+/// the size is predictable for every catalogue source and for files
+/// carrying a `?rows=` hint, so both the per-job feasibility ceiling
+/// (the old FULL_MATRIX_LIMIT rule, now a special case of pricing) and
+/// the weighted budget apply with zero I/O.  Unpredictable sources
+/// return `None` and are priced right after their load, inside
+/// [`run_cluster`].
+fn admit_request(state: &ServerState, req: &JobRequest) -> Result<Option<JobPermit>, String> {
+    match req.src.expected_rows(req.scale) {
+        Some(n) => price_and_admit(state, &req.method, n, req.k, req.m).map(Some),
+        None => Ok(None),
+    }
+}
+
+/// Execute one admitted clustering request (the worker half of a job,
+/// also run inline for direct library calls).  `queue_ms` is the
+/// submit-to-pickup wait the job experienced (`0.0` for inline calls);
+/// it feeds the per-method queue-wait histogram.  `job_id` names the
+/// registry entry to report the final post-load price to (`None` for
+/// inline calls, which have no registry entry).
+fn run_cluster(
+    state: &ServerState,
+    req: &JobRequest,
+    mut permit: Option<JobPermit>,
+    queue_ms: f64,
+    job_id: Option<u64>,
+) -> Result<String, String> {
+    let expected = req.src.expected_rows(req.scale);
+    let (x, hit) = state
+        .cache
+        .get_or_load(&req.src, req.scale, req.seed, req.scaling)
+        .map_err(|e| e.to_string())?;
+    if x.rows <= req.k + 1 {
+        return Err(format!("dataset too small (n={}) for k={}", x.rows, req.k));
     }
     if expected != Some(x.rows) {
         // the prediction was absent (hint-less file, unknown synth name)
@@ -508,31 +813,44 @@ pub fn handle_cluster(
             // released (which would let an oversized job in through the
             // budget's idle exception while this one is still in flight)
             Some(p) => {
-                let cost = checked_cost(&method, x.rows, k, m)?;
+                let cost = checked_cost(&req.method, x.rows, req.k, req.m)?;
                 p.reprice(cost.units)
                     .map_err(|used| over_budget(cost, used, &state.admission))?;
             }
-            None => permit = Some(price_and_admit(state, &method, x.rows, k, m)?),
+            None => {
+                permit = Some(price_and_admit(state, &req.method, x.rows, req.k, req.m)?);
+            }
         }
     }
-    // the permit's units are the reply's cost=; held until the solve
-    // finishes (end of this function), when the drop releases them
+    // the permit's units are the reply's cost=; held until the job's
+    // terminal state (the drop releases them)
     let permit = permit.expect("job priced and admitted");
+    if let Some(id) = job_id {
+        // unpredictable sources submitted at cost=0 (and lying hints
+        // were repriced): report the settled units so poll shows what
+        // the running job actually holds against the budget
+        state.jobs.set_cost(id, permit.units());
+    }
 
-    let mut spec = SolveSpec::new(method, k, seed);
-    spec.metric = metric;
-    spec.threads = threads;
-    spec.m = m;
-    if let Some(e) = eps {
+    // server-owned pool: jobs of the same width share one persistent
+    // pool (cloned per job), amortising worker spawn across requests
+    let pool = state.pools.get(req.threads);
+    let mut spec = SolveSpec::new(req.method.clone(), req.k, req.seed);
+    spec.metric = req.metric;
+    spec.threads = req.threads;
+    spec.m = req.m;
+    if let Some(e) = req.eps {
         spec.eps = e;
     }
-    if let Some(p) = max_passes {
+    if let Some(p) = req.max_passes {
         spec.max_passes = p;
     }
-    let backend = NativeBackend::with_pool(metric, Pool::new(threads));
+    spec.cancel = req.cancel.clone();
+    spec.pool = Some(pool.clone());
+    let backend = NativeBackend::with_pool(req.metric, pool);
     let solve_started = Instant::now();
     let r = solver::solve(&x, &spec, &backend).map_err(|e| e.to_string())?;
-    let obj = eval::objective(&x, &r.medoids, &DissimCounter::new(metric));
+    let obj = eval::objective(&x, &r.medoids, &DissimCounter::new(req.metric));
     // per-method aggregates cover solve + eval (time attributable to the
     // method), not the dataset load a cache miss happens to pay; the
     // queue wait is recorded alongside for the tail histograms
@@ -551,46 +869,273 @@ pub fn handle_cluster(
         r.stats.seconds,
         r.stats.dissim_count,
         r.stats.swap_count,
-        src.canon(),
+        req.src.canon(),
         permit.units(),
     ))
 }
 
+/// Execute one `cluster` request synchronously (shared by workerless
+/// library states and tests).  Parse, admit and run are the exact
+/// stages a `submit`+`wait` pair goes through — `cluster` on a serving
+/// wire routes through the registry instead, with byte-identical
+/// replies.
+pub fn handle_cluster(
+    state: &ServerState,
+    kv: &HashMap<String, String>,
+    queue_ms: f64,
+) -> Result<String, String> {
+    let req = parse_cluster(kv)?;
+    let permit = admit_request(state, &req)?;
+    run_cluster(state, &req, permit, queue_ms, None)
+}
+
+/// Validate, price, admit and enqueue one job; returns `(id, cost)` for
+/// the `ok job=j<id> cost=<units>` reply.
+fn submit_job(state: &ServerState, kv: &HashMap<String, String>) -> Result<(u64, u64), String> {
+    // shed overdue queued jobs first: a logically dead job must not
+    // hold budget units or a queue slot against this admission
+    state.jobs.shed_expired();
+    let mut req = parse_cluster(kv)?;
+    req.cancel = CancelToken::new();
+    let cancel = req.cancel.clone();
+    let deadline_ms = req.deadline_ms;
+    let permit = admit_request(state, &req)?;
+    let cost = permit.as_ref().map_or(0, |p| p.units());
+    let id = state.jobs.submit(Box::new(JobWork { req, permit }), deadline_ms, cancel, cost)?;
+    Ok((id, cost))
+}
+
+/// The v4-compatible `cluster` path on a serving wire: `submit` +
+/// unbounded `wait`, returning the job's stored reply verbatim plus the
+/// job's queue wait for the reply trailer (the v4 `queue_ms=` was the
+/// accept-to-pickup wait; its v5 successor is submit-to-pickup).
+fn cluster_via_jobs(
+    state: &ServerState,
+    kv: &HashMap<String, String>,
+    conn_queue_ms: f64,
+) -> (String, f64) {
+    match submit_job(state, kv) {
+        Err(e) => (format!("err {e}"), conn_queue_ms),
+        Ok((id, _cost)) => match state.jobs.wait(id, None) {
+            WaitOutcome::Terminal(v) => (
+                v.result.unwrap_or_else(|| format!("err job j{id} lost its result")),
+                v.queue_ms,
+            ),
+            // wait(None) only returns Terminal or Unknown; Unknown here
+            // means the finished job was evicted before we read it,
+            // which a default retain_cap makes effectively impossible
+            _ => (format!("err job j{id} evicted before its reply was read"), conn_queue_ms),
+        },
+    }
+}
+
+/// Parse the `job=j<id>` handle (the bare numeric form is accepted).
+fn parse_job_id(kv: &HashMap<String, String>) -> Result<u64, String> {
+    let Some(v) = kv.get("job") else {
+        return Err("missing job= handle (e.g. job=j3)".into());
+    };
+    v.strip_prefix('j')
+        .unwrap_or(v)
+        .parse()
+        .map_err(|_| format!("bad job={v} (handles look like j3)"))
+}
+
+/// The `poll` verb: non-blocking state probe.
+fn handle_poll(state: &ServerState, kv: &HashMap<String, String>) -> String {
+    let id = match parse_job_id(kv) {
+        Ok(id) => id,
+        Err(e) => return format!("err {e}"),
+    };
+    match state.jobs.poll(id) {
+        None => format!("err unknown job j{id}"),
+        Some(v) => poll_reply(&v),
+    }
+}
+
+fn poll_reply(v: &JobView) -> String {
+    let id = v.id;
+    match v.state {
+        // the queue wait is `waited_ms=`, not `queue_ms=`: every wire
+        // reply already carries a trailing connection-level `queue_ms=`
+        // (v4 shape), and one line must not hold the same key twice
+        JobState::Queued | JobState::Running => format!(
+            "ok job=j{id} state={} cost={} waited_ms={:.1}",
+            v.state.name(),
+            v.cost,
+            v.queue_ms
+        ),
+        JobState::Done => {
+            let body = v.result.as_deref().unwrap_or("ok");
+            format!("ok job=j{id} state=done {}", body.strip_prefix("ok ").unwrap_or(body))
+        }
+        JobState::Cancelled => format!("ok job=j{id} state=cancelled"),
+        JobState::Failed | JobState::Expired => {
+            let body = v.result.as_deref().unwrap_or("err");
+            format!(
+                "ok job=j{id} state={} error={}",
+                v.state.name(),
+                body.strip_prefix("err ").unwrap_or(body)
+            )
+        }
+    }
+}
+
+/// The `wait` verb: block until terminal or `timeout_ms=` elapses.
+/// Returns the reply plus the queue wait for the reply trailer (the
+/// waited job's own submit-to-pickup wait once terminal).
+fn handle_wait(
+    state: &ServerState,
+    kv: &HashMap<String, String>,
+    conn_queue_ms: f64,
+) -> (String, f64) {
+    let id = match parse_job_id(kv) {
+        Ok(id) => id,
+        Err(e) => return (format!("err {e}"), conn_queue_ms),
+    };
+    let timeout: Option<u64> = match parse_key(kv, "timeout_ms") {
+        Ok(t) => t,
+        Err(e) => return (format!("err {e}"), conn_queue_ms),
+    };
+    if timeout.is_none() && !state.jobs.has_workers() {
+        // a workerless (direct-library) state can only make progress on
+        // already-terminal jobs; an unbounded wait would never return
+        match state.jobs.poll(id) {
+            None => return (format!("err unknown job j{id}"), conn_queue_ms),
+            Some(v) if !v.state.is_terminal() => {
+                return (
+                    "err wait needs timeout_ms= (no workers are draining jobs)".into(),
+                    conn_queue_ms,
+                )
+            }
+            Some(_) => {}
+        }
+    }
+    match state.jobs.wait(id, timeout.map(Duration::from_millis)) {
+        WaitOutcome::Unknown => (format!("err unknown job j{id}"), conn_queue_ms),
+        WaitOutcome::Terminal(v) => (
+            v.result.unwrap_or_else(|| format!("err job j{id} lost its result")),
+            v.queue_ms,
+        ),
+        WaitOutcome::TimedOut(v) => {
+            (format!("ok job=j{id} state={} timed_out=1", v.state.name()), conn_queue_ms)
+        }
+    }
+}
+
+/// The `cancel` verb: terminal for queued jobs, cooperative for running
+/// ones, idempotent on finished ones.
+fn handle_cancel(state: &ServerState, kv: &HashMap<String, String>) -> String {
+    let id = match parse_job_id(kv) {
+        Ok(id) => id,
+        Err(e) => return format!("err {e}"),
+    };
+    match state.jobs.cancel(id) {
+        None => format!("err unknown job j{id}"),
+        Some((JobState::Running, true)) => format!("ok job=j{id} state=running cancel=requested"),
+        Some((now, _)) => format!("ok job=j{id} state={}", now.name()),
+    }
+}
+
+/// The `jobs` verb: registry occupancy + lifetime counters.
+fn jobs_line(state: &ServerState) -> String {
+    let g = state.jobs.gauges();
+    let c = state.jobs.counters();
+    format!(
+        "ok queued={} running={} retained={} submitted={} done={} failed={} cancelled={} \
+         expired={} shed={}",
+        g.queued,
+        g.running,
+        g.retained,
+        c.submitted(),
+        c.done(),
+        c.failed(),
+        c.cancelled(),
+        c.expired(),
+        c.shed(),
+    )
+}
+
 /// Dispatch one request line to a reply line (no queue: direct library
 /// callers and tests; wire connections go through [`handle_line_queued`]
-/// so the queue wait reaches the histograms).
+/// so the connection's dispatch wait reaches the reply).
 pub fn handle_line(state: &ServerState, line: &str) -> String {
     handle_line_queued(state, line, 0.0)
 }
 
-/// Dispatch one request line to a reply line, carrying the queue wait
-/// the connection experienced before a worker picked it up.
+/// Dispatch one request line to a reply line.  `queue_ms` is the wait
+/// the *connection* experienced before dispatch (near zero since v5's
+/// per-connection threads; kept for the inline `cluster` path, whose
+/// jobs never queue).
 pub fn handle_line_queued(state: &ServerState, line: &str, queue_ms: f64) -> String {
-    let parts: Vec<&str> = line.split_whitespace().collect();
-    match parts.first().copied() {
+    dispatch_line(state, line, queue_ms).0
+}
+
+/// [`handle_line_queued`] plus the queue wait the reply trailer should
+/// carry: the served *job's* submit-to-pickup wait for `cluster`/`wait`
+/// replies (the v4 accept-to-pickup successor — a v4 client watching
+/// the trailing `queue_ms=` keeps seeing real saturation), and the
+/// connection dispatch wait for everything else.
+fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64) {
+    let parts = match tokenize(line) {
+        Ok(p) => p,
+        Err(e) => return (format!("err {e}"), queue_ms),
+    };
+    let reply = match parts.first().map(String::as_str) {
         Some("ping") => "pong".into(),
-        Some("cluster") => match handle_cluster(state, &parse_kv(&parts[1..]), queue_ms) {
-            Ok(r) => r,
+        Some("cluster") => {
+            let kv = parse_kv(&parts[1..]);
+            if state.jobs.has_workers() {
+                // v5: cluster = submit + wait through the registry
+                return cluster_via_jobs(state, &kv, queue_ms);
+            }
+            // workerless library state: run the same stages inline
+            match handle_cluster(state, &kv, queue_ms) {
+                Ok(r) => r,
+                Err(e) => format!("err {e}"),
+            }
+        }
+        Some("submit") => match submit_job(state, &parse_kv(&parts[1..])) {
+            Ok((id, cost)) => format!("ok job=j{id} cost={cost}"),
             Err(e) => format!("err {e}"),
         },
-        // v4: `stats reset` re-bases the method aggregates + cache
-        // counters (entries stay resident; the budget gauge is live)
-        Some("stats") if parts.get(1).copied() == Some("reset") => {
+        Some("poll") => handle_poll(state, &parse_kv(&parts[1..])),
+        Some("wait") => return handle_wait(state, &parse_kv(&parts[1..]), queue_ms),
+        Some("cancel") => handle_cancel(state, &parse_kv(&parts[1..])),
+        Some("jobs") => jobs_line(state),
+        // v4: `stats reset` re-bases the method aggregates, cache and
+        // job counters (entries and live gauges stay; budget is live)
+        Some("stats") if parts.get(1).map(String::as_str) == Some("reset") => {
             state.methods.reset();
             state.cache.reset_counters();
+            state.jobs.counters().reset();
             "ok".into()
         }
         Some("stats") => {
             let s = state.cache.stats();
+            let g = state.jobs.gauges();
+            let c = state.jobs.counters();
             let mut line = format!(
                 "ok cache_hits={} cache_misses={} cache_entries={} \
-                 budget_total={} budget_used={} hist_le_ms={}",
+                 budget_total={} budget_used={} hist_le_ms={} \
+                 jobs.submitted={} jobs.done={} jobs.failed={} jobs.cancelled={} \
+                 jobs.expired={} jobs.queued={} jobs.running={} jobs.retained={} \
+                 shed={} pools={}",
                 s.hits,
                 s.misses,
                 s.entries,
                 state.admission.total(),
                 state.admission.used(),
                 metrics::hist_edges_wire(),
+                c.submitted(),
+                c.done(),
+                c.failed(),
+                c.cancelled(),
+                c.expired(),
+                g.queued,
+                g.running,
+                g.retained,
+                c.shed(),
+                state.pools.widths(),
             );
             // per-method aggregates, label-sorted for determinism
             for (label, a) in state.methods.snapshot() {
@@ -613,29 +1158,32 @@ pub fn handle_line_queued(state: &ServerState, line: &str, queue_ms: f64) -> Str
             }
             line
         }
-        // Diagnostic: hold a worker for `ms` (capped) — used by the
-        // backpressure tests and for probing queue behaviour under load.
+        // Diagnostic: hold this connection for `ms` (capped) — used by
+        // the backpressure tests; since v5 it occupies a connection
+        // slot, not a solver worker.
         Some("sleep") => {
             let kv = parse_kv(&parts[1..]);
             let ms: u64 = kv.get("ms").and_then(|s| s.parse().ok()).unwrap_or(0).min(10_000);
-            std::thread::sleep(std::time::Duration::from_millis(ms));
+            std::thread::sleep(Duration::from_millis(ms));
             format!("ok slept_ms={ms}")
         }
         Some(cmd) => format!("err unknown command {cmd}"),
         None => "err empty request".into(),
-    }
+    };
+    (reply, queue_ms)
 }
 
-/// How long a worker waits for a client to send its request line (or
-/// accept the reply) before giving the slot back.  Without this, a
-/// handful of idle connections could pin every worker forever.
-const IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+/// How long a connection thread waits for a client to send its request
+/// line (or accept the reply) before giving the slot back.  Without
+/// this, a handful of idle connections could pin every slot forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Serve one accepted connection: read a line, dispatch, reply.
-/// `queued_at` is when the accept loop enqueued the connection; the
-/// difference to now is the job's reported + histogrammed queue wait.
-fn handle_connection(state: &ServerState, stream: TcpStream, queued_at: Instant) {
-    let queue_ms = queued_at.elapsed().as_secs_f64() * 1e3;
+/// `accepted_at` is when the accept loop admitted the connection; the
+/// difference to dispatch is the reply's trailing `queue_ms=` field
+/// (near zero since v5 — jobs queue, connections do not).
+fn handle_connection(state: &ServerState, stream: TcpStream, accepted_at: Instant) {
+    let queue_ms = accepted_at.elapsed().as_secs_f64() * 1e3;
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let Ok(clone) = stream.try_clone() else { return };
@@ -643,14 +1191,29 @@ fn handle_connection(state: &ServerState, stream: TcpStream, queued_at: Instant)
     let mut line = String::new();
     if reader.read_line(&mut line).is_ok() && !line.trim().is_empty() {
         let started = Instant::now();
-        let reply = handle_line_queued(state, line.trim(), queue_ms);
+        // the trailer's queue_ms= carries the served job's queue wait
+        // for cluster/wait replies (v4 semantics) and the connection
+        // dispatch wait otherwise
+        let (reply, trailer_queue_ms) = dispatch_line(state, line.trim(), queue_ms);
         let mut s = stream;
         let _ = writeln!(
             s,
-            "{reply} queue_ms={queue_ms:.1} served_ms={:.1}",
+            "{reply} queue_ms={trailer_queue_ms:.1} served_ms={:.1}",
             started.elapsed().as_secs_f64() * 1e3
         );
     }
+}
+
+/// One picked job, executed on a solver worker.  Panics are caught so a
+/// bad job can never shrink the worker pool; they land as a failed job.
+fn run_job(state: &ServerState, picked: jobs::PickedJob) {
+    let jobs::PickedJob { id, work, queue_ms } = picked;
+    let JobWork { req, permit } = *work;
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_cluster(state, &req, permit, queue_ms, Some(id))
+    }))
+    .unwrap_or_else(|_| Err("job panicked".into()));
+    state.jobs.finish(id, outcome);
 }
 
 /// Start the server; returns immediately with a handle.
@@ -664,39 +1227,35 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
     let queue_cap = cfg.resolved_queue_cap();
     let worker_count = cfg.resolved_workers();
 
-    // Bounded job queue: admission reserves a slot in `inflight` before
-    // enqueueing; the worker releases it when the job finishes, so
-    // queued + running <= queue_cap always holds.
-    let (tx, rx) = mpsc::channel::<(TcpStream, Instant)>();
-    let rx = Arc::new(Mutex::new(rx));
+    // Solver workers drain *jobs*, not connections: each picks the next
+    // queued job from the registry (shedding expired ones), runs it,
+    // and publishes the terminal state.  They exit when the registry
+    // shuts down and its queue is drained.
+    state.jobs.set_workers(worker_count);
     let mut workers = Vec::with_capacity(worker_count);
     for _ in 0..worker_count {
-        let rx = rx.clone();
-        let inflight = inflight.clone();
         let state = state.clone();
-        workers.push(std::thread::spawn(move || loop {
-            // the guard temporary drops at the end of this statement, so
-            // workers do not hold the lock while serving
-            let job = rx.lock().expect("queue receiver poisoned").recv();
-            let Ok((stream, queued_at)) = job else { break };
-            let _slot = DecrementOnDrop(inflight.clone());
-            // a panicking job must not shrink the long-lived pool
-            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                handle_connection(&state, stream, queued_at);
-            }));
+        workers.push(std::thread::spawn(move || {
+            while let Some(picked) = state.jobs.next_job() {
+                run_job(&state, picked);
+            }
         }));
     }
 
+    // The accept loop admits connections against `queue_cap` with a
+    // single-RMW reserve (no check-then-increment window) and hands
+    // each admitted one to a short-lived connection thread — so a slow
+    // client or a long `wait` blocks its own thread, never a worker.
     let stop2 = stop.clone();
     let inflight2 = inflight.clone();
+    let state2 = state.clone();
     let accept_thread = std::thread::spawn(move || {
+        let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
         for conn in listener.incoming() {
             if stop2.load(Ordering::SeqCst) {
                 break;
             }
             let Ok(stream) = conn else { continue };
-            // single-RMW admission: reserve a slot or reject — no
-            // check-then-increment window for a burst to slip through
             let admitted = inflight2
                 .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
                     if c < queue_cap {
@@ -711,11 +1270,21 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
                 let _ = writeln!(s, "err queue full");
                 continue;
             }
-            if tx.send((stream, Instant::now())).is_err() {
-                break;
-            }
+            conn_threads.retain(|h| !h.is_finished());
+            let state = state2.clone();
+            let slot = DecrementOnDrop(inflight2.clone());
+            let accepted_at = Instant::now();
+            conn_threads.push(std::thread::spawn(move || {
+                let _slot = slot;
+                // a panicking dispatch must not poison the slot counter
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    handle_connection(&state, stream, accepted_at);
+                }));
+            }));
         }
-        // dropping `tx` wakes every idle worker with RecvError -> exit
+        for h in conn_threads {
+            let _ = h.join();
+        }
     });
 
     Ok(ServerHandle { addr, state, stop, accept_thread: Some(accept_thread), workers })
@@ -806,9 +1375,41 @@ mod tests {
             "cluster method=FasterPAM m=50",
             "cluster method=k-means++ strategy=steepest",
             "cluster method=Random sampler=unif",
+            // v5 additions
+            "cluster deadline_ms=0",
+            "cluster deadline_ms=soon",
+            "submit deadline_ms=0",
+            "cluster dataset=\"unterminated",
+            "poll",
+            "poll job=x9",
+            "wait job=",
+            "cancel job=j",
         ] {
             assert!(handle_line(&st, line).starts_with("err"), "{line:?} should err");
         }
+    }
+
+    #[test]
+    fn tokenizer_honours_double_quotes() {
+        assert_eq!(
+            tokenize("cluster dataset=blobs_300_4_3 k=3").unwrap(),
+            vec!["cluster".to_string(), "dataset=blobs_300_4_3".into(), "k=3".into()]
+        );
+        // a quoted span keeps its whitespace; the quotes are stripped
+        assert_eq!(
+            tokenize("cluster dataset=\"file:/data/my points.csv\" k=3").unwrap(),
+            vec!["cluster".to_string(), "dataset=file:/data/my points.csv".into(), "k=3".into()]
+        );
+        // quotes may wrap a whole token, and "" is a present-but-empty value
+        assert_eq!(
+            tokenize("\"a b\"=c d=\"\"").unwrap(),
+            vec!["a b=c".to_string(), "d=".into()]
+        );
+        assert!(tokenize("cluster dataset=\"file:/oops.csv").is_err());
+        // byte-compat: unquoted lines split exactly like split_whitespace
+        let legacy = "cluster dataset=blobs_300_4_3 k=3  seed=1\tthreads=2";
+        let expect: Vec<String> = legacy.split_whitespace().map(str::to_string).collect();
+        assert_eq!(tokenize(legacy).unwrap(), expect);
     }
 
     #[test]
@@ -965,10 +1566,18 @@ mod tests {
         assert!(auto.resolved_workers() >= 1);
         assert_eq!(auto.resolved_queue_cap(), auto.resolved_workers() * 4);
         assert_eq!(auto.resolved_budget(), 4 * MAX_JOB_COST);
-        let fixed = ServerConfig { workers: 3, queue_cap: 7, budget: 99, ..Default::default() };
+        assert_eq!(auto.resolved_retain_cap(), 64);
+        let fixed = ServerConfig {
+            workers: 3,
+            queue_cap: 7,
+            budget: 99,
+            retain_cap: 5,
+            ..Default::default()
+        };
         assert_eq!(fixed.resolved_workers(), 3);
         assert_eq!(fixed.resolved_queue_cap(), 7);
         assert_eq!(fixed.resolved_budget(), 99);
+        assert_eq!(fixed.resolved_retain_cap(), 5);
         // workers=0 actually serves (auto-detected pool)
         let h = serve(auto).unwrap();
         assert!(request(h.addr, "ping").unwrap().starts_with("pong"));
@@ -993,6 +1602,30 @@ mod tests {
         assert!(b.try_admit(1).is_err());
         drop(big);
         assert_eq!(b.used(), 0);
+    }
+
+    #[test]
+    fn strict_budget_disables_the_idle_exception() {
+        let b = AdmissionBudget::with_strict(100, true);
+        assert!(b.is_strict());
+        // idle budget, oversized job: rejected under strict
+        assert_eq!(b.try_admit(1000).unwrap_err(), 0);
+        // within-budget jobs are unaffected
+        let p = b.try_admit(80).unwrap();
+        assert_eq!(b.used(), 80);
+        // and repricing respects the hard ceiling too
+        let mut p = p;
+        assert!(p.reprice(100).is_ok());
+        assert!(p.reprice(101).is_err());
+        drop(p);
+        assert_eq!(b.used(), 0);
+        // the owned permit enforces the same rule
+        let arc = Arc::new(AdmissionBudget::with_strict(100, true));
+        assert!(JobPermit::admit(&arc, 1000).is_err());
+        let jp = JobPermit::admit(&arc, 50).unwrap();
+        assert_eq!((jp.units(), arc.used()), (50, 50));
+        drop(jp);
+        assert_eq!(arc.used(), 0);
     }
 
     #[test]
@@ -1045,6 +1678,10 @@ mod tests {
             .unwrap();
         let total: u64 = hist.split(',').map(|c| c.parse::<u64>().unwrap()).sum();
         assert_eq!(total, 1, "{stats}");
+        // v5: job lifecycle + pool gauges ride along
+        assert!(stats.contains(" jobs.submitted=0 "), "inline cluster is not a job: {stats}");
+        assert!(stats.contains(" shed=0 "), "{stats}");
+        assert!(stats.contains(" pools=1"), "one width cached: {stats}");
         // reset re-bases method aggregates and cache counters
         assert_eq!(handle_line(&st, "stats reset"), "ok");
         let after = handle_line(&st, "stats");
@@ -1062,6 +1699,24 @@ mod tests {
         assert!(r.contains("cost="), "{r}");
         // nothing was loaded for the rejected job
         assert_eq!(st.cache.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn strict_budget_rejects_oversized_lone_cluster_jobs() {
+        // v4 default: the idle exception admits an over-budget lone job
+        let lax = ServerState::new(&ServerConfig { budget: 1_000, ..Default::default() });
+        let r = handle_line(&lax, "cluster dataset=blobs_300_4_3 k=3 seed=1");
+        assert!(r.starts_with("ok "), "{r}");
+        // strict: the same request is refused even on an idle budget
+        let strict = ServerState::new(&ServerConfig {
+            budget: 1_000,
+            strict_budget: true,
+            ..Default::default()
+        });
+        let r = handle_line(&strict, "cluster dataset=blobs_300_4_3 k=3 seed=1");
+        assert!(r.starts_with("err over budget"), "{r}");
+        assert_eq!(strict.admission.used(), 0);
+        assert_eq!(strict.cache.stats(), CacheStats::default(), "no I/O for a rejected job");
     }
 
     #[test]
@@ -1089,8 +1744,9 @@ mod tests {
 
     #[test]
     fn workers_serve_concurrently() {
-        // With 4 workers, 4 concurrent 150 ms sleeps finish in ~1 batch,
-        // far below the 600 ms serial floor.
+        // 4 concurrent 150 ms sleeps finish in ~1 batch, far below the
+        // 600 ms serial floor (sleeps hold connection slots, and the
+        // accept path hands each to its own thread).
         let h = serve(ServerConfig {
             addr: "127.0.0.1:0".into(),
             workers: 4,
@@ -1109,7 +1765,7 @@ mod tests {
             assert!(th.join().unwrap().starts_with("ok slept_ms=150"));
         }
         let elapsed = t0.elapsed().as_millis();
-        assert!(elapsed < 550, "4 workers should overlap sleeps, took {elapsed} ms");
+        assert!(elapsed < 550, "concurrent sleeps should overlap, took {elapsed} ms");
         h.shutdown();
     }
 
@@ -1117,5 +1773,121 @@ mod tests {
     fn sleep_command_caps_duration() {
         let r = handle_line(&fresh_state(), "sleep ms=1");
         assert!(r.starts_with("ok slept_ms=1"), "{r}");
+    }
+
+    #[test]
+    fn submit_poll_cancel_on_a_workerless_state() {
+        // without workers the job sits queued forever — which makes the
+        // queued half of the lifecycle fully deterministic
+        let st = fresh_state();
+        let r = handle_line(&st, "submit dataset=blobs_300_4_3 k=3 seed=1");
+        assert!(r.starts_with("ok job=j1 cost="), "{r}");
+        let cost: u64 = r.split("cost=").nth(1).unwrap().trim().parse().unwrap();
+        assert_eq!(cost, MethodSpec::default().cost(300, 3, None).units);
+        assert_eq!(st.admission.used(), cost, "a queued job holds its permit");
+        let p = handle_line(&st, "poll job=j1");
+        assert!(p.starts_with("ok job=j1 state=queued cost="), "{p}");
+        assert!(p.contains(" waited_ms="), "{p}");
+        let g = st.jobs.gauges();
+        assert_eq!((g.queued, g.running, g.retained), (1, 0, 0));
+        // cancel releases the permit without the job ever running
+        let c = handle_line(&st, "cancel job=j1");
+        assert_eq!(c, "ok job=j1 state=cancelled");
+        assert_eq!(st.admission.used(), 0, "cancel must release the admission permit");
+        assert!(handle_line(&st, "poll job=j1").starts_with("ok job=j1 state=cancelled"));
+        // idempotent: a second cancel reports the terminal state
+        assert_eq!(handle_line(&st, "cancel job=j1"), "ok job=j1 state=cancelled");
+        // wait on a terminal job returns its stored reply (the error)
+        assert_eq!(handle_line(&st, "wait job=j1"), "err cancelled job=j1");
+        let jobs = handle_line(&st, "jobs");
+        let expect = "ok queued=0 running=0 retained=1 submitted=1 done=0 failed=0 \
+                      cancelled=1 expired=0 shed=0";
+        assert_eq!(jobs, expect);
+        // handles j2, j3, ... are monotonic
+        assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3").starts_with("ok job=j2 "));
+        // unknown handles are errors
+        assert!(handle_line(&st, "poll job=j99").starts_with("err unknown job j99"));
+        assert!(handle_line(&st, "cancel job=j99").starts_with("err unknown job j99"));
+    }
+
+    #[test]
+    fn wait_without_workers_requires_timeout() {
+        let st = fresh_state();
+        assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3").starts_with("ok job=j1"));
+        let r = handle_line(&st, "wait job=j1");
+        assert!(r.starts_with("err wait needs timeout_ms="), "{r}");
+        // a bounded wait returns a timed_out probe instead of blocking
+        let r = handle_line(&st, "wait job=j1 timeout_ms=10");
+        assert_eq!(r, "ok job=j1 state=queued timed_out=1");
+    }
+
+    #[test]
+    fn submit_rejects_over_budget_like_cluster() {
+        let st = ServerState::new(&ServerConfig { budget: 1_000, ..Default::default() });
+        let _held = st.admission.try_admit(900).unwrap();
+        let r = handle_line(&st, "submit dataset=blobs_300_4_3 k=3 seed=1");
+        assert!(r.starts_with("err over budget"), "{r}");
+        assert!(r.contains("cost="), "{r}");
+        let g = st.jobs.gauges();
+        assert_eq!(g.queued, 0, "a rejected submit enqueues nothing");
+    }
+
+    #[test]
+    fn pool_cache_builds_one_pool_per_width() {
+        let cache = PoolCache::new();
+        assert_eq!(cache.widths(), 0);
+        let a = cache.get(2);
+        let b = cache.get(2);
+        assert_eq!(cache.widths(), 1, "same width reuses the cached pool");
+        assert_eq!((a.threads(), b.threads()), (2, 2));
+        let _serial = cache.get(1);
+        assert_eq!(cache.widths(), 2);
+        // 0 resolves to the auto width and shares its explicit twin
+        let auto = cache.get(0);
+        let explicit = cache.get(auto.threads());
+        assert_eq!(auto.threads(), explicit.threads());
+        // cached pools still compute correctly after many clones
+        let parts = cache.get(2).map_ranges(10, |r| r.len());
+        assert_eq!(parts.into_iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn pool_cache_is_bounded_and_evicts_lru() {
+        let cache = PoolCache::new();
+        // a client-style width sweep must not pin unbounded threads
+        for width in 1..=POOL_CACHE_CAP + 4 {
+            let _ = cache.get(width);
+        }
+        assert_eq!(cache.widths(), POOL_CACHE_CAP);
+        // the earliest widths were evicted (LRU), the latest survive;
+        // a rebuilt evicted width still computes correctly
+        let parts = cache.get(2).map_ranges(12, |r| r.len());
+        assert_eq!(parts.into_iter().sum::<usize>(), 12);
+        assert_eq!(cache.widths(), POOL_CACHE_CAP, "rebuild evicts another width, cap holds");
+        // an evicted pool's clones keep working (workers join only when
+        // the last handle drops)
+        let held = cache.get(3);
+        for width in 4..=POOL_CACHE_CAP + 8 {
+            let _ = cache.get(width);
+        }
+        let parts = held.map_ranges(9, |r| r.len());
+        assert_eq!(parts.into_iter().sum::<usize>(), 9);
+    }
+
+    #[test]
+    fn submit_backpressure_bounds_queued_jobs() {
+        // no workers: submitted jobs stay queued, so the queue bound is
+        // exactly observable
+        let st = ServerState::new(&ServerConfig { queue_cap: 2, ..Default::default() });
+        assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3").starts_with("ok job=j1 "));
+        assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3").starts_with("ok job=j2 "));
+        let r = handle_line(&st, "submit dataset=blobs_300_4_3 k=3");
+        assert!(r.starts_with("err queue full (2 jobs queued)"), "{r}");
+        // cancelling a queued job frees its slot for the next submit
+        // (the rejected submit consumed no handle, so the next is j3)
+        assert_eq!(handle_line(&st, "cancel job=j1"), "ok job=j1 state=cancelled");
+        assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3").starts_with("ok job=j3 "));
+        let g = st.jobs.gauges();
+        assert_eq!((g.queued, g.retained), (2, 1));
     }
 }

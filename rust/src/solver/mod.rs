@@ -44,6 +44,8 @@ use crate::dissim::Metric;
 use crate::linalg::Matrix;
 use crate::runtime::Pool;
 use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 /// One k-medoids algorithm behind the unified entry point.
 ///
@@ -63,6 +65,52 @@ pub trait Solver {
         spec: &SolveSpec,
         backend: &dyn ComputeBackend,
     ) -> Result<KMedoidsResult>;
+}
+
+/// The error message every cancelled solve fails with ([`CancelToken`]):
+/// callers that distinguish "cancelled" from "failed" (the job server's
+/// registry) match the error string against this constant.
+pub const CANCELLED: &str = "cancelled";
+
+/// Cooperative cancellation hook carried on [`SolveSpec::cancel`].
+///
+/// A token is a shared flag: the owner keeps a clone, hands another to
+/// the solve, and [`CancelToken::cancel`] asks the solve to stop at its
+/// next check point.  Checks are *cooperative*: [`solve`] checks once
+/// before dispatch, and OneBatchPAM additionally between swap passes —
+/// a cancelled solve fails with the [`CANCELLED`] error and discards
+/// its partial work.  The point-level baselines only honour the
+/// pre-dispatch check (they run their existing free functions
+/// unchanged), so cancelling one mid-run lets it finish.
+///
+/// [`CancelToken::none`] (the [`Default`]) is the never-cancelled
+/// token: checks are free and `cancel()` is a no-op, so non-serving
+/// callers pay nothing.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Option<Arc<AtomicBool>>);
+
+impl CancelToken {
+    /// A live token (initially not cancelled); clones share the flag.
+    pub fn new() -> Self {
+        CancelToken(Some(Arc::new(AtomicBool::new(false))))
+    }
+
+    /// The inert token: never reports cancelled, `cancel()` is a no-op.
+    pub const fn none() -> Self {
+        CancelToken(None)
+    }
+
+    /// Request cancellation (visible to every clone of this token).
+    pub fn cancel(&self) {
+        if let Some(flag) = &self.0 {
+            flag.store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// Has [`CancelToken::cancel`] been called on any clone?
+    pub fn is_cancelled(&self) -> bool {
+        self.0.as_deref().is_some_and(|flag| flag.load(Ordering::SeqCst))
+    }
 }
 
 /// Method-independent run parameters for [`solve`].
@@ -94,6 +142,17 @@ pub struct SolveSpec {
     pub eps: f64,
     /// OneBatch max eager passes (steepest: `k *` this many swaps).
     pub max_passes: usize,
+    /// Cooperative cancellation hook: [`solve`] checks it before
+    /// dispatch and OneBatchPAM between swap passes; a cancelled run
+    /// fails with the [`CANCELLED`] error.  Defaults to the inert
+    /// [`CancelToken::none`].
+    pub cancel: CancelToken,
+    /// Pre-built execution pool for OneBatch's eager scan.  `None`
+    /// (the default) builds a `threads`-wide pool per solve; serving
+    /// surfaces pass their cached pool so repeated jobs reuse parked
+    /// workers instead of respawning them.  Results are bit-identical
+    /// either way (rust/tests/parallel_equivalence.rs).
+    pub pool: Option<Pool>,
 }
 
 impl SolveSpec {
@@ -109,6 +168,8 @@ impl SolveSpec {
             m: None,
             eps: 0.0,
             max_passes: 20,
+            cancel: CancelToken::none(),
+            pool: None,
         }
     }
 }
@@ -175,6 +236,9 @@ pub fn solve(x: &Matrix, spec: &SolveSpec, backend: &dyn ComputeBackend) -> Resu
         spec.metric.name(),
         backend.metric().name()
     );
+    // cooperative cancellation: a job cancelled before pickup never
+    // starts (OneBatchPAM re-checks the token between swap passes)
+    anyhow::ensure!(!spec.cancel.is_cancelled(), CANCELLED);
     let r = spec.method.solver().solve(x, spec, backend)?;
     r.validate(x.rows, spec.k);
     Ok(r)
@@ -634,6 +698,27 @@ mod tests {
         assert!(err.contains("does not match backend metric"), "{err}");
         // agreeing metric runs fine
         assert!(solve(&x, &spec, &NativeBackend::new(Metric::L2)).is_ok());
+    }
+
+    #[test]
+    fn cancelled_token_fails_fast_with_the_marker_error() {
+        let mut rng = Rng::new(6);
+        let x = synth::gen_gaussian_mixture(&mut rng, 120, 4, 3, 0.15, 1.0);
+        let token = CancelToken::new();
+        assert!(!token.is_cancelled());
+        token.cancel();
+        assert!(token.is_cancelled(), "clones share the flag");
+        let spec = SolveSpec { cancel: token, ..SolveSpec::new(MethodSpec::KMeansPp, 3, 1) };
+        let err = solve(&x, &spec, &NativeBackend::new(Metric::L1)).unwrap_err().to_string();
+        assert_eq!(err, CANCELLED);
+        // the inert token never cancels and cancel() on it is a no-op
+        let inert = CancelToken::none();
+        inert.cancel();
+        assert!(!inert.is_cancelled());
+        // an un-cancelled live token does not disturb a solve
+        let spec =
+            SolveSpec { cancel: CancelToken::new(), ..SolveSpec::new(MethodSpec::KMeansPp, 3, 1) };
+        assert!(solve(&x, &spec, &NativeBackend::new(Metric::L1)).is_ok());
     }
 
     #[test]

@@ -124,6 +124,34 @@ fn lying_rows_hint_is_repriced_after_the_load() {
 }
 
 #[test]
+fn strict_budget_rejects_oversized_lone_jobs() {
+    // default (v4) behaviour: an idle budget admits one oversized job
+    let lax = state_with_budget(1_000);
+    let line = "cluster dataset=blobs_300_4_3 k=3 seed=1"; // ~90k units
+    assert!(handle_line(&lax, line).starts_with("ok "), "idle exception admits a lone job");
+
+    // ServerConfig::strict_budget turns the budget into a hard ceiling
+    let strict = ServerState::new(&ServerConfig {
+        budget: 1_000,
+        strict_budget: true,
+        ..Default::default()
+    });
+    let r = handle_line(&strict, line);
+    assert!(r.starts_with("err over budget"), "{r}");
+    assert!(r.contains("cost="), "{r}");
+    assert_eq!(strict.admission.used(), 0);
+    assert_eq!(strict.cache.stats(), CacheStats::default(), "no I/O for a rejected job");
+    // within-budget jobs still run under strict
+    let small = ServerState::new(&ServerConfig {
+        budget: 200_000,
+        strict_budget: true,
+        ..Default::default()
+    });
+    assert!(handle_line(&small, line).starts_with("ok "));
+    assert_eq!(small.admission.used(), 0);
+}
+
+#[test]
 fn concurrent_burst_over_a_tight_budget_stays_consistent() {
     // a real TCP burst against a budget sized for about one job at a
     // time: every connection gets exactly one well-formed reply (ok

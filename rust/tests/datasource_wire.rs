@@ -153,6 +153,49 @@ fn stats_aggregates_per_method_across_file_and_synth() {
     std::fs::remove_file(&path).ok();
 }
 
+/// Protocol v5 lifts the documented v4 limitation that whitespace-
+/// tokenized request lines could not address `file:` paths containing
+/// spaces: a double-quoted value keeps its spaces through the
+/// tokenizer, both inline and over real TCP.
+#[test]
+fn quoted_file_paths_with_spaces_are_wire_addressable() {
+    let dir = std::env::temp_dir().join(format!("obpam wire spaces {}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("my points.csv");
+    let mut s = String::from("x,y\n");
+    for i in 0..60 {
+        let c = (i % 3) as f64 * 25.0;
+        s.push_str(&format!("{},{}\n", c + (i % 7) as f64 * 0.3, c - (i % 5) as f64 * 0.2));
+    }
+    std::fs::write(&path, s).unwrap();
+
+    let st = fresh_state();
+    let line = format!("cluster dataset=\"file:{}\" metric=l2 k=3 seed=4", path.display());
+    let first = handle_line(&st, &line);
+    assert!(first.starts_with("ok "), "{first}");
+    assert!(first.contains(&format!(" source=file:{}", path.display())), "{first}");
+    // the quoted spelling shares the cache entry with itself
+    let second = handle_line(&st, &line);
+    assert!(second.contains("cache=hit"), "{second}");
+    assert_eq!(medoids_of(&first), medoids_of(&second));
+    // unquoted, the path splits into junk tokens -> an error, never a
+    // silent wrong-file load
+    let unquoted = format!("cluster dataset=file:{} metric=l2 k=3 seed=4", path.display());
+    assert!(handle_line(&st, &unquoted).starts_with("err"), "unquoted spaces cannot resolve");
+    // an unterminated quote is a protocol error
+    let ragged = format!("cluster dataset=\"file:{} k=3", path.display());
+    assert!(handle_line(&st, &ragged).starts_with("err unterminated"), "{ragged}");
+
+    // and over real TCP, end to end
+    let h = serve(ServerConfig::default()).unwrap();
+    let wire = request(h.addr, &line).unwrap();
+    assert!(wire.starts_with("ok "), "{wire}");
+    assert_eq!(medoids_of(&first), medoids_of(&wire), "{wire}");
+    h.shutdown();
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_dir(&dir).ok();
+}
+
 /// CI end-to-end smoke: write a CSV, start the real TCP server, drive
 /// `cluster dataset=file:... metric=l2 k=3` twice over the wire, and
 /// require a cache hit with identical medoids on the second request.

@@ -1,0 +1,283 @@
+//! Protocol v5 asynchronous job handles from the outside: the
+//! `submit` / `poll` / `wait` / `cancel` lifecycle over real TCP,
+//! v4 `cluster` byte-compatibility through the v5 job registry,
+//! deadline sheds of queued jobs, finished-job retention eviction, and
+//! a concurrent submit burst against a tight admission budget.
+//!
+//! Deterministic lifecycle corners (queued-forever, shed-while-queued,
+//! LRU eviction) run against a *workerless* `ServerState`: without
+//! workers a submitted job stays queued indefinitely, so every queued
+//! transition can be asserted without racing a solver.
+
+use obpam::server::{handle_line, request, serve, ServerConfig, ServerState};
+use obpam::solver::MethodSpec;
+
+fn workerless() -> ServerState {
+    ServerState::new(&ServerConfig::default())
+}
+
+/// Extract `key=<token>` from a reply line.
+fn field(reply: &str, key: &str) -> String {
+    reply
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix(&format!("{key}=")))
+        .unwrap_or_else(|| panic!("no {key}= in {reply:?}"))
+        .to_string()
+}
+
+/// Poll `job` on `addr` until its state leaves `queued` (worker pickup)
+/// or the attempts run out; returns the last observed state.
+fn poll_until_past_queued(addr: std::net::SocketAddr, job: &str) -> String {
+    for _ in 0..20_000 {
+        let r = request(addr, &format!("poll job={job}")).unwrap();
+        let state = field(&r, "state");
+        if state != "queued" {
+            return state;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    panic!("job {job} never left the queue");
+}
+
+#[test]
+fn submit_poll_wait_lifecycle_over_tcp() {
+    let h = serve(ServerConfig { workers: 2, ..Default::default() }).unwrap();
+    let sub = request(h.addr, "submit dataset=blobs_300_4_3 k=3 seed=7").unwrap();
+    assert!(sub.starts_with("ok job=j1 cost="), "{sub}");
+    let cost: u64 = field(&sub, "cost").parse().unwrap();
+    assert_eq!(cost, MethodSpec::default().cost(300, 3, None).units, "{sub}");
+    // submit replies ride the standard connection trailer
+    assert!(sub.contains(" queue_ms="), "{sub}");
+    assert!(sub.contains(" served_ms="), "{sub}");
+
+    // wait returns the stored cluster reply verbatim (plus trailer)
+    let done = request(h.addr, "wait job=j1 timeout_ms=60000").unwrap();
+    assert!(done.starts_with("ok method=OneBatch-nniw cache="), "{done}");
+    assert!(done.contains(" medoids="), "{done}");
+    assert!(done.contains(" objective="), "{done}");
+    assert_eq!(field(&done, "cost").parse::<u64>().unwrap(), cost, "{done}");
+
+    // a later connection can still read the terminal state
+    let polled = request(h.addr, "poll job=j1").unwrap();
+    assert!(polled.starts_with("ok job=j1 state=done method=OneBatch-nniw"), "{polled}");
+    // wait on a terminal job is immediate and idempotent
+    let again = request(h.addr, "wait job=j1 timeout_ms=1000").unwrap();
+    assert_eq!(field(&again, "medoids"), field(&done, "medoids"));
+
+    let jobs = request(h.addr, "jobs").unwrap();
+    assert!(jobs.starts_with("ok queued=0 running=0 retained=1 submitted=1 done=1 "), "{jobs}");
+    assert_eq!(h.state.admission.used(), 0, "terminal job must hold no budget");
+    h.shutdown();
+}
+
+#[test]
+fn cluster_lines_are_byte_compatible_with_submit_plus_wait() {
+    // every pre-v5 request form must keep its reply shape through the
+    // v5 registry, and submit+wait must reproduce the same solve
+    let h = serve(ServerConfig::default()).unwrap();
+    for (name, keys) in [
+        ("v1 legacy", "dataset=blobs_300_4_3 k=3 seed=5 sampler=unif strategy=steepest"),
+        ("v2 method", "dataset=blobs_300_4_3 k=3 seed=5 method=FasterCLARA-5"),
+        ("v3 metric", "dataset=blobs_300_4_3 k=3 seed=5 metric=l2 scale_features=minmax"),
+        ("v4 plain", "dataset=blobs_400_4_3 k=4 seed=2 threads=2"),
+    ] {
+        let cluster = request(h.addr, &format!("cluster {keys}")).unwrap();
+        assert!(cluster.starts_with("ok method="), "{name}: {cluster}");
+        // the v4 field sequence, in order
+        let mut pos = 0;
+        for f in [
+            "ok method=", " cache=", " medoids=", " objective=", " seconds=", " dissim=",
+            " swaps=", " source=", " cost=", " queue_ms=", " served_ms=",
+        ] {
+            let at = cluster[pos..]
+                .find(f)
+                .unwrap_or_else(|| panic!("{name}: {f:?} missing/misordered in {cluster:?}"));
+            pos += at + f.len();
+        }
+        // submit + wait: same medoids, objective and cost for the spec
+        let sub = request(h.addr, &format!("submit {keys}")).unwrap();
+        assert!(sub.starts_with("ok job="), "{name}: {sub}");
+        let id = field(&sub, "job");
+        let waited = request(h.addr, &format!("wait job={id} timeout_ms=60000")).unwrap();
+        for f in ["method", "medoids", "objective", "dissim", "swaps", "source", "cost"] {
+            assert_eq!(field(&waited, f), field(&cluster, f), "{name}: {f} differs");
+        }
+    }
+    h.shutdown();
+}
+
+#[test]
+fn deadline_shed_of_a_queued_job_is_deterministic() {
+    // no workers: the job stays queued, so the deadline must shed it
+    let st = workerless();
+    let sub = handle_line(&st, "submit dataset=blobs_300_4_3 k=3 seed=1 deadline_ms=1");
+    assert!(sub.starts_with("ok job=j1 cost="), "{sub}");
+    let cost: u64 = field(&sub, "cost").parse().unwrap();
+    assert_eq!(st.admission.used(), cost, "queued job holds its permit");
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    // lazy expiry: the next observation flips the job to expired
+    let polled = handle_line(&st, "poll job=j1");
+    assert!(polled.starts_with("ok job=j1 state=expired error=deadline job=j1"), "{polled}");
+    assert!(polled.contains("deadline_ms=1"), "{polled}");
+    assert!(polled.contains("queue_ms="), "{polled}");
+    assert_eq!(st.admission.used(), 0, "shed must release the admission permit");
+    // wait returns the stored shed error verbatim
+    let waited = handle_line(&st, "wait job=j1 timeout_ms=50");
+    assert!(waited.starts_with("err deadline job=j1 deadline_ms=1 queue_ms="), "{waited}");
+    // the shed is recorded (jobs verb and stats field agree)
+    let jobs = handle_line(&st, "jobs");
+    assert!(jobs.contains(" expired=1 shed=1"), "{jobs}");
+    let stats = handle_line(&st, "stats");
+    assert!(stats.contains(" jobs.expired=1 "), "{stats}");
+    assert!(stats.contains(" shed=1 "), "{stats}");
+
+    // a deadline generous enough is not shed: the job just stays queued
+    let sub = handle_line(&st, "submit dataset=blobs_300_4_3 k=3 seed=1 deadline_ms=600000");
+    assert!(sub.starts_with("ok job=j2"), "{sub}");
+    assert!(handle_line(&st, "poll job=j2").contains("state=queued"));
+}
+
+#[test]
+fn deadline_shed_over_tcp_behind_a_busy_worker() {
+    // one worker, occupied by a long job: a queued job with a 1 ms
+    // deadline must be shed, and its budget must return to baseline —
+    // asserted over TCP, per the acceptance criteria
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    let big = request(h.addr, "submit dataset=blobs_20000_8_5 k=5 seed=3").unwrap();
+    assert!(big.starts_with("ok job="), "{big}");
+    let big_id = field(&big, "job");
+    assert_eq!(poll_until_past_queued(h.addr, &big_id), "running");
+
+    let cheap = request(h.addr, "submit dataset=blobs_300_4_3 k=3 seed=1 deadline_ms=1").unwrap();
+    assert!(cheap.starts_with("ok job="), "{cheap}");
+    let cheap_id = field(&cheap, "job");
+    // wait wakes itself at the job's deadline even though the lone
+    // worker is busy elsewhere — the shed needs no worker
+    let shed = request(h.addr, &format!("wait job={cheap_id} timeout_ms=60000")).unwrap();
+    assert!(shed.starts_with(&format!("err deadline job={cheap_id} deadline_ms=1")), "{shed}");
+    assert!(shed.contains("queue_ms="), "{shed}");
+
+    // the big job still completes; afterwards the budget gauge is back
+    // to baseline (shed + finished jobs both released their permits)
+    let done = request(h.addr, &format!("wait job={big_id} timeout_ms=600000")).unwrap();
+    assert!(done.starts_with("ok method="), "{done}");
+    let stats = request(h.addr, "stats").unwrap();
+    assert!(stats.contains(" budget_used=0 "), "{stats}");
+    assert!(stats.contains(" shed=1 "), "{stats}");
+    assert_eq!(h.state.admission.used(), 0);
+    h.shutdown();
+}
+
+#[test]
+fn finished_job_retention_evicts_least_recently_touched() {
+    let st = ServerState::new(&ServerConfig { retain_cap: 2, ..Default::default() });
+    for i in 1..=3 {
+        assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3").starts_with("ok job="));
+        assert_eq!(
+            handle_line(&st, &format!("cancel job=j{i}")),
+            format!("ok job=j{i} state=cancelled")
+        );
+    }
+    // three finished, cap two: the coldest (j1) is gone
+    assert!(handle_line(&st, "poll job=j1").starts_with("err unknown job j1"));
+    assert!(handle_line(&st, "poll job=j2").contains("state=cancelled"));
+    assert!(handle_line(&st, "poll job=j3").contains("state=cancelled"));
+    let jobs = handle_line(&st, "jobs");
+    assert!(jobs.contains(" retained=2 "), "{jobs}");
+    // the poll above touched j2 last -> j3 is now the LRU victim
+    assert!(handle_line(&st, "poll job=j2").contains("state=cancelled"));
+    assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3").starts_with("ok job=j4"));
+    assert_eq!(handle_line(&st, "cancel job=j4"), "ok job=j4 state=cancelled");
+    assert!(handle_line(&st, "poll job=j3").starts_with("err unknown job j3"), "LRU evicts j3");
+    assert!(handle_line(&st, "poll job=j2").contains("state=cancelled"), "touched j2 survives");
+    assert_eq!(st.admission.used(), 0);
+}
+
+#[test]
+fn concurrent_submit_burst_against_a_tight_budget() {
+    // a budget sized for ~1.5 cheap jobs: concurrent submits either get
+    // a handle or an immediate priced rejection; every admitted job
+    // completes and the budget fully drains
+    let cheap = MethodSpec::default().cost(300, 3, None).units;
+    let h = serve(ServerConfig {
+        workers: 4,
+        queue_cap: 16,
+        budget: cheap + cheap / 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let addr = h.addr;
+            std::thread::spawn(move || {
+                request(addr, &format!("submit dataset=blobs_300_4_3 k=3 seed={}", i % 2)).unwrap()
+            })
+        })
+        .collect();
+    let replies: Vec<String> = handles.into_iter().map(|t| t.join().unwrap()).collect();
+    let mut ids = Vec::new();
+    for r in &replies {
+        assert!(
+            r.starts_with("ok job=") || r.starts_with("err over budget"),
+            "unexpected reply: {r}"
+        );
+        assert!(r.contains("cost="), "every decision is priced: {r}");
+        if r.starts_with("ok job=") {
+            ids.push(field(r, "job"));
+        }
+    }
+    assert!(!ids.is_empty(), "at least one submit must be admitted: {replies:?}");
+    for id in &ids {
+        let done = request(h.addr, &format!("wait job={id} timeout_ms=60000")).unwrap();
+        assert!(done.starts_with("ok method="), "{id}: {done}");
+    }
+    assert_eq!(h.state.admission.used(), 0, "budget must drain when jobs finish");
+    let jobs = request(h.addr, "jobs").unwrap();
+    assert!(jobs.contains(&format!(" done={} ", ids.len())), "{jobs}");
+    h.shutdown();
+}
+
+#[test]
+fn cancel_running_job_releases_budget_over_tcp() {
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    let sub = request(h.addr, "submit dataset=blobs_20000_8_5 k=5 seed=9").unwrap();
+    assert!(sub.starts_with("ok job="), "{sub}");
+    let id = field(&sub, "job");
+    assert_eq!(poll_until_past_queued(h.addr, &id), "running");
+    let c = request(h.addr, &format!("cancel job={id}")).unwrap();
+    // cancellation is cooperative: either the request landed while the
+    // job was still running, or the job beat it to a terminal state
+    assert!(
+        c.contains("cancel=requested") || c.contains("state=done") || c.contains("state=cancelled"),
+        "{c}"
+    );
+    let fin = request(h.addr, &format!("wait job={id} timeout_ms=600000")).unwrap();
+    assert!(
+        fin.starts_with(&format!("err cancelled job={id}")) || fin.starts_with("ok method="),
+        "cancelled or finished, nothing else: {fin}"
+    );
+    assert_eq!(h.state.admission.used(), 0, "terminal job must hold no budget");
+    // idempotent: cancelling a terminal job reports its state
+    let again = request(h.addr, &format!("cancel job={id}")).unwrap();
+    assert!(again.contains("state=cancelled") || again.contains("state=done"), "{again}");
+    h.shutdown();
+}
+
+#[test]
+fn submit_of_invalid_requests_fails_like_cluster() {
+    let st = workerless();
+    for line in [
+        "submit dataset=doesnotexist-not-a-name k=1",
+        "submit k=1",
+        "submit method=bogus",
+        "submit method=FasterPAM m=50",
+        "submit dataset=file:/nope.csv?rows=50000 k=5 method=FasterPAM",
+        "submit deadline_ms=0",
+    ] {
+        let r = handle_line(&st, line);
+        assert!(r.starts_with("err"), "{line:?} -> {r}");
+    }
+    let g = st.jobs.gauges();
+    assert_eq!((g.queued, g.running, g.retained), (0, 0, 0), "nothing enqueued");
+    assert_eq!(st.admission.used(), 0);
+}

@@ -271,3 +271,32 @@ fn server_threaded_jobs_match_serial_jobs() {
     assert!(a.starts_with("ok method=OneBatch-nniw"), "{a}");
     assert_eq!(a, b);
 }
+
+/// The server-owned pool cache (protocol v5): repeated threaded jobs
+/// reuse ONE persistent pool per width — the cache must report exactly
+/// the widths seen, and reuse must stay bit-identical to the serial
+/// reply across many jobs and mixed widths.
+#[test]
+fn server_pool_cache_reuse_is_deterministic() {
+    let h = serve(ServerConfig { workers: 2, ..Default::default() }).unwrap();
+    let strip = |r: String| {
+        r.split(" seconds=").next().unwrap().replace("cache=hit", "cache=miss")
+    };
+    let line =
+        |threads: usize| format!("cluster dataset=blobs_400_4_3 k=3 seed=6 threads={threads}");
+    let serial = strip(request(h.addr, &line(1)).unwrap());
+    assert!(serial.starts_with("ok method="), "{serial}");
+    // several width-4 jobs in a row: all share the cached width-4 pool
+    for round in 0..3 {
+        let r = strip(request(h.addr, &line(4)).unwrap());
+        assert_eq!(r, serial, "pool-reuse round {round} diverged");
+    }
+    // interleave another width; determinism must survive the mix
+    let w2 = strip(request(h.addr, &line(2)).unwrap());
+    assert_eq!(w2, serial);
+    let again = strip(request(h.addr, &line(4)).unwrap());
+    assert_eq!(again, serial);
+    // exactly one pool per distinct width (1, 2 and 4), built once each
+    assert_eq!(h.state.pools.widths(), 3, "one cached pool per width");
+    h.shutdown();
+}
