@@ -80,6 +80,17 @@
 //! The low-level entry points ([`coordinator::one_batch_pam`],
 //! [`baselines::faster_pam`], ...) remain available when a caller needs
 //! algorithm-specific knobs beyond [`solver::SolveSpec`].
+//!
+//! ## Invariants and in-tree lints
+//!
+//! The concurrency invariants this crate promises — bit-identical
+//! medoids at any thread count, `SAFETY:`-documented unsafe sites,
+//! poison-recovering locking through [`sync_ext`], permit balance and
+//! terminal-exactly-once job states — are machine-checked by the
+//! in-tree static-analysis pass `tools/tidy` (`cargo run -p tidy`) and
+//! the deterministic interleaving suite `rust/tests/interleave.rs`.
+//! `docs/INVARIANTS.md` catalogues every lint, the invariant it guards,
+//! and the allowlist policy.
 
 pub mod backend;
 pub mod baselines;
@@ -95,4 +106,5 @@ pub mod rng;
 pub mod runtime;
 pub mod server;
 pub mod solver;
+pub mod sync_ext;
 pub mod telemetry;

@@ -43,11 +43,14 @@
 //! the same pool runs inline on its caller instead of deadlocking —
 //! results are identical either way, only the parallelism differs.
 
+use crate::sync_ext;
 use std::num::NonZeroUsize;
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+#[cfg(debug_assertions)]
+use std::sync::atomic::AtomicU64;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, TryLockError};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Type-erased descriptor of one parallel region, published to the
 /// workers through [`Shared::job`].  All pointers target the region
@@ -75,7 +78,17 @@ struct JobRef {
 unsafe impl Send for JobRef {}
 
 /// Trampoline from the erased `ctx` back to the region closure.
+///
+/// # Safety
+///
+/// `ctx` must be the thin pointer published in the current region's
+/// [`JobRef`]: a pointer to a live `&(dyn Fn(usize) + Sync)` fat
+/// reference on the region caller's stack.  Callers guarantee that
+/// frame is still pinned — the region's quiesce guard has not run.
 unsafe fn call_erased(ctx: *const (), t: usize) {
+    // SAFETY: per this function's contract, `ctx` points at the region
+    // caller's still-live fat reference; it is only reborrowed, never
+    // retained past this call.
     let f: &&(dyn Fn(usize) + Sync) = unsafe { &*(ctx as *const &(dyn Fn(usize) + Sync)) };
     f(t)
 }
@@ -103,6 +116,13 @@ struct Inner {
     /// Serialises regions; `try_lock` failure = nested/concurrent
     /// region, which runs inline instead.
     region: Mutex<()>,
+    /// Debug-build flow counter: regions ever published to the workers.
+    #[cfg(debug_assertions)]
+    published: AtomicU64,
+    /// Debug-build flow counter: regions ever retired by a quiesce
+    /// guard.  Equals `published` whenever no region is running.
+    #[cfg(debug_assertions)]
+    retired: AtomicU64,
 }
 
 /// Owns the worker threads; dropping the last [`Pool`] handle drops
@@ -115,11 +135,11 @@ struct PoolCore {
 impl Drop for PoolCore {
     fn drop(&mut self) {
         {
-            let mut s = self.inner.shared.lock().unwrap_or_else(|e| e.into_inner());
+            let mut s = sync_ext::lock_or_recover(&self.inner.shared);
             s.shutdown = true;
         }
         self.inner.work_cv.notify_all();
-        for h in self.handles.lock().unwrap_or_else(|e| e.into_inner()).drain(..) {
+        for h in sync_ext::lock_or_recover(&self.handles).drain(..) {
             let _ = h.join();
         }
     }
@@ -129,6 +149,12 @@ impl Drop for PoolCore {
 /// pointer across worker threads (each task touches only its own slot /
 /// row window, so the aliasing is by construction disjoint).
 struct SyncPtr<T>(*mut T);
+// SAFETY: SyncPtr is only constructed over buffers whose tasks write
+// disjoint regions — map_ranges task `t` writes exactly slot `t`, and
+// for_each_row_chunk hands out disjoint row windows — so concurrent use
+// from worker threads never aliases a write; `T: Send` keeps moving the
+// pointed-to values between threads sound.  The same argument covers
+// both auto traits, so one comment documents the pair of impls.
 unsafe impl<T: Send> Send for SyncPtr<T> {}
 unsafe impl<T: Send> Sync for SyncPtr<T> {}
 impl<T> Clone for SyncPtr<T> {
@@ -176,6 +202,10 @@ impl Pool {
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             region: Mutex::new(()),
+            #[cfg(debug_assertions)]
+            published: AtomicU64::new(0),
+            #[cfg(debug_assertions)]
+            retired: AtomicU64::new(0),
         });
         let mut handles = Vec::with_capacity(t - 1);
         for _ in 0..t - 1 {
@@ -216,6 +246,21 @@ impl Pool {
     /// Does this pool run everything inline on the caller's thread?
     pub fn is_serial(&self) -> bool {
         self.threads == 1
+    }
+
+    /// Debug-build flow counters: `(regions published, regions
+    /// retired)`.  The two are equal whenever no region is running —
+    /// the deterministic interleaving suite asserts this balance after
+    /// every schedule step.  Serial pools (no workers) report `(0, 0)`.
+    #[cfg(debug_assertions)]
+    pub fn debug_region_flow(&self) -> (u64, u64) {
+        match &self.core {
+            Some(core) => (
+                core.inner.published.load(Ordering::SeqCst),
+                core.inner.retired.load(Ordering::SeqCst),
+            ),
+            None => (0, 0),
+        }
     }
 
     /// Split `0..n` into at most `threads` contiguous, non-empty,
@@ -319,18 +364,14 @@ impl Pool {
         }
         // One region at a time: a nested or concurrent region on the
         // same pool runs inline on its caller instead of deadlocking on
-        // workers that are busy with the outer region.  (Poisoning can
-        // only come from a past caller-side task panic; the pool state
-        // itself is still consistent, so recover the guard.)
-        let _region = match core.inner.region.try_lock() {
-            Ok(g) => g,
-            Err(TryLockError::Poisoned(p)) => p.into_inner(),
-            Err(TryLockError::WouldBlock) => {
-                for t in 0..total {
-                    task(t);
-                }
-                return;
+        // workers that are busy with the outer region.  (sync_ext
+        // recovers a guard poisoned by a past caller-side task panic —
+        // the pool state itself is still consistent.)
+        let Some(_region) = sync_ext::try_lock_or_recover(&core.inner.region) else {
+            for t in 0..total {
+                task(t);
             }
+            return;
         };
         let next = AtomicUsize::new(0);
         let panicked = AtomicBool::new(false);
@@ -343,10 +384,12 @@ impl Pool {
             total,
         };
         {
-            let mut s = core.inner.shared.lock().unwrap_or_else(|e| e.into_inner());
+            let mut s = sync_ext::lock_or_recover(&core.inner.shared);
             s.job = Some(job);
             s.seq = s.seq.wrapping_add(1);
         }
+        #[cfg(debug_assertions)]
+        core.inner.published.fetch_add(1, Ordering::SeqCst);
         core.inner.work_cv.notify_all();
         {
             // The guard quiesces on every exit path — including a task
@@ -375,11 +418,13 @@ struct Quiesce<'a> {
 
 impl Drop for Quiesce<'_> {
     fn drop(&mut self) {
-        let mut s = self.inner.shared.lock().unwrap_or_else(|e| e.into_inner());
+        let mut s = sync_ext::lock_or_recover(&self.inner.shared);
         while s.active > 0 {
-            s = self.inner.done_cv.wait(s).unwrap_or_else(|e| e.into_inner());
+            s = sync_ext::wait_or_recover(&self.inner.done_cv, s);
         }
         s.job = None;
+        #[cfg(debug_assertions)]
+        self.inner.retired.fetch_add(1, Ordering::SeqCst);
     }
 }
 
@@ -389,7 +434,7 @@ impl Drop for Quiesce<'_> {
 /// the pool.
 fn worker_loop(inner: &Inner) {
     let mut seen = 0u64;
-    let mut s = inner.shared.lock().unwrap_or_else(|e| e.into_inner());
+    let mut s = sync_ext::lock_or_recover(&inner.shared);
     loop {
         if s.shutdown {
             return;
@@ -406,13 +451,20 @@ fn worker_loop(inner: &Inner) {
                     if t >= job.total {
                         break;
                     }
+                    // SAFETY: same pin as `job.next` above — `call` is
+                    // `call_erased` and `ctx` is the thin pointer
+                    // run_region published for it, both live until the
+                    // quiesce guard sees `active == 0`.
                     if catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.ctx, t) }))
                         .is_err()
                     {
+                        // SAFETY: `job.panicked` points at the region
+                        // caller's flag, pinned like the pointers above
+                        // until this worker decrements `active`.
                         unsafe { &*job.panicked }.store(true, Ordering::SeqCst);
                     }
                 }
-                s = inner.shared.lock().unwrap_or_else(|e| e.into_inner());
+                s = sync_ext::lock_or_recover(&inner.shared);
                 s.active -= 1;
                 if s.active == 0 {
                     inner.done_cv.notify_all();
@@ -420,7 +472,7 @@ fn worker_loop(inner: &Inner) {
                 continue;
             }
         }
-        s = inner.work_cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        s = sync_ext::wait_or_recover(&inner.work_cv, s);
     }
 }
 

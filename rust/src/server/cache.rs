@@ -31,6 +31,7 @@
 
 use crate::data::{DataSource, FeatureScaling};
 use crate::linalg::Matrix;
+use crate::sync_ext;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -135,7 +136,7 @@ impl DatasetCache {
             scaling,
         };
         let slot = &self.shards[shard_of(&key)];
-        let mut guard = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut guard = sync_ext::lock_or_recover(&slot.state);
         loop {
             if let Some(pos) = guard.entries.iter().position(|(k, _)| *k == key) {
                 let entry = guard.entries.remove(pos);
@@ -150,7 +151,7 @@ impl DatasetCache {
             // someone else is loading exactly this key: park until the
             // loader finishes (success -> hit above; failure -> the
             // marker is gone and we become the loader)
-            guard = slot.loaded_cv.wait(guard).unwrap_or_else(|e| e.into_inner());
+            guard = sync_ext::wait_or_recover(&slot.loaded_cv, guard);
         }
         // mark the key in flight and load OUTSIDE the shard lock, so a
         // slow cold load never stalls other keys on this shard; the
@@ -166,7 +167,7 @@ impl DatasetCache {
         // finish under one critical section — entry in, marker out — so
         // a woken same-key waiter can never observe "no entry, no
         // marker" after a successful load and reload it
-        let mut guard = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut guard = sync_ext::lock_or_recover(&slot.state);
         std::mem::forget(unmark);
         guard.loading.retain(|k| k != &key);
         slot.loaded_cv.notify_all();
@@ -191,7 +192,7 @@ impl DatasetCache {
         let entries = self
             .shards
             .iter()
-            .map(|s| s.state.lock().unwrap_or_else(|e| e.into_inner()).entries.len())
+            .map(|s| sync_ext::lock_or_recover(&s.state).entries.len())
             .sum();
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -220,7 +221,7 @@ struct UnmarkOnDrop<'a> {
 
 impl Drop for UnmarkOnDrop<'_> {
     fn drop(&mut self) {
-        let mut s = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut s = sync_ext::lock_or_recover(&self.slot.state);
         s.loading.retain(|k| k != self.key);
         self.slot.loaded_cv.notify_all();
     }

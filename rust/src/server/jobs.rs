@@ -51,6 +51,7 @@
 use super::metrics::JobCounters;
 use super::JobWork;
 use crate::solver::CancelToken;
+use crate::sync_ext;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -277,33 +278,52 @@ impl JobRegistry {
     pub(crate) fn next_job(&self) -> Option<PickedJob> {
         let mut inner = self.lock();
         loop {
-            while let Some(id) = inner.queue.pop_front() {
-                if self.expire_if_due(&mut inner, id) {
-                    self.state_cv.notify_all();
-                    continue;
-                }
-                let picked = {
-                    let Some(job) = inner.jobs.get_mut(&id) else { continue };
-                    if job.state != JobState::Queued {
-                        continue; // cancelled while queued
-                    }
-                    let waited = job.submitted.elapsed().as_secs_f64() * 1e3;
-                    job.state = JobState::Running;
-                    job.queue_ms = waited;
-                    PickedJob {
-                        id,
-                        work: job.work.take().expect("queued job carries its work"),
-                        queue_ms: waited,
-                    }
-                };
-                self.state_cv.notify_all();
+            if let Some(picked) = self.pick_runnable(&mut inner) {
                 return Some(picked);
             }
             if inner.shutdown {
                 return None;
             }
-            inner = self.queue_cv.wait(inner).unwrap_or_else(|e| e.into_inner());
+            inner = sync_ext::wait_or_recover(&self.queue_cv, inner);
         }
+    }
+
+    /// Non-blocking [`JobRegistry::next_job`]: claim a runnable job if
+    /// one is queued right now, else `None` instead of parking.  Drives
+    /// [`crate::server::ServerState::drain_one`] — the deterministic
+    /// single-step worker used by workerless embedders and the
+    /// interleaving suite.
+    pub(crate) fn try_next_job(&self) -> Option<PickedJob> {
+        let mut inner = self.lock();
+        self.pick_runnable(&mut inner)
+    }
+
+    /// One pass over the queue under the lock: shed overdue entries and
+    /// claim the first still-runnable job, if any.
+    fn pick_runnable(&self, inner: &mut Inner) -> Option<PickedJob> {
+        while let Some(id) = inner.queue.pop_front() {
+            if self.expire_if_due(inner, id) {
+                self.state_cv.notify_all();
+                continue;
+            }
+            let picked = {
+                let Some(job) = inner.jobs.get_mut(&id) else { continue };
+                if job.state != JobState::Queued {
+                    continue; // cancelled while queued
+                }
+                let waited = job.submitted.elapsed().as_secs_f64() * 1e3;
+                job.state = JobState::Running;
+                job.queue_ms = waited;
+                PickedJob {
+                    id,
+                    work: job.work.take().expect("queued job carries its work"),
+                    queue_ms: waited,
+                }
+            };
+            self.state_cv.notify_all();
+            return Some(picked);
+        }
+        None
     }
 
     /// Publish a picked job's outcome.  An error equal to
@@ -313,6 +333,11 @@ impl JobRegistry {
         let mut inner = self.lock();
         let landed = {
             let Some(job) = inner.jobs.get_mut(&id) else { return };
+            debug_assert!(
+                job.state == JobState::Running,
+                "finish() on a {} job — terminal transitions are exactly-once",
+                job.state.name()
+            );
             let state = match &outcome {
                 Ok(_) => JobState::Done,
                 Err(e) if e.as_str() == crate::solver::CANCELLED => JobState::Cancelled,
@@ -391,10 +416,8 @@ impl JobRegistry {
                 sleep = Some(sleep.map_or(left, |s| s.min(left)));
             }
             inner = match sleep {
-                Some(d) => {
-                    self.state_cv.wait_timeout(inner, d).unwrap_or_else(|e| e.into_inner()).0
-                }
-                None => self.state_cv.wait(inner).unwrap_or_else(|e| e.into_inner()),
+                Some(d) => sync_ext::wait_timeout_or_recover(&self.state_cv, inner, d).0,
+                None => sync_ext::wait_or_recover(&self.state_cv, inner),
             };
         }
     }
@@ -498,7 +521,7 @@ impl JobRegistry {
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+        sync_ext::lock_or_recover(&self.inner)
     }
 
     /// Shed the job if it is queued past its deadline: terminal

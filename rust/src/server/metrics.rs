@@ -20,6 +20,7 @@
 //! map insert, vastly cheaper than the clustering job that precedes it,
 //! and the BTreeMap keeps the `stats` line deterministically ordered.
 
+use crate::sync_ext;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -157,7 +158,7 @@ impl MethodMetrics {
     /// dissimilarity count, and the job's queue wait `queue_ms`
     /// (`0.0` when the request never queued, e.g. direct library calls).
     pub fn record(&self, label: &str, ms: f64, dissim: u64, queue_ms: f64) {
-        let mut map = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut map = sync_ext::lock_or_recover(&self.inner);
         match map.get_mut(label) {
             Some(agg) => agg.add(ms, dissim, queue_ms),
             None => {
@@ -168,13 +169,66 @@ impl MethodMetrics {
 
     /// Snapshot of every label's aggregate, sorted by label.
     pub fn snapshot(&self) -> Vec<(String, MethodAgg)> {
-        let map = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let map = sync_ext::lock_or_recover(&self.inner);
         map.iter().map(|(k, v)| (k.clone(), *v)).collect()
     }
 
     /// Drop every aggregate (the `stats reset` wire command).
     pub fn reset(&self) {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        sync_ext::lock_or_recover(&self.inner).clear();
+    }
+}
+
+/// Every verb of the protocol v5 wire surface, in `stats` export order.
+///
+/// This table is the single source of truth the in-tree tidy lint
+/// `verb-coverage` checks [`crate::server`]'s dispatch match against:
+/// a verb handled on the wire but missing here (or from the protocol
+/// doc block) fails `cargo run -p tidy`, so the counter and the docs
+/// can never silently lag the dispatcher.
+pub const VERBS: [&str; 9] =
+    ["ping", "cluster", "submit", "poll", "wait", "cancel", "jobs", "stats", "sleep"];
+
+/// Per-verb request counters (`verb.<name>=` stats fields): one atomic
+/// per [`VERBS`] entry, bumped once per dispatched request line.
+#[derive(Default)]
+pub struct VerbCounters {
+    counts: [AtomicU64; VERBS.len()],
+}
+
+impl VerbCounters {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count one dispatched request for `verb`.  Unknown strings are
+    /// ignored — the dispatcher's unknown-command arm replies with an
+    /// error and there is nothing meaningful to count it under.
+    pub fn record(&self, verb: &str) {
+        if let Some(i) = VERBS.iter().position(|v| *v == verb) {
+            self.counts[i].fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Requests counted for `verb` (0 for a string not in [`VERBS`]).
+    pub fn get(&self, verb: &str) -> u64 {
+        VERBS
+            .iter()
+            .position(|v| *v == verb)
+            .map_or(0, |i| self.counts[i].load(Ordering::SeqCst))
+    }
+
+    /// `(verb, count)` pairs in [`VERBS`] (= wire export) order.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        VERBS.iter().zip(&self.counts).map(|(v, c)| (*v, c.load(Ordering::SeqCst))).collect()
+    }
+
+    /// Zero every counter (the `stats reset` wire command).
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::SeqCst);
+        }
     }
 }
 
@@ -279,6 +333,26 @@ mod tests {
         assert_eq!(c.shed(), c.expired(), "shed= aliases deadline expiries");
         c.reset();
         assert_eq!((c.submitted(), c.done(), c.cancelled(), c.shed()), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn verb_counters_record_known_verbs_only() {
+        let v = VerbCounters::new();
+        v.record("ping");
+        v.record("submit");
+        v.record("submit");
+        v.record("definitely-not-a-verb");
+        assert_eq!(v.get("ping"), 1);
+        assert_eq!(v.get("submit"), 2);
+        assert_eq!(v.get("cancel"), 0);
+        assert_eq!(v.get("definitely-not-a-verb"), 0);
+        let snap = v.snapshot();
+        assert_eq!(snap.len(), VERBS.len());
+        assert_eq!(snap.iter().map(|(_, n)| n).sum::<u64>(), 3);
+        // snapshot order is the VERBS (wire export) order
+        assert!(snap.iter().map(|(v, _)| *v).eq(VERBS));
+        v.reset();
+        assert_eq!(v.snapshot().iter().map(|(_, n)| n).sum::<u64>(), 0);
     }
 
     #[test]

@@ -73,9 +73,14 @@
 //!   an unterminated quote is a protocol error).  This lifts the
 //!   documented v4 limitation.
 //! * `stats` additionally exports the `jobs.*` lifecycle fields,
-//!   `shed=`, and `pools=` (distinct execution-pool widths cached by
-//!   the server); `stats reset` re-bases the job counters along with
-//!   the method aggregates and cache counters.
+//!   `shed=`, `pools=` (distinct execution-pool widths cached by the
+//!   server) and one `verb.<name>=` request counter per wire verb
+//!   ([`metrics::VERBS`]); `stats reset` re-bases the job and verb
+//!   counters along with the method aggregates and cache counters.
+//! * `sleep ms=N` — diagnostic: hold this connection for `ms`
+//!   milliseconds (capped at 10 s) before replying `ok slept_ms=N`.
+//!   Used by the backpressure tests; it occupies a connection slot,
+//!   never a solver worker.
 //!
 //! `cluster` keys (unchanged from v4, plus `deadline_ms=`):
 //!
@@ -139,7 +144,7 @@ pub mod metrics;
 
 pub use cache::{CacheStats, DatasetCache};
 pub use jobs::{JobGauges, JobRegistry, JobState, JobView, WaitOutcome};
-pub use metrics::{JobCounters, MethodAgg, MethodMetrics};
+pub use metrics::{JobCounters, MethodAgg, MethodMetrics, VerbCounters, VERBS};
 
 use crate::backend::NativeBackend;
 use crate::coordinator::{SamplerKind, SwapStrategy};
@@ -148,6 +153,7 @@ use crate::dissim::{DissimCounter, Metric};
 use crate::eval;
 use crate::runtime::Pool;
 use crate::solver::{self, CancelToken, JobCost, MethodSpec, SolveSpec, MAX_JOB_COST};
+use crate::sync_ext;
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -255,6 +261,14 @@ pub struct AdmissionBudget {
     total: u64,
     strict: bool,
     used: AtomicU64,
+    /// Debug-build flow counter: units ever reserved (admits plus the
+    /// `new` side of every reprice).
+    #[cfg(debug_assertions)]
+    reserved_flow: AtomicU64,
+    /// Debug-build flow counter: units ever released (permit drops plus
+    /// the `old` side of every reprice).
+    #[cfg(debug_assertions)]
+    released_flow: AtomicU64,
 }
 
 impl AdmissionBudget {
@@ -268,7 +282,15 @@ impl AdmissionBudget {
     /// idle exception, so an over-budget job is rejected even when the
     /// budget is idle.
     pub fn with_strict(total: u64, strict: bool) -> Self {
-        AdmissionBudget { total: total.max(1), strict, used: AtomicU64::new(0) }
+        AdmissionBudget {
+            total: total.max(1),
+            strict,
+            used: AtomicU64::new(0),
+            #[cfg(debug_assertions)]
+            reserved_flow: AtomicU64::new(0),
+            #[cfg(debug_assertions)]
+            released_flow: AtomicU64::new(0),
+        }
     }
 
     /// Total work units.
@@ -284,6 +306,15 @@ impl AdmissionBudget {
     /// Units currently held by in-flight jobs.
     pub fn used(&self) -> u64 {
         self.used.load(Ordering::SeqCst)
+    }
+
+    /// Debug-build flow counters: `(units ever reserved, units ever
+    /// released)`.  The two are equal exactly when no permit is
+    /// outstanding — the panic-safety and interleaving suites assert
+    /// this balance at every quiescent point.
+    #[cfg(debug_assertions)]
+    pub fn debug_units_flow(&self) -> (u64, u64) {
+        (self.reserved_flow.load(Ordering::SeqCst), self.released_flow.load(Ordering::SeqCst))
     }
 
     /// Would `units` be admitted alongside `others` already-held units?
@@ -302,7 +333,10 @@ impl AdmissionBudget {
                     None
                 }
             })
-            .map(|_| ())
+            .map(|_| {
+                #[cfg(debug_assertions)]
+                self.reserved_flow.fetch_add(units, Ordering::SeqCst);
+            })
     }
 
     /// Atomically swap a reservation of `old` units for `new` — one
@@ -321,7 +355,13 @@ impl AdmissionBudget {
                     None
                 }
             })
-            .map(|_| ())
+            .map(|_| {
+                #[cfg(debug_assertions)]
+                {
+                    self.reserved_flow.fetch_add(new, Ordering::SeqCst);
+                    self.released_flow.fetch_add(old, Ordering::SeqCst);
+                }
+            })
             .map_err(|used| used.saturating_sub(old))
     }
 
@@ -333,6 +373,8 @@ impl AdmissionBudget {
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
                 Some(used.saturating_sub(units))
             });
+        #[cfg(debug_assertions)]
+        self.released_flow.fetch_add(units, Ordering::SeqCst);
     }
 
     /// Reserve `units` behind a borrowed RAII permit, or fail with the
@@ -446,7 +488,7 @@ impl PoolCache {
     /// cloned for every subsequent job of the same width.
     pub fn get(&self, threads: usize) -> Pool {
         let width = Pool::resolve(threads);
-        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut inner = sync_ext::lock_or_recover(&self.inner);
         if let Some(pos) = inner.order.iter().position(|&w| w == width) {
             inner.order.remove(pos);
         }
@@ -462,7 +504,7 @@ impl PoolCache {
 
     /// Distinct widths currently cached (the `pools=` stats field).
     pub fn widths(&self) -> usize {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner()).pools.len()
+        sync_ext::lock_or_recover(&self.inner).pools.len()
     }
 }
 
@@ -479,6 +521,8 @@ pub struct ServerState {
     pub jobs: JobRegistry,
     /// Server-owned execution pools, keyed by thread width.
     pub pools: PoolCache,
+    /// Per-verb request counters (the `verb.<name>=` stats fields).
+    pub verbs: VerbCounters,
 }
 
 impl ServerState {
@@ -493,6 +537,24 @@ impl ServerState {
             )),
             jobs: JobRegistry::new(cfg.resolved_retain_cap(), cfg.resolved_queue_cap()),
             pools: PoolCache::new(),
+            verbs: VerbCounters::new(),
+        }
+    }
+
+    /// Run at most one queued job to its terminal state on the calling
+    /// thread; returns whether a job ran.  This is the deterministic
+    /// single-step worker: a workerless embedder pumps the registry
+    /// with it, and the interleaving suite (rust/tests/interleave.rs)
+    /// uses it to place the run-to-terminal transition at an exact
+    /// point in an enumerated schedule.  Serving states never need it —
+    /// their solver workers drain the registry continuously.
+    pub fn drain_one(&self) -> bool {
+        match self.jobs.try_next_job() {
+            Some(picked) => {
+                run_job(self, picked);
+                true
+            }
+            None => false,
         }
     }
 }
@@ -1080,6 +1142,12 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
         Ok(p) => p,
         Err(e) => return (format!("err {e}"), queue_ms),
     };
+    // count the request under its verb (unknown commands are ignored by
+    // record); the tidy lint `verb-coverage` keeps this dispatch match,
+    // metrics::VERBS and the protocol doc block in sync
+    if let Some(cmd) = parts.first() {
+        state.verbs.record(cmd);
+    }
     let reply = match parts.first().map(String::as_str) {
         Some("ping") => "pong".into(),
         Some("cluster") => {
@@ -1108,6 +1176,7 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
             state.methods.reset();
             state.cache.reset_counters();
             state.jobs.counters().reset();
+            state.verbs.reset();
             "ok".into()
         }
         Some("stats") => {
@@ -1137,6 +1206,10 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
                 c.shed(),
                 state.pools.widths(),
             );
+            // per-verb request counters, VERBS (wire) order
+            for (verb, n) in state.verbs.snapshot() {
+                line.push_str(&format!(" verb.{verb}={n}"));
+            }
             // per-method aggregates, label-sorted for determinism
             for (label, a) in state.methods.snapshot() {
                 line.push_str(&format!(
@@ -1207,13 +1280,53 @@ fn handle_connection(state: &ServerState, stream: TcpStream, accepted_at: Instan
 /// One picked job, executed on a solver worker.  Panics are caught so a
 /// bad job can never shrink the worker pool; they land as a failed job.
 fn run_job(state: &ServerState, picked: jobs::PickedJob) {
+    run_job_with(state, picked, run_cluster);
+}
+
+/// [`run_job`] with the solve stage injected, so the panic-safety
+/// regression tests drive a panicking solve through the exact guard
+/// machinery production uses.  Two layers keep a panicking solve from
+/// wedging anything: the `catch_unwind` turns the unwind into a failed
+/// outcome — releasing the job's permit, which unwinds inside the
+/// closure — and the [`FinishGuard`], armed *before* the solve starts,
+/// publishes the terminal state on every exit path, so the job can
+/// never stay `running`.
+fn run_job_with<F>(state: &ServerState, picked: jobs::PickedJob, solve: F)
+where
+    F: FnOnce(
+        &ServerState,
+        &JobRequest,
+        Option<JobPermit>,
+        f64,
+        Option<u64>,
+    ) -> Result<String, String>,
+{
     let jobs::PickedJob { id, work, queue_ms } = picked;
     let JobWork { req, permit } = *work;
+    let mut guard = FinishGuard { state, id, outcome: None };
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_cluster(state, &req, permit, queue_ms, Some(id))
+        solve(state, &req, permit, queue_ms, Some(id))
     }))
     .unwrap_or_else(|_| Err("job panicked".into()));
-    state.jobs.finish(id, outcome);
+    guard.outcome = Some(outcome);
+    // the guard drops here, publishing the outcome exactly once
+}
+
+/// Publishes a picked job's terminal state on drop.  Armed before the
+/// solve: if anything between pickup and publication unwinds past the
+/// `catch_unwind`, the drop still lands the job `failed` instead of
+/// leaving it `running` forever with no result.
+struct FinishGuard<'a> {
+    state: &'a ServerState,
+    id: u64,
+    outcome: Option<Result<String, String>>,
+}
+
+impl Drop for FinishGuard<'_> {
+    fn drop(&mut self) {
+        let outcome = self.outcome.take().unwrap_or_else(|| Err("job panicked".into()));
+        self.state.jobs.finish(self.id, outcome);
+    }
 }
 
 /// Start the server; returns immediately with a handle.
@@ -1235,6 +1348,8 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
     let mut workers = Vec::with_capacity(worker_count);
     for _ in 0..worker_count {
         let state = state.clone();
+        // tidy:allow(thread-spawn) — the solver-worker fleet: long-lived
+        // threads owned and joined by ServerHandle::shutdown.
         workers.push(std::thread::spawn(move || {
             while let Some(picked) = state.jobs.next_job() {
                 run_job(&state, picked);
@@ -1249,6 +1364,8 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
     let stop2 = stop.clone();
     let inflight2 = inflight.clone();
     let state2 = state.clone();
+    // tidy:allow(thread-spawn) — the accept loop: one long-lived thread
+    // owned and joined by ServerHandle::shutdown.
     let accept_thread = std::thread::spawn(move || {
         let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
         for conn in listener.incoming() {
@@ -1274,6 +1391,8 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
             let state = state2.clone();
             let slot = DecrementOnDrop(inflight2.clone());
             let accepted_at = Instant::now();
+            // tidy:allow(thread-spawn) — per-connection threads, bounded
+            // by queue_cap admission and joined by the accept loop.
             conn_threads.push(std::thread::spawn(move || {
                 let _slot = slot;
                 // a panicking dispatch must not poison the slot counter
@@ -1889,5 +2008,71 @@ mod tests {
         assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3").starts_with("ok job=j3 "));
         let g = st.jobs.gauges();
         assert_eq!((g.queued, g.retained), (2, 1));
+    }
+
+    #[test]
+    fn panicking_solve_releases_budget_and_fails_the_job() {
+        // Regression test for the panic-safety audit: a solve() that
+        // unwinds must (a) release its admission permit — the budget
+        // returns to zero — and (b) land the job `failed`, never stuck
+        // `running`.  Both are drop-guard obligations, so we drive a
+        // panicking solve through the exact production path
+        // (run_job_with is what run_job delegates to).
+        let st = fresh_state();
+        let r = handle_line(&st, "submit dataset=blobs_300_4_3 k=3 seed=1");
+        assert!(r.starts_with("ok job=j1 cost="), "{r}");
+        assert!(st.admission.used() > 0, "a queued job holds its permit");
+
+        let picked = st.jobs.next_job().expect("one queued job");
+        run_job_with(&st, picked, |_, _, _permit, _, _| panic!("solver exploded"));
+
+        assert_eq!(st.admission.used(), 0, "the panic path must release the permit");
+        let p = handle_line(&st, "poll job=j1");
+        assert!(p.starts_with("ok job=j1 state=failed error=job panicked"), "{p}");
+        let c = st.jobs.counters();
+        assert_eq!(c.failed(), 1);
+        let g = st.jobs.gauges();
+        assert_eq!((g.queued, g.running), (0, 0), "the job must not stay running");
+        #[cfg(debug_assertions)]
+        {
+            let (reserved, released) = st.admission.debug_units_flow();
+            assert_eq!(reserved, released, "every reserved unit must be released");
+        }
+    }
+
+    #[test]
+    fn drain_one_runs_exactly_one_queued_job() {
+        let st = fresh_state();
+        assert!(!st.drain_one(), "an empty registry has nothing to drain");
+        assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3 seed=1").starts_with("ok "));
+        assert!(st.drain_one());
+        assert!(handle_line(&st, "poll job=j1").starts_with("ok job=j1 state=done "));
+        assert!(!st.drain_one(), "the queue is drained");
+    }
+
+    #[test]
+    fn stats_reports_per_verb_counters_and_resets() {
+        let st = fresh_state();
+        assert!(handle_line(&st, "ping").starts_with("pong"));
+        assert!(handle_line(&st, "ping").starts_with("pong"));
+        assert!(handle_line(&st, "sleep ms=1").starts_with("ok "));
+        // malformed arguments still count: the verb was requested
+        assert!(handle_line(&st, "poll").starts_with("err"));
+        let s = handle_line(&st, "stats");
+        assert!(s.contains(" verb.ping=2 "), "{s}");
+        assert!(s.contains(" verb.sleep=1"), "{s}");
+        assert!(s.contains(" verb.poll=1 "), "{s}");
+        assert!(s.contains(" verb.cluster=0 "), "{s}");
+        // every wire verb shows up, counted or not — the stats line is
+        // how operators discover the verb set
+        for verb in VERBS {
+            assert!(s.contains(&format!(" verb.{verb}=")), "{verb} missing: {s}");
+        }
+        assert!(handle_line(&st, "stats reset").starts_with("ok"));
+        let s = handle_line(&st, "stats");
+        assert!(s.contains(" verb.ping=0 "), "{s}");
+        // the reset zeroed its own `stats` tick (record runs before the
+        // reset arm), so only this follow-up request is counted
+        assert!(s.contains(" verb.stats=1 "), "{s}");
     }
 }

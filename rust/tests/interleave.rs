@@ -1,0 +1,392 @@
+//! Deterministic interleaving harness for the named concurrency races.
+//!
+//! Real races are driven by the scheduler; CI cannot enumerate kernel
+//! schedules.  But every shared structure in this tree is a monitor —
+//! all state transitions happen under one mutex — so the reachable
+//! interleavings of N operations are exactly the N! orders in which
+//! their critical sections acquire the lock.  This suite enumerates
+//! those orders explicitly (Heap's algorithm over small op lists) and
+//! asserts the invariants that must hold on *every* schedule:
+//!
+//! * **pool publish/claim/quiesce** — permuted region shapes, nested
+//!   regions, and a mid-schedule task panic on one reused [`Pool`];
+//!   every region retires, task coverage is exact, and (debug builds)
+//!   the published/retired counters balance.
+//! * **permit reserve-vs-release** — permuted admit / drop / reprice
+//!   schedules on an [`AdmissionBudget`]; the budget returns to zero
+//!   and (debug builds) reserved units equal released units.
+//! * **registry cancel-vs-complete** — permuted drain / cancel / poll
+//!   schedules; whichever of drain or cancel locks first wins, the
+//!   loser observes a terminal state, the conservation identity
+//!   `submitted == queued + running + terminals` holds after every
+//!   step, and completed runs yield bit-identical medoids.
+//!   (The mid-run cooperative-cancel half of this race — token flip
+//!   while the solver is inside a batch — is exercised end-to-end by
+//!   the running-job cancel test in `jobs_api`.)
+//! * **wait-vs-deadline** — a queued job whose deadline passed is shed
+//!   by whichever lazy-expiry observer (poll / cancel / wait / gauges)
+//!   reaches it first, exactly once, on every observer order.
+//! * **cache in-flight marker** — failed loads clear the in-flight
+//!   marker on every schedule (a leaked marker would hang the next
+//!   request for the same key), including concurrent duplicates.
+//!   (The panic path is guarded by the same `UnmarkOnDrop` guard the
+//!   error path uses.)
+//!
+//! CI runs this suite under the `OBPAM_THREADS` {1, 4} matrix; the env
+//! width joins the pool widths compared below.
+
+use obpam::runtime::Pool;
+use obpam::server::{handle_line, AdmissionBudget, ServerConfig, ServerState};
+
+/// All permutations of `0..n`, via Heap's algorithm (n! schedules).
+fn permutations(n: usize) -> Vec<Vec<usize>> {
+    let mut items: Vec<usize> = (0..n).collect();
+    let mut out = vec![items.clone()];
+    let mut c = vec![0usize; n];
+    let mut i = 0;
+    while i < n {
+        if c[i] < i {
+            if i % 2 == 0 {
+                items.swap(0, i);
+            } else {
+                items.swap(c[i], i);
+            }
+            out.push(items.clone());
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+    out
+}
+
+fn fresh() -> ServerState {
+    ServerState::new(&ServerConfig::default())
+}
+
+/// The value of `key` (e.g. `"medoids="`) in a wire reply.
+fn field<'a>(reply: &'a str, key: &str) -> &'a str {
+    reply
+        .split(key)
+        .nth(1)
+        .and_then(|t| t.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no {key} in {reply:?}"))
+}
+
+/// The conservation identity every schedule must preserve: each
+/// submitted job is in exactly one place.
+fn assert_conservation(st: &ServerState, ctx: &str) {
+    let g = st.jobs.gauges();
+    let c = st.jobs.counters();
+    let terminal = c.done() + c.failed() + c.cancelled() + c.expired();
+    assert_eq!(
+        c.submitted(),
+        g.queued as u64 + g.running as u64 + terminal,
+        "conservation broken ({ctx}): gauges={g:?}"
+    );
+}
+
+fn env_width() -> Option<usize> {
+    std::env::var("OBPAM_THREADS").ok().and_then(|s| s.parse().ok())
+}
+
+// ---------------------------------------------------------------------------
+// race: pool publish / claim / quiesce
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_regions_survive_permuted_shapes_nesting_and_panics() {
+    let mut widths = vec![1usize, 2, 4];
+    if let Some(w) = env_width() {
+        if !widths.contains(&w) {
+            widths.push(w);
+        }
+    }
+    for &w in &widths {
+        let pool = if w == 1 { Pool::serial() } else { Pool::new(w) };
+
+        // permuted region shapes on one reused pool instance: every
+        // publish is claimed exactly and retired before the next
+        let shapes = [1usize, 3, 8, 17];
+        for perm in permutations(shapes.len()) {
+            for &si in &perm {
+                let n = shapes[si];
+                let parts = pool.map_ranges(n, |r| r.len());
+                assert_eq!(parts.iter().sum::<usize>(), n, "width {w}, schedule {perm:?}");
+            }
+        }
+
+        // nested region: the inner one finds the region slot busy and
+        // runs inline instead of deadlocking on the parked workers
+        let outer = pool.map_ranges(4, |r| {
+            let inner: usize = pool.map_ranges(6, |q| q.len()).into_iter().sum();
+            (r.len(), inner)
+        });
+        assert_eq!(outer.iter().map(|&(l, _)| l).sum::<usize>(), 4, "width {w}");
+        assert!(outer.iter().all(|&(_, inner)| inner == 6), "width {w}: {outer:?}");
+
+        // a task panic mid-schedule unwinds to the caller, quiesces the
+        // region, and leaves the pool (and its poisoned region mutex)
+        // fully usable for the rest of the schedule
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map_ranges(5, |r| {
+                if r.start == 0 {
+                    panic!("task boom");
+                }
+                r.len()
+            })
+        }));
+        assert!(boom.is_err(), "width {w}: the panic must reach the caller");
+        let parts = pool.map_ranges(9, |r| r.len());
+        assert_eq!(parts.iter().sum::<usize>(), 9, "width {w}: pool must survive a panic");
+
+        #[cfg(debug_assertions)]
+        {
+            let (published, retired) = pool.debug_region_flow();
+            assert_eq!(
+                published, retired,
+                "width {w}: every published region must retire, panics included"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// race: admission permit reserve vs release
+// ---------------------------------------------------------------------------
+
+#[test]
+fn permit_schedules_always_balance_the_budget_to_zero() {
+    // ops: admit 40 into slot 0, admit 70 into slot 1 (fits only via
+    // the idle exception — order decides), drop slot 0, reprice slot 1
+    // down to 20.  Depending on order some ops fail; the invariant is
+    // indifferent: whatever was reserved is released.
+    for perm in permutations(4) {
+        let budget = AdmissionBudget::new(100);
+        let mut slots: [Option<obpam::server::AdmissionPermit<'_>>; 2] = [None, None];
+        for &op in &perm {
+            match op {
+                0 => {
+                    if let Ok(p) = budget.try_admit(40) {
+                        slots[0] = Some(p);
+                    }
+                }
+                1 => {
+                    if let Ok(p) = budget.try_admit(70) {
+                        slots[1] = Some(p);
+                    }
+                }
+                2 => slots[0] = None, // drop releases
+                3 => {
+                    if let Some(p) = slots[1].as_mut() {
+                        let _ = p.reprice(20);
+                    }
+                }
+                _ => unreachable!(),
+            }
+            let held: u64 = slots.iter().flatten().map(|p| p.units()).sum();
+            assert_eq!(budget.used(), held, "schedule {perm:?}: used must track live permits");
+        }
+        drop(slots);
+        assert_eq!(budget.used(), 0, "schedule {perm:?} must balance to zero");
+        #[cfg(debug_assertions)]
+        {
+            let (reserved, released) = budget.debug_units_flow();
+            assert_eq!(reserved, released, "schedule {perm:?}: unit flow must balance");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// race: registry cancel vs complete
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cancel_vs_complete_is_decided_by_lock_order_and_stays_terminal_once() {
+    // ops: 0 = drain_one (worker pickup + completion), 1 = cancel,
+    // 2 = poll (an innocent observer anywhere in the schedule)
+    let mut done_medoids: Vec<String> = Vec::new();
+    for perm in permutations(3) {
+        let st = fresh();
+        let r = handle_line(&st, "submit dataset=blobs_300_4_3 k=3 seed=7");
+        assert!(r.starts_with("ok job=j1 "), "{r}");
+        for &op in &perm {
+            match op {
+                0 => {
+                    let _ = st.drain_one();
+                }
+                1 => {
+                    let c = handle_line(&st, "cancel job=j1");
+                    assert!(c.starts_with("ok job=j1 state="), "{c}");
+                }
+                2 => {
+                    let p = handle_line(&st, "poll job=j1");
+                    assert!(p.starts_with("ok job=j1 "), "{p}");
+                }
+                _ => unreachable!(),
+            }
+            assert_conservation(&st, &format!("schedule {perm:?}"));
+        }
+        // whoever locked the registry first won the race — and the
+        // outcome is a pure function of the schedule
+        let p = handle_line(&st, "poll job=j1");
+        let drain_first = perm.iter().position(|&o| o == 0).unwrap()
+            < perm.iter().position(|&o| o == 1).unwrap();
+        if drain_first {
+            assert!(p.starts_with("ok job=j1 state=done "), "schedule {perm:?}: {p}");
+            done_medoids.push(field(&p, "medoids=").to_string());
+        } else {
+            assert!(p.starts_with("ok job=j1 state=cancelled"), "schedule {perm:?}: {p}");
+            // the losing drain found an empty queue
+            assert!(!st.drain_one(), "schedule {perm:?}: cancelled job must leave the queue");
+        }
+        // terminal exactly once, permit released either way
+        let c = st.jobs.counters();
+        assert_eq!(c.done() + c.cancelled(), 1, "schedule {perm:?}");
+        assert_eq!(st.admission.used(), 0, "schedule {perm:?}: permit must be released");
+        #[cfg(debug_assertions)]
+        {
+            let (reserved, released) = st.admission.debug_units_flow();
+            assert_eq!(reserved, released, "schedule {perm:?}: unit flow must balance");
+        }
+    }
+    // every schedule that completed the job computed the same medoids
+    assert!(!done_medoids.is_empty());
+    assert!(
+        done_medoids.iter().all(|m| m == &done_medoids[0]),
+        "medoids must be bit-identical across schedules: {done_medoids:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// race: wait vs deadline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadline_shed_happens_exactly_once_under_any_observer_order() {
+    // every observer triggers lazy expiry; permute which one gets there
+    // first.  ops: 0 = poll, 1 = cancel, 2 = gauges, 3 = bounded wait
+    for perm in permutations(4) {
+        let st = fresh();
+        let r = handle_line(&st, "submit dataset=blobs_300_4_3 k=3 seed=1 deadline_ms=1");
+        assert!(r.starts_with("ok job=j1 "), "{r}");
+        // no workers: the job sits queued while its deadline passes
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        for &op in &perm {
+            match op {
+                0 => {
+                    let _ = handle_line(&st, "poll job=j1");
+                }
+                1 => {
+                    let _ = handle_line(&st, "cancel job=j1");
+                }
+                2 => {
+                    let _ = st.jobs.gauges();
+                }
+                3 => {
+                    let _ = handle_line(&st, "wait job=j1 timeout_ms=1");
+                }
+                _ => unreachable!(),
+            }
+            assert_conservation(&st, &format!("schedule {perm:?}"));
+        }
+        let p = handle_line(&st, "poll job=j1");
+        assert!(p.starts_with("ok job=j1 state=expired "), "schedule {perm:?}: {p}");
+        let c = st.jobs.counters();
+        assert_eq!(c.expired(), 1, "schedule {perm:?}: shed exactly once");
+        assert_eq!(c.shed(), 1, "schedule {perm:?}");
+        assert_eq!(c.cancelled(), 0, "schedule {perm:?}: expiry wins over a late cancel");
+        assert_eq!(st.admission.used(), 0, "schedule {perm:?}: shed must release the permit");
+        assert!(!st.drain_one(), "schedule {perm:?}: a shed job must leave the queue");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// race: cache in-flight marker
+// ---------------------------------------------------------------------------
+
+#[test]
+fn failed_loads_clear_the_inflight_marker_on_every_schedule() {
+    // ops: two failing loads of the same key and a succeeding load of
+    // another.  If the error path leaked the in-flight marker, the
+    // second request for the failing key would block forever.
+    for perm in permutations(3) {
+        let st = fresh();
+        for &op in &perm {
+            match op {
+                0 | 1 => {
+                    let r = handle_line(&st, "cluster dataset=doesnotexist k=3");
+                    assert!(r.starts_with("err"), "schedule {perm:?}: {r}");
+                }
+                2 => {
+                    let r = handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 seed=1");
+                    assert!(r.starts_with("ok "), "schedule {perm:?}: {r}");
+                }
+                _ => unreachable!(),
+            }
+        }
+        // the failing key errs cleanly (not hangs) one more time
+        let r = handle_line(&st, "cluster dataset=doesnotexist k=3");
+        assert!(r.starts_with("err"), "schedule {perm:?}: {r}");
+    }
+
+    // concurrent duplicates: every loser of the in-flight race must be
+    // woken and handed the error, and no marker may leak
+    let st = std::sync::Arc::new(fresh());
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let st = st.clone();
+            std::thread::spawn(move || handle_line(&st, "cluster dataset=doesnotexist k=3"))
+        })
+        .collect();
+    for h in handles {
+        assert!(h.join().unwrap().starts_with("err"));
+    }
+    let r = handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 seed=1");
+    assert!(r.starts_with("ok "), "{r}");
+}
+
+// ---------------------------------------------------------------------------
+// bit-identical medoids across submit schedules
+// ---------------------------------------------------------------------------
+
+#[test]
+fn submit_order_schedules_yield_bit_identical_medoids_per_seed() {
+    let seeds = [1u64, 2, 3];
+    let mut reference: Option<Vec<String>> = None;
+    for perm in permutations(seeds.len()) {
+        let st = fresh();
+        // submit the same three jobs in permuted order...
+        let mut id_of_seed = vec![0usize; seeds.len()];
+        for (submit_idx, &si) in perm.iter().enumerate() {
+            let line = format!("submit dataset=blobs_300_4_3 k=3 seed={}", seeds[si]);
+            let r = handle_line(&st, &line);
+            assert!(r.starts_with("ok job=j"), "{r}");
+            id_of_seed[si] = submit_idx + 1; // handles are monotonic
+        }
+        // ...drain them all deterministically...
+        let mut drained = 0;
+        while st.drain_one() {
+            drained += 1;
+        }
+        assert_eq!(drained, seeds.len(), "schedule {perm:?}");
+        // ...and the medoids for a given seed must not depend on the
+        // schedule the jobs arrived (or ran) in
+        let got: Vec<String> = id_of_seed
+            .iter()
+            .map(|&id| {
+                let p = handle_line(&st, &format!("poll job=j{id}"));
+                assert!(p.starts_with(&format!("ok job=j{id} state=done ")), "{p}");
+                field(&p, "medoids=").to_string()
+            })
+            .collect();
+        match &reference {
+            None => reference = Some(got),
+            Some(want) => assert_eq!(want, &got, "schedule {perm:?}"),
+        }
+        assert_eq!(st.admission.used(), 0, "schedule {perm:?}");
+        assert_conservation(&st, &format!("schedule {perm:?}"));
+    }
+}

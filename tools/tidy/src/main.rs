@@ -1,0 +1,944 @@
+//! In-tree static analysis for the obpam workspace, in the style of
+//! rustc's `tidy`: a dependency-free line scanner that enforces the
+//! concurrency and layering invariants the compiler cannot see.  Run it
+//! directly (`cargo run -p tidy`) or as a test (`cargo test -p tidy`);
+//! CI gates on both.  The full catalogue, with the invariant each lint
+//! guards and the allowlist policy, lives in `docs/INVARIANTS.md`.
+//!
+//! Lints (names are what `// tidy:allow(<name>)` suppresses, placed on
+//! the offending line or in the contiguous comment block above it):
+//!
+//! * `safety-comment` — every `unsafe` block / fn / impl must carry a
+//!   `// SAFETY:` comment (or a `# Safety` doc section) stating the
+//!   invariant that makes it sound.  `unsafe fn(...)` *types* (fn
+//!   pointers) are not unsafe sites and are skipped.
+//! * `thread-spawn` — `thread::spawn` only in `runtime/pool.rs` (the
+//!   one sanctioned thread owner), tests and benches; the server accept
+//!   path carries explicit `tidy:allow` annotations.
+//! * `lock-discipline` — no raw `.lock().unwrap()` / `.expect()` (nor
+//!   inline `unwrap_or_else(|e| e.into_inner())` poison recovery)
+//!   outside `sync_ext`, which owns the recover-don't-propagate policy.
+//! * `data-source` — no direct `synth::try_generate` / `load_csv`
+//!   calls outside `rust/src/data/`: all dataset access goes through
+//!   URI-addressed `DataSource`s.
+//! * `relaxed-ordering` — no `Ordering::Relaxed` outside the
+//!   stat-counter allowlist (`telemetry.rs`, `server/cache.rs`):
+//!   admission and registry atomics synchronise real state and must
+//!   not be demoted silently.
+//! * `verb-coverage` — every wire verb dispatched in `server/mod.rs`
+//!   has a counter in `metrics::VERBS` and a mention in the protocol
+//!   doc block, and every `VERBS` entry is actually dispatched.
+//!
+//! The scanner strips comments and string/char literals with a small
+//! cross-line state machine (nested block comments, multi-line and raw
+//! strings), so `"unsafe"` in a string or `.lock()` in a doc comment
+//! never trips a lint.  It is a *line* scanner: a chain split across
+//! lines (`.lock()\n.unwrap()`) can evade `lock-discipline` — the
+//! lint is a tripwire for the idiom, not a soundness proof.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Every lint the scanner knows, i.e. every name `tidy:allow(..)`
+/// accepts.  Kept in one place so docs and tests can enumerate them.
+pub const LINT_NAMES: [&str; 6] = [
+    "safety-comment",
+    "thread-spawn",
+    "lock-discipline",
+    "data-source",
+    "relaxed-ordering",
+    "verb-coverage",
+];
+
+/// One finding: `file:line: [lint] message`, repo-relative path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Repo-relative path, forward slashes (`rust/src/server/mod.rs`).
+    pub file: String,
+    /// 1-based line number of the offending line.
+    pub line: usize,
+    /// Lint name, one of [`LINT_NAMES`].
+    pub lint: &'static str,
+    /// Human explanation of what tripped and what the policy is.
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.msg)
+    }
+}
+
+/// A source line split into its syntactic layers by [`scan`].
+struct Line {
+    /// Code with comments removed; string/char literals kept verbatim
+    /// (for verb extraction, which reads `Some("ping")`).
+    code: String,
+    /// Code with comments removed *and* string/char literal contents
+    /// blanked — the view token lints match against.
+    nostr: String,
+    /// Comment text on the line, markers included (`// SAFETY: ...`).
+    comment: String,
+}
+
+impl Line {
+    fn is_comment_only(&self) -> bool {
+        self.code.trim().is_empty() && !self.comment.trim().is_empty()
+    }
+}
+
+/// Cross-line lexer state: where a line *ends* determines how the next
+/// one starts (multi-line strings, nested block comments).
+enum Mode {
+    Code,
+    LineComment,
+    /// Nesting depth — Rust block comments nest.
+    BlockComment(u32),
+    Str,
+    /// Number of `#`s that close the raw string.
+    RawStr(usize),
+}
+
+/// Split `content` into [`Line`]s, classifying every character as code,
+/// comment, or literal.  Handles `//`, nested `/* */`, `"…"` with
+/// escapes and line continuations, `r#"…"#`, char literals vs
+/// lifetimes (`'a'` vs `'a`).
+fn scan(content: &str) -> Vec<Line> {
+    let chars: Vec<char> = content.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut nostr = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut prev_code_char = '\n';
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                nostr: std::mem::take(&mut nostr),
+                comment: std::mem::take(&mut comment),
+            });
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+                if c == '/' && next == '/' {
+                    mode = Mode::LineComment;
+                    comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    mode = Mode::BlockComment(1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Str;
+                    code.push('"');
+                    nostr.push('"');
+                    prev_code_char = '"';
+                    i += 1;
+                } else if c == 'r'
+                    && !is_ident(prev_code_char)
+                    && raw_str_hashes(&chars, i + 1).is_some()
+                {
+                    // raw string r"…" / r#"…"# — blank the contents
+                    let hashes = raw_str_hashes(&chars, i + 1).unwrap();
+                    mode = Mode::RawStr(hashes);
+                    for _ in 0..(1 + hashes + 1) {
+                        code.push('r');
+                        nostr.push('r');
+                    }
+                    prev_code_char = '"';
+                    i += 1 + hashes + 1; // r, hashes, opening quote
+                } else if c == '\'' {
+                    // char literal or lifetime?
+                    if next == '\\' {
+                        // escaped char literal: consume to closing quote
+                        code.push('\'');
+                        nostr.push('\'');
+                        i += 2;
+                        while i < n && chars[i] != '\'' && chars[i] != '\n' {
+                            code.push(chars[i]);
+                            i += 1;
+                        }
+                        if i < n && chars[i] == '\'' {
+                            code.push('\'');
+                            nostr.push('\'');
+                            i += 1;
+                        }
+                    } else if i + 2 < n && chars[i + 2] == '\'' && next != '\'' {
+                        // plain char literal 'x'
+                        code.push('\'');
+                        code.push(next);
+                        code.push('\'');
+                        nostr.push_str("' '");
+                        i += 3;
+                    } else {
+                        // lifetime tick
+                        code.push('\'');
+                        nostr.push('\'');
+                        i += 1;
+                    }
+                    prev_code_char = '\'';
+                } else {
+                    code.push(c);
+                    nostr.push(c);
+                    prev_code_char = c;
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+                if c == '*' && next == '/' {
+                    comment.push_str("*/");
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    comment.push_str("/*");
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // escape; a trailing `\` before the newline is a
+                    // line continuation — leave the newline unconsumed
+                    code.push('\\');
+                    nostr.push(' ');
+                    i += 1;
+                    if i < n && chars[i] != '\n' {
+                        code.push(chars[i]);
+                        nostr.push(' ');
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    nostr.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    code.push(c);
+                    nostr.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i + 1, hashes) {
+                    for _ in 0..(1 + hashes) {
+                        code.push('"');
+                        nostr.push('"');
+                    }
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    code.push(c);
+                    nostr.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() || !nostr.is_empty() {
+        lines.push(Line { code, nostr, comment });
+    }
+    lines
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// After an `r` at `chars[at - 1]`: `Some(h)` if `#`*h then `"` follows
+/// (a raw string opener), else `None`.
+fn raw_str_hashes(chars: &[char], mut at: usize) -> Option<usize> {
+    let mut hashes = 0;
+    while at < chars.len() && chars[at] == '#' {
+        hashes += 1;
+        at += 1;
+    }
+    if at < chars.len() && chars[at] == '"' {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn closes_raw(chars: &[char], at: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| at + k < chars.len() && chars[at + k] == '#')
+}
+
+/// Word-boundary token search: `needle` in `haystack` with no
+/// identifier character on either side.
+fn has_token(haystack: &str, needle: &str) -> bool {
+    let bytes = haystack.as_bytes();
+    let mut from = 0;
+    while let Some(p) = haystack[from..].find(needle) {
+        let abs = from + p;
+        let end = abs + needle.len();
+        let before_ok = abs == 0 || !is_ident(bytes[abs - 1] as char);
+        let after_ok = end >= haystack.len() || !is_ident(bytes[end] as char);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = abs + 1;
+    }
+    false
+}
+
+/// Does this line contain an `unsafe` *site* (block, fn, impl) —
+/// excluding `unsafe fn(...)` fn-pointer types, which declare no
+/// obligation at the use site?
+fn has_unsafe_site(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code[from..].find("unsafe") {
+        let abs = from + p;
+        let end = abs + "unsafe".len();
+        let before_ok = abs == 0 || !is_ident(bytes[abs - 1] as char);
+        let after_ok = end >= code.len() || !is_ident(bytes[end] as char);
+        if before_ok && after_ok {
+            let rest = code[end..].trim_start();
+            let fn_ptr = rest
+                .strip_prefix("fn")
+                .map(|r| r.trim_start().starts_with('('))
+                .unwrap_or(false);
+            if !fn_ptr {
+                return true;
+            }
+        }
+        from = abs + 1;
+    }
+    false
+}
+
+/// An `unsafe` site is covered when a `SAFETY:` comment sits on the
+/// same line, or the contiguous comment block directly above it holds
+/// `SAFETY:` / `# Safety`, or the immediately preceding code line is
+/// itself a covered unsafe line (one comment may document a run of
+/// consecutive unsafe impls).  Attribute lines (`#[...]`) are skipped
+/// while walking up; a blank line breaks the block.
+fn unsafe_is_covered(lines: &[Line], idx: usize) -> bool {
+    if lines[idx].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if l.is_comment_only() {
+            if l.comment.contains("SAFETY:") || l.comment.contains("# Safety") {
+                return true;
+            }
+            continue;
+        }
+        if l.code.trim().starts_with("#[") {
+            continue;
+        }
+        if l.code.trim().is_empty() {
+            return false; // blank line breaks the comment block
+        }
+        // group coverage: a covered unsafe line directly above extends
+        // its comment to this one
+        return has_unsafe_site(&l.nostr) && unsafe_is_covered(lines, j);
+    }
+    false
+}
+
+/// `tidy:allow(<lint>)` on the line itself or anywhere in the
+/// contiguous comment block directly above it.
+fn is_allowed(lines: &[Line], idx: usize, lint: &str) -> bool {
+    let needle = format!("tidy:allow({lint})");
+    if lines[idx].comment.contains(&needle) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if l.is_comment_only() {
+            if l.comment.contains(&needle) {
+                return true;
+            }
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+/// The raw-lock idioms `lock-discipline` bans outside `sync_ext`.
+/// Returns a description of the first match.
+fn lock_violation(code: &str) -> Option<String> {
+    for call in [".lock()", ".try_lock()", ".read()", ".write()"] {
+        if let Some(p) = code.find(call) {
+            let rest = &code[p + call.len()..];
+            if rest.starts_with(".unwrap") || rest.starts_with(".expect") {
+                return Some(format!("`{call}` followed by unwrap/expect"));
+            }
+        }
+    }
+    if (code.contains(".wait(") || code.contains(".wait_timeout("))
+        && (code.contains(".unwrap") || code.contains(".expect("))
+    {
+        return Some("condvar wait combined with unwrap/expect".into());
+    }
+    if code.contains("unwrap_or_else") && code.contains("into_inner") {
+        return Some("inline poison recovery (unwrap_or_else + into_inner)".into());
+    }
+    if code.contains("PoisonError") {
+        return Some("ad-hoc PoisonError handling".into());
+    }
+    None
+}
+
+/// Run every per-file lint over one file.  `rel` is the repo-relative
+/// path with forward slashes; it selects the path allowlists.
+pub fn lint_file(rel: &str, content: &str) -> Vec<Violation> {
+    let lines = scan(content);
+    // only a top-level (unindented) `#[cfg(test)]` opens the test
+    // region: by convention the test module is the last item in every
+    // file, so everything after it is compiled for tests only.  An
+    // indented `#[cfg(test)]` on a single helper fn does not exempt
+    // the rest of its impl block.
+    let test_start = lines
+        .iter()
+        .position(|l| l.code.starts_with("#[cfg(test)"))
+        .unwrap_or(usize::MAX);
+    let in_tests_dir = rel.starts_with("rust/tests/") || rel.starts_with("rust/benches/");
+    let mut out = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        let in_test = in_tests_dir || i >= test_start;
+        let nostr = &l.nostr;
+        let lineno = i + 1;
+
+        if has_unsafe_site(nostr)
+            && !unsafe_is_covered(&lines, i)
+            && !is_allowed(&lines, i, "safety-comment")
+        {
+            out.push(Violation {
+                file: rel.into(),
+                line: lineno,
+                lint: "safety-comment",
+                msg: "unsafe site without a `// SAFETY:` comment stating the invariant \
+                      that makes it sound"
+                    .into(),
+            });
+        }
+
+        if nostr.contains("thread::spawn")
+            && !in_test
+            && rel != "rust/src/runtime/pool.rs"
+            && !is_allowed(&lines, i, "thread-spawn")
+        {
+            out.push(Violation {
+                file: rel.into(),
+                line: lineno,
+                lint: "thread-spawn",
+                msg: "thread::spawn outside runtime/pool.rs — route work through the \
+                      shared Pool, or tidy:allow(thread-spawn) with a justification"
+                    .into(),
+            });
+        }
+
+        if rel != "rust/src/sync_ext.rs" && !is_allowed(&lines, i, "lock-discipline") {
+            if let Some(what) = lock_violation(nostr) {
+                out.push(Violation {
+                    file: rel.into(),
+                    line: lineno,
+                    lint: "lock-discipline",
+                    msg: format!(
+                        "{what} — use sync_ext::lock_or_recover / wait_or_recover; \
+                         sync_ext owns the poison-recovery policy"
+                    ),
+                });
+            }
+        }
+
+        if rel.starts_with("rust/src/")
+            && !rel.starts_with("rust/src/data/")
+            && !in_test
+            && (nostr.contains("try_generate(") || nostr.contains("load_csv("))
+            && !is_allowed(&lines, i, "data-source")
+        {
+            out.push(Violation {
+                file: rel.into(),
+                line: lineno,
+                lint: "data-source",
+                msg: "direct synth::try_generate / load_csv call — dataset access goes \
+                      through a URI-addressed DataSource (rust/src/data/source.rs)"
+                    .into(),
+            });
+        }
+
+        if nostr.contains("Ordering::Relaxed")
+            && !in_test
+            && rel != "rust/src/telemetry.rs"
+            && rel != "rust/src/server/cache.rs"
+            && !is_allowed(&lines, i, "relaxed-ordering")
+        {
+            out.push(Violation {
+                file: rel.into(),
+                line: lineno,
+                lint: "relaxed-ordering",
+                msg: "Ordering::Relaxed outside the stat-counter allowlist — admission \
+                      and registry atomics synchronise state; use SeqCst (or \
+                      tidy:allow(relaxed-ordering) with a proof)"
+                    .into(),
+            });
+        }
+    }
+    out
+}
+
+/// All string literals on a (comment-stripped) code line, in order.
+fn quoted_strings(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = code;
+    while let Some(start) = rest.find('"') {
+        let tail = &rest[start + 1..];
+        match tail.find('"') {
+            Some(end) => {
+                out.push(tail[..end].to_string());
+                rest = &tail[end + 1..];
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+/// The `verb-coverage` cross-file check: dispatch match in
+/// `server/mod.rs` vs `metrics::VERBS` vs the protocol doc block.
+pub fn check_verbs(mod_content: &str, metrics_content: &str) -> Vec<Violation> {
+    const MOD: &str = "rust/src/server/mod.rs";
+    const METRICS: &str = "rust/src/server/metrics.rs";
+    let mod_lines = scan(mod_content);
+    let test_start = mod_lines
+        .iter()
+        .position(|l| l.code.starts_with("#[cfg(test)"))
+        .unwrap_or(mod_lines.len());
+
+    // dispatched verbs: non-test lines whose code starts `Some("` —
+    // the `match parts.first()` arms; first literal only, so a guard
+    // like `Some("stats") if ... == Some("reset")` yields `stats`
+    let mut dispatched: Vec<(usize, String)> = Vec::new();
+    for (i, l) in mod_lines.iter().enumerate().take(test_start) {
+        if let Some(rest) = l.code.trim_start().strip_prefix("Some(\"") {
+            if let Some(end) = rest.find('"') {
+                let verb = rest[..end].to_string();
+                if !verb.is_empty() && !dispatched.iter().any(|(_, v)| *v == verb) {
+                    dispatched.push((i + 1, verb));
+                }
+            }
+        }
+    }
+
+    // the VERBS const in metrics.rs: string literals from the line
+    // holding `const VERBS` through the closing `];`
+    let metrics_lines = scan(metrics_content);
+    let mut verbs_const: Vec<String> = Vec::new();
+    let mut verbs_line = 0usize;
+    let mut in_const = false;
+    for (i, l) in metrics_lines.iter().enumerate() {
+        if !in_const && l.code.contains("const VERBS") {
+            in_const = true;
+            verbs_line = i + 1;
+        }
+        if in_const {
+            verbs_const.extend(quoted_strings(&l.code));
+            // `];` ends the initializer — a bare `]` would trip on the
+            // `[&str; N]` type annotation on the declaration line
+            if l.code.contains("];") {
+                break;
+            }
+        }
+    }
+
+    // the protocol doc: the `//!` block at the top of server/mod.rs
+    let doc_text: String = mod_content
+        .lines()
+        .filter(|l| l.trim_start().starts_with("//!"))
+        .collect::<Vec<_>>()
+        .join("\n");
+
+    let mut out = Vec::new();
+    if verbs_line == 0 {
+        out.push(Violation {
+            file: METRICS.into(),
+            line: 1,
+            lint: "verb-coverage",
+            msg: "no `const VERBS` table found — per-verb counters are gone".into(),
+        });
+        return out;
+    }
+    for (line, verb) in &dispatched {
+        if !verbs_const.iter().any(|v| v == verb) {
+            out.push(Violation {
+                file: MOD.into(),
+                line: *line,
+                lint: "verb-coverage",
+                msg: format!(
+                    "wire verb \"{verb}\" is dispatched here but has no counter in \
+                     metrics::VERBS ({METRICS})"
+                ),
+            });
+        }
+        if !has_token(&doc_text, verb) {
+            out.push(Violation {
+                file: MOD.into(),
+                line: *line,
+                lint: "verb-coverage",
+                msg: format!(
+                    "wire verb \"{verb}\" is dispatched here but never mentioned in \
+                     the //! protocol doc block"
+                ),
+            });
+        }
+    }
+    for verb in &verbs_const {
+        if !dispatched.iter().any(|(_, v)| v == verb) {
+            out.push(Violation {
+                file: METRICS.into(),
+                line: verbs_line,
+                lint: "verb-coverage",
+                msg: format!(
+                    "metrics::VERBS entry \"{verb}\" is never dispatched in {MOD} — \
+                     dead counter or missing match arm"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `dir` (sorted by the caller).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Walk `rust/src`, `rust/tests`, `rust/benches` under `root`, run
+/// every lint, and return `(files_checked, violations)` sorted by
+/// `(file, line)`.
+pub fn check_repo(root: &Path) -> (usize, Vec<Violation>) {
+    let mut files = Vec::new();
+    for dir in ["rust/src", "rust/tests", "rust/benches"] {
+        collect_rs(&root.join(dir), &mut files);
+    }
+    files.sort();
+    let mut violations = Vec::new();
+    let mut mod_rs = String::new();
+    let mut metrics_rs = String::new();
+    for path in &files {
+        let rel: String = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let content = match fs::read_to_string(path) {
+            Ok(c) => c,
+            Err(e) => {
+                violations.push(Violation {
+                    file: rel,
+                    line: 0,
+                    lint: "safety-comment",
+                    msg: format!("unreadable file: {e}"),
+                });
+                continue;
+            }
+        };
+        violations.extend(lint_file(&rel, &content));
+        if rel == "rust/src/server/mod.rs" {
+            mod_rs = content;
+        } else if rel == "rust/src/server/metrics.rs" {
+            metrics_rs = content;
+        }
+    }
+    if !mod_rs.is_empty() && !metrics_rs.is_empty() {
+        violations.extend(check_verbs(&mod_rs, &metrics_rs));
+    }
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    (files.len(), violations)
+}
+
+/// The workspace root: two levels above this crate's manifest.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("tools/tidy sits two levels under the workspace root")
+        .to_path_buf()
+}
+
+fn main() {
+    let (nfiles, violations) = check_repo(&repo_root());
+    if violations.is_empty() {
+        println!("tidy: ok — {nfiles} files clean under {} lints", LINT_NAMES.len());
+        return;
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    eprintln!(
+        "tidy: {} violation(s) in {nfiles} files; see docs/INVARIANTS.md for \
+         the policy and `tidy:allow(<lint>)` escape hatch",
+        violations.len()
+    );
+    std::process::exit(1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lints_of(rel: &str, src: &str) -> Vec<&'static str> {
+        lint_file(rel, src).into_iter().map(|v| v.lint).collect()
+    }
+
+    // ---- scanner ----
+
+    #[test]
+    fn comments_and_strings_are_not_code() {
+        // in a line comment, a doc comment, a block comment, a string
+        for src in [
+            "// unsafe { thread::spawn }\n",
+            "/// .lock().unwrap() in prose\n",
+            "/* unsafe */ let x = 1;\n",
+            "let s = \"unsafe Ordering::Relaxed .lock().unwrap()\";\n",
+            "let s = \"multi \\\n  line unsafe string\";\n",
+        ] {
+            assert_eq!(lints_of("rust/src/foo.rs", src), Vec::<&str>::new(), "{src:?}");
+        }
+    }
+
+    #[test]
+    fn nested_block_comments_and_char_literals() {
+        let src = "/* outer /* unsafe inner */ still comment */ let c = '\"'; let l: &'static str = \"x\";\n";
+        assert_eq!(lints_of("rust/src/foo.rs", src), Vec::<&str>::new());
+        // lifetimes don't open char literals
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\n";
+        assert_eq!(lints_of("rust/src/foo.rs", src), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let s = r#\"unsafe .lock().unwrap()\"#;\nlet t = r\"thread::spawn\";\n";
+        assert_eq!(lints_of("rust/src/foo.rs", src), Vec::<&str>::new());
+    }
+
+    // ---- safety-comment ----
+
+    #[test]
+    fn uncommented_unsafe_is_flagged() {
+        let v = lint_file("rust/src/foo.rs", "let x = unsafe { *p };\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!((v[0].lint, v[0].line), ("safety-comment", 1));
+    }
+
+    #[test]
+    fn safety_comment_above_or_inline_covers() {
+        for src in [
+            "// SAFETY: p is valid for reads\nlet x = unsafe { *p };\n",
+            "let x = unsafe { *p }; // SAFETY: p is valid\n",
+            "/// # Safety\n/// caller pins the frame\nunsafe fn f(p: *const u8) {}\n",
+        ] {
+            assert_eq!(lints_of("rust/src/foo.rs", src), Vec::<&str>::new(), "{src:?}");
+        }
+    }
+
+    #[test]
+    fn group_coverage_spans_consecutive_unsafe_impls() {
+        let src = "// SAFETY: disjoint writes, T: Send moves values soundly\n\
+                   unsafe impl<T: Send> Send for P<T> {}\n\
+                   unsafe impl<T: Send> Sync for P<T> {}\n";
+        assert_eq!(lints_of("rust/src/foo.rs", src), Vec::<&str>::new());
+        // ... but a blank line breaks the group
+        let src = "// SAFETY: only the first\n\
+                   unsafe impl Send for P {}\n\n\
+                   unsafe impl Sync for P {}\n";
+        assert_eq!(lints_of("rust/src/foo.rs", src), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn unsafe_fn_pointer_types_are_not_sites() {
+        let src = "struct J { call: unsafe fn(*const (), usize) }\n";
+        assert_eq!(lints_of("rust/src/foo.rs", src), Vec::<&str>::new());
+        // ...but an unsafe fn *definition* is one
+        let src = "unsafe fn call_erased(ctx: *const ()) {}\n";
+        assert_eq!(lints_of("rust/src/foo.rs", src), vec!["safety-comment"]);
+    }
+
+    // ---- thread-spawn ----
+
+    #[test]
+    fn spawn_is_flagged_outside_the_pool() {
+        let src = "let h = std::thread::spawn(|| {});\n";
+        assert_eq!(lints_of("rust/src/foo.rs", src), vec!["thread-spawn"]);
+        assert_eq!(lints_of("rust/src/runtime/pool.rs", src), Vec::<&str>::new());
+        assert_eq!(lints_of("rust/tests/foo.rs", src), Vec::<&str>::new());
+        assert_eq!(lints_of("rust/benches/foo.rs", src), Vec::<&str>::new());
+        let in_tests = format!("#[cfg(test)]\nmod tests {{\n{src}}}\n");
+        assert_eq!(lints_of("rust/src/foo.rs", &in_tests), Vec::<&str>::new());
+    }
+
+    // ---- lock-discipline ----
+
+    #[test]
+    fn raw_lock_unwraps_are_flagged() {
+        for src in [
+            "let g = m.lock().unwrap();\n",
+            "let g = m.lock().expect(\"poisoned\");\n",
+            "let g = m.try_lock().unwrap();\n",
+            "let g = rw.read().unwrap();\n",
+            "let g = rw.write().unwrap();\n",
+            "let g = cv.wait(g).unwrap();\n",
+            "let g = m.lock().unwrap_or_else(|e| e.into_inner());\n",
+            "fn f(e: PoisonError<T>) {}\n",
+        ] {
+            assert_eq!(lints_of("rust/src/server/foo.rs", src), vec!["lock-discipline"], "{src:?}");
+            // sync_ext owns the policy and is exempt
+            assert_eq!(lints_of("rust/src/sync_ext.rs", src), Vec::<&str>::new(), "{src:?}");
+        }
+    }
+
+    #[test]
+    fn helper_lock_calls_and_plain_expect_are_fine() {
+        for src in [
+            "let mut inner = self.lock();\n",              // registry helper, not Mutex::lock
+            "let work = slot.take().expect(\"armed\");\n", // Option::expect
+            "state.jobs.wait(id, None);\n",                // registry wait, no unwrap
+            "barrier.wait();\n",                           // Barrier::wait returns no Result
+        ] {
+            assert_eq!(lints_of("rust/src/server/foo.rs", src), Vec::<&str>::new(), "{src:?}");
+        }
+    }
+
+    // ---- data-source ----
+
+    #[test]
+    fn direct_generation_is_flagged_outside_data() {
+        let src = "let x = synth::try_generate(name, seed)?;\nlet y = load_csv(path)?;\n";
+        let v = lint_file("rust/src/main.rs", src);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|v| v.lint == "data-source"));
+        assert_eq!(lints_of("rust/src/data/source.rs", src), Vec::<&str>::new());
+        assert_eq!(lints_of("rust/tests/foo.rs", src), Vec::<&str>::new());
+    }
+
+    // ---- relaxed-ordering ----
+
+    #[test]
+    fn relaxed_ordering_is_flagged_outside_counters() {
+        let src = "self.used.fetch_add(1, Ordering::Relaxed);\n";
+        assert_eq!(lints_of("rust/src/server/mod.rs", src), vec!["relaxed-ordering"]);
+        assert_eq!(lints_of("rust/src/telemetry.rs", src), Vec::<&str>::new());
+        assert_eq!(lints_of("rust/src/server/cache.rs", src), Vec::<&str>::new());
+        // SeqCst is always fine
+        let src = "self.used.fetch_add(1, Ordering::SeqCst);\n";
+        assert_eq!(lints_of("rust/src/server/mod.rs", src), Vec::<&str>::new());
+    }
+
+    // ---- tidy:allow ----
+
+    #[test]
+    fn tidy_allow_suppresses_on_line_or_block_above() {
+        for src in [
+            "let h = std::thread::spawn(f); // tidy:allow(thread-spawn) — owned+joined\n",
+            "// tidy:allow(thread-spawn) — accept loop,\n// owned and joined on shutdown\nlet h = std::thread::spawn(f);\n",
+        ] {
+            assert_eq!(lints_of("rust/src/foo.rs", src), Vec::<&str>::new(), "{src:?}");
+        }
+        // the wrong lint name does not suppress
+        let src = "// tidy:allow(safety-comment)\nlet h = std::thread::spawn(f);\n";
+        assert_eq!(lints_of("rust/src/foo.rs", src), vec!["thread-spawn"]);
+        // a blank line detaches the comment block
+        let src = "// tidy:allow(thread-spawn)\n\nlet h = std::thread::spawn(f);\n";
+        assert_eq!(lints_of("rust/src/foo.rs", src), vec!["thread-spawn"]);
+    }
+
+    // ---- verb-coverage ----
+
+    const METRICS_OK: &str = "pub const VERBS: [&str; 2] = [\"ping\", \"stats\"];\n";
+
+    #[test]
+    fn verb_missing_counter_or_doc_is_flagged() {
+        let m = "//! * `ping` — liveness probe\n\
+                 fn dispatch() {\n    match v {\n        Some(\"ping\") => {}\n        Some(\"stats\") => {}\n    }\n}\n";
+        // stats has a counter but no doc mention
+        let v = check_verbs(m, METRICS_OK);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("\"stats\"") && v[0].msg.contains("protocol doc"), "{v:?}");
+
+        // a verb with no VERBS entry at all
+        let m2 = "//! `ping`, `stats` and `flush` verbs\n\
+                  fn dispatch() {\n    match v {\n        Some(\"ping\") => {}\n        Some(\"stats\") => {}\n        Some(\"flush\") => {}\n    }\n}\n";
+        let v = check_verbs(m2, METRICS_OK);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("\"flush\"") && v[0].msg.contains("VERBS"), "{v:?}");
+    }
+
+    #[test]
+    fn dead_verbs_entries_are_flagged() {
+        let m = "//! `ping` only\nfn dispatch() {\n    match v {\n        Some(\"ping\") => {}\n    }\n}\n";
+        let v = check_verbs(m, METRICS_OK);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("never dispatched"), "{v:?}");
+        assert_eq!(v[0].file, "rust/src/server/metrics.rs");
+    }
+
+    #[test]
+    fn guarded_match_arms_yield_the_arm_verb_only() {
+        let m = "//! `stats` with a reset form\n\
+                 fn dispatch() {\n    match v {\n        Some(\"stats\") if kv == Some(\"reset\") => {}\n        Some(\"stats\") => {}\n    }\n}\n";
+        let metrics = "pub const VERBS: [&str; 1] = [\"stats\"];\n";
+        assert_eq!(check_verbs(m, metrics), Vec::<Violation>::new());
+    }
+
+    #[test]
+    fn dispatch_arms_in_test_modules_are_ignored() {
+        let m = "//! `ping`\nfn dispatch() {\n    match v {\n        Some(\"ping\") => {}\n    }\n}\n\
+                 #[cfg(test)]\nmod tests {\n    fn t(v: Option<&str>) {\n        match v {\n            Some(\"bogus\") => {}\n            _ => {}\n        }\n    }\n}\n";
+        let metrics = "pub const VERBS: [&str; 1] = [\"ping\"];\n";
+        assert_eq!(check_verbs(m, metrics), Vec::<Violation>::new());
+    }
+
+    // ---- the repo itself ----
+
+    #[test]
+    fn repo_is_tidy() {
+        let (nfiles, violations) = check_repo(&repo_root());
+        assert!(nfiles > 10, "the repo walk found only {nfiles} files — wrong root?");
+        assert!(
+            violations.is_empty(),
+            "tidy violations:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}
