@@ -1,4 +1,4 @@
-//! Clustering service demo (protocol v5): start the TCP job server,
+//! Clustering service demo (protocol v6): start the TCP job server,
 //! fire a burst of *mixed-method* clustering requests at it (any paper
 //! row label is addressable with `method=`), then repeat the burst to
 //! show the sharded dataset cache at work — the warm round reports
@@ -6,9 +6,13 @@
 //! job-handle API: `submit` returns `job=j<id>` immediately, `poll`
 //! probes without blocking, and `wait` collects each result — the
 //! submitting loop finishes before any solve does, which is the whole
-//! point.  A final round clusters a CSV written to disk through the
+//! point.  Next, model serving: `promote` captures a finished job's
+//! fitted medoids into the model registry, and `assign` labels fresh
+//! points against them — no dataset resident, just the `k x p` medoid
+//! rows.  A final round clusters a CSV written to disk through the
 //! same cache (`dataset=file:... metric=l2`), and the closing `jobs` /
-//! `stats` lines show the registry gauges and per-method aggregates.
+//! `stats` lines show the registry gauges, per-method aggregates and
+//! per-model serving counters.
 //!
 //! Run: `cargo run --release --example server`
 
@@ -113,6 +117,21 @@ fn main() -> anyhow::Result<()> {
         println!("wait   {id:<14} -> {brief} ...");
     }
     println!("{}\n", request(handle.addr, "jobs")?);
+
+    // --- model serving: promote a finished job, assign new points ----
+    // The solve already captured the fitted medoids; `promote` moves
+    // them into the model registry and `assign` serves nearest-medoid
+    // lookups from them alone — the training dataset is not needed.
+    if let Some(first) = ids.first() {
+        let promoted = request(handle.addr, &format!("promote job={first} name=demo"))?;
+        println!("promote {first:<13} -> {promoted}");
+        if promoted.starts_with("ok ") {
+            let assign =
+                "assign model=demo point=0,0,0,0,0,0,0,0 point=9,9,9,9,9,9,9,9 top2=1";
+            println!("assign  demo          -> {}", request(handle.addr, assign)?);
+            println!("{}\n", request(handle.addr, "models")?);
+        }
+    }
 
     // --- loaded data over the same wire: dataset=file:... ------------
     let csv_path = std::env::temp_dir().join("obpam_server_demo.csv");

@@ -11,6 +11,8 @@
 //!   * per-region dispatch overhead on a tiny workload: the persistent
 //!     pool (wake parked workers) vs the old scoped-spawn-per-region
 //!     shape (spawn + join `threads` OS threads every region);
+//!   * v6 model-serving `assign` QPS over TCP, one connection and many
+//!     concurrent connections (the fitted-model read path);
 //!   * (feature `xla`) XLA pairwise/gains: Pallas kernel vs plain-XLA.
 
 use obpam::backend::{ComputeBackend, NativeBackend};
@@ -257,6 +259,64 @@ fn main() {
             t_build * 1e6,
             t_build / t_cached.max(1e-12)
         );
+    }
+
+    // ---- v6 model serving: assign QPS over TCP ---------------------------
+    // The fitted-model read path: one solve is promoted once, then the
+    // server answers nearest-medoid lookups from the k x p medoid rows
+    // alone.  Each request pays a fresh TCP connect + one-line dispatch,
+    // so this measures the serving wire path, not the argmin (which is
+    // nanoseconds at k=5).  One client alone is latency-bound; the
+    // concurrent shape shows how far connection-per-request scales.
+    {
+        use obpam::server::{request, serve, ServerConfig};
+        let h = serve(ServerConfig { workers: 1, queue_cap: 64, ..Default::default() }).unwrap();
+        let sub = request(h.addr, "submit dataset=blobs_2000_8_5 k=5 seed=1").unwrap();
+        let id = sub
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("job="))
+            .expect("submit must return a handle")
+            .to_string();
+        let done = request(h.addr, &format!("wait job={id} timeout_ms=600000")).unwrap();
+        assert!(done.starts_with("ok "), "{done}");
+        let p = request(h.addr, &format!("promote job={id} name=bench")).unwrap();
+        assert!(p.starts_with("ok "), "{p}");
+        let line = "assign model=bench point=0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8";
+        let reqs = 200usize;
+        let (t_one, mad_one) = time_median(1, 3, || {
+            for _ in 0..reqs {
+                let r = request(h.addr, line).unwrap();
+                debug_assert!(r.starts_with("ok "), "{r}");
+                std::hint::black_box(r);
+            }
+        });
+        report(
+            &format!("assign qps: 1 connection, {reqs} reqs"),
+            t_one,
+            mad_one,
+            Some((reqs as f64, "req/s")),
+        );
+        let conns = cores.clamp(2, 8);
+        let (t_many, mad_many) = time_median(1, 3, || {
+            std::thread::scope(|s| {
+                for _ in 0..conns {
+                    s.spawn(|| {
+                        for _ in 0..reqs {
+                            let r = request(h.addr, line).unwrap();
+                            debug_assert!(r.starts_with("ok "), "{r}");
+                            std::hint::black_box(r);
+                        }
+                    });
+                }
+            });
+        });
+        report(
+            &format!("assign qps: {conns} connections, {reqs} reqs each"),
+            t_many,
+            mad_many,
+            Some(((conns * reqs) as f64, "req/s")),
+        );
+        h.shutdown();
     }
 
     // ---- XLA artifact paths ---------------------------------------------

@@ -55,6 +55,41 @@ pub trait ComputeBackend {
     fn argmin_rows(&self, d: &Matrix) -> Result<(Vec<usize>, Vec<f32>)>;
 }
 
+/// Nearest-medoid assignment: for every row of `points`, the index of
+/// the closest row of `medoids` and the distance to it — one `pairwise`
+/// tile plus one `argmin_rows` reduction, `O(k p)` per point with no
+/// dataset resident.  This is the serving read path behind the server's
+/// `assign` wire verb (a model holds only its `k x p` medoid rows).
+pub fn assign(
+    backend: &dyn ComputeBackend,
+    points: &Matrix,
+    medoids: &Matrix,
+) -> Result<(Vec<usize>, Vec<f32>)> {
+    anyhow::ensure!(
+        points.cols == medoids.cols,
+        "assign dimension mismatch: points have {} features, medoids {}",
+        points.cols,
+        medoids.cols
+    );
+    let d = backend.pairwise(points, medoids)?;
+    backend.argmin_rows(&d)
+}
+
+/// [`assign`] with the second-nearest medoid as well (`top2=1` on the
+/// wire): `(near, dnear, second, dsecond)` per point.  Needs `k >= 2`
+/// medoid rows — the same bound the `top2` tile op requires.
+pub fn assign_top2(backend: &dyn ComputeBackend, points: &Matrix, medoids: &Matrix) -> Result<Top2> {
+    anyhow::ensure!(
+        points.cols == medoids.cols,
+        "assign dimension mismatch: points have {} features, medoids {}",
+        points.cols,
+        medoids.cols
+    );
+    anyhow::ensure!(medoids.rows >= 2, "top2 assignment needs >= 2 medoids (got {})", medoids.rows);
+    let d = backend.pairwise(points, medoids)?;
+    backend.top2(&d)
+}
+
 /// Candidate-independent removal-loss term (gain form):
 /// `rloss[l] = sum_j w_j (dnear_j - dsec_j) [near_j == l]`.
 ///
@@ -75,5 +110,33 @@ mod tests {
     fn removal_loss_known() {
         let rl = removal_loss(&[1.0, 2.0], &[3.0, 5.0], &[0, 1], 2, &[1.0, 2.0]);
         assert_eq!(rl, vec![-2.0, -6.0]);
+    }
+
+    #[test]
+    fn assign_picks_the_nearest_medoid() {
+        let backend = NativeBackend::new(Metric::L1);
+        let medoids = Matrix::from_vec(2, 2, vec![0.0, 0.0, 10.0, 10.0]);
+        let points = Matrix::from_vec(3, 2, vec![1.0, 0.0, 9.0, 9.0, 4.0, 4.0]);
+        let (labels, dists) = assign(&backend, &points, &medoids).unwrap();
+        assert_eq!(labels, vec![0, 1, 0]);
+        assert_eq!(dists, vec![1.0, 2.0, 8.0]);
+        // the top2 variant agrees on the nearest and adds the runner-up
+        let (near, dnear, sec, dsec) = assign_top2(&backend, &points, &medoids).unwrap();
+        assert_eq!(near, labels);
+        assert_eq!(dnear, dists);
+        assert_eq!(sec, vec![1, 0, 1]);
+        assert_eq!(dsec, vec![19.0, 18.0, 12.0]);
+    }
+
+    #[test]
+    fn assign_rejects_dimension_mismatch() {
+        let backend = NativeBackend::new(Metric::L1);
+        let medoids = Matrix::from_vec(2, 3, vec![0.0; 6]);
+        let points = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let err = assign(&backend, &points, &medoids).unwrap_err().to_string();
+        assert!(err.contains("dimension mismatch"), "{err}");
+        let one_medoid = Matrix::from_vec(1, 2, vec![0.0, 0.0]);
+        let err = assign_top2(&backend, &points, &one_medoid).unwrap_err().to_string();
+        assert!(err.contains(">= 2 medoids"), "{err}");
     }
 }

@@ -15,8 +15,10 @@ use crate::coordinator::state::SwapState;
 use crate::coordinator::KMedoidsResult;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use crate::runtime::Pool;
+use crate::solver::{CancelToken, CANCELLED};
 use crate::telemetry::{RunStats, Timer};
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Run FasterPAM.  `max_passes` bounds the eager scans (paper: converges
 /// in O(k) swaps; a pass without improvement terminates).
@@ -26,6 +28,24 @@ pub fn faster_pam(
     max_passes: usize,
     seed: u64,
     backend: &dyn ComputeBackend,
+) -> Result<KMedoidsResult> {
+    faster_pam_cancellable(x, k, max_passes, seed, backend, &CancelToken::none())
+}
+
+/// [`faster_pam`] with a cooperative cancellation token, checked once
+/// per eager pass (the same cadence as OneBatchPAM's swap loop): a
+/// cancelled run fails with the [`CANCELLED`] marker error and discards
+/// its partial work.  The pass-at-a-time loop over a persistent
+/// candidate order is bit-identical to the historical multi-pass
+/// `eager_loop` call — asserted by
+/// `engine::tests::external_pass_loop_matches_internal_loop_exactly`.
+pub fn faster_pam_cancellable(
+    x: &Matrix,
+    k: usize,
+    max_passes: usize,
+    seed: u64,
+    backend: &dyn ComputeBackend,
+    cancel: &CancelToken,
 ) -> Result<KMedoidsResult> {
     let n = x.rows;
     assert!(k >= 2 && k < n);
@@ -39,7 +59,21 @@ pub fn faster_pam(
     let d = backend.pairwise(x, x)?;
     let med = rng.sample_distinct(n, k);
     let mut state = SwapState::init(&d, med, vec![1.0; n], n);
-    engine::eager_loop(&d, &mut state, max_passes, &mut rng, &counters);
+    // One eager pass per loop iteration so the cancellation token is
+    // honoured between passes; the order vector persists across passes
+    // (pass p scans the p-times-shuffled permutation), exactly like the
+    // in-loop behaviour of `eager_loop`.
+    let mut order: Vec<usize> = (0..n).collect();
+    for _ in 0..max_passes {
+        if cancel.is_cancelled() {
+            bail!(CANCELLED);
+        }
+        let swaps =
+            engine::eager_pass(&d, &mut state, 0.0, &mut rng, &counters, &Pool::serial(), &mut order);
+        if swaps == 0 {
+            break; // a full pass without a swap: local optimum
+        }
+    }
 
     Ok(KMedoidsResult {
         medoids: state.med.clone(),
@@ -75,7 +109,9 @@ impl crate::solver::Solver for FasterPamSolver {
         spec: &crate::solver::SolveSpec,
         backend: &dyn ComputeBackend,
     ) -> Result<KMedoidsResult> {
-        faster_pam(x, spec.k, self.max_passes, spec.seed, backend)
+        // the spec's token reaches the swap loop, so a served FasterPAM
+        // job cancels between eager passes instead of running to the end
+        faster_pam_cancellable(x, spec.k, self.max_passes, spec.seed, backend, &spec.cancel)
     }
 }
 
@@ -113,6 +149,22 @@ mod tests {
         let backend = NativeBackend::new(Metric::L1);
         let r = faster_pam(&x, 4, 30, 1, &backend).unwrap();
         assert_eq!(r.stats.dissim_count, 80 * 80);
+    }
+
+    #[test]
+    fn cancelled_token_aborts_between_passes() {
+        let mut rng = Rng::new(4);
+        let x = synth::gen_gaussian_mixture(&mut rng, 120, 3, 3, 0.2, 1.0);
+        let backend = NativeBackend::new(Metric::L1);
+        let token = CancelToken::new();
+        token.cancel();
+        let err = faster_pam_cancellable(&x, 3, 50, 1, &backend, &token).unwrap_err().to_string();
+        assert_eq!(err, CANCELLED);
+        // the inert token reproduces the plain entry point bit-for-bit
+        let a = faster_pam(&x, 3, 50, 1, &backend).unwrap();
+        let b = faster_pam_cancellable(&x, 3, 50, 1, &backend, &CancelToken::none()).unwrap();
+        assert_eq!(a.medoids, b.medoids);
+        assert_eq!(a.est_objective.to_bits(), b.est_objective.to_bits());
     }
 
     #[test]

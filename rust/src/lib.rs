@@ -10,10 +10,13 @@
 //!   FasterPAM swap engine over one `n x m` distance matrix, every
 //!   baseline from the paper's evaluation, the experiment harness that
 //!   regenerates each table/figure, and a clustering job server
-//!   (protocol v5: any method by name, any dataset by URI, any metric,
+//!   (protocol v6: any method by name, any dataset by URI, any metric,
 //!   with an **asynchronous job-handle API**, **cost-weighted
-//!   admission** with queue-wait deadlines, and a sharded dataset
-//!   cache that loads cold misses outside its locks).
+//!   admission** with queue-wait deadlines, a sharded dataset
+//!   cache that loads cold misses outside its locks, and a
+//!   **fitted-model serving path** — `promote` a finished job into a
+//!   bounded model registry, then `assign` points against its medoids
+//!   with no dataset in memory).
 //!
 //! Both dominant costs — the `O(nmp)` pairwise pass and the
 //! `O(n(m+k))` eager swap scan — are row-parallel over the
@@ -44,7 +47,18 @@
 //! internally with byte-identical replies; cancellation is cooperative
 //! via [`solver::CancelToken`] (checked between OneBatch swap passes),
 //! and jobs reuse server-owned persistent execution pools keyed by
-//! thread width ([`server::PoolCache`]).  See [`server`] for the full
+//! thread width ([`server::PoolCache`]).
+//!
+//! Protocol v6 adds the **read path**: every successful solve also
+//! captures a dataset-free [`solver::FittedModel`] (the `k x p` medoid
+//! feature rows plus the fit metric), `promote job=j3 name=prod` moves
+//! it into the server's LRU-bounded [`server::ModelRegistry`], and
+//! `assign model=prod point=v1,v2,...` labels new points — batched,
+//! optionally with the runner-up medoid (`top2=1`), and without the
+//! training dataset resident in any cache.  `models` / `evict` manage
+//! the registry; `stats` reports per-model serving aggregates.  The
+//! same model is usable offline via [`solver::fit_model`] /
+//! [`solver::FittedModel::assign`].  See [`server`] for the full
 //! protocol.
 //!
 //! Quick start (see `examples/quickstart.rs`): every algorithm —

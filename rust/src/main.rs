@@ -10,12 +10,16 @@
 //!                [--threads T] [--config file.toml]
 //! obpam bench    --table 3|5|7 | --fig 1|pareto  (thin wrapper; prefer `cargo bench`)
 //! obpam serve    [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 16] [--cache-cap 32]
-//!                [--budget UNITS] [--strict-budget] [--retain-cap N]
+//!                [--budget UNITS] [--strict-budget] [--retain-cap N] [--model-cap N]
 //! obpam submit   [--addr HOST:PORT] key=value...   (async: returns job=j<id>)
 //! obpam poll     [--addr HOST:PORT] --job j3
 //! obpam wait     [--addr HOST:PORT] --job j3 [--timeout-ms N]
 //! obpam cancel   [--addr HOST:PORT] --job j3
 //! obpam jobs     [--addr HOST:PORT]
+//! obpam promote  [--addr HOST:PORT] --job j3 [--name mymodel]
+//! obpam assign   [--addr HOST:PORT] --model mymodel [--top2] point=v1,v2,...
+//! obpam models   [--addr HOST:PORT]
+//! obpam evict    [--addr HOST:PORT] --model mymodel
 //! obpam gen      --list | --dataset SOURCE [--scale S] [--out file.csv]
 //! obpam artifacts-check   (requires the `xla` build feature)
 //! ```
@@ -47,13 +51,20 @@
 //! `--strict-budget` disables the lone-job idle-admit exception.
 //!
 //! The `submit` / `poll` / `wait` / `cancel` / `jobs` subcommands are
-//! thin wire clients for protocol v5's asynchronous job handles:
+//! thin wire clients for the server's asynchronous job handles:
 //! `submit` takes the same `key=value` tokens as a `cluster` request
 //! line (plus `deadline_ms=`), prints the `ok job=j<id> cost=...`
 //! reply, and the handle verbs drive that job from any later
 //! connection.  Values containing spaces are quoted automatically
 //! (`dataset=file:/data/my points.csv` works as one shell argument).
-//! See the `obpam::server` docs for the full protocol.
+//!
+//! The `promote` / `assign` / `models` / `evict` subcommands are the
+//! protocol v6 model-serving clients: `promote` captures a done job's
+//! fitted model into the server's registry (bounded by `--model-cap`),
+//! `assign` labels points against it with no dataset resident (each
+//! trailing `point=v1,v2,...` token is one row; `--top2` also reports
+//! the runner-up medoid), and `models` / `evict` inspect and drop the
+//! registry.  See the `obpam::server` docs for the full protocol.
 
 use anyhow::{bail, Context, Result};
 use obpam::backend::NativeBackend;
@@ -95,7 +106,7 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: obpam <cluster|serve|submit|poll|wait|cancel|jobs|gen|artifacts-check> [--flags]\n\
+        "usage: obpam <cluster|serve|submit|poll|wait|cancel|jobs|promote|assign|models|evict|gen|artifacts-check> [--flags]\n\
          see `cargo doc` or README.md for details"
     );
     std::process::exit(2)
@@ -110,6 +121,7 @@ fn main() -> Result<()> {
         "cluster" => cmd_cluster(&flags, &rest),
         "serve" => cmd_serve(&flags),
         "submit" | "poll" | "wait" | "cancel" | "jobs" => cmd_client(cmd, &flags, &rest),
+        "promote" | "assign" | "models" | "evict" => cmd_client(cmd, &flags, &rest),
         "gen" => cmd_gen(&flags),
         "artifacts-check" => cmd_artifacts_check(),
         _ => usage(),
@@ -137,6 +149,16 @@ fn cmd_client(verb: &str, flags: &HashMap<String, String>, rest: &[String]) -> R
     }
     if let Some(d) = flags.get("deadline-ms") {
         line.push_str(&format!(" deadline_ms={d}"));
+    }
+    // v6 model-serving flags (promote / assign / models / evict)
+    if let Some(m) = flags.get("model") {
+        line.push_str(&format!(" model={m}"));
+    }
+    if let Some(n) = flags.get("name") {
+        line.push_str(&format!(" name={n}"));
+    }
+    if matches!(flags.get("top2"), Some(v) if v != "false") {
+        line.push_str(" top2=1");
     }
     for tok in rest {
         // the wire tokenizer has no escape character, so a value
@@ -321,6 +343,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         budget: flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(0),
         strict_budget: matches!(flags.get("strict-budget"), Some(v) if v != "false"),
         retain_cap: flags.get("retain-cap").and_then(|s| s.parse().ok()).unwrap_or(0),
+        model_cap: flags.get("model-cap").and_then(|s| s.parse().ok()).unwrap_or(0),
     };
     let handle = obpam::server::serve(cfg)?;
     println!("obpam server listening on {}", handle.addr);

@@ -208,6 +208,17 @@ impl DatasetCache {
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
     }
+
+    /// Drop every resident entry (counters untouched).  In-flight load
+    /// markers are left alone — they are owned by the loaders running
+    /// outside the lock, and clearing them would wedge same-key waiters.
+    /// Used by tests to prove fitted-model serving needs no dataset
+    /// resident, and available to embedders reclaiming memory.
+    pub fn clear(&self) {
+        for slot in &self.shards {
+            sync_ext::lock_or_recover(&slot.state).entries.clear();
+        }
+    }
 }
 
 /// Clears a key's in-flight marker and wakes its waiters if the loader
@@ -470,6 +481,19 @@ mod tests {
         assert_eq!(s.entries, 1, "reset re-bases counters, it does not evict");
         // the resident entry still hits
         assert!(get(&cache, "blobs_200_4_3", 1.0, 7).unwrap().1);
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_counters() {
+        let cache = DatasetCache::new(8);
+        get(&cache, "blobs_200_4_3", 1.0, 7).unwrap();
+        get(&cache, "blobs_200_4_3", 1.0, 7).unwrap();
+        cache.clear();
+        let s = cache.stats();
+        assert_eq!(s.entries, 0, "clear evicts everything");
+        assert_eq!((s.hits, s.misses), (1, 1), "clear re-bases nothing");
+        // the next request is a cold miss, and the cache still works
+        assert!(!get(&cache, "blobs_200_4_3", 1.0, 7).unwrap().1);
     }
 
     #[test]

@@ -49,6 +49,7 @@
 //! for new jobs, `wait` callers park on `state_cv` for state changes.
 
 use super::metrics::JobCounters;
+use super::models::ModelSeed;
 use super::JobWork;
 use crate::solver::CancelToken;
 use crate::sync_ext;
@@ -136,6 +137,20 @@ pub enum WaitOutcome {
     TimedOut(JobView),
 }
 
+/// What [`JobRegistry::fitted`] observed (the `promote` wire verb).
+pub enum FittedLookup {
+    /// No job with this id (never submitted, or evicted).
+    Unknown,
+    /// The job has not reached a terminal state yet — promote after
+    /// `wait` returns done.
+    NotDone(JobState),
+    /// The job is terminal but holds no model (failed / cancelled /
+    /// expired, or a pre-v6 job finished before fitting existed).
+    Unavailable(JobState),
+    /// The job's dataset-free fitted model, ready to register.
+    Ready(ModelSeed),
+}
+
 /// One queued-or-running job a worker picked up.
 pub(crate) struct PickedJob {
     pub(crate) id: u64,
@@ -157,6 +172,10 @@ struct Job {
     deadline: Option<Duration>,
     cost: u64,
     queue_ms: f64,
+    /// Dataset-free fitted model, stashed by the worker on a successful
+    /// solve so a later `promote` needs no dataset and no recompute.
+    /// Dropped with the job at LRU eviction.
+    fitted: Option<ModelSeed>,
 }
 
 struct Inner {
@@ -262,6 +281,7 @@ impl JobRegistry {
                 deadline: deadline_ms.map(Duration::from_millis),
                 cost,
                 queue_ms: 0.0,
+                fitted: None,
             },
         );
         inner.queue.push_back(id);
@@ -475,6 +495,41 @@ impl JobRegistry {
         if let Some(job) = self.lock().jobs.get_mut(&id) {
             job.cost = units;
         }
+    }
+
+    /// Stash the solve's dataset-free fitted model on the job (worker,
+    /// just before publishing the `Done` reply), so `promote` can serve
+    /// it without the dataset ever being resident again.
+    pub(crate) fn set_fitted(&self, id: u64, seed: ModelSeed) {
+        if let Some(job) = self.lock().jobs.get_mut(&id) {
+            job.fitted = Some(seed);
+        }
+    }
+
+    /// Look up the fitted model `promote job=<id>` asks for.  Applies
+    /// lazy deadline expiry and counts as an LRU touch on terminal jobs
+    /// (promoting a job is as much an access as polling it).
+    pub fn fitted(&self, id: u64) -> FittedLookup {
+        let mut inner = self.lock();
+        let expired = self.expire_if_due(&mut inner, id);
+        let looked = {
+            match inner.jobs.get(&id) {
+                None => FittedLookup::Unknown,
+                Some(job) if !job.state.is_terminal() => FittedLookup::NotDone(job.state),
+                Some(job) => match &job.fitted {
+                    Some(seed) => FittedLookup::Ready(seed.clone()),
+                    None => FittedLookup::Unavailable(job.state),
+                },
+            }
+        };
+        if !matches!(looked, FittedLookup::Unknown | FittedLookup::NotDone(_)) {
+            touch(&mut inner, id);
+        }
+        if expired {
+            drop(inner);
+            self.state_cv.notify_all();
+        }
+        looked
     }
 
     /// Shed every queued job whose deadline already passed.  Expiry is

@@ -9,6 +9,12 @@
 //! aggregates show the centre, the buckets show the tail).  `stats
 //! reset` clears everything via [`MethodMetrics::reset`].
 //!
+//! [`ModelMetrics`] is the protocol v6 serving-side mirror of the
+//! method aggregates: every `assign` records its latency under the
+//! model's registry name, exported as `model.<name>.assign_count=` /
+//! `model.<name>.assign_ms_mean=` stats fields and cleared by the same
+//! `stats reset`.
+//!
 //! [`JobCounters`] tracks the v5 asynchronous job registry
 //! ([`crate::server::jobs`]): jobs submitted and how each one ended
 //! (done / failed / cancelled / deadline-expired).  The `stats` line
@@ -179,15 +185,69 @@ impl MethodMetrics {
     }
 }
 
-/// Every verb of the protocol v5 wire surface, in `stats` export order.
+/// Aggregate of one served model's `assign` traffic (protocol v6).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ModelAgg {
+    /// `assign` requests served from this model.
+    pub count: u64,
+    /// Total request latency (milliseconds) — mean = `ms_sum / count`.
+    pub ms_sum: f64,
+}
+
+impl ModelAgg {
+    /// Mean `assign` latency in milliseconds.
+    pub fn ms_mean(&self) -> f64 {
+        self.ms_sum / self.count.max(1) as f64
+    }
+}
+
+/// Thread-safe per-model `assign` aggregates, keyed by registry name —
+/// the serving-side analogue of [`MethodMetrics`] (same mutex-over-
+/// BTreeMap shape, same `stats reset` lifecycle).  Kept outside the
+/// [`crate::server::models::ModelRegistry`] on purpose: evicting or
+/// replacing a model does not erase the traffic it already served.
+#[derive(Default)]
+pub struct ModelMetrics {
+    inner: Mutex<BTreeMap<String, ModelAgg>>,
+}
+
+impl ModelMetrics {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served `assign` for model `name` taking `ms`.
+    pub fn record(&self, name: &str, ms: f64) {
+        let mut map = sync_ext::lock_or_recover(&self.inner);
+        let agg = map.entry(name.to_string()).or_default();
+        agg.count += 1;
+        agg.ms_sum += ms;
+    }
+
+    /// Snapshot of every model's aggregate, sorted by name.
+    pub fn snapshot(&self) -> Vec<(String, ModelAgg)> {
+        let map = sync_ext::lock_or_recover(&self.inner);
+        map.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Drop every aggregate (the `stats reset` wire command).
+    pub fn reset(&self) {
+        sync_ext::lock_or_recover(&self.inner).clear();
+    }
+}
+
+/// Every verb of the protocol v6 wire surface, in `stats` export order.
 ///
 /// This table is the single source of truth the in-tree tidy lint
 /// `verb-coverage` checks [`crate::server`]'s dispatch match against:
 /// a verb handled on the wire but missing here (or from the protocol
 /// doc block) fails `cargo run -p tidy`, so the counter and the docs
 /// can never silently lag the dispatcher.
-pub const VERBS: [&str; 9] =
-    ["ping", "cluster", "submit", "poll", "wait", "cancel", "jobs", "stats", "sleep"];
+pub const VERBS: [&str; 13] = [
+    "ping", "cluster", "submit", "poll", "wait", "cancel", "jobs", "stats", "sleep", "promote",
+    "assign", "models", "evict",
+];
 
 /// Per-verb request counters (`verb.<name>=` stats fields): one atomic
 /// per [`VERBS`] entry, bumped once per dispatched request line.
@@ -435,6 +495,22 @@ mod tests {
         assert_eq!(a.solve_hist.counts()[9], 1, "600 ms -> le 1000");
         assert_eq!(a.queue_hist.counts()[0], 1, "0.2 ms -> le 1");
         assert_eq!(a.queue_hist.counts()[5], 1, "40 ms -> le 50");
+    }
+
+    #[test]
+    fn model_metrics_aggregate_and_reset() {
+        let m = ModelMetrics::new();
+        m.record("prod", 2.0);
+        m.record("prod", 4.0);
+        m.record("m1", 1.0);
+        let snap = m.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["m1", "prod"], "snapshot is name-sorted");
+        let prod = &snap[1].1;
+        assert_eq!(prod.count, 2);
+        assert!((prod.ms_mean() - 3.0).abs() < 1e-12);
+        m.reset();
+        assert!(m.snapshot().is_empty());
     }
 
     #[test]

@@ -5,32 +5,74 @@
 //! pools, and a sharded dataset cache that loads cold misses outside
 //! its locks.
 //!
-//! # Line protocol v5 (one request line per connection, one reply line)
+//! # Line protocol v6 (one request line per connection, one reply line)
 //!
 //! ```text
 //! -> cluster dataset=blobs_2000_8_5 k=5 method=FasterPAM seed=3 threads=4
-//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 source=synth:blobs_2000_8_5 cost=4000000 queue_ms=0.2 served_ms=50.1
+//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 source=synth:blobs_2000_8_5 cost=4000000 inertia=0.1234 queue_ms=0.2 served_ms=50.1
 //! -> submit dataset=blobs_2000_8_5 k=5 seed=3 deadline_ms=5000
 //! <- ok job=j7 cost=61200 queue_ms=0.0 served_ms=0.1
 //! -> poll job=j7
 //! <- ok job=j7 state=running cost=61200 waited_ms=1.4 queue_ms=0.0 served_ms=0.0
 //! -> wait job=j7 timeout_ms=30000
-//! <- ok method=OneBatch-nniw cache=hit medoids=... objective=... seconds=... dissim=... swaps=... source=... cost=61200 queue_ms=0.0 served_ms=48.9
+//! <- ok method=OneBatch-nniw cache=hit medoids=... objective=... seconds=... dissim=... swaps=... source=... cost=61200 inertia=... queue_ms=0.0 served_ms=48.9
 //! -> cancel job=j8
 //! <- ok job=j8 state=cancelled queue_ms=0.0 served_ms=0.0
 //! -> jobs
 //! <- ok queued=0 running=1 retained=4 submitted=9 done=6 failed=1 cancelled=1 expired=1 shed=1 queue_ms=0.0 served_ms=0.0
+//! -> promote job=j7 name=blobs
+//! <- ok model=blobs job=j7 k=5 dim=8 metric=l1 inertia=0.1234 queue_ms=0.0 served_ms=0.1
+//! -> assign model=blobs point=0.1,0.2,... point=3.4,3.5,...
+//! <- ok model=blobs n=2 labels=0,4 dists=0.123456,0.987654 queue_ms=0.0 served_ms=0.2
+//! -> models
+//! <- ok count=1 cap=32 promoted=1 evicted=0 model.blobs.job=j7 model.blobs.method=FasterPAM ... queue_ms=0.0 served_ms=0.0
+//! -> evict model=blobs
+//! <- ok evicted model=blobs queue_ms=0.0 served_ms=0.0
 //! -> stats
-//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 budget_total=... budget_used=... hist_le_ms=1,2,... jobs.submitted=9 ... shed=1 pools=2 method.FasterPAM.count=2 ... queue_ms=0.0 served_ms=0.0
+//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 budget_total=... budget_used=... hist_le_ms=1,2,... jobs.submitted=9 ... shed=1 pools=2 models=1 method.FasterPAM.count=2 ... model.blobs.assign_count=2 ... queue_ms=0.0 served_ms=0.0
 //! -> ping
 //! <- pong queue_ms=0.0 served_ms=0.0
 //! ```
 //!
-//! v5 over v4: every v4 request line — including the legacy v1–v3
-//! forms — still produces a byte-identical reply shape.  `cluster` is
-//! now sugar for `submit` + `wait` through the same job registry, so
-//! its reply bytes are exactly what the async verbs would assemble.
-//! The new surface:
+//! v6 over v5: every v5 request line — including the legacy v1–v4
+//! forms — still produces a byte-identical reply prefix; the only
+//! change to an existing reply is a new *trailing* `inertia=` field on
+//! `cluster`/`wait` done-replies (mean distance to the nearest medoid,
+//! the quantity `assign` serves).  The new surface is the **fitted-model
+//! read path**: solving stashes a dataset-free [`solver::FittedModel`]
+//! (medoid feature vectors + metric, no training arrays) on the done
+//! job, and the serving verbs route through a bounded [`ModelRegistry`]:
+//!
+//! * `promote job=j<id> [name=<handle>]` — capture the done job's
+//!   fitted model into the registry under `name` (auto `m<id>` when
+//!   omitted; user names are `[A-Za-z0-9_.-]{1,64}` and may not shadow
+//!   the reserved `m<digits>` shape).  Re-promoting an existing name
+//!   replaces it in place.  Replies
+//!   `ok model=<name> job=j<id> k=... dim=... metric=... inertia=...`;
+//!   a queued/running job gets `err job j<id> is <state> ...`, an
+//!   evicted or failed one `err`.  Past
+//!   [`ServerConfig::model_cap`] the coldest model is LRU-evicted.
+//! * `assign model=<name> point=v1,v2,... [point=...] [metric=] [top2=1]`
+//!   — label points against a promoted model *without any dataset in
+//!   memory*: each `point=` is one comma-joined feature row (repeats
+//!   batch, wire order preserved), the reply is
+//!   `ok model=<name> n=<N> labels=... dists=...` (plus `second=`/
+//!   `dists2=` under `top2=1`, the medoid-swap lower-bound pair).  A
+//!   `metric=` that disagrees with the fit, a wrong dimension, or a
+//!   non-finite coordinate is an `err`, never garbage labels.
+//! * `models` — registry inventory: `count=`/`cap=` occupancy, lifetime
+//!   `promoted=`/`evicted=` (LRU only), then one name-sorted
+//!   `model.<name>.job/method/k/dim/metric/inertia/source` group per
+//!   retained model.
+//! * `evict model=<name>` — drop a model explicitly
+//!   (`ok evicted model=<name>`); not counted as an LRU eviction.
+//! * `stats` additionally reports the `models=` occupancy gauge and
+//!   per-model serving aggregates
+//!   `model.<name>.assign_count=`/`model.<name>.assign_ms_mean=`
+//!   (kept outside the registry, so eviction does not erase traffic
+//!   history; `stats reset` re-bases them).
+//!
+//! The v5 async-job surface, unchanged underneath:
 //!
 //! * `submit <cluster keys> [deadline_ms=N]` — validate, price and
 //!   admit the job (reserving its [`JobCost::units`] from the
@@ -141,16 +183,21 @@
 pub mod cache;
 pub mod jobs;
 pub mod metrics;
+pub mod models;
 
 pub use cache::{CacheStats, DatasetCache};
-pub use jobs::{JobGauges, JobRegistry, JobState, JobView, WaitOutcome};
-pub use metrics::{JobCounters, MethodAgg, MethodMetrics, VerbCounters, VERBS};
+pub use jobs::{FittedLookup, JobGauges, JobRegistry, JobState, JobView, WaitOutcome};
+pub use metrics::{
+    JobCounters, MethodAgg, MethodMetrics, ModelAgg, ModelMetrics, VerbCounters, VERBS,
+};
+pub use models::{ModelGauges, ModelRecord, ModelRegistry, ModelSeed};
 
 use crate::backend::NativeBackend;
 use crate::coordinator::{SamplerKind, SwapStrategy};
 use crate::data::{DataSource, FeatureScaling};
 use crate::dissim::{DissimCounter, Metric};
 use crate::eval;
+use crate::linalg::Matrix;
 use crate::runtime::Pool;
 use crate::solver::{self, CancelToken, JobCost, MethodSpec, SolveSpec, MAX_JOB_COST};
 use crate::sync_ext;
@@ -191,6 +238,9 @@ pub struct ServerConfig {
     /// How many *finished* jobs the registry retains for later
     /// `poll`/`wait` calls (LRU eviction); `0` = 64.
     pub retain_cap: usize,
+    /// How many promoted models the [`ModelRegistry`] retains for
+    /// `assign` serving (LRU eviction); `0` = 32.
+    pub model_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -203,6 +253,7 @@ impl Default for ServerConfig {
             budget: 0,
             strict_budget: false,
             retain_cap: 0,
+            model_cap: 0,
         }
     }
 }
@@ -241,6 +292,15 @@ impl ServerConfig {
             64
         } else {
             self.retain_cap
+        }
+    }
+
+    /// `model_cap` with `0` resolved to the default (32 models).
+    pub fn resolved_model_cap(&self) -> usize {
+        if self.model_cap == 0 {
+            32
+        } else {
+            self.model_cap
         }
     }
 }
@@ -523,6 +583,10 @@ pub struct ServerState {
     pub pools: PoolCache,
     /// Per-verb request counters (the `verb.<name>=` stats fields).
     pub verbs: VerbCounters,
+    /// Promoted fitted models, served by `assign` (protocol v6).
+    pub models: ModelRegistry,
+    /// Per-model `assign` aggregates (the `model.<name>.*` stats fields).
+    pub model_stats: ModelMetrics,
 }
 
 impl ServerState {
@@ -538,6 +602,8 @@ impl ServerState {
             jobs: JobRegistry::new(cfg.resolved_retain_cap(), cfg.resolved_queue_cap()),
             pools: PoolCache::new(),
             verbs: VerbCounters::new(),
+            models: ModelRegistry::new(cfg.resolved_model_cap()),
+            model_stats: ModelMetrics::new(),
         }
     }
 
@@ -913,6 +979,14 @@ fn run_cluster(
     let solve_started = Instant::now();
     let r = solver::solve(&x, &spec, &backend).map_err(|e| e.to_string())?;
     let obj = eval::objective(&x, &r.medoids, &DissimCounter::new(req.metric));
+    // v6: a final assignment pass captures the dataset-free fitted
+    // model (medoid rows + metric + inertia).  It runs after solve()
+    // returned, so the reply's dissim= (counter deltas captured inside
+    // the solve) and objective= (the f64 eval above) are byte-identical
+    // to v5; inertia= is the pass's f32-accumulated mean.
+    let fitted =
+        solver::fit_model(&x, &r, req.metric, &backend).map_err(|e| e.to_string())?;
+    let inertia = fitted.inertia;
     // per-method aggregates cover solve + eval (time attributable to the
     // method), not the dataset load a cache miss happens to pay; the
     // queue wait is recorded alongside for the tail histograms
@@ -922,9 +996,21 @@ fn run_cluster(
         r.stats.dissim_count,
         queue_ms,
     );
+    if let Some(id) = job_id {
+        // stash the model (training arrays dropped) so `promote` serves
+        // it with no dataset resident and no recompute
+        state.jobs.set_fitted(
+            id,
+            ModelSeed {
+                model: Arc::new(fitted.without_training_arrays()),
+                method: spec.method.label(),
+                source: req.src.canon(),
+            },
+        );
+    }
     let meds: Vec<String> = r.medoids.iter().map(|m| m.to_string()).collect();
     Ok(format!(
-        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={} source={} cost={}",
+        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={} source={} cost={} inertia={inertia:.6}",
         spec.method.label(),
         if hit { "hit" } else { "miss" },
         meds.join(","),
@@ -1117,6 +1203,171 @@ fn jobs_line(state: &ServerState) -> String {
     )
 }
 
+/// The `promote` verb: move a finished job's fitted model into the
+/// model registry under `name=` (or a fresh auto handle) and report its
+/// shape.  Promotion is pure registry work — the model was captured by
+/// the worker at solve time, so no dataset and no compute is involved.
+fn handle_promote(state: &ServerState, kv: &HashMap<String, String>) -> String {
+    let id = match parse_job_id(kv) {
+        Ok(id) => id,
+        Err(e) => return format!("err {e}"),
+    };
+    let seed = match state.jobs.fitted(id) {
+        FittedLookup::Unknown => return format!("err unknown job j{id}"),
+        FittedLookup::NotDone(s) => {
+            return format!("err job j{id} is {} (promote needs a done job)", s.name())
+        }
+        FittedLookup::Unavailable(s) => {
+            return format!("err job j{id} holds no model (state={})", s.name())
+        }
+        FittedLookup::Ready(seed) => seed,
+    };
+    let model = seed.model.clone();
+    match state.models.promote(kv.get("name").map(String::as_str), seed, id) {
+        Err(e) => format!("err {e}"),
+        Ok(name) => format!(
+            "ok model={name} job=j{id} k={} dim={} metric={} inertia={:.6}",
+            model.k(),
+            model.dim(),
+            model.metric.name(),
+            model.inertia,
+        ),
+    }
+}
+
+/// Parse one `point=v1,v2,...` value into a feature row.
+fn parse_point(raw: &str) -> Result<Vec<f32>, String> {
+    let vals: Result<Vec<f32>, _> = raw.split(',').map(str::parse).collect();
+    match vals {
+        Ok(v) if !v.is_empty() && v.iter().all(|x| x.is_finite()) => Ok(v),
+        _ => Err(format!("bad point={raw} (comma-joined finite numbers)")),
+    }
+}
+
+/// The `assign` verb: nearest-medoid lookup against a promoted model.
+/// Batched — every `point=` token in the request line (wire order) is
+/// one row — with optional `top2=1` for the runner-up medoid per point.
+/// Serves entirely from the model's own medoid rows: no dataset is
+/// loaded, touched, or required to be resident.
+fn handle_assign(state: &ServerState, parts: &[String]) -> String {
+    let started = Instant::now();
+    let kv = parse_kv(parts);
+    let Some(name) = kv.get("model") else {
+        return "err missing model= (e.g. assign model=m1 point=0.5,1.0)".into();
+    };
+    let top2 = match kv.get("top2").map(String::as_str) {
+        None | Some("0") => false,
+        Some("1") => true,
+        Some(v) => return format!("err bad top2={v} (0|1)"),
+    };
+    let Some(model) = state.models.get(name) else {
+        return format!("err unknown model {name}");
+    };
+    // an explicit metric= must match what the model was fitted under —
+    // serving under a different metric would be silently wrong answers
+    if let Some(m) = kv.get("metric") {
+        match Metric::parse(m) {
+            None => return format!("err unknown metric {m}"),
+            Some(m) if m != model.metric => {
+                return format!(
+                    "err model {name} was fitted under metric {} (got metric={})",
+                    model.metric.name(),
+                    m.name()
+                )
+            }
+            Some(_) => {}
+        }
+    }
+    // collect every point= token in wire order (parse_kv collapses
+    // duplicate keys, so the batch is read from the raw tokens)
+    let mut rows: Vec<f32> = Vec::new();
+    let mut n = 0usize;
+    for part in parts {
+        let Some(raw) = part.strip_prefix("point=") else { continue };
+        let vals = match parse_point(raw) {
+            Ok(v) => v,
+            Err(e) => return format!("err {e}"),
+        };
+        if vals.len() != model.dim() {
+            return format!(
+                "err model {name} expects {} features per point, got {} (point {})",
+                model.dim(),
+                vals.len(),
+                n + 1
+            );
+        }
+        rows.extend_from_slice(&vals);
+        n += 1;
+    }
+    if n == 0 {
+        return "err missing point= (e.g. assign model=m1 point=0.5,1.0)".into();
+    }
+    let points = Matrix::from_vec(n, model.dim(), rows);
+    let backend = NativeBackend::new(model.metric);
+    let join_u = |v: &[usize]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+    let join_f = |v: &[f32]| v.iter().map(|x| format!("{x:.6}")).collect::<Vec<_>>().join(",");
+    let reply = if top2 {
+        match model.assign_top2(&backend, &points) {
+            Err(e) => return format!("err {e}"),
+            Ok((near, dnear, sec, dsec)) => format!(
+                "ok model={name} n={n} labels={} dists={} second={} dists2={}",
+                join_u(&near),
+                join_f(&dnear),
+                join_u(&sec),
+                join_f(&dsec),
+            ),
+        }
+    } else {
+        match model.assign(&backend, &points) {
+            Err(e) => return format!("err {e}"),
+            Ok((labels, dists)) => format!(
+                "ok model={name} n={n} labels={} dists={}",
+                join_u(&labels),
+                join_f(&dists),
+            ),
+        }
+    };
+    state.model_stats.record(name, started.elapsed().as_secs_f64() * 1e3);
+    reply
+}
+
+/// The `models` verb: registry gauges plus one name-sorted row of
+/// provenance and shape per resident model.
+fn models_line(state: &ServerState) -> String {
+    let g = state.models.gauges();
+    let mut line = format!(
+        "ok count={} cap={} promoted={} evicted={}",
+        g.count, g.cap, g.promoted, g.evicted
+    );
+    for m in state.models.list() {
+        line.push_str(&format!(
+            " model.{0}.job=j{1} model.{0}.method={2} model.{0}.k={3} model.{0}.dim={4} \
+             model.{0}.metric={5} model.{0}.inertia={6:.6} model.{0}.source={7}",
+            m.name,
+            m.job,
+            m.method,
+            m.k,
+            m.dim,
+            m.metric.name(),
+            m.inertia,
+            m.source,
+        ));
+    }
+    line
+}
+
+/// The `evict` verb: drop a promoted model by name.
+fn handle_evict(state: &ServerState, kv: &HashMap<String, String>) -> String {
+    let Some(name) = kv.get("model") else {
+        return "err missing model= (e.g. evict model=m1)".into();
+    };
+    if state.models.evict(name) {
+        format!("ok evicted model={name}")
+    } else {
+        format!("err unknown model {name}")
+    }
+}
+
 /// Dispatch one request line to a reply line (no queue: direct library
 /// callers and tests; wire connections go through [`handle_line_queued`]
 /// so the connection's dispatch wait reaches the reply).
@@ -1170,6 +1421,12 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
         Some("wait") => return handle_wait(state, &parse_kv(&parts[1..]), queue_ms),
         Some("cancel") => handle_cancel(state, &parse_kv(&parts[1..])),
         Some("jobs") => jobs_line(state),
+        // v6: fitted-model serving
+        Some("promote") => handle_promote(state, &parse_kv(&parts[1..])),
+        // assign reads the raw tokens: repeated point= keys are a batch
+        Some("assign") => handle_assign(state, &parts[1..]),
+        Some("models") => models_line(state),
+        Some("evict") => handle_evict(state, &parse_kv(&parts[1..])),
         // v4: `stats reset` re-bases the method aggregates, cache and
         // job counters (entries and live gauges stay; budget is live)
         Some("stats") if parts.get(1).map(String::as_str) == Some("reset") => {
@@ -1177,6 +1434,7 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
             state.cache.reset_counters();
             state.jobs.counters().reset();
             state.verbs.reset();
+            state.model_stats.reset();
             "ok".into()
         }
         Some("stats") => {
@@ -1188,7 +1446,7 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
                  budget_total={} budget_used={} hist_le_ms={} \
                  jobs.submitted={} jobs.done={} jobs.failed={} jobs.cancelled={} \
                  jobs.expired={} jobs.queued={} jobs.running={} jobs.retained={} \
-                 shed={} pools={}",
+                 shed={} pools={} models={}",
                 s.hits,
                 s.misses,
                 s.entries,
@@ -1205,6 +1463,7 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
                 g.retained,
                 c.shed(),
                 state.pools.widths(),
+                state.models.gauges().count,
             );
             // per-verb request counters, VERBS (wire) order
             for (verb, n) in state.verbs.snapshot() {
@@ -1227,6 +1486,14 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
                     a.dissim_max,
                     a.solve_hist.wire(),
                     a.queue_hist.wire(),
+                ));
+            }
+            // per-model assign aggregates, name-sorted for determinism
+            for (name, a) in state.model_stats.snapshot() {
+                line.push_str(&format!(
+                    " model.{name}.assign_count={} model.{name}.assign_ms_mean={:.3}",
+                    a.count,
+                    a.ms_mean(),
                 ));
             }
             line
@@ -1503,6 +1770,14 @@ mod tests {
             "poll job=x9",
             "wait job=",
             "cancel job=j",
+            // v6 additions
+            "promote",
+            "promote job=j99",
+            "assign",
+            "assign model=ghost point=1,2",
+            "assign point=1,2",
+            "evict",
+            "evict model=ghost",
         ] {
             assert!(handle_line(&st, line).starts_with("err"), "{line:?} should err");
         }
@@ -1686,17 +1961,20 @@ mod tests {
         assert_eq!(auto.resolved_queue_cap(), auto.resolved_workers() * 4);
         assert_eq!(auto.resolved_budget(), 4 * MAX_JOB_COST);
         assert_eq!(auto.resolved_retain_cap(), 64);
+        assert_eq!(auto.resolved_model_cap(), 32);
         let fixed = ServerConfig {
             workers: 3,
             queue_cap: 7,
             budget: 99,
             retain_cap: 5,
+            model_cap: 2,
             ..Default::default()
         };
         assert_eq!(fixed.resolved_workers(), 3);
         assert_eq!(fixed.resolved_queue_cap(), 7);
         assert_eq!(fixed.resolved_budget(), 99);
         assert_eq!(fixed.resolved_retain_cap(), 5);
+        assert_eq!(fixed.resolved_model_cap(), 2);
         // workers=0 actually serves (auto-detected pool)
         let h = serve(auto).unwrap();
         assert!(request(h.addr, "ping").unwrap().starts_with("pong"));
@@ -1771,10 +2049,20 @@ mod tests {
         let st = fresh_state();
         let r = handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 seed=1");
         assert!(r.starts_with("ok "), "{r}");
-        let cost: u64 = r.split(" cost=").nth(1).unwrap().trim().parse().unwrap();
+        let cost: u64 = r
+            .split(" cost=")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
         // OneBatch prices its n*m pass; blobs_300 caps m at n=300
         assert_eq!(cost, MethodSpec::default().cost(300, 3, None).units, "{r}");
         assert_eq!(st.admission.used(), 0, "permit must release when the job ends");
+        // v6: the final assignment pass's mean distance rides along
+        assert!(r.contains(" inertia="), "{r}");
     }
 
     #[test]
@@ -2074,5 +2362,107 @@ mod tests {
         // the reset zeroed its own `stats` tick (record runs before the
         // reset arm), so only this follow-up request is counted
         assert!(s.contains(" verb.stats=1 "), "{s}");
+    }
+
+    /// Solve one job to completion on a workerless state and return its
+    /// wire handle — the setup every serving-verb test starts from.
+    fn solved_job(st: &ServerState) -> String {
+        let r = handle_line(st, "submit dataset=blobs_300_4_3 k=3 seed=1");
+        assert!(r.starts_with("ok job="), "{r}");
+        let id = r.split_whitespace().nth(1).unwrap().strip_prefix("job=").unwrap().to_string();
+        assert!(st.drain_one());
+        id
+    }
+
+    #[test]
+    fn promote_assign_models_evict_lifecycle() {
+        let st = fresh_state();
+        let job = solved_job(&st);
+
+        let p = handle_line(&st, &format!("promote job={job} name=blobs"));
+        assert!(p.starts_with("ok model=blobs "), "{p}");
+        assert!(p.contains(&format!(" job={job} ")), "{p}");
+        assert!(p.contains(" k=3 dim=4 metric=l1 inertia="), "{p}");
+
+        // a second promote of the same job mints a fresh auto handle
+        let p2 = handle_line(&st, &format!("promote job={job}"));
+        assert!(p2.starts_with("ok model=m"), "{p2}");
+
+        let a = handle_line(&st, "assign model=blobs point=0.0,0.0,0.0,0.0 point=1.0,2.0,3.0,4.0");
+        assert!(a.starts_with("ok model=blobs n=2 labels="), "{a}");
+        assert!(a.contains(" dists="), "{a}");
+        let t = handle_line(&st, "assign model=blobs top2=1 point=0.5,0.5,0.5,0.5");
+        assert!(t.starts_with("ok model=blobs n=1 labels="), "{t}");
+        assert!(t.contains(" second=") && t.contains(" dists2="), "{t}");
+
+        let m = handle_line(&st, "models");
+        assert!(m.starts_with("ok count=2 cap=32 promoted=2 evicted=0"), "{m}");
+        assert!(m.contains(" model.blobs.job="), "{m}");
+        assert!(m.contains(" model.blobs.method=OneBatch-nniw "), "{m}");
+        assert!(m.contains(" model.blobs.source=synth:blobs_300_4_3"), "{m}");
+
+        assert!(handle_line(&st, "evict model=blobs").starts_with("ok evicted model=blobs"));
+        assert!(handle_line(&st, "assign model=blobs point=0,0,0,0").starts_with("err unknown model"));
+        // explicit eviction is not an LRU eviction
+        assert!(handle_line(&st, "models").starts_with("ok count=1 cap=32 promoted=2 evicted=0"));
+    }
+
+    #[test]
+    fn promote_rejects_jobs_without_a_model() {
+        let st = fresh_state();
+        // queued (workerless, never drained) -> not done yet
+        assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3 seed=1").starts_with("ok job=j1"));
+        let r = handle_line(&st, "promote job=j1");
+        assert!(r.starts_with("err job j1 is queued"), "{r}");
+        // cancelled -> terminal, but no fitted model was ever captured
+        assert!(handle_line(&st, "cancel job=j1").starts_with("ok "));
+        let r = handle_line(&st, "promote job=j1");
+        assert!(r.starts_with("err job j1 holds no model (state=cancelled)"), "{r}");
+        // reserved auto-handle shape is not user-assignable
+        let job = solved_job(&st);
+        let r = handle_line(&st, &format!("promote job={job} name=m7"));
+        assert!(r.starts_with("err "), "{r}");
+    }
+
+    #[test]
+    fn assign_validates_points_metric_and_top2() {
+        let st = fresh_state();
+        let job = solved_job(&st);
+        assert!(handle_line(&st, &format!("promote job={job} name=b")).starts_with("ok "));
+        for line in [
+            "assign model=b",                            // no point=
+            "assign model=b point=1,2",                  // wrong dimension
+            "assign model=b point=1,2,nan,4",            // non-finite
+            "assign model=b point=1,2,,4",               // empty coordinate
+            "assign model=b point=0,0,0,0 metric=l2",    // fitted under l1
+            "assign model=b point=0,0,0,0 metric=warp",  // unknown metric
+            "assign model=b point=0,0,0,0 top2=yes",     // bad flag
+        ] {
+            assert!(handle_line(&st, line).starts_with("err"), "{line:?} should err");
+        }
+        // matching explicit metric= is fine
+        let r = handle_line(&st, "assign model=b point=0,0,0,0 metric=l1");
+        assert!(r.starts_with("ok model=b n=1 "), "{r}");
+    }
+
+    #[test]
+    fn stats_reports_model_gauges_and_assign_aggregates() {
+        let st = fresh_state();
+        let job = solved_job(&st);
+        assert!(handle_line(&st, &format!("promote job={job} name=b")).starts_with("ok "));
+        assert!(handle_line(&st, "assign model=b point=0,0,0,0").starts_with("ok "));
+        assert!(handle_line(&st, "assign model=b point=1,1,1,1").starts_with("ok "));
+        let s = handle_line(&st, "stats");
+        assert!(s.contains(" models=1 "), "{s}");
+        assert!(s.contains(" model.b.assign_count=2 model.b.assign_ms_mean="), "{s}");
+        // serving aggregates outlive the model they measured...
+        assert!(handle_line(&st, "evict model=b").starts_with("ok "));
+        let s = handle_line(&st, "stats");
+        assert!(s.contains(" models=0 "), "{s}");
+        assert!(s.contains(" model.b.assign_count=2 "), "{s}");
+        // ...but reset clears them with everything else
+        assert!(handle_line(&st, "stats reset").starts_with("ok"));
+        let s = handle_line(&st, "stats");
+        assert!(!s.contains(" model.b."), "{s}");
     }
 }

@@ -1,0 +1,324 @@
+//! The fitted-model registry behind protocol v6's serving verbs
+//! (`promote` / `assign` / `models` / `evict`).
+//!
+//! A [`ModelRegistry`] mirrors the job registry's shape for the *read*
+//! path: `promote` moves a finished job's [`FittedModel`] — the `k x p`
+//! medoid feature vectors, the metric and the training inertia, with
+//! **no reference to the dataset** — into the registry under a named
+//! handle (`m<id>` auto-assigned, or a caller-supplied name), and every
+//! later `assign` serves nearest-medoid lookups from that copy alone.
+//! The dataset cache can evict the training matrix, the server can be
+//! restarted cold on its data, and assignments keep answering: the
+//! model owns everything it needs from promotion time on.
+//!
+//! Retention is bounded LRU, like the job registry and the pool cache:
+//! at most `cap` models stay resident ([`crate::server::ServerConfig::
+//! model_cap`]), a `get` (one `assign`) touches its model warm, and
+//! promoting past the cap evicts the coldest.  Re-promoting an existing
+//! name replaces that model in place (the overnight-refit workflow:
+//! `promote job=<new> name=prod` swaps what `assign model=prod` serves).
+//!
+//! All registry state sits behind one mutex (poison-safe via
+//! [`sync_ext`]); critical sections are map edits, vastly cheaper than
+//! the `O(k p)` assignment around them.
+
+use crate::dissim::Metric;
+use crate::solver::FittedModel;
+use crate::sync_ext;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// What `promote` moves from a finished job into the registry: the
+/// dataset-free model plus the provenance strings the `models` listing
+/// reports.  Stashed on the job by the worker at solve time, so
+/// promotion itself does no compute and no I/O.
+#[derive(Clone)]
+pub struct ModelSeed {
+    /// The dataset-free fitted model (medoid rows + metric + inertia).
+    pub model: Arc<FittedModel>,
+    /// Method label the fit ran under ([`crate::solver::MethodSpec`]).
+    pub method: String,
+    /// Canonical [`crate::data::DataSource`] URI the fit loaded.
+    pub source: String,
+}
+
+/// One registered model's listing row (the `models` wire verb).
+#[derive(Clone, Debug)]
+pub struct ModelRecord {
+    /// Registry handle (`m<id>` or the caller-supplied name).
+    pub name: String,
+    /// Job the model was promoted from.
+    pub job: u64,
+    /// Method label of the fit.
+    pub method: String,
+    /// Dataset URI of the fit.
+    pub source: String,
+    /// Number of medoids.
+    pub k: usize,
+    /// Feature dimension assignment points must match.
+    pub dim: usize,
+    /// Metric the model was fitted under.
+    pub metric: Metric,
+    /// Training inertia (mean nearest-medoid distance).
+    pub inertia: f64,
+}
+
+/// Point-in-time occupancy of the registry (the `models` wire verb and
+/// the `models=` stats gauge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelGauges {
+    /// Models currently resident.
+    pub count: usize,
+    /// Retention bound (LRU eviction beyond it).
+    pub cap: usize,
+    /// Lifetime promotions (including same-name replacements).
+    pub promoted: u64,
+    /// Lifetime LRU evictions (explicit `evict` calls not included).
+    pub evicted: u64,
+}
+
+struct Entry {
+    seed: ModelSeed,
+    job: u64,
+}
+
+struct Inner {
+    models: HashMap<String, Entry>,
+    /// Names, coldest first (LRU retention order).
+    order: VecDeque<String>,
+    next_id: u64,
+    promoted: u64,
+    evicted: u64,
+}
+
+/// The registry: owns every promoted model from promotion to eviction.
+pub struct ModelRegistry {
+    inner: Mutex<Inner>,
+    cap: usize,
+}
+
+impl ModelRegistry {
+    /// Empty registry retaining at most `cap` models (LRU).
+    pub fn new(cap: usize) -> Self {
+        ModelRegistry {
+            inner: Mutex::new(Inner {
+                models: HashMap::new(),
+                order: VecDeque::new(),
+                next_id: 1,
+                promoted: 0,
+                evicted: 0,
+            }),
+            cap: cap.max(1),
+        }
+    }
+
+    /// The retention bound this registry was built with.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Register `seed` (promoted from job `job`) under `name`, or under
+    /// a fresh auto handle `m<id>` when `name` is `None`.  Returns the
+    /// handle.  An existing name is replaced in place (refit workflow);
+    /// promoting past the cap evicts the coldest model.
+    pub fn promote(
+        &self,
+        name: Option<&str>,
+        seed: ModelSeed,
+        job: u64,
+    ) -> Result<String, String> {
+        let mut inner = self.lock();
+        let name = match name {
+            Some(n) => {
+                validate_name(n)?;
+                n.to_string()
+            }
+            None => {
+                let id = inner.next_id;
+                inner.next_id += 1;
+                format!("m{id}")
+            }
+        };
+        // replacement keeps one order entry per name (warm end below)
+        if inner.models.insert(name.clone(), Entry { seed, job }).is_some() {
+            if let Some(pos) = inner.order.iter().position(|n| *n == name) {
+                inner.order.remove(pos);
+            }
+        }
+        inner.order.push_back(name.clone());
+        inner.promoted += 1;
+        while inner.models.len() > self.cap {
+            if let Some(cold) = inner.order.pop_front() {
+                inner.models.remove(&cold);
+                inner.evicted += 1;
+            }
+        }
+        Ok(name)
+    }
+
+    /// The model registered under `name`, if any; counts as an LRU
+    /// touch (every `assign` keeps its model warm).
+    pub fn get(&self, name: &str) -> Option<Arc<FittedModel>> {
+        let mut inner = self.lock();
+        let model = inner.models.get(name)?.seed.model.clone();
+        if let Some(pos) = inner.order.iter().position(|n| n == name) {
+            inner.order.remove(pos);
+            inner.order.push_back(name.to_string());
+        }
+        Some(model)
+    }
+
+    /// Drop the model registered under `name`; returns whether one was
+    /// resident (explicit drops are not counted as LRU evictions).
+    pub fn evict(&self, name: &str) -> bool {
+        let mut inner = self.lock();
+        let removed = inner.models.remove(name).is_some();
+        if removed {
+            if let Some(pos) = inner.order.iter().position(|n| n == name) {
+                inner.order.remove(pos);
+            }
+        }
+        removed
+    }
+
+    /// Listing rows for every resident model, name-sorted for a
+    /// deterministic wire line.
+    pub fn list(&self) -> Vec<ModelRecord> {
+        let inner = self.lock();
+        let mut rows: Vec<ModelRecord> = inner
+            .models
+            .iter()
+            .map(|(name, e)| ModelRecord {
+                name: name.clone(),
+                job: e.job,
+                method: e.seed.method.clone(),
+                source: e.seed.source.clone(),
+                k: e.seed.model.k(),
+                dim: e.seed.model.dim(),
+                metric: e.seed.model.metric,
+                inertia: e.seed.model.inertia,
+            })
+            .collect();
+        rows.sort_by(|a, b| a.name.cmp(&b.name));
+        rows
+    }
+
+    /// Occupancy and lifetime counters.
+    pub fn gauges(&self) -> ModelGauges {
+        let inner = self.lock();
+        ModelGauges {
+            count: inner.models.len(),
+            cap: self.cap,
+            promoted: inner.promoted,
+            evicted: inner.evicted,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        sync_ext::lock_or_recover(&self.inner)
+    }
+}
+
+/// A caller-supplied model name: short, wire-safe (one token, no
+/// quoting needed, usable as a `model.<name>.` stats prefix) and
+/// outside the auto-handle namespace so `promote name=m3` can never
+/// silently shadow a handle a client got from an earlier auto-named
+/// promotion.
+fn validate_name(name: &str) -> Result<(), String> {
+    if name.is_empty() || name.len() > 64 {
+        return Err(format!("bad model name {name:?} (1..=64 characters)"));
+    }
+    if !name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')) {
+        return Err(format!(
+            "bad model name {name:?} (allowed: ASCII letters, digits, '-', '_', '.')"
+        ));
+    }
+    let mut chars = name.chars();
+    if chars.next() == Some('m') && name.len() > 1 && chars.all(|c| c.is_ascii_digit()) {
+        return Err(format!("model name {name} is reserved for auto handles (m<id>)"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn seed(k: usize, dim: usize) -> ModelSeed {
+        ModelSeed {
+            model: Arc::new(FittedModel {
+                medoid_rows: Matrix::zeros(k, dim),
+                medoids: (0..k).collect(),
+                metric: Metric::L1,
+                inertia: 0.5,
+                labels: None,
+                dist_to_nearest: None,
+            }),
+            method: "OneBatch-nniw".into(),
+            source: "synth:blobs_300_4_3".into(),
+        }
+    }
+
+    #[test]
+    fn auto_handles_are_monotonic_and_named_promotes_stick() {
+        let r = ModelRegistry::new(8);
+        assert_eq!(r.promote(None, seed(3, 4), 1).unwrap(), "m1");
+        assert_eq!(r.promote(None, seed(3, 4), 2).unwrap(), "m2");
+        assert_eq!(r.promote(Some("prod"), seed(2, 4), 3).unwrap(), "prod");
+        assert_eq!(r.gauges().count, 3);
+        assert_eq!(r.gauges().promoted, 3);
+        assert_eq!(r.get("prod").unwrap().k(), 2);
+        assert!(r.get("m3").is_none());
+        let names: Vec<String> = r.list().into_iter().map(|m| m.name).collect();
+        assert_eq!(names, vec!["m1", "m2", "prod"], "listing is name-sorted");
+    }
+
+    #[test]
+    fn replacement_swaps_in_place_without_eviction() {
+        let r = ModelRegistry::new(2);
+        r.promote(Some("prod"), seed(2, 4), 1).unwrap();
+        r.promote(None, seed(3, 4), 2).unwrap();
+        // same name: replaced, still 2 resident, nothing evicted
+        r.promote(Some("prod"), seed(5, 4), 3).unwrap();
+        let g = r.gauges();
+        assert_eq!((g.count, g.evicted, g.promoted), (2, 0, 3));
+        assert_eq!(r.get("prod").unwrap().k(), 5);
+        assert_eq!(r.list().iter().find(|m| m.name == "prod").unwrap().job, 3);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_and_get_touches_warm() {
+        let r = ModelRegistry::new(2);
+        r.promote(Some("a"), seed(2, 4), 1).unwrap();
+        r.promote(Some("b"), seed(2, 4), 2).unwrap();
+        // touch `a` warm, so the next promotion evicts `b`
+        assert!(r.get("a").is_some());
+        r.promote(Some("c"), seed(2, 4), 3).unwrap();
+        assert!(r.get("b").is_none(), "coldest model is evicted");
+        assert!(r.get("a").is_some() && r.get("c").is_some());
+        assert_eq!(r.gauges().evicted, 1);
+    }
+
+    #[test]
+    fn explicit_evict_is_not_an_lru_eviction() {
+        let r = ModelRegistry::new(4);
+        r.promote(Some("a"), seed(2, 4), 1).unwrap();
+        assert!(r.evict("a"));
+        assert!(!r.evict("a"), "second evict reports unknown");
+        let g = r.gauges();
+        assert_eq!((g.count, g.evicted), (0, 0));
+    }
+
+    #[test]
+    fn name_validation_rejects_wire_hostile_and_reserved_names() {
+        let r = ModelRegistry::new(4);
+        for bad in ["", "has space", "newline\n", "a=b", "m42", "m1", &"x".repeat(65)] {
+            assert!(r.promote(Some(bad), seed(2, 4), 1).is_err(), "{bad:?} should be rejected");
+        }
+        // `m` alone and mixed names are fine (not the m<digits> shape)
+        for ok in ["m", "m4x", "web-prod_v2.1", "A9"] {
+            assert!(r.promote(Some(ok), seed(2, 4), 1).is_ok(), "{ok:?} should be accepted");
+        }
+    }
+}

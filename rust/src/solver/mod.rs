@@ -77,11 +77,12 @@ pub const CANCELLED: &str = "cancelled";
 /// A token is a shared flag: the owner keeps a clone, hands another to
 /// the solve, and [`CancelToken::cancel`] asks the solve to stop at its
 /// next check point.  Checks are *cooperative*: [`solve`] checks once
-/// before dispatch, and OneBatchPAM additionally between swap passes —
-/// a cancelled solve fails with the [`CANCELLED`] error and discards
-/// its partial work.  The point-level baselines only honour the
-/// pre-dispatch check (they run their existing free functions
-/// unchanged), so cancelling one mid-run lets it finish.
+/// before dispatch, and the pass-structured swap loops — OneBatchPAM
+/// and FasterPAM — additionally between eager passes; a cancelled solve
+/// fails with the [`CANCELLED`] error and discards its partial work.
+/// The remaining point-level baselines only honour the pre-dispatch
+/// check (they run their existing free functions unchanged), so
+/// cancelling one mid-run lets it finish.
 ///
 /// [`CancelToken::none`] (the [`Default`]) is the never-cancelled
 /// token: checks are free and `cancel()` is a no-op, so non-serving
@@ -221,6 +222,137 @@ impl JobCost {
     pub fn admissible(&self) -> bool {
         !self.quadratic || self.units <= MAX_JOB_COST
     }
+}
+
+/// A fitted k-medoids model: everything the `assign` read path needs,
+/// with **no reference to the training dataset** — the medoid feature
+/// vectors (a `k x p` matrix copied out of `x` at fit time), the metric
+/// the fit was defined over, and the training inertia.  The optional
+/// per-training-row arrays (`labels`, `dist_to_nearest` — the exemplars'
+/// `labels_` / `dist_to_nearest_medoid_`) are `O(n)` and are dropped by
+/// [`FittedModel::without_training_arrays`] before a serving surface
+/// retains the model.
+#[derive(Clone, Debug)]
+pub struct FittedModel {
+    /// Medoid feature vectors, one row per medoid (`k x p`) — copied,
+    /// not referenced, so assignment needs no dataset in memory.
+    pub medoid_rows: Matrix,
+    /// Training-set row indices of the medoids (provenance; assignment
+    /// never reads them).
+    pub medoids: Vec<usize>,
+    /// Dissimilarity the model was fitted under; [`FittedModel::assign`]
+    /// rejects a backend with any other metric.
+    pub metric: Metric,
+    /// Mean nearest-medoid distance over the training set — the final
+    /// assignment pass's objective (the exemplars' `inertia_`).
+    pub inertia: f64,
+    /// Nearest-medoid label per training row (dropped for serving).
+    pub labels: Option<Vec<usize>>,
+    /// Distance to the nearest medoid per training row (dropped for
+    /// serving).
+    pub dist_to_nearest: Option<Vec<f32>>,
+}
+
+impl FittedModel {
+    /// Number of medoids.
+    pub fn k(&self) -> usize {
+        self.medoid_rows.rows
+    }
+
+    /// Feature dimension assignment points must match.
+    pub fn dim(&self) -> usize {
+        self.medoid_rows.cols
+    }
+
+    /// This model minus the `O(n)` per-training-row arrays: what a
+    /// serving surface retains (`O(k p)` memory, dataset-free).
+    pub fn without_training_arrays(mut self) -> FittedModel {
+        self.labels = None;
+        self.dist_to_nearest = None;
+        self
+    }
+
+    /// Nearest-medoid `(label, distance)` per row of `points` — the
+    /// [`crate::backend::assign`] kernel with the model's own dimension
+    /// and metric checks applied first.
+    pub fn assign(
+        &self,
+        backend: &dyn ComputeBackend,
+        points: &Matrix,
+    ) -> Result<(Vec<usize>, Vec<f32>)> {
+        self.check_assign(backend, points)?;
+        crate::backend::assign(backend, points, &self.medoid_rows)
+    }
+
+    /// [`FittedModel::assign`] plus the second-nearest medoid:
+    /// `(near, dnear, second, dsecond)` per row of `points`.
+    pub fn assign_top2(
+        &self,
+        backend: &dyn ComputeBackend,
+        points: &Matrix,
+    ) -> Result<crate::backend::Top2> {
+        self.check_assign(backend, points)?;
+        crate::backend::assign_top2(backend, points, &self.medoid_rows)
+    }
+
+    fn check_assign(&self, backend: &dyn ComputeBackend, points: &Matrix) -> Result<()> {
+        anyhow::ensure!(
+            backend.metric() == self.metric,
+            "model was fitted under metric '{}', backend computes '{}'",
+            self.metric.name(),
+            backend.metric().name()
+        );
+        anyhow::ensure!(
+            points.cols == self.dim(),
+            "model expects {} features per point, got {}",
+            self.dim(),
+            points.cols
+        );
+        Ok(())
+    }
+}
+
+/// Capture the fitted model of a finished solve: copy the medoid rows
+/// out of `x` and run one final assignment pass over the training set,
+/// whose per-row nearest distances yield the inertia (mean) and the
+/// optional `labels` / `dist_to_nearest` arrays.  `O(n k)` work — the
+/// same order as the objective evaluation serving surfaces already pay.
+pub fn fit_model(
+    x: &Matrix,
+    r: &KMedoidsResult,
+    metric: Metric,
+    backend: &dyn ComputeBackend,
+) -> Result<FittedModel> {
+    anyhow::ensure!(
+        backend.metric() == metric,
+        "fit metric '{}' does not match backend metric '{}'",
+        metric.name(),
+        backend.metric().name()
+    );
+    let medoid_rows = x.select_rows(&r.medoids);
+    let (labels, dist) = crate::backend::assign(backend, x, &medoid_rows)?;
+    let inertia = dist.iter().map(|&d| d as f64).sum::<f64>() / x.rows.max(1) as f64;
+    Ok(FittedModel {
+        medoid_rows,
+        medoids: r.medoids.clone(),
+        metric,
+        inertia,
+        labels: Some(labels),
+        dist_to_nearest: Some(dist),
+    })
+}
+
+/// [`solve`] plus the fitted-model capture of [`fit_model`]: the entry
+/// point for serving surfaces that keep the model around for `assign`
+/// instead of discarding everything but the medoid indices.
+pub fn solve_fitted(
+    x: &Matrix,
+    spec: &SolveSpec,
+    backend: &dyn ComputeBackend,
+) -> Result<(KMedoidsResult, FittedModel)> {
+    let r = solve(x, spec, backend)?;
+    let model = fit_model(x, &r, spec.metric, backend)?;
+    Ok((r, model))
 }
 
 /// Run `spec.method` on `x` and validate the result invariants
@@ -743,6 +875,53 @@ mod tests {
                 r.est_objective
             );
         }
+    }
+
+    #[test]
+    fn solve_fitted_captures_a_dataset_free_model() {
+        let mut rng = Rng::new(8);
+        let x = synth::gen_gaussian_mixture(&mut rng, 140, 4, 3, 0.15, 1.0);
+        let backend = NativeBackend::new(Metric::L2);
+        let spec = SolveSpec { metric: Metric::L2, ..SolveSpec::new(MethodSpec::KMeansPp, 3, 2) };
+        let (r, model) = solve_fitted(&x, &spec, &backend).unwrap();
+        assert_eq!(model.k(), 3);
+        assert_eq!(model.dim(), 4);
+        assert_eq!(model.medoids, r.medoids);
+        // the medoid rows are copies of the training rows
+        for (row, &i) in (0..3).zip(&r.medoids) {
+            assert_eq!(model.medoid_rows.row(row), x.row(i));
+        }
+        // labels/dists cover the training set; inertia is their mean
+        let labels = model.labels.as_ref().unwrap();
+        let dists = model.dist_to_nearest.as_ref().unwrap();
+        assert_eq!((labels.len(), dists.len()), (140, 140));
+        let mean = dists.iter().map(|&d| d as f64).sum::<f64>() / 140.0;
+        assert!((model.inertia - mean).abs() < 1e-12);
+        // assigning the training medoid rows themselves is exact
+        let (lab, d0) = model.assign(&backend, &model.medoid_rows.clone()).unwrap();
+        assert_eq!(lab, vec![0, 1, 2]);
+        assert!(d0.iter().all(|&d| d == 0.0));
+        // serving form drops the O(n) arrays but keeps the model
+        let served = model.without_training_arrays();
+        assert!(served.labels.is_none() && served.dist_to_nearest.is_none());
+        assert_eq!(served.k(), 3);
+    }
+
+    #[test]
+    fn fitted_model_rejects_mismatched_assigns() {
+        let mut rng = Rng::new(9);
+        let x = synth::gen_gaussian_mixture(&mut rng, 120, 4, 3, 0.15, 1.0);
+        let backend = NativeBackend::new(Metric::L1);
+        let spec = SolveSpec::new(MethodSpec::KMeansPp, 3, 1);
+        let (_, model) = solve_fitted(&x, &spec, &backend).unwrap();
+        // wrong point width
+        let narrow = Matrix::from_vec(1, 2, vec![0.0, 0.0]);
+        let err = model.assign(&backend, &narrow).unwrap_err().to_string();
+        assert!(err.contains("expects 4 features"), "{err}");
+        // wrong backend metric
+        let l2 = NativeBackend::new(Metric::L2);
+        let err = model.assign(&l2, &model.medoid_rows.clone()).unwrap_err().to_string();
+        assert!(err.contains("fitted under metric 'l1'"), "{err}");
     }
 
     #[test]

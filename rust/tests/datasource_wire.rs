@@ -128,8 +128,11 @@ fn legacy_bare_name_requests_keep_v2_reply_shape() {
         assert!(r.contains(field), "{field}: {r}");
     }
     assert!(r.contains(" source=synth:blobs_300_4_3 cost="), "{r}");
-    let cost: u64 = r.split(" cost=").nth(1).unwrap().trim().parse().unwrap();
+    let cost: u64 =
+        r.split(" cost=").nth(1).unwrap().split_whitespace().next().unwrap().parse().unwrap();
     assert!(cost > 0, "{r}");
+    // v6 appends the final assignment pass's inertia after cost=
+    assert!(r.contains(" inertia="), "{r}");
     // the schemed spelling of the same dataset shares the cache entry
     let schemed = handle_line(&st, "cluster dataset=synth:blobs_300_4_3 k=3 seed=5");
     assert!(schemed.contains("cache=hit"), "{schemed}");

@@ -1,0 +1,234 @@
+//! Protocol v6 model serving from the outside: the `submit` / `wait` /
+//! `promote` / `assign` / `evict` lifecycle over real TCP, assignment
+//! determinism against the offline `backend::assign` path **with the
+//! dataset cache cleared** (the registry's whole point: serving needs
+//! no dataset resident), registry LRU eviction, mismatch errors, the
+//! trailing-field-only v5 byte-compatibility guarantee, and the
+//! FasterPAM cooperative-cancellation permit release (ROADMAP 5b).
+//!
+//! Deterministic registry corners run against a *workerless*
+//! `ServerState` driven by `drain_one()`, so every promote precondition
+//! can be asserted without racing a solver.
+
+use obpam::backend::{self, NativeBackend};
+use obpam::data::DataSource;
+use obpam::dissim::Metric;
+use obpam::server::{handle_line, request, serve, ServerConfig, ServerState};
+
+/// Extract `key=<token>` from a reply line.
+fn field(reply: &str, key: &str) -> String {
+    reply
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix(&format!("{key}=")))
+        .unwrap_or_else(|| panic!("no {key}= in {reply:?}"))
+        .to_string()
+}
+
+/// Submit on a workerless state, run the job inline, return `j<id>`.
+fn solved_job(st: &ServerState, line: &str) -> String {
+    let r = handle_line(st, line);
+    assert!(r.starts_with("ok job="), "{r}");
+    let id = field(&r, "job");
+    assert!(st.drain_one(), "one queued job to run");
+    assert!(handle_line(st, &format!("poll job={id}")).contains("state=done"), "{id}");
+    id
+}
+
+#[test]
+fn promote_assign_evict_lifecycle_over_tcp() {
+    let h = serve(ServerConfig { workers: 2, ..Default::default() }).unwrap();
+    let sub = request(h.addr, "submit dataset=blobs_400_4_3 k=3 seed=7").unwrap();
+    let id = field(&sub, "job");
+    let done = request(h.addr, &format!("wait job={id} timeout_ms=60000")).unwrap();
+    assert!(done.starts_with("ok method="), "{done}");
+
+    let p = request(h.addr, &format!("promote job={id} name=prod")).unwrap();
+    assert!(p.starts_with("ok model=prod "), "{p}");
+    assert_eq!(field(&p, "job"), id, "{p}");
+    assert_eq!(field(&p, "k"), "3", "{p}");
+    assert_eq!(field(&p, "dim"), "4", "{p}");
+    assert_eq!(field(&p, "metric"), "l1", "{p}");
+    // the promote reply's inertia is the solve's, verbatim
+    assert_eq!(field(&p, "inertia"), field(&done, "inertia"), "{p}");
+
+    let a = request(h.addr, "assign model=prod point=0,0,0,0 point=5,5,5,5").unwrap();
+    assert!(a.starts_with("ok model=prod n=2 labels="), "{a}");
+    assert_eq!(field(&a, "labels").split(',').count(), 2, "{a}");
+    assert_eq!(field(&a, "dists").split(',').count(), 2, "{a}");
+    let t = request(h.addr, "assign model=prod top2=1 point=1,2,3,4").unwrap();
+    assert!(t.contains(" second=") && t.contains(" dists2="), "{t}");
+    // per point, the nearest and runner-up medoid must differ
+    assert_ne!(field(&t, "labels"), field(&t, "second"), "{t}");
+
+    let m = request(h.addr, "models").unwrap();
+    assert!(m.starts_with("ok count=1 "), "{m}");
+    assert!(m.contains(" model.prod.method=OneBatch-nniw "), "{m}");
+    assert!(m.contains(" model.prod.source=synth:blobs_400_4_3"), "{m}");
+
+    // stats carries the registry gauge and the serving aggregates
+    let s = request(h.addr, "stats").unwrap();
+    assert!(s.contains(" models=1 "), "{s}");
+    assert!(s.contains(" model.prod.assign_count=2 "), "{s}");
+
+    let e = request(h.addr, "evict model=prod").unwrap();
+    assert!(e.starts_with("ok evicted model=prod "), "{e}");
+    let gone = request(h.addr, "assign model=prod point=0,0,0,0").unwrap();
+    assert!(gone.starts_with("err unknown model prod"), "{gone}");
+    h.shutdown();
+}
+
+#[test]
+fn assign_matches_offline_argmin_with_no_dataset_resident() {
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    let sub = request(h.addr, "submit dataset=blobs_400_4_3 k=3 seed=11").unwrap();
+    let id = field(&sub, "job");
+    let done = request(h.addr, &format!("wait job={id} timeout_ms=60000")).unwrap();
+    assert!(done.starts_with("ok method="), "{done}");
+    assert!(request(h.addr, &format!("promote job={id} name=frozen"))
+        .unwrap()
+        .starts_with("ok model=frozen "));
+
+    // drop every cached dataset: from here on the server owns nothing
+    // but the model's k x p medoid rows
+    h.state.cache.clear();
+    let s = request(h.addr, "stats").unwrap();
+    assert!(s.contains(" cache_entries=0 "), "{s}");
+
+    // offline ground truth: regenerate the dataset the same way the
+    // server did and argmin against the medoid indices it reported
+    let x = DataSource::parse("synth:blobs_400_4_3").unwrap().load(1.0, 11).unwrap().x;
+    let medoids: Vec<usize> =
+        field(&done, "medoids").split(',').map(|t| t.parse().unwrap()).collect();
+    let med_rows = x.select_rows(&medoids);
+    let probes: Vec<Vec<f32>> = (0..10)
+        .map(|i| {
+            let mut row = x.row(i * 37).to_vec();
+            row[i % 4] += 0.25; // off-manifold: not a training row
+            row
+        })
+        .collect();
+
+    let be = NativeBackend::new(Metric::L1);
+    let points = obpam::linalg::Matrix::from_vec(
+        probes.len(),
+        4,
+        probes.iter().flatten().copied().collect(),
+    );
+    let (want_labels, want_dists) = backend::assign(&be, &points, &med_rows).unwrap();
+
+    let line = probes.iter().fold("assign model=frozen".to_string(), |mut l, row| {
+        let joined: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        l.push_str(&format!(" point={}", joined.join(",")));
+        l
+    });
+    let a = request(h.addr, &line).unwrap();
+    assert!(a.starts_with("ok model=frozen n=10 "), "{a}");
+    let got_labels: Vec<usize> =
+        field(&a, "labels").split(',').map(|t| t.parse().unwrap()).collect();
+    assert_eq!(got_labels, want_labels, "{a}");
+    let want_fmt: Vec<String> = want_dists.iter().map(|d| format!("{d:.6}")).collect();
+    assert_eq!(field(&a, "dists"), want_fmt.join(","), "{a}");
+
+    // serving loaded nothing back into the cache
+    let s = request(h.addr, "stats").unwrap();
+    assert!(s.contains(" cache_entries=0 "), "{s}");
+    h.shutdown();
+}
+
+#[test]
+fn model_registry_lru_evicts_the_coldest_over_the_wire() {
+    let st = ServerState::new(&ServerConfig { model_cap: 2, ..Default::default() });
+    let id = solved_job(&st, "submit dataset=blobs_300_4_3 k=3 seed=1");
+    for name in ["a", "b"] {
+        assert!(handle_line(&st, &format!("promote job={id} name={name}")).starts_with("ok "));
+    }
+    // touch `a` so `b` is the coldest when `c` arrives
+    assert!(handle_line(&st, "assign model=a point=0,0,0,0").starts_with("ok "));
+    assert!(handle_line(&st, &format!("promote job={id} name=c")).starts_with("ok "));
+    let m = handle_line(&st, "models");
+    assert!(m.starts_with("ok count=2 cap=2 promoted=3 evicted=1"), "{m}");
+    assert!(m.contains(" model.a.") && m.contains(" model.c."), "{m}");
+    assert!(!m.contains(" model.b."), "LRU victim must be b: {m}");
+    assert!(handle_line(&st, "assign model=b point=0,0,0,0").starts_with("err unknown model b"));
+    // re-promoting an existing name replaces in place: no eviction
+    assert!(handle_line(&st, &format!("promote job={id} name=c")).starts_with("ok model=c"));
+    let m = handle_line(&st, "models");
+    assert!(m.starts_with("ok count=2 cap=2 promoted=4 evicted=1"), "{m}");
+}
+
+#[test]
+fn mismatched_assigns_err_instead_of_serving_garbage() {
+    let st = ServerState::new(&ServerConfig::default());
+    let id = solved_job(&st, "submit dataset=blobs_300_4_3 k=3 seed=2");
+    assert!(handle_line(&st, &format!("promote job={id} name=m-ok")).starts_with("ok "));
+    for (line, why) in [
+        ("assign model=m-ok point=1,2,3", "dimension"),
+        ("assign model=m-ok point=1,2,3,4,5", "dimension"),
+        ("assign model=m-ok point=1,2,3,inf", "non-finite"),
+        ("assign model=m-ok point=0,0,0,0 metric=l2", "metric"),
+        ("assign model=m-ok point=0,0,0,0 metric=cosine", "metric"),
+        ("assign model=m-ok", "no points"),
+        ("assign model=m-ok point=0,0,0,0 top2=2", "top2 flag"),
+    ] {
+        let r = handle_line(&st, line);
+        assert!(r.starts_with("err"), "{why}: {line:?} -> {r}");
+    }
+    // a promote of a running/queued job must also refuse cleanly
+    assert!(handle_line(&st, "submit dataset=blobs_300_4_3 k=3 seed=3").starts_with("ok job="));
+    let r = handle_line(&st, "promote job=j2");
+    assert!(r.starts_with("err job j2 is queued"), "{r}");
+}
+
+#[test]
+fn v5_reply_prefix_is_byte_identical_with_inertia_trailing() {
+    // the v6 guarantee: the entire v5 field sequence survives in order,
+    // and the one new field sits between the reply body and the
+    // connection trailer
+    let h = serve(ServerConfig::default()).unwrap();
+    let r = request(h.addr, "cluster dataset=blobs_300_4_3 k=3 seed=5").unwrap();
+    let mut pos = 0;
+    for f in [
+        "ok method=", " cache=", " medoids=", " objective=", " seconds=", " dissim=", " swaps=",
+        " source=", " cost=", " inertia=", " queue_ms=", " served_ms=",
+    ] {
+        let at = r[pos..].find(f).unwrap_or_else(|| panic!("{f:?} missing/misordered in {r:?}"));
+        pos += at + f.len();
+    }
+    h.shutdown();
+}
+
+#[test]
+fn cancelled_fasterpam_job_releases_its_permit() {
+    // ROADMAP 5b: FasterPAM observes SolveSpec::cancel between eager
+    // passes, so a cancel landing mid-run aborts the solve and the
+    // job's admission permit drains like any other terminal state
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    let sub = request(h.addr, "submit dataset=blobs_5000_8_5 k=5 seed=4 method=FasterPAM").unwrap();
+    assert!(sub.starts_with("ok job="), "{sub}");
+    let id = field(&sub, "job");
+    assert!(h.state.admission.used() > 0, "admitted job holds its permit");
+    for _ in 0..20_000 {
+        if field(&request(h.addr, &format!("poll job={id}")).unwrap(), "state") != "queued" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let c = request(h.addr, &format!("cancel job={id}")).unwrap();
+    // cooperative: the cancel either lands mid-solve or the job won
+    assert!(
+        c.contains("cancel=requested") || c.contains("state=done") || c.contains("state=cancelled"),
+        "{c}"
+    );
+    let fin = request(h.addr, &format!("wait job={id} timeout_ms=600000")).unwrap();
+    assert!(
+        fin.starts_with(&format!("err cancelled job={id}")) || fin.starts_with("ok method="),
+        "cancelled or finished, nothing else: {fin}"
+    );
+    assert_eq!(h.state.admission.used(), 0, "terminal FasterPAM job must hold no budget");
+    // a job that was cancelled mid-run captured no model
+    if fin.starts_with("err cancelled") {
+        let p = request(h.addr, &format!("promote job={id}")).unwrap();
+        assert!(p.starts_with(&format!("err job {id} holds no model")), "{p}");
+    }
+    h.shutdown();
+}

@@ -905,6 +905,22 @@ mod tests {
     }
 
     #[test]
+    fn serving_verb_without_counter_is_flagged_even_when_documented() {
+        // the v6 failure mode this lint exists for: a new serving verb
+        // (promote/assign-shaped) lands with a dispatch arm and a doc
+        // mention but nobody extends metrics::VERBS — the uncounted
+        // verb must be caught, and the violation must point at VERBS
+        // specifically (not at the doc, which is fine)
+        let m = "//! `ping`, `stats` and the `assign` read path\n\
+                 fn dispatch() {\n    match v {\n        Some(\"ping\") => {}\n        Some(\"stats\") => {}\n        Some(\"assign\") => {}\n    }\n}\n";
+        let v = check_verbs(m, METRICS_OK);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("\"assign\"") && v[0].msg.contains("VERBS"), "{v:?}");
+        assert_eq!(v[0].file, "rust/src/server/mod.rs");
+        assert!(!v.iter().any(|x| x.msg.contains("protocol doc")), "doc mention is fine: {v:?}");
+    }
+
+    #[test]
     fn dead_verbs_entries_are_flagged() {
         let m = "//! `ping` only\nfn dispatch() {\n    match v {\n        Some(\"ping\") => {}\n    }\n}\n";
         let v = check_verbs(m, METRICS_OK);
