@@ -4,6 +4,11 @@
 //! Measures, with warmup + median/MAD:
 //!   * native pairwise throughput (Gdissim/s) at 1 thread and at
 //!     `available_parallelism` threads (the runtime::pool scaling check);
+//!   * fused `pairwise_argmin` vs the unfused pairwise-then-argmin
+//!     composition, per metric x compute profile x thread count
+//!     (Gpair/s and GB/s swept);
+//!   * the Fast (dot-product) vs Exact (diff-accumulate) profile on the
+//!     Euclidean metrics;
 //!   * the eager candidate scan at 1 thread and at all cores;
 //!   * swap-gain evaluation: native inner loop (1 thread vs all cores);
 //!   * SwapState::eval_candidate / apply_swap latency;
@@ -14,49 +19,128 @@
 //!   * v6 model-serving `assign` QPS over TCP, one connection and many
 //!     concurrent connections (the fitted-model read path);
 //!   * (feature `xla`) XLA pairwise/gains: Pallas kernel vs plain-XLA.
+//!
+//! Flags (after `--`): `--smoke` shrinks every exercised section to
+//! tiny shapes and skips the heavyweight ones (the CI smoke step);
+//! `--json` additionally writes every reported row to
+//! `BENCH_micro.json` (schema documented in README.md).
 
 use obpam::backend::{ComputeBackend, NativeBackend};
 use obpam::coordinator::state::SwapState;
 use obpam::coordinator::{engine, one_batch_pam, OneBatchConfig, SamplerKind};
-use obpam::dissim::Metric;
+use obpam::dissim::{ComputeProfile, Metric};
 use obpam::harness::bench_util::time_median;
 use obpam::linalg::Matrix;
 use obpam::rng::Rng;
 use obpam::runtime::Pool;
 use obpam::telemetry::Counters;
+use std::sync::Mutex;
 
 fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
     Matrix::from_vec(r, c, (0..r * c).map(|_| rng.f32()).collect())
 }
 
-fn report(name: &str, med: f64, mad: f64, work: Option<(f64, &str)>) {
+/// One reported row, kept for the optional `--json` dump.
+struct Record {
+    section: &'static str,
+    name: String,
+    med_s: f64,
+    mad_s: f64,
+    rate: Option<(f64, &'static str)>,
+}
+
+static RECORDS: Mutex<Vec<Record>> = Mutex::new(Vec::new());
+
+fn report(
+    section: &'static str,
+    name: &str,
+    med: f64,
+    mad: f64,
+    work: Option<(f64, &'static str)>,
+) {
     match work {
         Some((units, unit_name)) => println!(
             "{name:<46} {:>9.3} ms ± {:>6.3}  ({:.2} {unit_name})",
             med * 1e3,
             mad * 1e3,
-            units / med
+            units / med.max(1e-12)
         ),
         None => println!("{name:<46} {:>9.3} ms ± {:>6.3}", med * 1e3, mad * 1e3),
+    }
+    obpam::sync_ext::lock_or_recover(&RECORDS).push(Record {
+        section,
+        name: name.to_string(),
+        med_s: med,
+        mad_s: mad,
+        rate: work.map(|(units, unit_name)| (units / med.max(1e-12), unit_name)),
+    });
+}
+
+/// Dump every recorded row as `BENCH_micro.json` (see README.md for the
+/// schema).  Names contain no quotes or backslashes, but escape anyway
+/// so the writer cannot emit invalid JSON.
+fn write_json(path: &str, cores: usize, smoke: bool) {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    let records = obpam::sync_ext::lock_or_recover(&RECORDS);
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"obpam-bench-micro/1\",\n");
+    out.push_str(&format!("  \"cores\": {cores},\n"));
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str("  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let (rate, unit) = match &r.rate {
+            Some((v, u)) => (format!("{v:.3}"), format!("\"{}\"", esc(u))),
+            None => ("null".to_string(), "null".to_string()),
+        };
+        out.push_str(&format!(
+            "    {{\"section\": \"{}\", \"name\": \"{}\", \"ms\": {:.6}, \"mad_ms\": {:.6}, \
+             \"rate\": {rate}, \"unit\": {unit}}}{}\n",
+            esc(r.section),
+            esc(&r.name),
+            r.med_s * 1e3,
+            r.mad_s * 1e3,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(path, out) {
+        Ok(()) => println!("\nwrote {} records to {path}", records.len()),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json = args.iter().any(|a| a == "--json");
     let mut rng = Rng::new(0xBEEF);
     let cores = Pool::auto().threads();
-    println!("== micro benches (median ± MAD; {cores} cores detected) ==\n");
+    println!(
+        "== micro benches (median ± MAD; {cores} cores detected{}) ==\n",
+        if smoke { "; --smoke shapes" } else { "" }
+    );
 
     // ---- native pairwise, paper-ish shapes, 1 thread vs all cores ------
-    for (n, m, p) in [(2_000, 512, 16), (2_000, 512, 128), (1_000, 512, 784)] {
+    let pairwise_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(200, 64, 16)]
+    } else {
+        &[(2_000, 512, 16), (2_000, 512, 128), (1_000, 512, 784)]
+    };
+    let (pw_warm, pw_iters) = if smoke { (0, 1) } else { (1, 5) };
+    for &(n, m, p) in pairwise_shapes {
         let x = rand_matrix(&mut rng, n, p);
         let b = rand_matrix(&mut rng, m, p);
         let gdps = (n * m) as f64 / 1e9;
         for threads in [1, cores] {
             let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
-            let (med, mad) = time_median(1, 5, || {
+            let (med, mad) = time_median(pw_warm, pw_iters, || {
                 std::hint::black_box(backend.pairwise(&x, &b).unwrap());
             });
             report(
+                "pairwise",
                 &format!("native pairwise l1 n={n} m={m} p={p} t={threads}"),
                 med,
                 mad,
@@ -68,210 +152,329 @@ fn main() {
         }
     }
 
-    // ---- swap gains: native loop, 1 thread vs all cores -----------------
-    let (n, m, k) = (4_000, 1_024, 100);
-    let d = rand_matrix(&mut rng, n, m);
-    let dn: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
-    let ds: Vec<f32> = dn.iter().map(|v| v + 0.3).collect();
-    let near: Vec<usize> = (0..m).map(|_| rng.below(k)).collect();
-    let w = vec![1.0f32; m];
-    for threads in [1, cores] {
-        let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
-        let (med, mad) = time_median(1, 5, || {
-            std::hint::black_box(backend.gains(&d, &dn, &ds, &near, k, &w).unwrap());
-        });
-        report(
-            &format!("native gains n={n} m={m} k={k} t={threads}"),
-            med,
-            mad,
-            Some(((n * m) as f64 / 1e9, "Gcell/s")),
-        );
-        if threads == cores {
-            break;
+    // ---- fused tile ops: pairwise+argmin single sweep vs rewalk ---------
+    // The one-sweep kernel reduces each row while its block tile is
+    // still cache-hot; the unfused composition materialises the n x m
+    // matrix and walks it again.  GB/s counts the streamed inputs plus
+    // the written matrix (4 bytes each); Gpair/s counts n*m distances.
+    {
+        let (n, m, p) = if smoke { (160, 48, 12) } else { (4_000, 512, 48) };
+        let x = rand_matrix(&mut rng, n, p);
+        let b = rand_matrix(&mut rng, m, p);
+        let gpairs = (n * m) as f64 / 1e9;
+        let gbytes = ((n * p + m * p + n * m) * 4) as f64 / 1e9;
+        let (warm, iters) = if smoke { (0, 1) } else { (1, 5) };
+        for metric in [Metric::L1, Metric::SqL2, Metric::L2, Metric::Chebyshev, Metric::Cosine] {
+            for profile in [ComputeProfile::Exact, ComputeProfile::Fast] {
+                for threads in [1, cores] {
+                    let backend = NativeBackend::with_pool(metric, Pool::new(threads))
+                        .with_profile(profile);
+                    let (t_fused, mad_f) = time_median(warm, iters, || {
+                        std::hint::black_box(backend.pairwise_argmin(&x, &b).unwrap());
+                    });
+                    report(
+                        "fused",
+                        &format!(
+                            "fused argmin {} {} t={threads}",
+                            metric.name(),
+                            profile.name()
+                        ),
+                        t_fused,
+                        mad_f,
+                        Some((gpairs, "Gpair/s")),
+                    );
+                    let (t_unfused, mad_u) = time_median(warm, iters, || {
+                        let d = backend.pairwise(&x, &b).unwrap();
+                        std::hint::black_box(backend.argmin_rows(&d).unwrap());
+                    });
+                    report(
+                        "fused",
+                        &format!(
+                            "unfused argmin {} {} t={threads}",
+                            metric.name(),
+                            profile.name()
+                        ),
+                        t_unfused,
+                        mad_u,
+                        Some((gpairs, "Gpair/s")),
+                    );
+                    println!(
+                        "  -> fused {:.2}x vs rewalk, {:.2} GB/s swept",
+                        t_unfused / t_fused.max(1e-12),
+                        gbytes / t_fused.max(1e-12)
+                    );
+                    if threads == cores {
+                        break;
+                    }
+                }
+            }
         }
     }
 
-    // ---- eager candidate scan: one full pass, 1 thread vs all cores -----
+    // ---- Fast (dot-product) vs Exact (diff-accumulate) profiles ---------
+    // Only the Euclidean metrics have a distinct Fast kernel; the rest
+    // run the identical code under either profile.
     {
-        let mut rng2 = Rng::new(1);
-        let med: Vec<usize> = rng2.sample_distinct(n, k);
-        let st0 = SwapState::init(&d, med, vec![1.0; m], n);
+        let (n, m, p) = if smoke { (160, 48, 12) } else { (4_000, 512, 128) };
+        let x = rand_matrix(&mut rng, n, p);
+        let b = rand_matrix(&mut rng, m, p);
+        let gpairs = (n * m) as f64 / 1e9;
+        let (warm, iters) = if smoke { (0, 1) } else { (1, 5) };
+        for metric in [Metric::SqL2, Metric::L2] {
+            let mut per_profile = [0.0f64; 2];
+            for (slot, profile) in [ComputeProfile::Exact, ComputeProfile::Fast]
+                .into_iter()
+                .enumerate()
+            {
+                let backend =
+                    NativeBackend::with_pool(metric, Pool::new(cores)).with_profile(profile);
+                let (med, mad) = time_median(warm, iters, || {
+                    std::hint::black_box(backend.pairwise(&x, &b).unwrap());
+                });
+                per_profile[slot] = med;
+                report(
+                    "profile",
+                    &format!("pairwise {} {} p={p} t={cores}", metric.name(), profile.name()),
+                    med,
+                    mad,
+                    Some((gpairs, "Gpair/s")),
+                );
+            }
+            println!(
+                "  -> fast {:.2}x vs exact on {}",
+                per_profile[0] / per_profile[1].max(1e-12),
+                metric.name()
+            );
+        }
+    }
+
+    if !smoke {
+        // ---- swap gains: native loop, 1 thread vs all cores -------------
+        let (n, m, k) = (4_000, 1_024, 100);
+        let d = rand_matrix(&mut rng, n, m);
+        let dn: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+        let ds: Vec<f32> = dn.iter().map(|v| v + 0.3).collect();
+        let near: Vec<usize> = (0..m).map(|_| rng.below(k)).collect();
+        let w = vec![1.0f32; m];
         for threads in [1, cores] {
-            let pool = Pool::new(threads);
-            let counters = Counters::default();
-            let (t_scan, mad) = time_median(1, 5, || {
-                // fresh state + rng per iteration so every pass scans the
-                // same candidate sequence (clone cost is shared by both
-                // thread counts)
-                let mut st = st0.clone();
-                let mut order_rng = Rng::new(42);
-                std::hint::black_box(engine::eager_loop_eps(
-                    &d,
-                    &mut st,
-                    1,
-                    0.0,
-                    &mut order_rng,
-                    &counters,
-                    &pool,
-                ));
+            let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
+            let (med, mad) = time_median(1, 5, || {
+                std::hint::black_box(backend.gains(&d, &dn, &ds, &near, k, &w).unwrap());
             });
             report(
-                &format!("eager scan pass n={n} m={m} k={k} t={threads}"),
-                t_scan,
+                "gains",
+                &format!("native gains n={n} m={m} k={k} t={threads}"),
+                med,
                 mad,
-                Some(((n * (m + k)) as f64 / 1e9, "Gop/s")),
+                Some(((n * m) as f64 / 1e9, "Gcell/s")),
             );
             if threads == cores {
                 break;
             }
         }
-    }
 
-    // ---- SwapState ops --------------------------------------------------
-    {
-        let mut rng2 = Rng::new(1);
-        let med: Vec<usize> = rng2.sample_distinct(n, k);
-        let mut st = SwapState::init(&d, med, vec![1.0; m], n);
-        let (t_eval, mad) = time_median(10, 50, || {
-            std::hint::black_box(st.eval_candidate(d.row(17)));
-        });
-        report(&format!("state eval_candidate m={m} k={k}"), t_eval, mad, None);
-        let mut cand = 0usize;
-        let (t_swap, mad) = time_median(2, 20, || {
-            while st.is_medoid(cand % n) {
-                cand += 1;
-            }
-            let slot = cand % k;
-            st.apply_swap(&d, slot, cand % n);
-            cand += 1;
-        });
-        report(&format!("state apply_swap m={m} k={k}"), t_swap, mad, None);
-    }
-
-    // ---- end-to-end OneBatchPAM, serial vs threaded ----------------------
-    {
-        let x = rand_matrix(&mut rng, 5_000, 32);
-        for threads in [1, cores] {
-            let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
-            let cfg = OneBatchConfig {
-                k: 20,
-                sampler: SamplerKind::Nniw,
-                seed: 3,
-                threads,
-                ..Default::default()
-            };
-            let (med, mad) = time_median(1, 3, || {
-                std::hint::black_box(one_batch_pam(&x, &cfg, &backend).unwrap());
-            });
-            report(&format!("one_batch_pam n=5000 p=32 k=20 t={threads}"), med, mad, None);
-            if threads == cores {
-                break;
+        // ---- eager candidate scan: one full pass, 1 thread vs all cores -
+        {
+            let mut rng2 = Rng::new(1);
+            let med: Vec<usize> = rng2.sample_distinct(n, k);
+            let st0 = SwapState::init(&d, med, vec![1.0; m], n);
+            for threads in [1, cores] {
+                let pool = Pool::new(threads);
+                let counters = Counters::default();
+                let (t_scan, mad) = time_median(1, 5, || {
+                    // fresh state + rng per iteration so every pass scans the
+                    // same candidate sequence (clone cost is shared by both
+                    // thread counts)
+                    let mut st = st0.clone();
+                    let mut order_rng = Rng::new(42);
+                    std::hint::black_box(engine::eager_loop_eps(
+                        &d,
+                        &mut st,
+                        1,
+                        0.0,
+                        &mut order_rng,
+                        &counters,
+                        &pool,
+                    ));
+                });
+                report(
+                    "eager",
+                    &format!("eager scan pass n={n} m={m} k={k} t={threads}"),
+                    t_scan,
+                    mad,
+                    Some(((n * (m + k)) as f64 / 1e9, "Gop/s")),
+                );
+                if threads == cores {
+                    break;
+                }
             }
         }
-    }
 
-    // ---- per-region dispatch: persistent pool vs scoped spawn -----------
-    // A deliberately tiny region (the worst case for dispatch overhead):
-    // the work per range is microseconds, so the measured time is mostly
-    // the cost of getting the region onto the workers and back.
-    {
-        let rows = 16 * 1024;
-        let data: Vec<f32> = (0..rows).map(|i| (i % 97) as f32).collect();
-        let data = &data;
-        let threads = cores.max(2);
-        let pool = Pool::new(threads);
-        let (t_persist, mad_p) = time_median(50, 200, || {
-            let parts = pool.map_ranges(rows, |r| data[r].iter().sum::<f32>());
-            std::hint::black_box(parts);
-        });
-        report(
-            &format!("region dispatch: persistent pool t={threads}"),
-            t_persist,
-            mad_p,
-            None,
-        );
-        // the pre-persistent-pool shape: scoped spawn + join per region
-        let ranges = pool.ranges(rows);
-        let (t_scoped, mad_s) = time_median(50, 200, || {
-            let parts: Vec<f32> = std::thread::scope(|s| {
-                let handles: Vec<_> = ranges
-                    .iter()
-                    .cloned()
-                    .map(|r| s.spawn(move || data[r].iter().sum::<f32>()))
-                    .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
+        // ---- SwapState ops ----------------------------------------------
+        {
+            let mut rng2 = Rng::new(1);
+            let med: Vec<usize> = rng2.sample_distinct(n, k);
+            let mut st = SwapState::init(&d, med, vec![1.0; m], n);
+            let (t_eval, mad) = time_median(10, 50, || {
+                std::hint::black_box(st.eval_candidate(d.row(17)));
             });
-            std::hint::black_box(parts);
-        });
-        report(
-            &format!("region dispatch: scoped spawn t={threads}"),
-            t_scoped,
-            mad_s,
-            None,
-        );
-        println!(
-            "  -> per-region dispatch {:.1} us (persistent) vs {:.1} us (scoped), {:.2}x",
-            t_persist * 1e6,
-            t_scoped * 1e6,
-            t_scoped / t_persist.max(1e-12)
-        );
-    }
+            report("state", &format!("state eval_candidate m={m} k={k}"), t_eval, mad, None);
+            let mut cand = 0usize;
+            let (t_swap, mad) = time_median(2, 20, || {
+                while st.is_medoid(cand % n) {
+                    cand += 1;
+                }
+                let slot = cand % k;
+                st.apply_swap(&d, slot, cand % n);
+                cand += 1;
+            });
+            report("state", &format!("state apply_swap m={m} k={k}"), t_swap, mad, None);
+        }
 
-    // ---- per-job pool build vs server-cached pool dispatch ---------------
-    // The v5 server hands every job a clone of one persistent pool per
-    // width (server::PoolCache) instead of letting each job build its
-    // own.  Measure the difference for a small job-sized region: the
-    // per-job shape pays `threads - 1` thread spawns + joins, the
-    // cached shape pays a map lookup + clone + wakeup.
-    {
-        let rows = 16 * 1024;
-        let data: Vec<f32> = (0..rows).map(|i| (i % 89) as f32).collect();
-        let data = &data;
-        let threads = cores.max(2);
-        let (t_build, mad_b) = time_median(20, 100, || {
-            // what each served job paid before the cache: build, use, drop
+        // ---- end-to-end OneBatchPAM, serial vs threaded ------------------
+        {
+            let x = rand_matrix(&mut rng, 5_000, 32);
+            for threads in [1, cores] {
+                let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
+                let cfg = OneBatchConfig {
+                    k: 20,
+                    sampler: SamplerKind::Nniw,
+                    seed: 3,
+                    threads,
+                    ..Default::default()
+                };
+                let (med, mad) = time_median(1, 3, || {
+                    std::hint::black_box(one_batch_pam(&x, &cfg, &backend).unwrap());
+                });
+                report(
+                    "e2e",
+                    &format!("one_batch_pam n=5000 p=32 k=20 t={threads}"),
+                    med,
+                    mad,
+                    None,
+                );
+                if threads == cores {
+                    break;
+                }
+            }
+        }
+
+        // ---- per-region dispatch: persistent pool vs scoped spawn --------
+        // A deliberately tiny region (the worst case for dispatch overhead):
+        // the work per range is microseconds, so the measured time is mostly
+        // the cost of getting the region onto the workers and back.
+        {
+            let rows = 16 * 1024;
+            let data: Vec<f32> = (0..rows).map(|i| (i % 97) as f32).collect();
+            let data = &data;
+            let threads = cores.max(2);
             let pool = Pool::new(threads);
-            let parts = pool.map_ranges(rows, |r| data[r].iter().sum::<f32>());
-            std::hint::black_box(parts);
-        });
-        report(
-            &format!("job dispatch: per-job pool build t={threads}"),
-            t_build,
-            mad_b,
-            None,
-        );
-        let cache = obpam::server::PoolCache::new();
-        let _warm = cache.get(threads); // first job pays the build once
-        let (t_cached, mad_c) = time_median(20, 100, || {
-            let pool = cache.get(threads);
-            let parts = pool.map_ranges(rows, |r| data[r].iter().sum::<f32>());
-            std::hint::black_box(parts);
-        });
-        report(
-            &format!("job dispatch: cached-pool reuse t={threads}"),
-            t_cached,
-            mad_c,
-            None,
-        );
-        println!(
-            "  -> per-job dispatch {:.1} us (cached) vs {:.1} us (build+drop), {:.2}x",
-            t_cached * 1e6,
-            t_build * 1e6,
-            t_build / t_cached.max(1e-12)
-        );
+            let (t_persist, mad_p) = time_median(50, 200, || {
+                let parts = pool.map_ranges(rows, |r| data[r].iter().sum::<f32>());
+                std::hint::black_box(parts);
+            });
+            report(
+                "dispatch",
+                &format!("region dispatch: persistent pool t={threads}"),
+                t_persist,
+                mad_p,
+                None,
+            );
+            // the pre-persistent-pool shape: scoped spawn + join per region
+            let ranges = pool.ranges(rows);
+            let (t_scoped, mad_s) = time_median(50, 200, || {
+                let parts: Vec<f32> = std::thread::scope(|s| {
+                    let handles: Vec<_> = ranges
+                        .iter()
+                        .cloned()
+                        .map(|r| s.spawn(move || data[r].iter().sum::<f32>()))
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                std::hint::black_box(parts);
+            });
+            report(
+                "dispatch",
+                &format!("region dispatch: scoped spawn t={threads}"),
+                t_scoped,
+                mad_s,
+                None,
+            );
+            println!(
+                "  -> per-region dispatch {:.1} us (persistent) vs {:.1} us (scoped), {:.2}x",
+                t_persist * 1e6,
+                t_scoped * 1e6,
+                t_scoped / t_persist.max(1e-12)
+            );
+        }
+
+        // ---- per-job pool build vs server-cached pool dispatch -----------
+        // The v5 server hands every job a clone of one persistent pool per
+        // width (server::PoolCache) instead of letting each job build its
+        // own.  Measure the difference for a small job-sized region: the
+        // per-job shape pays `threads - 1` thread spawns + joins, the
+        // cached shape pays a map lookup + clone + wakeup.
+        {
+            let rows = 16 * 1024;
+            let data: Vec<f32> = (0..rows).map(|i| (i % 89) as f32).collect();
+            let data = &data;
+            let threads = cores.max(2);
+            let (t_build, mad_b) = time_median(20, 100, || {
+                // what each served job paid before the cache: build, use, drop
+                let pool = Pool::new(threads);
+                let parts = pool.map_ranges(rows, |r| data[r].iter().sum::<f32>());
+                std::hint::black_box(parts);
+            });
+            report(
+                "dispatch",
+                &format!("job dispatch: per-job pool build t={threads}"),
+                t_build,
+                mad_b,
+                None,
+            );
+            let cache = obpam::server::PoolCache::new();
+            let _warm = cache.get(threads); // first job pays the build once
+            let (t_cached, mad_c) = time_median(20, 100, || {
+                let pool = cache.get(threads);
+                let parts = pool.map_ranges(rows, |r| data[r].iter().sum::<f32>());
+                std::hint::black_box(parts);
+            });
+            report(
+                "dispatch",
+                &format!("job dispatch: cached-pool reuse t={threads}"),
+                t_cached,
+                mad_c,
+                None,
+            );
+            println!(
+                "  -> per-job dispatch {:.1} us (cached) vs {:.1} us (build+drop), {:.2}x",
+                t_cached * 1e6,
+                t_build * 1e6,
+                t_build / t_cached.max(1e-12)
+            );
+        }
+
+        // ---- XLA artifact paths ------------------------------------------
+        #[cfg(feature = "xla")]
+        xla_section(&mut rng, &d, &dn, &ds, &near, k, &w);
+        #[cfg(not(feature = "xla"))]
+        println!("\n(xla paths skipped: built without the `xla` feature)");
     }
 
-    // ---- v6 model serving: assign QPS over TCP ---------------------------
+    // ---- v7 model serving: assign QPS over TCP ---------------------------
     // The fitted-model read path: one solve is promoted once, then the
     // server answers nearest-medoid lookups from the k x p medoid rows
-    // alone.  Each request pays a fresh TCP connect + one-line dispatch,
-    // so this measures the serving wire path, not the argmin (which is
+    // alone, reusing the per-model scratch (no per-request matrix).
+    // Each request pays a fresh TCP connect + one-line dispatch, so this
+    // measures the serving wire path, not the argmin (which is
     // nanoseconds at k=5).  One client alone is latency-bound; the
     // concurrent shape shows how far connection-per-request scales.
     {
         use obpam::server::{request, serve, ServerConfig};
         let h = serve(ServerConfig { workers: 1, queue_cap: 64, ..Default::default() }).unwrap();
-        let sub = request(h.addr, "submit dataset=blobs_2000_8_5 k=5 seed=1").unwrap();
+        let dataset = if smoke { "blobs_500_4_3" } else { "blobs_2000_8_5" };
+        let point = if smoke { "0.1,0.2,0.3,0.4" } else { "0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8" };
+        let sub = request(h.addr, &format!("submit dataset={dataset} k=5 seed=1")).unwrap();
         let id = sub
             .split_whitespace()
             .find_map(|t| t.strip_prefix("job="))
@@ -281,23 +484,29 @@ fn main() {
         assert!(done.starts_with("ok "), "{done}");
         let p = request(h.addr, &format!("promote job={id} name=bench")).unwrap();
         assert!(p.starts_with("ok "), "{p}");
-        let line = "assign model=bench point=0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8";
-        let reqs = 200usize;
-        let (t_one, mad_one) = time_median(1, 3, || {
-            for _ in 0..reqs {
-                let r = request(h.addr, line).unwrap();
-                debug_assert!(r.starts_with("ok "), "{r}");
-                std::hint::black_box(r);
-            }
-        });
-        report(
-            &format!("assign qps: 1 connection, {reqs} reqs"),
-            t_one,
-            mad_one,
-            Some((reqs as f64, "req/s")),
-        );
+        let reqs = if smoke { 20usize } else { 200 };
+        let (qps_warm, qps_iters) = if smoke { (0, 1) } else { (1, 3) };
+        for profile in ["exact", "fast"] {
+            let line = format!("assign model=bench profile={profile} point={point}");
+            let (t_one, mad_one) = time_median(qps_warm, qps_iters, || {
+                for _ in 0..reqs {
+                    let r = request(h.addr, &line).unwrap();
+                    debug_assert!(r.starts_with("ok "), "{r}");
+                    std::hint::black_box(r);
+                }
+            });
+            report(
+                "serving",
+                &format!("assign qps: 1 conn, {reqs} reqs, {profile}"),
+                t_one,
+                mad_one,
+                Some((reqs as f64, "req/s")),
+            );
+        }
         let conns = cores.clamp(2, 8);
-        let (t_many, mad_many) = time_median(1, 3, || {
+        let line = format!("assign model=bench point={point}");
+        let line = line.as_str();
+        let (t_many, mad_many) = time_median(qps_warm, qps_iters, || {
             std::thread::scope(|s| {
                 for _ in 0..conns {
                     s.spawn(|| {
@@ -311,6 +520,7 @@ fn main() {
             });
         });
         report(
+            "serving",
             &format!("assign qps: {conns} connections, {reqs} reqs each"),
             t_many,
             mad_many,
@@ -319,11 +529,9 @@ fn main() {
         h.shutdown();
     }
 
-    // ---- XLA artifact paths ---------------------------------------------
-    #[cfg(feature = "xla")]
-    xla_section(&mut rng, &d, &dn, &ds, &near, k, &w);
-    #[cfg(not(feature = "xla"))]
-    println!("\n(xla paths skipped: built without the `xla` feature)");
+    if json {
+        write_json("BENCH_micro.json", cores, smoke);
+    }
 }
 
 #[cfg(feature = "xla")]
@@ -356,6 +564,7 @@ fn xla_section(
                     std::hint::black_box(backend.pairwise(&x, &b).unwrap());
                 });
                 report(
+                    "xla",
                     &format!("{} pairwise l1 n={xn} m={xm} p={xp}", backend.name()),
                     med,
                     mad,
@@ -367,6 +576,7 @@ fn xla_section(
                 std::hint::black_box(backend.gains(d, dn, ds, near, k, w).unwrap());
             });
             report(
+                "xla",
                 &format!("xla gains (pallas matmul) n={n} m={m} k={k}"),
                 med,
                 mad,

@@ -13,7 +13,7 @@ pub use native::NativeBackend;
 #[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
 
-use crate::dissim::Metric;
+use crate::dissim::{ComputeProfile, Metric};
 use crate::linalg::Matrix;
 use crate::telemetry::Counters;
 use anyhow::Result;
@@ -30,11 +30,35 @@ pub trait ComputeBackend {
     /// Metric this backend evaluates.
     fn metric(&self) -> Metric;
 
+    /// Kernel profile this backend computes with ([`ComputeProfile::Exact`]
+    /// unless the backend opts into the fast path).
+    fn profile(&self) -> ComputeProfile {
+        ComputeProfile::Exact
+    }
+
     /// Telemetry counters (dissim computations etc.).
     fn counters(&self) -> Arc<Counters>;
 
     /// `rows(x) x rows(b)` distance matrix.
     fn pairwise(&self, x: &Matrix, b: &Matrix) -> Result<Matrix>;
+
+    /// Fused `pairwise` + per-row argmin in one sweep: the distance
+    /// matrix and `(argmin, min)` per row, reduced while each output
+    /// row is cache-hot.  MUST be bit-identical to the default
+    /// composition at any thread count (rust/tests/parallel_equivalence.rs).
+    fn pairwise_argmin(&self, x: &Matrix, b: &Matrix) -> Result<(Matrix, Vec<usize>, Vec<f32>)> {
+        let d = self.pairwise(x, b)?;
+        let (idx, val) = self.argmin_rows(&d)?;
+        Ok((d, idx, val))
+    }
+
+    /// Fused `pairwise` + per-row top-2 in one sweep (`rows(b) >= 2`).
+    /// Same bit-identity obligation as [`ComputeBackend::pairwise_argmin`].
+    fn pairwise_top2(&self, x: &Matrix, b: &Matrix) -> Result<(Matrix, Top2)> {
+        let d = self.pairwise(x, b)?;
+        let t = self.top2(&d)?;
+        Ok((d, t))
+    }
 
     /// Row-wise two smallest over an `(n, k)` matrix (k >= 2).
     fn top2(&self, d: &Matrix) -> Result<Top2>;
@@ -56,10 +80,12 @@ pub trait ComputeBackend {
 }
 
 /// Nearest-medoid assignment: for every row of `points`, the index of
-/// the closest row of `medoids` and the distance to it — one `pairwise`
-/// tile plus one `argmin_rows` reduction, `O(k p)` per point with no
-/// dataset resident.  This is the serving read path behind the server's
-/// `assign` wire verb (a model holds only its `k x p` medoid rows).
+/// the closest row of `medoids` and the distance to it — one fused
+/// `pairwise_argmin` sweep, `O(k p)` per point with no dataset
+/// resident and no post-hoc rewalk of the `q x k` matrix.  This is the
+/// offline form of the server's `assign` wire verb (a model holds only
+/// its `k x p` medoid rows); the online form is fully matrix-free
+/// (`server::models::AssignScratch`).
 pub fn assign(
     backend: &dyn ComputeBackend,
     points: &Matrix,
@@ -71,13 +97,14 @@ pub fn assign(
         points.cols,
         medoids.cols
     );
-    let d = backend.pairwise(points, medoids)?;
-    backend.argmin_rows(&d)
+    let (_, idx, val) = backend.pairwise_argmin(points, medoids)?;
+    Ok((idx, val))
 }
 
 /// [`assign`] with the second-nearest medoid as well (`top2=1` on the
-/// wire): `(near, dnear, second, dsecond)` per point.  Needs `k >= 2`
-/// medoid rows — the same bound the `top2` tile op requires.
+/// wire): `(near, dnear, second, dsecond)` per point, one fused
+/// `pairwise_top2` sweep.  Needs `k >= 2` medoid rows — the same bound
+/// the `top2` tile op requires.
 pub fn assign_top2(backend: &dyn ComputeBackend, points: &Matrix, medoids: &Matrix) -> Result<Top2> {
     anyhow::ensure!(
         points.cols == medoids.cols,
@@ -86,8 +113,8 @@ pub fn assign_top2(backend: &dyn ComputeBackend, points: &Matrix, medoids: &Matr
         medoids.cols
     );
     anyhow::ensure!(medoids.rows >= 2, "top2 assignment needs >= 2 medoids (got {})", medoids.rows);
-    let d = backend.pairwise(points, medoids)?;
-    backend.top2(&d)
+    let (_, t) = backend.pairwise_top2(points, medoids)?;
+    Ok(t)
 }
 
 /// Candidate-independent removal-loss term (gain form):
@@ -126,6 +153,62 @@ mod tests {
         assert_eq!(dnear, dists);
         assert_eq!(sec, vec![1, 0, 1]);
         assert_eq!(dsec, vec![19.0, 18.0, 12.0]);
+    }
+
+    /// Delegates the primitive tile ops to native but keeps the trait's
+    /// *default* fused impls — pins that the default composition agrees
+    /// with the native fused overrides bit-for-bit.
+    struct UnfusedShim(NativeBackend);
+
+    impl ComputeBackend for UnfusedShim {
+        fn name(&self) -> &'static str {
+            "unfused-shim"
+        }
+        fn metric(&self) -> Metric {
+            self.0.metric()
+        }
+        fn counters(&self) -> Arc<Counters> {
+            self.0.counters()
+        }
+        fn pairwise(&self, x: &Matrix, b: &Matrix) -> Result<Matrix> {
+            self.0.pairwise(x, b)
+        }
+        fn top2(&self, d: &Matrix) -> Result<Top2> {
+            self.0.top2(d)
+        }
+        fn gains(
+            &self,
+            d: &Matrix,
+            dnear: &[f32],
+            dsec: &[f32],
+            near: &[usize],
+            k: usize,
+            w: &[f32],
+        ) -> Result<(Vec<f32>, Matrix)> {
+            self.0.gains(d, dnear, dsec, near, k, w)
+        }
+        fn argmin_rows(&self, d: &Matrix) -> Result<(Vec<usize>, Vec<f32>)> {
+            self.0.argmin_rows(d)
+        }
+    }
+
+    #[test]
+    fn fused_defaults_agree_with_native_overrides() {
+        let mut rng = crate::rng::Rng::new(41);
+        let points = Matrix::from_vec(37, 6, (0..37 * 6).map(|_| rng.normal() as f32).collect());
+        let medoids = Matrix::from_vec(9, 6, (0..9 * 6).map(|_| rng.normal() as f32).collect());
+        for metric in [Metric::L1, Metric::L2, Metric::SqL2, Metric::Chebyshev, Metric::Cosine] {
+            let fused = NativeBackend::new(metric);
+            let shim = UnfusedShim(NativeBackend::new(metric));
+            let (da, ia, va) = fused.pairwise_argmin(&points, &medoids).unwrap();
+            let (db, ib, vb) = shim.pairwise_argmin(&points, &medoids).unwrap();
+            assert_eq!(da.data, db.data, "{metric:?}");
+            assert_eq!((ia, va), (ib, vb), "{metric:?}");
+            let (ta, (n1, d1, s1, e1)) = fused.pairwise_top2(&points, &medoids).unwrap();
+            let (tb, (n2, d2, s2, e2)) = shim.pairwise_top2(&points, &medoids).unwrap();
+            assert_eq!(ta.data, tb.data, "{metric:?}");
+            assert_eq!((n1, d1, s1, e1), (n2, d2, s2, e2), "{metric:?}");
+        }
     }
 
     #[test]

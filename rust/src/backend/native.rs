@@ -9,7 +9,10 @@
 //! chunk stitching preserves row order.
 
 use super::{ComputeBackend, Top2};
-use crate::dissim::{cross_matrix_pool, DissimCounter, Metric};
+use crate::dissim::{
+    cross_argmin_pool, cross_matrix_pool_profiled, cross_top2_pool, ComputeProfile, DissimCounter,
+    Metric,
+};
 use crate::linalg::{top2_min, Matrix};
 use crate::runtime::Pool;
 use crate::telemetry::Counters;
@@ -21,18 +24,23 @@ use std::sync::Arc;
 pub struct NativeBackend {
     dissim: DissimCounter,
     pool: Pool,
+    profile: ComputeProfile,
 }
 
 impl NativeBackend {
     /// Serial backend for `metric` with fresh counters (the pre-parallel
     /// default; use [`NativeBackend::with_pool`] to enable threading).
     pub fn new(metric: Metric) -> Self {
-        NativeBackend { dissim: DissimCounter::new(metric), pool: Pool::serial() }
+        NativeBackend {
+            dissim: DissimCounter::new(metric),
+            pool: Pool::serial(),
+            profile: ComputeProfile::Exact,
+        }
     }
 
     /// Backend for `metric` running its tile ops on `pool`.
     pub fn with_pool(metric: Metric, pool: Pool) -> Self {
-        NativeBackend { dissim: DissimCounter::new(metric), pool }
+        NativeBackend { dissim: DissimCounter::new(metric), pool, profile: ComputeProfile::Exact }
     }
 
     /// Serial backend sharing existing counters.
@@ -40,12 +48,24 @@ impl NativeBackend {
         NativeBackend {
             dissim: DissimCounter::with_counters(metric, counters),
             pool: Pool::serial(),
+            profile: ComputeProfile::Exact,
         }
     }
 
     /// Backend sharing existing counters and running on `pool`.
     pub fn with_counters_and_pool(metric: Metric, counters: Arc<Counters>, pool: Pool) -> Self {
-        NativeBackend { dissim: DissimCounter::with_counters(metric, counters), pool }
+        NativeBackend {
+            dissim: DissimCounter::with_counters(metric, counters),
+            pool,
+            profile: ComputeProfile::Exact,
+        }
+    }
+
+    /// Builder: switch this backend to `profile` (kernels stay
+    /// bit-identical at any thread count *within* a profile).
+    pub fn with_profile(mut self, profile: ComputeProfile) -> Self {
+        self.profile = profile;
+        self
     }
 
     /// The underlying counted dissimilarity (for point-level algorithms).
@@ -68,12 +88,26 @@ impl ComputeBackend for NativeBackend {
         self.dissim.metric
     }
 
+    fn profile(&self) -> ComputeProfile {
+        self.profile
+    }
+
     fn counters(&self) -> Arc<Counters> {
         self.dissim.counters()
     }
 
     fn pairwise(&self, x: &Matrix, b: &Matrix) -> Result<Matrix> {
-        Ok(cross_matrix_pool(&self.dissim, x, b, &self.pool))
+        Ok(cross_matrix_pool_profiled(&self.dissim, x, b, &self.pool, self.profile))
+    }
+
+    fn pairwise_argmin(&self, x: &Matrix, b: &Matrix) -> Result<(Matrix, Vec<usize>, Vec<f32>)> {
+        Ok(cross_argmin_pool(&self.dissim, x, b, &self.pool, self.profile))
+    }
+
+    fn pairwise_top2(&self, x: &Matrix, b: &Matrix) -> Result<(Matrix, Top2)> {
+        let (d, near, dnear, sec, dsec) =
+            cross_top2_pool(&self.dissim, x, b, &self.pool, self.profile);
+        Ok((d, (near, dnear, sec, dsec)))
     }
 
     fn top2(&self, d: &Matrix) -> Result<Top2> {
@@ -278,6 +312,9 @@ mod tests {
         let (ni, nd, si, sd) = serial.top2(&dmk).unwrap();
         let (am, av) = serial.argmin_rows(&d).unwrap();
         let (sh, pm) = serial.gains(&d, &dn, &ds, &near, k, &w).unwrap();
+        let batch = rand_matrix(&mut rng, 9, m);
+        let (fm, fi, fv) = serial.pairwise_argmin(&d, &batch).unwrap();
+        let (tm, (t1, td1, t2, td2)) = serial.pairwise_top2(&d, &batch).unwrap();
         for threads in [2, 3, 4] {
             let par = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
             let (ni2, nd2, si2, sd2) = par.top2(&dmk).unwrap();
@@ -287,6 +324,91 @@ mod tests {
             let (sh2, pm2) = par.gains(&d, &dn, &ds, &near, k, &w).unwrap();
             assert_eq!(sh2, sh, "shared gains differ at {threads} threads");
             assert_eq!(pm2.data, pm.data, "permedoid gains differ at {threads} threads");
+            let (fm2, fi2, fv2) = par.pairwise_argmin(&d, &batch).unwrap();
+            assert_eq!(fm2.data, fm.data, "fused argmin matrix differs at {threads} threads");
+            assert_eq!((fi2, fv2), (fi.clone(), fv.clone()));
+            let (tm2, (u1, ud1, u2, ud2)) = par.pairwise_top2(&d, &batch).unwrap();
+            assert_eq!(tm2.data, tm.data, "fused top2 matrix differs at {threads} threads");
+            assert_eq!(
+                (u1, ud1, u2, ud2),
+                (t1.clone(), td1.clone(), t2.clone(), td2.clone())
+            );
         }
+    }
+
+    /// Property: fused ops ≡ `pairwise` ∘ `argmin_rows`/`top2` for every
+    /// metric, both profiles, degenerate shapes (m<8 fallback, m=1/2,
+    /// p=1), and mixed thread counts — the trait contract, randomized.
+    #[test]
+    fn prop_fused_equals_unfused_composition() {
+        let metrics =
+            [Metric::L1, Metric::L2, Metric::SqL2, Metric::Chebyshev, Metric::Cosine];
+        crate::proptest::run_cases(48, |rng| {
+            let metric = metrics[rng.below(metrics.len())];
+            let profile =
+                if rng.below(2) == 0 { ComputeProfile::Exact } else { ComputeProfile::Fast };
+            let threads = [1, 2, 4][rng.below(3)];
+            let p = 1 + rng.below(9);
+            let n = 1 + rng.below(40);
+            // bias toward the degenerate small-batch path half the time
+            let m = if rng.below(2) == 0 { 1 + rng.below(6) } else { 8 + rng.below(70) };
+            let x = rand_matrix(rng, n, p);
+            let b = rand_matrix(rng, m, p);
+            let backend =
+                NativeBackend::with_pool(metric, Pool::new(threads)).with_profile(profile);
+
+            let want = backend.pairwise(&x, &b).unwrap();
+            let (wi, wv) = backend.argmin_rows(&want).unwrap();
+            let (got, gi, gv) = backend.pairwise_argmin(&x, &b).unwrap();
+            assert_eq!(got.data, want.data, "{metric:?} {profile:?} n={n} m={m} p={p}");
+            assert_eq!(gi, wi);
+            assert_eq!(gv, wv);
+
+            if m >= 2 {
+                let (wn, wdn, ws, wds) = backend.top2(&want).unwrap();
+                let (got2, (gn, gdn, gs, gds)) = backend.pairwise_top2(&x, &b).unwrap();
+                assert_eq!(got2.data, want.data);
+                assert_eq!((gn, gdn, gs, gds), (wn, wdn, ws, wds));
+            }
+        });
+    }
+
+    /// Property: `Fast` agrees with `Exact` within the cancellation-scaled
+    /// tolerance on SqL2/L2 and is bit-identical on every other metric.
+    #[test]
+    fn prop_fast_profile_tolerance() {
+        let metrics =
+            [Metric::L1, Metric::L2, Metric::SqL2, Metric::Chebyshev, Metric::Cosine];
+        crate::proptest::run_cases(32, |rng| {
+            let metric = metrics[rng.below(metrics.len())];
+            let p = 1 + rng.below(12);
+            let n = 1 + rng.below(30);
+            let m = 8 + rng.below(80);
+            let x = rand_matrix(rng, n, p);
+            let b = rand_matrix(rng, m, p);
+            let exact = NativeBackend::new(metric).pairwise(&x, &b).unwrap();
+            let fast = NativeBackend::new(metric)
+                .with_profile(ComputeProfile::Fast)
+                .pairwise(&x, &b)
+                .unwrap();
+            if !matches!(metric, Metric::SqL2 | Metric::L2) {
+                assert_eq!(exact.data, fast.data, "{metric:?} must ignore the profile");
+                return;
+            }
+            for i in 0..n {
+                let xn: f32 = x.row(i).iter().map(|v| v * v).sum();
+                for j in 0..m {
+                    let bn: f32 = b.row(j).iter().map(|v| v * v).sum();
+                    let scale = 1.0 + xn + bn;
+                    let tol = if metric == Metric::L2 { scale.sqrt() } else { scale };
+                    assert!(
+                        (fast.get(i, j) - exact.get(i, j)).abs() <= 1e-4 * tol,
+                        "{metric:?} ({i},{j}): fast={} exact={}",
+                        fast.get(i, j),
+                        exact.get(i, j)
+                    );
+                }
+            }
+        });
     }
 }

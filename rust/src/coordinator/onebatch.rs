@@ -9,7 +9,7 @@ use super::sampler::{self, Batch, SamplerKind};
 use super::state::SwapState;
 use super::KMedoidsResult;
 use crate::backend::ComputeBackend;
-use crate::dissim::DissimCounter;
+use crate::dissim::{ComputeProfile, DissimCounter};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 use crate::runtime::Pool;
@@ -77,6 +77,12 @@ pub struct OneBatchConfig {
     /// `threads`-wide pool per run).  Serving surfaces pass their
     /// cached pool so repeated jobs reuse parked workers.
     pub pool: Option<Pool>,
+    /// Kernel profile this run expects from its backend (`Exact` keeps
+    /// the paper-reproduction grid bit-identical; `Fast` is the
+    /// serving/CLI default).  Distances are computed by the backend, so
+    /// this must agree with [`crate::backend::ComputeBackend::profile`]
+    /// — [`crate::solver::solve`] enforces the agreement.
+    pub profile: ComputeProfile,
 }
 
 impl Default for OneBatchConfig {
@@ -92,6 +98,7 @@ impl Default for OneBatchConfig {
             threads: 1,
             cancel: CancelToken::none(),
             pool: None,
+            profile: ComputeProfile::Exact,
         }
     }
 }
@@ -105,6 +112,11 @@ pub fn one_batch_pam(
     let n = x.rows;
     assert!(cfg.k >= 2 && cfg.k < n, "need 2 <= k < n");
     let timer = Timer::start();
+    debug_assert_eq!(
+        cfg.profile,
+        backend.profile(),
+        "config profile must match the backend that computes the distances"
+    );
     let counters = backend.counters();
     let dissim0 = counters.dissim();
     let swaps0 = counters.swaps();
@@ -118,21 +130,37 @@ pub fn one_batch_pam(
     let batch: Batch = sampler::sample(cfg.sampler, x, m, &counted, &mut rng);
     let b = x.select_rows(&batch.indices);
 
-    // The single O(n m p) distance computation of the method.
-    let mut d = backend.pairwise(x, &b)?;
-    if batch.mask_self {
-        sampler::mask_self_distances(&mut d, &batch);
-    }
-    let mut w = batch.weights.clone();
-    if batch.want_nniw {
+    // The single O(n m p) distance computation of the method.  When the
+    // batch wants NNIW weights and no self-masking, the per-row argmin
+    // comes out of the same fused sweep (each output row reduced while
+    // cache-hot) instead of a second walk over the n x m matrix; the
+    // fused op is bit-identical to pairwise + argmin_rows, so the swap
+    // sequence is unchanged.  Self-masking batches (Debias) must mask
+    // *before* any argmin, so they keep the unfused path.
+    let (d, w) = if batch.want_nniw && !batch.mask_self {
+        let (d, idx, _) = backend.pairwise_argmin(x, &b)?;
         // NNIW reuses D: w_j = #rows whose nearest batch column is j.
-        let (idx, _) = backend.argmin_rows(&d)?;
         let mut counts = vec![0.0f32; d.cols];
         for &j in &idx {
             counts[j] += 1.0;
         }
-        w = counts;
-    }
+        (d, counts)
+    } else {
+        let mut d = backend.pairwise(x, &b)?;
+        if batch.mask_self {
+            sampler::mask_self_distances(&mut d, &batch);
+        }
+        let mut w = batch.weights.clone();
+        if batch.want_nniw {
+            let (idx, _) = backend.argmin_rows(&d)?;
+            let mut counts = vec![0.0f32; d.cols];
+            for &j in &idx {
+                counts[j] += 1.0;
+            }
+            w = counts;
+        }
+        (d, w)
+    };
 
     // --- Random init + swap search (Algorithm 1, lines 7-8) ------------
     let med = rng.sample_distinct(n, cfg.k);
@@ -226,6 +254,7 @@ impl crate::solver::Solver for OneBatchSolver {
             threads: spec.threads,
             cancel: spec.cancel.clone(),
             pool: spec.pool.clone(),
+            profile: spec.profile,
         };
         one_batch_pam(x, &cfg, backend)
     }

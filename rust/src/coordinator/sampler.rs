@@ -121,13 +121,11 @@ pub fn sample(kind: SamplerKind, x: &Matrix, m: usize, d: &DissimCounter, rng: &
             for &j in &chosen {
                 in_batch[j] = true;
             }
-            for i in 0..n {
-                for &j in &chosen {
-                    let v = d.eval(x.row(i), x.row(j));
-                    if v < dmin[i] {
-                        dmin[i] = v;
-                    }
-                }
+            // per-seed-point min sweeps: same evaluations as an i-outer
+            // double loop (min over a set is order-independent under
+            // strict `<`), but each pass streams x once
+            for &j in &chosen {
+                d.min_into_rows(x, x.row(j), &mut dmin);
             }
             while chosen.len() < m {
                 let weights: Vec<f64> = dmin
@@ -141,12 +139,7 @@ pub fn sample(kind: SamplerKind, x: &Matrix, m: usize, d: &DissimCounter, rng: &
                 }
                 in_batch[c] = true;
                 chosen.push(c);
-                for i in 0..n {
-                    let v = d.eval(x.row(i), x.row(c));
-                    if v < dmin[i] {
-                        dmin[i] = v;
-                    }
-                }
+                d.min_into_rows(x, x.row(c), &mut dmin);
             }
             let mlen = chosen.len();
             Batch { indices: chosen, weights: vec![1.0; mlen], mask_self: false, want_nniw: true }
@@ -163,10 +156,13 @@ pub fn sample(kind: SamplerKind, x: &Matrix, m: usize, d: &DissimCounter, rng: &
             for v in &mut mean {
                 *v /= n as f32;
             }
-            // q(x) = 1/(2n) + d(x, mean)^2 / (2 * sum)
-            let d2: Vec<f64> = (0..n)
-                .map(|i| {
-                    let v = d.eval(x.row(i), &mean) as f64;
+            // q(x) = 1/(2n) + d(x, mean)^2 / (2 * sum); one batched
+            // point-to-rows pass (n evaluations, same count as before)
+            let d2: Vec<f64> = d
+                .rows_to_point(x, &mean)
+                .into_iter()
+                .map(|v| {
+                    let v = v as f64;
                     v * v
                 })
                 .collect();

@@ -1,14 +1,36 @@
-//! Dissimilarity functions.
+//! Dissimilarity functions and the blocked distance-tile kernels.
 //!
 //! k-medoids works with *generic* dissimilarities (the paper's defining
 //! feature vs k-means); the paper's experiments use L1.  `Dissimilarity`
 //! is the open extension point — all algorithms in the crate are generic
 //! over it through the telemetry-counting `DissimCounter` wrapper.
+//!
+//! Storage **and** compute are `f32` end to end (`Matrix.data` is
+//! `Vec<f32>`, every kernel accumulates in `f32`), matching both
+//! reference implementations; the only `f64` in the pipeline are the
+//! scalar objective/inertia summaries.
+//!
+//! Two kernel families serve the `O(n·m)` cross-matrix:
+//!
+//! * the **exact** blocked kernel (`cross_matrix_pool`): transposed
+//!   batch layout, `BJ = 64` column blocks, per-metric diff-accumulate
+//!   inner loops — bit-identical at any thread count;
+//! * the **fast** dot-product kernel for SqL2/L2
+//!   (`d² = ‖x‖² + ‖b‖² − 2·x·b` over the same transposed layout with
+//!   precomputed batch norms), selected via [`ComputeProfile::Fast`] —
+//!   same asymptotics, ~⅓ the FLOPs per cell, *not* bit-identical to
+//!   the diff-square form (agreement is tolerance-tested instead).
+//!
+//! The fused variants ([`cross_argmin_pool`], [`cross_top2_pool`])
+//! additionally reduce each completed output row (argmin / top-2)
+//! while the row is still cache-hot, so callers that need both the
+//! matrix and a per-row reduction never re-walk `n×m` memory.
 
 use crate::linalg::Matrix;
 use crate::runtime::Pool;
+use crate::sync_ext;
 use crate::telemetry::Counters;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Finite "infinity" sentinel shared with the Python side (kernels/ref.py).
 /// Finite so sentinel-sentinel differences stay 0.0 instead of NaN.
@@ -83,6 +105,46 @@ impl Metric {
     }
 }
 
+/// Which kernel family computes bulk distance matrices.
+///
+/// `Exact` (the [`Default`]) keeps the diff-accumulate loops whose
+/// output is bit-identical across thread counts *and* across releases —
+/// the paper-reproduction grid runs on it.  `Fast` swaps the SqL2/L2
+/// inner loop for the dot-product form `d² = ‖x‖² + ‖b‖² − 2·x·b`
+/// (precomputed batch norms over the same transposed layout); results
+/// agree with `Exact` within a floating-point tolerance, not bitwise,
+/// so serving surfaces (server, CLI) default to it while the library
+/// default stays `Exact`.  Metrics without a dot-product form
+/// (L1 / Chebyshev / Cosine) compute identically under both profiles,
+/// as do batches small enough for the row-fallback path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ComputeProfile {
+    /// Bit-identical diff-accumulate kernels (paper-reproduction grid).
+    #[default]
+    Exact,
+    /// Dot-product SqL2/L2 kernel (serving default; tolerance-equal).
+    Fast,
+}
+
+impl ComputeProfile {
+    /// Parse from the CLI / config / wire spelling.
+    pub fn parse(s: &str) -> Option<ComputeProfile> {
+        Some(match s {
+            "exact" => ComputeProfile::Exact,
+            "fast" => ComputeProfile::Fast,
+            _ => return None,
+        })
+    }
+
+    /// Canonical name (wire / CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            ComputeProfile::Exact => "exact",
+            ComputeProfile::Fast => "fast",
+        }
+    }
+}
+
 // Point-to-point evaluation: the plain iterator form measured fastest
 // for single pairs (manual lane-accumulators were tried and *regressed*
 // at p <= 128 — see EXPERIMENTS.md §Perf).  Bulk matrices go through
@@ -134,6 +196,30 @@ impl DissimCounter {
         idx.iter().map(|&i| self.metric.eval(x.row(i), point)).collect()
     }
 
+    /// Distances from *every* row of `x` to one point (counts `x.rows`),
+    /// the [`DissimCounter::point_to_rows`] shape without an index
+    /// vector — one counter bump for the whole sweep.
+    pub fn rows_to_point(&self, x: &Matrix, point: &[f32]) -> Vec<f32> {
+        self.counters.add_dissim(x.rows as u64);
+        (0..x.rows).map(|i| self.metric.eval(x.row(i), point)).collect()
+    }
+
+    /// Fused distance + running-min sweep: for every row `i` of `x`,
+    /// `dmin[i] = min(dmin[i], d(x[i], point))` in one pass (counts
+    /// `x.rows`, one counter bump).  The strict `<` update makes the
+    /// result identical to evaluating then min-folding separately —
+    /// the progressive sampler's seed/grow passes run through this.
+    pub fn min_into_rows(&self, x: &Matrix, point: &[f32], dmin: &mut [f32]) {
+        debug_assert_eq!(dmin.len(), x.rows);
+        self.counters.add_dissim(x.rows as u64);
+        for (i, slot) in dmin.iter_mut().enumerate() {
+            let v = self.metric.eval(x.row(i), point);
+            if v < *slot {
+                *slot = v;
+            }
+        }
+    }
+
     /// Total dissimilarity computations so far.
     pub fn count(&self) -> u64 {
         self.counters.dissim()
@@ -166,84 +252,254 @@ pub fn cross_matrix(d: &DissimCounter, x: &Matrix, b: &Matrix) -> Matrix {
 /// order regardless of the chunking, so the result is bit-identical at
 /// any thread count (rust/tests/parallel_equivalence.rs).
 pub fn cross_matrix_pool(d: &DissimCounter, x: &Matrix, b: &Matrix, pool: &Pool) -> Matrix {
+    cross_matrix_pool_profiled(d, x, b, pool, ComputeProfile::Exact)
+}
+
+/// [`cross_matrix_pool`] with an explicit kernel [`ComputeProfile`].
+///
+/// `Exact` is byte-identical to the historical kernel; `Fast` takes the
+/// dot-product SqL2/L2 path (tolerance-equal, still bit-identical at
+/// any thread count for a fixed profile).
+pub fn cross_matrix_pool_profiled(
+    d: &DissimCounter,
+    x: &Matrix,
+    b: &Matrix,
+    pool: &Pool,
+    profile: ComputeProfile,
+) -> Matrix {
     assert_eq!(x.cols, b.cols, "feature dims differ");
     d.counters.add_dissim((x.rows * b.rows) as u64);
-    let (n, m, p) = (x.rows, b.rows, x.cols);
+    let (n, m) = (x.rows, b.rows);
     let mut out = Matrix::zeros(n, m);
-    let metric = d.metric;
     if m == 0 || n == 0 {
         return out;
     }
-
-    if matches!(metric, Metric::Cosine) || m < 8 {
-        // row-by-row fallback (non-accumulable metric or tiny batch)
-        pool.for_each_row_chunk(&mut out.data, n, m, |row0, chunk| {
-            for (di, orow) in chunk.chunks_mut(m).enumerate() {
-                let xi = x.row(row0 + di);
-                for j in 0..m {
-                    orow[j] = metric.eval(xi, b.row(j));
-                }
-            }
-        });
-        return out;
-    }
-
-    // transpose b to (p, m): bt[d * m + j] = b[j, d]
-    let mut bt = vec![0.0f32; p * m];
-    for j in 0..m {
-        let brow = b.row(j);
-        for dd in 0..p {
-            bt[dd * m + j] = brow[dd];
-        }
-    }
-
-    // j-blocked accumulation, SIMD across the batch columns; each worker
-    // owns a contiguous row chunk and reads the shared transpose.
-    const BJ: usize = 64;
-    let post_sqrt = metric == Metric::L2;
-    let bt = &bt;
+    let plan = KernelPlan::new(d.metric, profile, b);
+    let plan = &plan;
     pool.for_each_row_chunk(&mut out.data, n, m, |row0, chunk| {
         for (di, full_row) in chunk.chunks_mut(m).enumerate() {
-            let xi = x.row(row0 + di);
-            for j0 in (0..m).step_by(BJ) {
-                let jw = BJ.min(m - j0);
-                let orow = &mut full_row[j0..j0 + jw];
-                orow.iter_mut().for_each(|v| *v = 0.0);
-                match metric {
-                    Metric::L1 => {
-                        for (dd, &xv) in xi.iter().enumerate() {
-                            let brow = &bt[dd * m + j0..dd * m + j0 + jw];
-                            for l in 0..jw {
-                                orow[l] += (xv - brow[l]).abs();
-                            }
-                        }
-                    }
-                    Metric::SqL2 | Metric::L2 => {
-                        for (dd, &xv) in xi.iter().enumerate() {
-                            let brow = &bt[dd * m + j0..dd * m + j0 + jw];
-                            for l in 0..jw {
-                                let diff = xv - brow[l];
-                                orow[l] += diff * diff;
-                            }
-                        }
-                    }
-                    Metric::Chebyshev => {
-                        for (dd, &xv) in xi.iter().enumerate() {
-                            let brow = &bt[dd * m + j0..dd * m + j0 + jw];
-                            for l in 0..jw {
-                                orow[l] = orow[l].max((xv - brow[l]).abs());
-                            }
-                        }
-                    }
-                    Metric::Cosine => unreachable!(),
-                }
-                if post_sqrt {
-                    orow.iter_mut().for_each(|v| *v = v.sqrt());
-                }
-            }
+            plan.fill_row(x.row(row0 + di), full_row);
         }
     });
     out
+}
+
+/// Fused pairwise + per-row argmin: the distance matrix of
+/// [`cross_matrix_pool_profiled`] *and* `(argmin_j, min_j)` per row,
+/// reduced from each completed output row while it is still cache-hot
+/// (never re-walked from memory).  Requires a non-empty batch.
+///
+/// Reduction semantics are exactly [`crate::linalg::argmin`] applied to
+/// the finished row, so the result is bit-identical to the unfused
+/// `pairwise` ∘ `argmin_rows` composition at any thread count.
+pub fn cross_argmin_pool(
+    d: &DissimCounter,
+    x: &Matrix,
+    b: &Matrix,
+    pool: &Pool,
+    profile: ComputeProfile,
+) -> (Matrix, Vec<usize>, Vec<f32>) {
+    assert!(b.rows >= 1, "argmin needs a non-empty batch");
+    let (out, reduced) = cross_reduce(d, x, b, pool, profile, crate::linalg::argmin);
+    let (idx, val) = reduced.into_iter().unzip();
+    (out, idx, val)
+}
+
+/// Fused pairwise + per-row top-2: the distance matrix *and*
+/// `(near, dnear, second, dsecond)` per row in one sweep (the
+/// [`crate::linalg::top2_min`] reduction over each cache-hot row).
+/// Requires `b.rows >= 2`; bit-identical to `pairwise` ∘ `top2`.
+#[allow(clippy::type_complexity)]
+pub fn cross_top2_pool(
+    d: &DissimCounter,
+    x: &Matrix,
+    b: &Matrix,
+    pool: &Pool,
+    profile: ComputeProfile,
+) -> (Matrix, Vec<usize>, Vec<f32>, Vec<usize>, Vec<f32>) {
+    assert!(b.rows >= 2, "top2 needs at least 2 batch rows");
+    let (out, reduced) = cross_reduce(d, x, b, pool, profile, crate::linalg::top2_min);
+    let mut near = Vec::with_capacity(reduced.len());
+    let mut dnear = Vec::with_capacity(reduced.len());
+    let mut second = Vec::with_capacity(reduced.len());
+    let mut dsecond = Vec::with_capacity(reduced.len());
+    for (i1, v1, i2, v2) in reduced {
+        near.push(i1);
+        dnear.push(v1);
+        second.push(i2);
+        dsecond.push(v2);
+    }
+    (out, near, dnear, second, dsecond)
+}
+
+/// The shared fused engine: fill each output row via the kernel plan,
+/// reduce it with `reduce` while hot, and stitch the per-chunk
+/// reductions back into row order.  Each chunk's reductions are pushed
+/// under one short-lived mutex lock *per chunk* (at most one per pool
+/// worker), then sorted by the chunk's first row — the reduction values
+/// themselves are computed row-locally, so the result is independent of
+/// chunk completion order.
+fn cross_reduce<R, G>(
+    d: &DissimCounter,
+    x: &Matrix,
+    b: &Matrix,
+    pool: &Pool,
+    profile: ComputeProfile,
+    reduce: G,
+) -> (Matrix, Vec<R>)
+where
+    R: Send,
+    G: Fn(&[f32]) -> R + Sync,
+{
+    assert_eq!(x.cols, b.cols, "feature dims differ");
+    d.counters.add_dissim((x.rows * b.rows) as u64);
+    let (n, m) = (x.rows, b.rows);
+    let mut out = Matrix::zeros(n, m);
+    if n == 0 {
+        return (out, Vec::new());
+    }
+    let plan = KernelPlan::new(d.metric, profile, b);
+    let parts: Mutex<Vec<(usize, Vec<R>)>> = Mutex::new(Vec::new());
+    {
+        let plan = &plan;
+        let reduce = &reduce;
+        let parts = &parts;
+        pool.for_each_row_chunk(&mut out.data, n, m, |row0, chunk| {
+            let mut acc = Vec::with_capacity(chunk.len() / m);
+            for (di, full_row) in chunk.chunks_mut(m).enumerate() {
+                plan.fill_row(x.row(row0 + di), full_row);
+                acc.push(reduce(full_row));
+            }
+            sync_ext::lock_or_recover(parts).push((row0, acc));
+        });
+    }
+    let mut collected = std::mem::take(&mut *sync_ext::lock_or_recover(&parts));
+    collected.sort_by_key(|(row0, _)| *row0);
+    let reduced = collected.into_iter().flat_map(|(_, acc)| acc).collect();
+    (out, reduced)
+}
+
+/// Column-block width of the transposed kernels: small enough that one
+/// block of `f32` output plus the batch slice stays in L1, wide enough
+/// to keep the SIMD lanes full.
+const BJ: usize = 64;
+
+/// One prepared bulk-distance kernel: the metric/profile dispatch and
+/// the batch-side precomputation (transpose, norms), decided once per
+/// matrix so the per-row fill is branch-free over rows.
+enum KernelPlan<'a> {
+    /// Row-by-row `Metric::eval` (non-accumulable metric or tiny batch).
+    RowEval { metric: Metric, b: &'a Matrix },
+    /// Exact diff-accumulate over the `(p, m)` transposed batch.
+    Blocked { metric: Metric, bt: Vec<f32>, m: usize },
+    /// Dot-product SqL2/L2 over the same transpose with precomputed
+    /// batch norms (`ComputeProfile::Fast`).
+    FastDot { bt: Vec<f32>, bn: Vec<f32>, m: usize, post_sqrt: bool },
+}
+
+impl<'a> KernelPlan<'a> {
+    fn new(metric: Metric, profile: ComputeProfile, b: &'a Matrix) -> KernelPlan<'a> {
+        let (m, p) = (b.rows, b.cols);
+        if matches!(metric, Metric::Cosine) || m < 8 {
+            // row-by-row fallback (non-accumulable metric or tiny batch)
+            return KernelPlan::RowEval { metric, b };
+        }
+        // transpose b to (p, m): bt[d * m + j] = b[j, d]
+        let mut bt = vec![0.0f32; p * m];
+        for j in 0..m {
+            let brow = b.row(j);
+            for dd in 0..p {
+                bt[dd * m + j] = brow[dd];
+            }
+        }
+        if profile == ComputeProfile::Fast && matches!(metric, Metric::SqL2 | Metric::L2) {
+            // batch norms, computed serially before any parallel region
+            // so every thread count sees the same bits
+            let bn = (0..m).map(|j| b.row(j).iter().map(|v| v * v).sum()).collect();
+            return KernelPlan::FastDot { bt, bn, m, post_sqrt: metric == Metric::L2 };
+        }
+        KernelPlan::Blocked { metric, bt, m }
+    }
+
+    /// Fill one output row (all `m` distances from `xi` to the batch).
+    ///
+    /// The `Blocked` arm is the historical kernel verbatim: j-blocked
+    /// accumulation, SIMD across the batch columns, features in
+    /// ascending order — every cell's float-op sequence is unchanged,
+    /// which is what keeps `Exact` output byte-identical to pre-profile
+    /// releases.
+    fn fill_row(&self, xi: &[f32], full_row: &mut [f32]) {
+        match self {
+            KernelPlan::RowEval { metric, b } => {
+                for (j, slot) in full_row.iter_mut().enumerate() {
+                    *slot = metric.eval(xi, b.row(j));
+                }
+            }
+            KernelPlan::Blocked { metric, bt, m } => {
+                let m = *m;
+                for j0 in (0..m).step_by(BJ) {
+                    let jw = BJ.min(m - j0);
+                    let orow = &mut full_row[j0..j0 + jw];
+                    orow.iter_mut().for_each(|v| *v = 0.0);
+                    match metric {
+                        Metric::L1 => {
+                            for (dd, &xv) in xi.iter().enumerate() {
+                                let brow = &bt[dd * m + j0..dd * m + j0 + jw];
+                                for l in 0..jw {
+                                    orow[l] += (xv - brow[l]).abs();
+                                }
+                            }
+                        }
+                        Metric::SqL2 | Metric::L2 => {
+                            for (dd, &xv) in xi.iter().enumerate() {
+                                let brow = &bt[dd * m + j0..dd * m + j0 + jw];
+                                for l in 0..jw {
+                                    let diff = xv - brow[l];
+                                    orow[l] += diff * diff;
+                                }
+                            }
+                        }
+                        Metric::Chebyshev => {
+                            for (dd, &xv) in xi.iter().enumerate() {
+                                let brow = &bt[dd * m + j0..dd * m + j0 + jw];
+                                for l in 0..jw {
+                                    orow[l] = orow[l].max((xv - brow[l]).abs());
+                                }
+                            }
+                        }
+                        Metric::Cosine => unreachable!(),
+                    }
+                    if *metric == Metric::L2 {
+                        orow.iter_mut().for_each(|v| *v = v.sqrt());
+                    }
+                }
+            }
+            KernelPlan::FastDot { bt, bn, m, post_sqrt } => {
+                let m = *m;
+                // ‖x‖² accumulated in feature order, row-locally: the
+                // same bits at any thread count
+                let xn: f32 = xi.iter().map(|v| v * v).sum();
+                for j0 in (0..m).step_by(BJ) {
+                    let jw = BJ.min(m - j0);
+                    let orow = &mut full_row[j0..j0 + jw];
+                    orow.iter_mut().for_each(|v| *v = 0.0);
+                    for (dd, &xv) in xi.iter().enumerate() {
+                        let brow = &bt[dd * m + j0..dd * m + j0 + jw];
+                        for l in 0..jw {
+                            orow[l] += xv * brow[l];
+                        }
+                    }
+                    let bn = &bn[j0..j0 + jw];
+                    for l in 0..jw {
+                        // clamp: cancellation can drive the algebraic
+                        // form a hair below zero, and sqrt(neg) is NaN
+                        let v = (xn + bn[l] - 2.0 * orow[l]).max(0.0);
+                        orow[l] = if *post_sqrt { v.sqrt() } else { v };
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -325,6 +581,137 @@ mod tests {
             for j in [0, 31, 32, 66] {
                 assert!((c.get(i, j) - Metric::L1.eval(x.row(i), b.row(j))).abs() < 1e-5);
             }
+        }
+    }
+
+    #[test]
+    fn profile_parse_round_trips() {
+        for p in [ComputeProfile::Exact, ComputeProfile::Fast] {
+            assert_eq!(ComputeProfile::parse(p.name()), Some(p));
+        }
+        assert_eq!(ComputeProfile::parse("bogus"), None);
+        assert_eq!(ComputeProfile::default(), ComputeProfile::Exact);
+    }
+
+    fn random_pair(seed: u64, n: usize, m: usize, p: usize) -> (Matrix, Matrix) {
+        let mut rng = crate::rng::Rng::new(seed);
+        let x = Matrix::from_vec(n, p, (0..n * p).map(|_| rng.normal() as f32).collect());
+        let b = Matrix::from_vec(m, p, (0..m * p).map(|_| rng.normal() as f32).collect());
+        (x, b)
+    }
+
+    #[test]
+    fn fused_argmin_matches_unfused_all_metrics_and_shapes() {
+        let pool = Pool::serial();
+        for metric in [Metric::L1, Metric::L2, Metric::SqL2, Metric::Chebyshev, Metric::Cosine] {
+            // covers the blocked path (m=67), the m<8 row fallback
+            // (m=5), and the m=1 degenerate batch
+            for (n, m_rows, p) in [(41, 67, 7), (19, 5, 3), (9, 1, 4)] {
+                let (x, b) = random_pair(11, n, m_rows, p);
+                let d = DissimCounter::new(metric);
+                let want = cross_matrix_pool(&d, &x, &b, &pool);
+                for profile in [ComputeProfile::Exact, ComputeProfile::Fast] {
+                    let (got, idx, val) = cross_argmin_pool(&d, &x, &b, &pool, profile);
+                    let base = cross_matrix_pool_profiled(&d, &x, &b, &pool, profile);
+                    assert_eq!(got.data, base.data, "{metric:?} {profile:?} matrix mismatch");
+                    if profile == ComputeProfile::Exact {
+                        assert_eq!(got.data, want.data, "{metric:?} Exact drifted");
+                    }
+                    for i in 0..n {
+                        let (bi, bv) = crate::linalg::argmin(got.row(i));
+                        assert_eq!((idx[i], val[i].to_bits()), (bi, bv.to_bits()));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_top2_matches_unfused() {
+        let pool = Pool::serial();
+        for metric in [Metric::L1, Metric::L2, Metric::SqL2, Metric::Chebyshev, Metric::Cosine] {
+            for (n, m_rows, p) in [(33, 64, 6), (15, 3, 1), (7, 2, 2)] {
+                let (x, b) = random_pair(29, n, m_rows, p);
+                let d = DissimCounter::new(metric);
+                for profile in [ComputeProfile::Exact, ComputeProfile::Fast] {
+                    let (got, near, dnear, second, dsecond) =
+                        cross_top2_pool(&d, &x, &b, &pool, profile);
+                    for i in 0..n {
+                        let (i1, v1, i2, v2) = crate::linalg::top2_min(got.row(i));
+                        assert_eq!(near[i], i1);
+                        assert_eq!(dnear[i].to_bits(), v1.to_bits());
+                        assert_eq!(second[i], i2);
+                        assert_eq!(dsecond[i].to_bits(), v2.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_profile_matches_exact_within_tolerance() {
+        let pool = Pool::serial();
+        for metric in [Metric::SqL2, Metric::L2] {
+            let (x, b) = random_pair(7, 53, 71, 9);
+            let d = DissimCounter::new(metric);
+            let exact = cross_matrix_pool_profiled(&d, &x, &b, &pool, ComputeProfile::Exact);
+            let fast = cross_matrix_pool_profiled(&d, &x, &b, &pool, ComputeProfile::Fast);
+            for i in 0..x.rows {
+                let xn: f32 = x.row(i).iter().map(|v| v * v).sum();
+                for j in 0..b.rows {
+                    let bn: f32 = b.row(j).iter().map(|v| v * v).sum();
+                    // absolute error of the algebraic form scales with
+                    // the norms being cancelled, not with the distance
+                    let scale = 1.0 + xn + bn;
+                    let tol = if metric == Metric::L2 { scale.sqrt() } else { scale };
+                    assert!(
+                        (fast.get(i, j) - exact.get(i, j)).abs() <= 1e-4 * tol,
+                        "{metric:?} ({i},{j}): fast={} exact={}",
+                        fast.get(i, j),
+                        exact.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_profile_identical_for_non_euclidean_metrics() {
+        let pool = Pool::serial();
+        for metric in [Metric::L1, Metric::Chebyshev, Metric::Cosine] {
+            let (x, b) = random_pair(17, 23, 31, 5);
+            let d = DissimCounter::new(metric);
+            let exact = cross_matrix_pool_profiled(&d, &x, &b, &pool, ComputeProfile::Exact);
+            let fast = cross_matrix_pool_profiled(&d, &x, &b, &pool, ComputeProfile::Fast);
+            assert_eq!(exact.data, fast.data);
+        }
+    }
+
+    #[test]
+    fn fused_counting_matches_pairwise() {
+        let pool = Pool::serial();
+        let (x, b) = random_pair(5, 12, 9, 4);
+        let d = DissimCounter::new(Metric::SqL2);
+        let _ = cross_argmin_pool(&d, &x, &b, &pool, ComputeProfile::Exact);
+        assert_eq!(d.count(), 12 * 9);
+        let _ = cross_top2_pool(&d, &x, &b, &pool, ComputeProfile::Fast);
+        assert_eq!(d.count(), 2 * 12 * 9);
+    }
+
+    #[test]
+    fn rows_to_point_and_min_into_rows_match_eval() {
+        let (x, _) = random_pair(3, 10, 1, 4);
+        let point = vec![0.5f32, -0.25, 1.0, 0.0];
+        let d = DissimCounter::new(Metric::L1);
+        let dist = d.rows_to_point(&x, &point);
+        assert_eq!(d.count(), 10);
+        let mut dmin = vec![0.1f32; 10];
+        d.min_into_rows(&x, &point, &mut dmin);
+        assert_eq!(d.count(), 20);
+        for i in 0..10 {
+            let v = Metric::L1.eval(x.row(i), &point);
+            assert_eq!(dist[i].to_bits(), v.to_bits());
+            assert_eq!(dmin[i].to_bits(), v.min(0.1).to_bits());
         }
     }
 }

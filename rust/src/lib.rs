@@ -10,7 +10,8 @@
 //!   FasterPAM swap engine over one `n x m` distance matrix, every
 //!   baseline from the paper's evaluation, the experiment harness that
 //!   regenerates each table/figure, and a clustering job server
-//!   (protocol v6: any method by name, any dataset by URI, any metric,
+//!   (protocol v7: any method by name, any dataset by URI, any metric,
+//!   any compute profile (`profile=exact|fast`),
 //!   with an **asynchronous job-handle API**, **cost-weighted
 //!   admission** with queue-wait deadlines, a sharded dataset
 //!   cache that loads cold misses outside its locks, and a
@@ -49,6 +50,20 @@
 //! and jobs reuse server-owned persistent execution pools keyed by
 //! thread width ([`server::PoolCache`]).
 //!
+//! The distance layer itself runs **fused tile kernels**: the backend's
+//! [`backend::ComputeBackend::pairwise_argmin`] /
+//! [`backend::ComputeBackend::pairwise_top2`] produce the `n x m`
+//! matrix *and* its per-row reduction in one blocked sweep (the row is
+//! reduced while its tile is still cache-hot, never materialised and
+//! rewalked), and a [`dissim::ComputeProfile`] knob selects between two
+//! kernel families: `Exact` (the default; bit-identical
+//! diff-accumulate kernels, what every paper table runs) and `Fast`
+//! (the server/CLI default; squared-Euclidean and Euclidean via the
+//! dot-product identity `d² = ‖x‖² + ‖b‖² − 2·x·b` with precomputed
+//! norms — a GEMM-shaped inner loop at a bounded relative error, while
+//! the other metrics stay bit-identical).  Both profiles keep the
+//! bit-identical-at-any-thread-count promise.
+//!
 //! Protocol v6 adds the **read path**: every successful solve also
 //! captures a dataset-free [`solver::FittedModel`] (the `k x p` medoid
 //! feature rows plus the fit metric), `promote job=j3 name=prod` moves
@@ -85,6 +100,9 @@
 //! // threads: 0 = all cores, 1 = serial; medoids identical either way.
 //! // spec.metric (default L1) names the dissimilarity; build the
 //! // backend from it so the two can never disagree.
+//! // spec.profile (default Exact) picks the distance-kernel family;
+//! // pair `ComputeProfile::Fast` with `.with_profile(...)` on the
+//! // backend for the dot-product Euclidean fast path.
 //! let spec = SolveSpec { threads: 0, ..SolveSpec::new(method, 5, 42) };
 //! let backend = NativeBackend::with_pool(spec.metric, Pool::auto());
 //! let result = solver::solve(&data.x, &spec, &backend).unwrap();

@@ -7,7 +7,7 @@
 //!                [--scale 0.1] [--seed 0] [--backend native|xla|xla-dense]
 //!                [--scale-features minmax|none] [--sampler nniw] [--m N]
 //!                [--eps E] [--max-passes P] [--strategy eager|steepest]
-//!                [--threads T] [--config file.toml]
+//!                [--threads T] [--profile exact|fast] [--config file.toml]
 //! obpam bench    --table 3|5|7 | --fig 1|pareto  (thin wrapper; prefer `cargo bench`)
 //! obpam serve    [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 16] [--cache-cap 32]
 //!                [--budget UNITS] [--strict-budget] [--retain-cap N] [--model-cap N]
@@ -17,7 +17,8 @@
 //! obpam cancel   [--addr HOST:PORT] --job j3
 //! obpam jobs     [--addr HOST:PORT]
 //! obpam promote  [--addr HOST:PORT] --job j3 [--name mymodel]
-//! obpam assign   [--addr HOST:PORT] --model mymodel [--top2] point=v1,v2,...
+//! obpam assign   [--addr HOST:PORT] --model mymodel [--top2]
+//!                [--profile exact|fast] point=v1,v2,...
 //! obpam models   [--addr HOST:PORT]
 //! obpam evict    [--addr HOST:PORT] --model mymodel
 //! obpam gen      --list | --dataset SOURCE [--scale S] [--out file.csv]
@@ -43,6 +44,15 @@
 //! the pairwise pass and the eager swap scan; `0` auto-detects the core
 //! count and `1` (the default) is the serial path.  Medoids are
 //! bit-identical at any thread count for a fixed seed.
+//!
+//! `--profile exact|fast` (config key `run.profile`) selects the
+//! distance-kernel [`ComputeProfile`]: `exact` is the bit-identical
+//! paper-reproduction kernel, `fast` (the CLI default on the native
+//! backend) routes squared-Euclidean / Euclidean through the
+//! dot-product identity for a large speedup at a bounded relative
+//! error; the other metrics are identical under both.  The XLA backend
+//! ships only exact kernels, so `--profile fast` requires
+//! `--backend native`.
 //!
 //! `serve` knobs follow the same `0 = auto` convention: `--workers 0`
 //! auto-detects cores, `--queue-cap 0` scales with the workers,
@@ -73,7 +83,7 @@ use obpam::backend::XlaBackend;
 use obpam::config::Config;
 use obpam::coordinator::{SamplerKind, SwapStrategy};
 use obpam::data::{synth, DataSource, FeatureScaling};
-use obpam::dissim::{DissimCounter, Metric};
+use obpam::dissim::{ComputeProfile, DissimCounter, Metric};
 use obpam::eval;
 use obpam::runtime::Pool;
 use obpam::solver::{self, MethodSpec, SolveSpec};
@@ -160,6 +170,10 @@ fn cmd_client(verb: &str, flags: &HashMap<String, String>, rest: &[String]) -> R
     if matches!(flags.get("top2"), Some(v) if v != "false") {
         line.push_str(" top2=1");
     }
+    // v7 compute-profile key (submit / assign); validated server-side
+    if let Some(p) = flags.get("profile") {
+        line.push_str(&format!(" profile={p}"));
+    }
     for tok in rest {
         // the wire tokenizer has no escape character, so a value
         // containing a literal quote has no valid wire spelling
@@ -214,6 +228,25 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
         .context("bad --scale-features (minmax|none)")?;
     let threads: usize = get("run.threads", "threads", "1").parse().context("--threads")?;
     let backend_name = get("run.backend", "backend", "native");
+    // fast is the CLI default on the native backend; the XLA path ships
+    // exact kernels only, so it stays exact unless the user insists
+    let profile = match flags
+        .get("profile")
+        .cloned()
+        .or_else(|| cfg.get("run.profile").map(str::to_string))
+    {
+        Some(s) => {
+            let p = ComputeProfile::parse(&s)
+                .with_context(|| format!("bad --profile {s} (exact|fast)"))?;
+            anyhow::ensure!(
+                p == ComputeProfile::Exact || backend_name == "native",
+                "--profile fast requires the native backend (got --backend {backend_name})"
+            );
+            p
+        }
+        None if backend_name == "native" => ComputeProfile::Fast,
+        None => ComputeProfile::Exact,
+    };
 
     // OneBatch-only knobs: track explicit presence so a non-OneBatch
     // --method rejects them instead of silently ignoring them
@@ -286,18 +319,28 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
     let mut data = source.load(scale, seed)?;
     scaling.apply(&mut data);
     eprintln!(
-        "[obpam] n={} p={} k={k} method={} metric={} backend={backend_name} threads={}",
+        "[obpam] n={} p={} k={k} method={} metric={} backend={backend_name} threads={} profile={}",
         data.n(),
         data.p(),
         method.label(),
         metric.name(),
-        Pool::new(threads).threads()
+        Pool::new(threads).threads(),
+        profile.name()
     );
 
-    let spec = SolveSpec { metric, threads, m, eps, max_passes, ..SolveSpec::new(method, k, seed) };
+    let spec = SolveSpec {
+        metric,
+        threads,
+        m,
+        eps,
+        max_passes,
+        profile,
+        ..SolveSpec::new(method, k, seed)
+    };
     let result = match backend_name.as_str() {
         "native" => {
-            let backend = NativeBackend::with_pool(metric, Pool::new(threads));
+            let backend =
+                NativeBackend::with_pool(metric, Pool::new(threads)).with_profile(profile);
             solver::solve(&data.x, &spec, &backend)?
         }
         #[cfg(feature = "xla")]

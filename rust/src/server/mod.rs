@@ -5,17 +5,17 @@
 //! pools, and a sharded dataset cache that loads cold misses outside
 //! its locks.
 //!
-//! # Line protocol v6 (one request line per connection, one reply line)
+//! # Line protocol v7 (one request line per connection, one reply line)
 //!
 //! ```text
 //! -> cluster dataset=blobs_2000_8_5 k=5 method=FasterPAM seed=3 threads=4
-//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 source=synth:blobs_2000_8_5 cost=4000000 inertia=0.1234 queue_ms=0.2 served_ms=50.1
+//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 source=synth:blobs_2000_8_5 cost=4000000 inertia=0.1234 profile=fast queue_ms=0.2 served_ms=50.1
 //! -> submit dataset=blobs_2000_8_5 k=5 seed=3 deadline_ms=5000
 //! <- ok job=j7 cost=61200 queue_ms=0.0 served_ms=0.1
 //! -> poll job=j7
 //! <- ok job=j7 state=running cost=61200 waited_ms=1.4 queue_ms=0.0 served_ms=0.0
 //! -> wait job=j7 timeout_ms=30000
-//! <- ok method=OneBatch-nniw cache=hit medoids=... objective=... seconds=... dissim=... swaps=... source=... cost=61200 inertia=... queue_ms=0.0 served_ms=48.9
+//! <- ok method=OneBatch-nniw cache=hit medoids=... objective=... seconds=... dissim=... swaps=... source=... cost=61200 inertia=... profile=fast queue_ms=0.0 served_ms=48.9
 //! -> cancel job=j8
 //! <- ok job=j8 state=cancelled queue_ms=0.0 served_ms=0.0
 //! -> jobs
@@ -33,6 +33,16 @@
 //! -> ping
 //! <- pong queue_ms=0.0 served_ms=0.0
 //! ```
+//!
+//! v7 over v6: the distance kernels carry a **compute profile**.
+//! `profile=` (`exact` | `fast`, default `fast` on the wire) selects
+//! between the bit-identical paper-reproduction kernels and the
+//! dot-product SqL2/L2 path ([`crate::dissim::ComputeProfile`]);
+//! `cluster`/`wait` done-replies append a trailing `profile=` after the
+//! v6 `inertia=` field (every v1–v6 prefix stays byte-identical), an
+//! unknown value is an `err`, and `assign` accepts the same key for its
+//! serving kernels.  `assign` itself now runs allocation-free on
+//! per-model scratch buffers ([`models::AssignScratch`]).
 //!
 //! v6 over v5: every v5 request line — including the legacy v1–v4
 //! forms — still produces a byte-identical reply prefix; the only
@@ -52,7 +62,7 @@
 //!   a queued/running job gets `err job j<id> is <state> ...`, an
 //!   evicted or failed one `err`.  Past
 //!   [`ServerConfig::model_cap`] the coldest model is LRU-evicted.
-//! * `assign model=<name> point=v1,v2,... [point=...] [metric=] [top2=1]`
+//! * `assign model=<name> point=v1,v2,... [point=...] [metric=] [top2=1] [profile=]`
 //!   — label points against a promoted model *without any dataset in
 //!   memory*: each `point=` is one comma-joined feature row (repeats
 //!   batch, wire order preserved), the reply is
@@ -144,6 +154,10 @@
 //!   row hint.
 //! * `metric=` — any [`Metric`] spelling (`l1` default, `l2`,
 //!   `sqeuclidean`, `chebyshev`, `cosine`).
+//! * `profile=` — distance-kernel profile: `fast` (default, dot-product
+//!   SqL2/L2 path, tolerance-equal) or `exact` (bit-identical
+//!   paper-reproduction kernels).  Echoed back as the done-reply's
+//!   trailing `profile=` field.
 //! * `scale_features=` — `minmax` | `none` (default `none`).
 //! * `k=`, `threads=` — shared run parameters.
 //! * `m=`, `eps=`, `max_passes=`, `strategy=`, `sampler=` — OneBatch
@@ -190,14 +204,13 @@ pub use jobs::{FittedLookup, JobGauges, JobRegistry, JobState, JobView, WaitOutc
 pub use metrics::{
     JobCounters, MethodAgg, MethodMetrics, ModelAgg, ModelMetrics, VerbCounters, VERBS,
 };
-pub use models::{ModelGauges, ModelRecord, ModelRegistry, ModelSeed};
+pub use models::{AssignScratch, ModelGauges, ModelRecord, ModelRegistry, ModelSeed};
 
 use crate::backend::NativeBackend;
 use crate::coordinator::{SamplerKind, SwapStrategy};
 use crate::data::{DataSource, FeatureScaling};
-use crate::dissim::{DissimCounter, Metric};
+use crate::dissim::{ComputeProfile, DissimCounter, Metric};
 use crate::eval;
-use crate::linalg::Matrix;
 use crate::runtime::Pool;
 use crate::solver::{self, CancelToken, JobCost, MethodSpec, SolveSpec, MAX_JOB_COST};
 use crate::sync_ext;
@@ -777,6 +790,7 @@ pub(crate) struct JobRequest {
     seed: u64,
     threads: usize,
     metric: Metric,
+    profile: ComputeProfile,
     scaling: FeatureScaling,
     method: MethodSpec,
     m: Option<usize>,
@@ -810,6 +824,13 @@ fn parse_cluster(kv: &HashMap<String, String>) -> Result<JobRequest, String> {
         .map(|s| Metric::parse(s).ok_or(format!("unknown metric {s}")))
         .transpose()?
         .unwrap_or(Metric::L1);
+    // serving default is the fast kernel path; the paper-reproduction
+    // grid (library callers, SolveSpec::new) defaults to exact
+    let profile = kv
+        .get("profile")
+        .map(|s| ComputeProfile::parse(s).ok_or(format!("unknown profile {s} (exact|fast)")))
+        .transpose()?
+        .unwrap_or(ComputeProfile::Fast);
     let scaling = kv
         .get("scale_features")
         .map(|s| FeatureScaling::parse(s).ok_or(format!("unknown scale_features {s} (minmax|none)")))
@@ -885,6 +906,7 @@ fn parse_cluster(kv: &HashMap<String, String>) -> Result<JobRequest, String> {
         seed,
         threads,
         metric,
+        profile,
         scaling,
         method,
         m,
@@ -975,7 +997,8 @@ fn run_cluster(
     }
     spec.cancel = req.cancel.clone();
     spec.pool = Some(pool.clone());
-    let backend = NativeBackend::with_pool(req.metric, pool);
+    spec.profile = req.profile;
+    let backend = NativeBackend::with_pool(req.metric, pool).with_profile(req.profile);
     let solve_started = Instant::now();
     let r = solver::solve(&x, &spec, &backend).map_err(|e| e.to_string())?;
     let obj = eval::objective(&x, &r.medoids, &DissimCounter::new(req.metric));
@@ -1009,8 +1032,11 @@ fn run_cluster(
         );
     }
     let meds: Vec<String> = r.medoids.iter().map(|m| m.to_string()).collect();
+    // v7: `profile=` appended after the v6 `inertia=` trailer, so every
+    // v1-v6 prefix stays byte-identical (jobs_api.rs / model_serving.rs
+    // pin the field order)
     Ok(format!(
-        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={} source={} cost={} inertia={inertia:.6}",
+        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={} source={} cost={} inertia={inertia:.6} profile={}",
         spec.method.label(),
         if hit { "hit" } else { "miss" },
         meds.join(","),
@@ -1019,6 +1045,7 @@ fn run_cluster(
         r.stats.swap_count,
         req.src.canon(),
         permit.units(),
+        req.profile.name(),
     ))
 }
 
@@ -1260,7 +1287,14 @@ fn handle_assign(state: &ServerState, parts: &[String]) -> String {
         Some("1") => true,
         Some(v) => return format!("err bad top2={v} (0|1)"),
     };
-    let Some(model) = state.models.get(name) else {
+    let profile = match kv.get("profile").map(String::as_str) {
+        None => ComputeProfile::Fast,
+        Some(s) => match ComputeProfile::parse(s) {
+            Some(p) => p,
+            None => return format!("err unknown profile {s} (exact|fast)"),
+        },
+    };
+    let Some((model, scratch)) = state.models.get_serving(name) else {
         return format!("err unknown model {name}");
     };
     // an explicit metric= must match what the model was fitted under —
@@ -1278,9 +1312,25 @@ fn handle_assign(state: &ServerState, parts: &[String]) -> String {
             Some(_) => {}
         }
     }
+    let dim = model.dim();
+    let k = model.k();
+    if top2 && k < 2 {
+        return format!("err top2 assignment needs >= 2 medoids (got {k})");
+    }
+    // Allocation-free hot path: every working buffer lives in the
+    // model's AssignScratch (allocated at promotion, reused across
+    // requests); each point's k distances land in one reused row that
+    // is reduced in place, so the q x k matrix is never materialized
+    // and a steady-QPS workload does zero per-request matrix
+    // allocations.  profile=fast (the default) takes the dot-product
+    // SqL2/L2 kernel with medoid norms cached in the scratch; exact and
+    // every non-Euclidean metric evaluate point-to-medoid directly,
+    // bit-identical to the offline backend::assign path.
+    let mut guard = sync_ext::lock_or_recover(&scratch);
+    let s = &mut *guard;
     // collect every point= token in wire order (parse_kv collapses
     // duplicate keys, so the batch is read from the raw tokens)
-    let mut rows: Vec<f32> = Vec::new();
+    s.points.clear();
     let mut n = 0usize;
     for part in parts {
         let Some(raw) = part.strip_prefix("point=") else { continue };
@@ -1288,44 +1338,82 @@ fn handle_assign(state: &ServerState, parts: &[String]) -> String {
             Ok(v) => v,
             Err(e) => return format!("err {e}"),
         };
-        if vals.len() != model.dim() {
+        if vals.len() != dim {
             return format!(
                 "err model {name} expects {} features per point, got {} (point {})",
-                model.dim(),
+                dim,
                 vals.len(),
                 n + 1
             );
         }
-        rows.extend_from_slice(&vals);
+        s.points.extend_from_slice(&vals);
         n += 1;
     }
     if n == 0 {
         return "err missing point= (e.g. assign model=m1 point=0.5,1.0)".into();
     }
-    let points = Matrix::from_vec(n, model.dim(), rows);
-    let backend = NativeBackend::new(model.metric);
+    s.labels.clear();
+    s.dists.clear();
+    s.second.clear();
+    s.dists2.clear();
+    s.row.clear();
+    s.row.resize(k, 0.0);
+    let metric = model.metric;
+    let fast = profile == ComputeProfile::Fast && matches!(metric, Metric::SqL2 | Metric::L2);
+    if fast && s.bnorms.len() != k {
+        // first fast assign against this model: cache the medoid norms
+        // for its lifetime (medoid rows are immutable after promotion)
+        s.bnorms.clear();
+        for j in 0..k {
+            s.bnorms.push(model.medoid_rows.row(j).iter().map(|v| v * v).sum());
+        }
+    }
+    for i in 0..n {
+        let point = &s.points[i * dim..(i + 1) * dim];
+        if fast {
+            let xn: f32 = point.iter().map(|v| v * v).sum();
+            for j in 0..k {
+                let mut dot = 0.0f32;
+                for (a, b) in point.iter().zip(model.medoid_rows.row(j)) {
+                    dot += a * b;
+                }
+                let v = (xn + s.bnorms[j] - 2.0 * dot).max(0.0);
+                s.row[j] = if metric == Metric::L2 { v.sqrt() } else { v };
+            }
+        } else {
+            for j in 0..k {
+                s.row[j] = metric.eval(point, model.medoid_rows.row(j));
+            }
+        }
+        if top2 {
+            let (a, av, b, bv) = crate::linalg::top2_min(&s.row);
+            s.labels.push(a);
+            s.dists.push(av);
+            s.second.push(b);
+            s.dists2.push(bv);
+        } else {
+            let (a, av) = crate::linalg::argmin(&s.row);
+            s.labels.push(a);
+            s.dists.push(av);
+        }
+    }
+    s.reuses += 1;
     let join_u = |v: &[usize]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
     let join_f = |v: &[f32]| v.iter().map(|x| format!("{x:.6}")).collect::<Vec<_>>().join(",");
     let reply = if top2 {
-        match model.assign_top2(&backend, &points) {
-            Err(e) => return format!("err {e}"),
-            Ok((near, dnear, sec, dsec)) => format!(
-                "ok model={name} n={n} labels={} dists={} second={} dists2={}",
-                join_u(&near),
-                join_f(&dnear),
-                join_u(&sec),
-                join_f(&dsec),
-            ),
-        }
+        format!(
+            "ok model={name} n={n} labels={} dists={} second={} dists2={}",
+            join_u(&s.labels),
+            join_f(&s.dists),
+            join_u(&s.second),
+            join_f(&s.dists2),
+        )
     } else {
-        match model.assign(&backend, &points) {
-            Err(e) => return format!("err {e}"),
-            Ok((labels, dists)) => format!(
-                "ok model={name} n={n} labels={} dists={}",
-                join_u(&labels),
-                join_f(&dists),
-            ),
-        }
+        format!(
+            "ok model={name} n={n} labels={} dists={}",
+            join_u(&s.labels),
+            join_f(&s.dists),
+        )
     };
     state.model_stats.record(name, started.elapsed().as_secs_f64() * 1e3);
     reply
@@ -1748,6 +1836,7 @@ mod tests {
             // file bytes do not scale; silent no-ops are not allowed
             "cluster dataset=file:/x.csv scale=0.5",
             "cluster metric=bogus",
+            "cluster profile=bogus",
             "cluster scale_features=bogus",
             "cluster sampler=bogus",
             "cluster method=bogus",
@@ -2437,12 +2526,60 @@ mod tests {
             "assign model=b point=0,0,0,0 metric=l2",    // fitted under l1
             "assign model=b point=0,0,0,0 metric=warp",  // unknown metric
             "assign model=b point=0,0,0,0 top2=yes",     // bad flag
+            "assign model=b point=0,0,0,0 profile=warp", // unknown profile
         ] {
             assert!(handle_line(&st, line).starts_with("err"), "{line:?} should err");
         }
         // matching explicit metric= is fine
         let r = handle_line(&st, "assign model=b point=0,0,0,0 metric=l1");
         assert!(r.starts_with("ok model=b n=1 "), "{r}");
+        // both explicit profiles serve; an L1 model answers identically
+        // under either (the fast kernel only applies to SqL2/L2)
+        let exact = handle_line(&st, "assign model=b point=0,0,0,0 profile=exact");
+        let fast = handle_line(&st, "assign model=b point=0,0,0,0 profile=fast");
+        assert_eq!(exact, fast);
+        assert_eq!(exact, r, "default profile is fast");
+    }
+
+    #[test]
+    fn assign_serving_reuses_scratch_with_no_matrix_allocations() {
+        let st = fresh_state();
+        let job = solved_job(&st);
+        assert!(handle_line(&st, &format!("promote job={job} name=b")).starts_with("ok "));
+        let (_, scratch) = st.models.get_serving("b").expect("model resident");
+        // warm the scratch with the largest batch first...
+        let big = "assign model=b top2=1 point=0,0,0,0 point=1,1,1,1 point=2,0,2,0";
+        assert!(handle_line(&st, big).starts_with("ok model=b n=3 "), "scratch warmup");
+        let caps = {
+            let s = sync_ext::lock_or_recover(&scratch);
+            assert_eq!(s.reuses, 1);
+            assert!(s.row.capacity() >= 1, "k-length row allocated");
+            (
+                s.points.capacity(),
+                s.row.capacity(),
+                s.labels.capacity(),
+                s.dists.capacity(),
+                s.second.capacity(),
+                s.dists2.capacity(),
+            )
+        };
+        // ...then every same-or-smaller request reuses those buffers:
+        // capacities must not move (zero per-request matrix allocations)
+        for _ in 0..5 {
+            assert!(handle_line(&st, big).starts_with("ok "));
+            assert!(handle_line(&st, "assign model=b point=0.5,0.5,0.5,0.5").starts_with("ok "));
+        }
+        let s = sync_ext::lock_or_recover(&scratch);
+        assert_eq!(s.reuses, 11, "every assign served from the one scratch");
+        let caps_after = (
+            s.points.capacity(),
+            s.row.capacity(),
+            s.labels.capacity(),
+            s.dists.capacity(),
+            s.second.capacity(),
+            s.dists2.capacity(),
+        );
+        assert_eq!(caps, caps_after, "steady-state serving must not reallocate");
     }
 
     #[test]

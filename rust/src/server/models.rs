@@ -77,9 +77,59 @@ pub struct ModelGauges {
     pub evicted: u64,
 }
 
+/// Per-model serving scratch: every buffer the `assign` hot path needs,
+/// allocated once at promotion and **reused across requests** so a
+/// high-QPS assign workload does zero per-request matrix allocations
+/// (the no-alloc obligation — docs/INVARIANTS.md).  Vectors are
+/// `clear()`ed, never shrunk, so capacity ratchets up to the largest
+/// request seen and stays there.
+///
+/// One scratch per model, behind its own mutex: concurrent assigns to
+/// the *same* model serialize on the buffers (the fill is `O(q k p)`,
+/// far above the lock cost), while assigns to different models never
+/// contend.
+pub struct AssignScratch {
+    /// Parsed query points, `q * dim` row-major (reused capacity).
+    pub points: Vec<f32>,
+    /// One `k`-length distance row — the only per-point working set;
+    /// the `q x k` matrix is never materialized.
+    pub row: Vec<f32>,
+    /// Nearest-medoid index per query point.
+    pub labels: Vec<usize>,
+    /// Distance to the nearest medoid per query point.
+    pub dists: Vec<f32>,
+    /// Second-nearest index per query point (`top2=1`).
+    pub second: Vec<usize>,
+    /// Second-nearest distance per query point (`top2=1`).
+    pub dists2: Vec<f32>,
+    /// Medoid squared norms for the `Fast` dot-product path, computed
+    /// on first use and cached for the model's lifetime (empty until
+    /// then; medoid rows are immutable after promotion).
+    pub bnorms: Vec<f32>,
+    /// Assign calls served from this scratch (the scratch-reuse test
+    /// pins that this grows while capacities stop growing).
+    pub reuses: u64,
+}
+
+impl AssignScratch {
+    fn new() -> Self {
+        AssignScratch {
+            points: Vec::new(),
+            row: Vec::new(),
+            labels: Vec::new(),
+            dists: Vec::new(),
+            second: Vec::new(),
+            dists2: Vec::new(),
+            bnorms: Vec::new(),
+            reuses: 0,
+        }
+    }
+}
+
 struct Entry {
     seed: ModelSeed,
     job: u64,
+    scratch: Arc<Mutex<AssignScratch>>,
 }
 
 struct Inner {
@@ -139,8 +189,11 @@ impl ModelRegistry {
                 format!("m{id}")
             }
         };
-        // replacement keeps one order entry per name (warm end below)
-        if inner.models.insert(name.clone(), Entry { seed, job }).is_some() {
+        // replacement keeps one order entry per name (warm end below);
+        // a fresh scratch is deliberate — the new model may have a
+        // different k/dim, and stale cached norms would be wrong
+        let entry = Entry { seed, job, scratch: Arc::new(Mutex::new(AssignScratch::new())) };
+        if inner.models.insert(name.clone(), entry).is_some() {
             if let Some(pos) = inner.order.iter().position(|n| *n == name) {
                 inner.order.remove(pos);
             }
@@ -159,13 +212,22 @@ impl ModelRegistry {
     /// The model registered under `name`, if any; counts as an LRU
     /// touch (every `assign` keeps its model warm).
     pub fn get(&self, name: &str) -> Option<Arc<FittedModel>> {
+        self.get_serving(name).map(|(model, _)| model)
+    }
+
+    /// The model *and its serving scratch* — the allocation-free assign
+    /// hot path.  Holding the returned `Arc`s keeps both alive even if
+    /// the model is evicted or replaced mid-request (an in-flight assign
+    /// finishes against the model it resolved).
+    pub fn get_serving(&self, name: &str) -> Option<(Arc<FittedModel>, Arc<Mutex<AssignScratch>>)> {
         let mut inner = self.lock();
-        let model = inner.models.get(name)?.seed.model.clone();
+        let entry = inner.models.get(name)?;
+        let out = (entry.seed.model.clone(), entry.scratch.clone());
         if let Some(pos) = inner.order.iter().position(|n| n == name) {
             inner.order.remove(pos);
             inner.order.push_back(name.to_string());
         }
-        Some(model)
+        Some(out)
     }
 
     /// Drop the model registered under `name`; returns whether one was
@@ -308,6 +370,21 @@ mod tests {
         assert!(!r.evict("a"), "second evict reports unknown");
         let g = r.gauges();
         assert_eq!((g.count, g.evicted), (0, 0));
+    }
+
+    #[test]
+    fn serving_scratch_is_per_model_and_fresh_on_replacement() {
+        let r = ModelRegistry::new(4);
+        r.promote(Some("prod"), seed(2, 4), 1).unwrap();
+        let (_, s1) = r.get_serving("prod").unwrap();
+        let (_, s1b) = r.get_serving("prod").unwrap();
+        assert!(Arc::ptr_eq(&s1, &s1b), "one scratch per model across calls");
+        sync_ext::lock_or_recover(&s1).bnorms.push(1.0);
+        // replacement must not inherit cached norms (k/dim may change)
+        r.promote(Some("prod"), seed(3, 4), 2).unwrap();
+        let (_, s2) = r.get_serving("prod").unwrap();
+        assert!(!Arc::ptr_eq(&s1, &s2), "replacement gets a fresh scratch");
+        assert!(sync_ext::lock_or_recover(&s2).bnorms.is_empty());
     }
 
     #[test]

@@ -40,7 +40,7 @@ use crate::baselines::{
 };
 use crate::coordinator::onebatch::{OneBatchSolver, SwapStrategy};
 use crate::coordinator::{KMedoidsResult, SamplerKind};
-use crate::dissim::Metric;
+use crate::dissim::{ComputeProfile, Metric};
 use crate::linalg::Matrix;
 use crate::runtime::Pool;
 use anyhow::Result;
@@ -154,6 +154,12 @@ pub struct SolveSpec {
     /// workers instead of respawning them.  Results are bit-identical
     /// either way (rust/tests/parallel_equivalence.rs).
     pub pool: Option<Pool>,
+    /// Distance-kernel profile: `Exact` (default) keeps the historical
+    /// diff-accumulate kernels byte-identical for the paper-reproduction
+    /// grid; `Fast` takes the dot-product SqL2/L2 path (server/CLI
+    /// default, tolerance-equal).  Like `metric`, the backend is built
+    /// from this field and [`solve`] rejects a disagreeing backend.
+    pub profile: ComputeProfile,
 }
 
 impl SolveSpec {
@@ -171,6 +177,7 @@ impl SolveSpec {
             max_passes: 20,
             cancel: CancelToken::none(),
             pool: None,
+            profile: ComputeProfile::Exact,
         }
     }
 }
@@ -367,6 +374,12 @@ pub fn solve(x: &Matrix, spec: &SolveSpec, backend: &dyn ComputeBackend) -> Resu
         "spec metric '{}' does not match backend metric '{}'",
         spec.metric.name(),
         backend.metric().name()
+    );
+    anyhow::ensure!(
+        backend.profile() == spec.profile,
+        "spec profile '{}' does not match backend profile '{}'",
+        spec.profile.name(),
+        backend.profile().name()
     );
     // cooperative cancellation: a job cancelled before pickup never
     // starts (OneBatchPAM re-checks the token between swap passes)
@@ -644,8 +657,12 @@ impl MethodSpec {
         backend: &dyn ComputeBackend,
         threads: usize,
     ) -> Result<RunOutput> {
-        let spec =
-            SolveSpec { threads, metric: backend.metric(), ..SolveSpec::new(self.clone(), k, seed) };
+        let spec = SolveSpec {
+            threads,
+            metric: backend.metric(),
+            profile: backend.profile(),
+            ..SolveSpec::new(self.clone(), k, seed)
+        };
         Ok(solve(x, &spec, backend)?.into())
     }
 }
@@ -830,6 +847,21 @@ mod tests {
         assert!(err.contains("does not match backend metric"), "{err}");
         // agreeing metric runs fine
         assert!(solve(&x, &spec, &NativeBackend::new(Metric::L2)).is_ok());
+    }
+
+    #[test]
+    fn solve_rejects_profile_mismatch() {
+        let mut rng = Rng::new(4);
+        let x = synth::gen_gaussian_mixture(&mut rng, 120, 4, 3, 0.15, 1.0);
+        let spec = SolveSpec {
+            profile: ComputeProfile::Fast,
+            ..SolveSpec::new(MethodSpec::KMeansPp, 3, 1)
+        };
+        let err = solve(&x, &spec, &NativeBackend::new(Metric::L1)).unwrap_err().to_string();
+        assert!(err.contains("does not match backend profile"), "{err}");
+        // agreeing profile runs fine
+        let fast = NativeBackend::new(Metric::L1).with_profile(ComputeProfile::Fast);
+        assert!(solve(&x, &spec, &fast).is_ok());
     }
 
     #[test]

@@ -83,11 +83,12 @@ fn cluster_lines_are_byte_compatible_with_submit_plus_wait() {
     ] {
         let cluster = request(h.addr, &format!("cluster {keys}")).unwrap();
         assert!(cluster.starts_with("ok method="), "{name}: {cluster}");
-        // the v4 field sequence, in order
+        // the v4 field sequence, in order (v7 appends profile= after the
+        // job fields, before the connection trailer)
         let mut pos = 0;
         for f in [
             "ok method=", " cache=", " medoids=", " objective=", " seconds=", " dissim=",
-            " swaps=", " source=", " cost=", " queue_ms=", " served_ms=",
+            " swaps=", " source=", " cost=", " profile=", " queue_ms=", " served_ms=",
         ] {
             let at = cluster[pos..]
                 .find(f)

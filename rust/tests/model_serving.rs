@@ -182,14 +182,14 @@ fn mismatched_assigns_err_instead_of_serving_garbage() {
 #[test]
 fn v5_reply_prefix_is_byte_identical_with_inertia_trailing() {
     // the v6 guarantee: the entire v5 field sequence survives in order,
-    // and the one new field sits between the reply body and the
-    // connection trailer
+    // with the v6 inertia= between the reply body and the connection
+    // trailer — and v7's profile= appended right after it
     let h = serve(ServerConfig::default()).unwrap();
     let r = request(h.addr, "cluster dataset=blobs_300_4_3 k=3 seed=5").unwrap();
     let mut pos = 0;
     for f in [
         "ok method=", " cache=", " medoids=", " objective=", " seconds=", " dissim=", " swaps=",
-        " source=", " cost=", " inertia=", " queue_ms=", " served_ms=",
+        " source=", " cost=", " inertia=", " profile=", " queue_ms=", " served_ms=",
     ] {
         let at = r[pos..].find(f).unwrap_or_else(|| panic!("{f:?} missing/misordered in {r:?}"));
         pos += at + f.len();

@@ -14,7 +14,7 @@
 
 use obpam::backend::{ComputeBackend, NativeBackend};
 use obpam::coordinator::{one_batch_pam, OneBatchConfig, SamplerKind};
-use obpam::dissim::{cross_matrix_pool, DissimCounter, Metric};
+use obpam::dissim::{cross_matrix_pool, ComputeProfile, DissimCounter, Metric};
 use obpam::linalg::Matrix;
 use obpam::rng::Rng;
 use obpam::runtime::Pool;
@@ -127,6 +127,88 @@ fn backend_tile_ops_identical_across_thread_counts() {
         let gains_p = par.gains(&d, &dn, &ds, &near, k, &w).unwrap();
         assert_eq!(gains_p.0, gains_s.0, "shared gains at {threads} threads");
         assert_eq!(gains_p.1.data, gains_s.1.data, "permedoid gains at {threads} threads");
+    }
+}
+
+#[test]
+fn fused_tile_ops_bit_identical_across_thread_counts() {
+    // the fused single-sweep ops (pairwise_argmin / pairwise_top2) must
+    // be bit-identical to the serial run AND to the unfused
+    // materialise-then-rewalk composition, at every compared width,
+    // under both compute profiles
+    let mut rng = Rng::new(0xA17);
+    let x = rand_matrix(&mut rng, 301, 17);
+    let b = rand_matrix(&mut rng, 67, 17);
+    for metric in [Metric::L1, Metric::L2, Metric::SqL2, Metric::Chebyshev, Metric::Cosine] {
+        for profile in [ComputeProfile::Exact, ComputeProfile::Fast] {
+            let serial = NativeBackend::new(metric).with_profile(profile);
+            let (d_s, idx_s, val_s) = serial.pairwise_argmin(&x, &b).unwrap();
+            let (d2_s, t2_s) = serial.pairwise_top2(&x, &b).unwrap();
+            assert_eq!(d_s.data, d2_s.data, "argmin/top2 sweeps disagree on the matrix");
+            assert_eq!(
+                serial.argmin_rows(&d_s).unwrap(),
+                (idx_s.clone(), val_s.clone()),
+                "{} {} fused argmin != unfused rewalk",
+                metric.name(),
+                profile.name()
+            );
+            assert_eq!(
+                serial.top2(&d_s).unwrap(),
+                t2_s,
+                "{} {} fused top2 != unfused rewalk",
+                metric.name(),
+                profile.name()
+            );
+            for threads in reuse_thread_counts() {
+                let par =
+                    NativeBackend::with_pool(metric, Pool::new(threads)).with_profile(profile);
+                let (d_p, idx_p, val_p) = par.pairwise_argmin(&x, &b).unwrap();
+                let tag = format!("{} {} at {threads} threads", metric.name(), profile.name());
+                assert_eq!(d_p.data, d_s.data, "argmin matrix: {tag}");
+                assert_eq!(idx_p, idx_s, "argmin indices: {tag}");
+                assert_eq!(val_p, val_s, "argmin values: {tag}");
+                let (d2_p, t2_p) = par.pairwise_top2(&x, &b).unwrap();
+                assert_eq!(d2_p.data, d_s.data, "top2 matrix: {tag}");
+                assert_eq!(t2_p, t2_s, "top2 reduction: {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_profile_solve_identical_at_any_thread_count() {
+    // the dot-product Fast kernel must stay deterministic under
+    // threading just like Exact: the batch norms are precomputed once
+    // and every row reduction is chunk-independent
+    let mut rng = Rng::new(0xA18);
+    let x = rand_matrix(&mut rng, 400, 9);
+    let run = |threads: usize| {
+        let backend = NativeBackend::with_pool(Metric::SqL2, Pool::new(threads))
+            .with_profile(ComputeProfile::Fast);
+        let cfg = OneBatchConfig {
+            k: 5,
+            sampler: SamplerKind::Nniw,
+            m: Some(90),
+            seed: 33,
+            threads,
+            profile: ComputeProfile::Fast,
+            ..Default::default()
+        };
+        one_batch_pam(&x, &cfg, &backend).unwrap()
+    };
+    let serial = run(1);
+    for threads in reuse_thread_counts() {
+        let par = run(threads);
+        assert_eq!(par.medoids, serial.medoids, "fast medoids differ at {threads} threads");
+        assert_eq!(
+            par.est_objective.to_bits(),
+            serial.est_objective.to_bits(),
+            "fast objective bits differ at {threads} threads"
+        );
+        assert_eq!(
+            par.stats.dissim_count, serial.stats.dissim_count,
+            "fast dissim count differs at {threads} threads"
+        );
     }
 }
 
