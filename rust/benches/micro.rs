@@ -18,10 +18,16 @@
 //!     shape (spawn + join `threads` OS threads every region);
 //!   * v6 model-serving `assign` QPS over TCP, one connection and many
 //!     concurrent connections (the fitted-model read path);
+//!   * v8 evented-core connection scaling: park/resolve rates for
+//!     thousands of concurrent idle `wait`ers held at constant server
+//!     thread count, and on-loop `assign` QPS with 0 vs N parked
+//!     waiters (the `conn` section);
 //!   * (feature `xla`) XLA pairwise/gains: Pallas kernel vs plain-XLA.
 //!
 //! Flags (after `--`): `--smoke` shrinks every exercised section to
 //! tiny shapes and skips the heavyweight ones (the CI smoke step);
+//! `--only <section>` runs just the rows whose `section` field matches
+//! (e.g. `--only conn` is the CI connection-scaling smoke step);
 //! `--json` additionally writes every reported row to
 //! `BENCH_micro.json` (schema documented in README.md).
 
@@ -112,10 +118,63 @@ fn write_json(path: &str, cores: usize, smoke: bool) {
     }
 }
 
+/// Live thread count of this process from `/proc/self/status`
+/// (`None` off Linux — callers skip the flat-thread-count check).
+fn thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status.lines().find_map(|l| l.strip_prefix("Threads:")).and_then(|v| v.trim().parse().ok())
+}
+
+/// Pull a `key<number>` field out of a server reply line (0 if absent).
+fn stat_field(reply: &str, key: &str) -> usize {
+    reply
+        .split(key)
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Raise the soft `RLIMIT_NOFILE` toward the hard cap and return the
+/// resulting soft limit.  The connection-scaling section holds both
+/// ends of every parked waiter in this one process (client socket plus
+/// the server's accepted end), so N waiters cost roughly 2N fds.
+fn raise_fd_limit() -> usize {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    let mut lim = RLimit { cur: 0, max: 0 };
+    // SAFETY: plain POSIX getrlimit writing into a properly sized,
+    // initialised #[repr(C)] struct we own.
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 1024;
+    }
+    let want = lim.max.min(65_536);
+    if lim.cur < want {
+        let new = RLimit { cur: want, max: lim.max };
+        // SAFETY: raising the soft limit toward the hard cap is always
+        // permitted; on failure the old limit simply stays in place.
+        if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+            lim.cur = want;
+        }
+    }
+    lim.cur as usize
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
     let json = args.iter().any(|a| a == "--json");
+    let only: Option<String> =
+        args.iter().position(|a| a == "--only").and_then(|i| args.get(i + 1)).cloned();
+    let run = |s: &str| only.as_deref().map_or(true, |o| o == s);
     let mut rng = Rng::new(0xBEEF);
     let cores = Pool::auto().threads();
     println!(
@@ -124,30 +183,32 @@ fn main() {
     );
 
     // ---- native pairwise, paper-ish shapes, 1 thread vs all cores ------
-    let pairwise_shapes: &[(usize, usize, usize)] = if smoke {
-        &[(200, 64, 16)]
-    } else {
-        &[(2_000, 512, 16), (2_000, 512, 128), (1_000, 512, 784)]
-    };
-    let (pw_warm, pw_iters) = if smoke { (0, 1) } else { (1, 5) };
-    for &(n, m, p) in pairwise_shapes {
-        let x = rand_matrix(&mut rng, n, p);
-        let b = rand_matrix(&mut rng, m, p);
-        let gdps = (n * m) as f64 / 1e9;
-        for threads in [1, cores] {
-            let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
-            let (med, mad) = time_median(pw_warm, pw_iters, || {
-                std::hint::black_box(backend.pairwise(&x, &b).unwrap());
-            });
-            report(
-                "pairwise",
-                &format!("native pairwise l1 n={n} m={m} p={p} t={threads}"),
-                med,
-                mad,
-                Some((gdps, "Gdissim/s")),
-            );
-            if threads == cores {
-                break; // cores == 1: avoid a duplicate row
+    if run("pairwise") {
+        let pairwise_shapes: &[(usize, usize, usize)] = if smoke {
+            &[(200, 64, 16)]
+        } else {
+            &[(2_000, 512, 16), (2_000, 512, 128), (1_000, 512, 784)]
+        };
+        let (pw_warm, pw_iters) = if smoke { (0, 1) } else { (1, 5) };
+        for &(n, m, p) in pairwise_shapes {
+            let x = rand_matrix(&mut rng, n, p);
+            let b = rand_matrix(&mut rng, m, p);
+            let gdps = (n * m) as f64 / 1e9;
+            for threads in [1, cores] {
+                let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
+                let (med, mad) = time_median(pw_warm, pw_iters, || {
+                    std::hint::black_box(backend.pairwise(&x, &b).unwrap());
+                });
+                report(
+                    "pairwise",
+                    &format!("native pairwise l1 n={n} m={m} p={p} t={threads}"),
+                    med,
+                    mad,
+                    Some((gdps, "Gdissim/s")),
+                );
+                if threads == cores {
+                    break; // cores == 1: avoid a duplicate row
+                }
             }
         }
     }
@@ -157,7 +218,7 @@ fn main() {
     // still cache-hot; the unfused composition materialises the n x m
     // matrix and walks it again.  GB/s counts the streamed inputs plus
     // the written matrix (4 bytes each); Gpair/s counts n*m distances.
-    {
+    if run("fused") {
         let (n, m, p) = if smoke { (160, 48, 12) } else { (4_000, 512, 48) };
         let x = rand_matrix(&mut rng, n, p);
         let b = rand_matrix(&mut rng, m, p);
@@ -214,7 +275,7 @@ fn main() {
     // ---- Fast (dot-product) vs Exact (diff-accumulate) profiles ---------
     // Only the Euclidean metrics have a distinct Fast kernel; the rest
     // run the identical code under either profile.
-    {
+    if run("profile") {
         let (n, m, p) = if smoke { (160, 48, 12) } else { (4_000, 512, 128) };
         let x = rand_matrix(&mut rng, n, p);
         let b = rand_matrix(&mut rng, m, p);
@@ -248,7 +309,9 @@ fn main() {
         }
     }
 
-    if !smoke {
+    let heavy =
+        ["gains", "eager", "state", "e2e", "dispatch", "xla"].iter().any(|s| run(s));
+    if !smoke && heavy {
         // ---- swap gains: native loop, 1 thread vs all cores -------------
         let (n, m, k) = (4_000, 1_024, 100);
         let d = rand_matrix(&mut rng, n, m);
@@ -256,25 +319,27 @@ fn main() {
         let ds: Vec<f32> = dn.iter().map(|v| v + 0.3).collect();
         let near: Vec<usize> = (0..m).map(|_| rng.below(k)).collect();
         let w = vec![1.0f32; m];
-        for threads in [1, cores] {
-            let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
-            let (med, mad) = time_median(1, 5, || {
-                std::hint::black_box(backend.gains(&d, &dn, &ds, &near, k, &w).unwrap());
-            });
-            report(
-                "gains",
-                &format!("native gains n={n} m={m} k={k} t={threads}"),
-                med,
-                mad,
-                Some(((n * m) as f64 / 1e9, "Gcell/s")),
-            );
-            if threads == cores {
-                break;
+        if run("gains") {
+            for threads in [1, cores] {
+                let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
+                let (med, mad) = time_median(1, 5, || {
+                    std::hint::black_box(backend.gains(&d, &dn, &ds, &near, k, &w).unwrap());
+                });
+                report(
+                    "gains",
+                    &format!("native gains n={n} m={m} k={k} t={threads}"),
+                    med,
+                    mad,
+                    Some(((n * m) as f64 / 1e9, "Gcell/s")),
+                );
+                if threads == cores {
+                    break;
+                }
             }
         }
 
         // ---- eager candidate scan: one full pass, 1 thread vs all cores -
-        {
+        if run("eager") {
             let mut rng2 = Rng::new(1);
             let med: Vec<usize> = rng2.sample_distinct(n, k);
             let st0 = SwapState::init(&d, med, vec![1.0; m], n);
@@ -311,7 +376,7 @@ fn main() {
         }
 
         // ---- SwapState ops ----------------------------------------------
-        {
+        if run("state") {
             let mut rng2 = Rng::new(1);
             let med: Vec<usize> = rng2.sample_distinct(n, k);
             let mut st = SwapState::init(&d, med, vec![1.0; m], n);
@@ -332,7 +397,7 @@ fn main() {
         }
 
         // ---- end-to-end OneBatchPAM, serial vs threaded ------------------
-        {
+        if run("e2e") {
             let x = rand_matrix(&mut rng, 5_000, 32);
             for threads in [1, cores] {
                 let backend = NativeBackend::with_pool(Metric::L1, Pool::new(threads));
@@ -363,7 +428,7 @@ fn main() {
         // A deliberately tiny region (the worst case for dispatch overhead):
         // the work per range is microseconds, so the measured time is mostly
         // the cost of getting the region onto the workers and back.
-        {
+        if run("dispatch") {
             let rows = 16 * 1024;
             let data: Vec<f32> = (0..rows).map(|i| (i % 97) as f32).collect();
             let data = &data;
@@ -414,7 +479,7 @@ fn main() {
         // own.  Measure the difference for a small job-sized region: the
         // per-job shape pays `threads - 1` thread spawns + joins, the
         // cached shape pays a map lookup + clone + wakeup.
-        {
+        if run("dispatch") {
             let rows = 16 * 1024;
             let data: Vec<f32> = (0..rows).map(|i| (i % 89) as f32).collect();
             let data = &data;
@@ -455,10 +520,12 @@ fn main() {
         }
 
         // ---- XLA artifact paths ------------------------------------------
-        #[cfg(feature = "xla")]
-        xla_section(&mut rng, &d, &dn, &ds, &near, k, &w);
-        #[cfg(not(feature = "xla"))]
-        println!("\n(xla paths skipped: built without the `xla` feature)");
+        if run("xla") {
+            #[cfg(feature = "xla")]
+            xla_section(&mut rng, &d, &dn, &ds, &near, k, &w);
+            #[cfg(not(feature = "xla"))]
+            println!("\n(xla paths skipped: built without the `xla` feature)");
+        }
     }
 
     // ---- v7 model serving: assign QPS over TCP ---------------------------
@@ -469,7 +536,7 @@ fn main() {
     // measures the serving wire path, not the argmin (which is
     // nanoseconds at k=5).  One client alone is latency-bound; the
     // concurrent shape shows how far connection-per-request scales.
-    {
+    if run("serving") {
         use obpam::server::{request, serve, ServerConfig};
         let h = serve(ServerConfig { workers: 1, queue_cap: 64, ..Default::default() }).unwrap();
         let dataset = if smoke { "blobs_500_4_3" } else { "blobs_2000_8_5" };
@@ -526,6 +593,134 @@ fn main() {
             mad_many,
             Some(((conns * reqs) as f64, "req/s")),
         );
+        h.shutdown();
+    }
+
+    // ---- v8 evented core: connection scaling ------------------------------
+    // The readiness-driven accept loop holds an idle `wait`er as a
+    // registry entry plus a timer-wheel node instead of a blocked OS
+    // thread, so N parked connections cost memory, not threads.  Park N
+    // waiters on a queued job behind a long CLARA blocker, check the
+    // process thread count stayed flat, measure on-loop `assign` QPS
+    // with the waiters still parked (the read path must not degrade
+    // behind thousands of sleepers), then resolve every waiter at once
+    // with a single `cancel`.
+    if run("conn") {
+        use obpam::server::{request, serve, ServerConfig};
+        use std::io::{BufRead, BufReader, Write};
+        use std::time::{Duration, Instant};
+        let fd_budget = raise_fd_limit();
+        let want = if smoke { 1_000usize } else { 10_000 };
+        let waiters = want.min(fd_budget.saturating_sub(256) / 2);
+        if waiters < want {
+            println!("(conn section capped to {waiters} waiters by RLIMIT_NOFILE={fd_budget})");
+        }
+        let h = serve(ServerConfig {
+            workers: 1,
+            queue_cap: 8,
+            conn_cap: waiters + 64,
+            ..Default::default()
+        })
+        .unwrap();
+
+        // a fitted model for the assign-QPS probes
+        let sub = request(h.addr, "submit dataset=blobs_300_4_3 k=3 seed=1").unwrap();
+        let fit = sub.split_whitespace().find_map(|t| t.strip_prefix("job=")).unwrap().to_string();
+        let done = request(h.addr, &format!("wait job={fit} timeout_ms=600000")).unwrap();
+        assert!(done.starts_with("ok "), "{done}");
+        let p = request(h.addr, &format!("promote job={fit} name=bench")).unwrap();
+        assert!(p.starts_with("ok "), "{p}");
+        let assign_line = "assign model=bench point=0.1,0.2,0.3,0.4";
+        let reqs = if smoke { 100usize } else { 500 };
+        let (warm, iters) = if smoke { (0, 1) } else { (1, 3) };
+        let assign_qps = |label: &str| {
+            let (med, mad) = time_median(warm, iters, || {
+                for _ in 0..reqs {
+                    let r = request(h.addr, assign_line).unwrap();
+                    debug_assert!(r.starts_with("ok "), "{r}");
+                    std::hint::black_box(r);
+                }
+            });
+            report("conn", label, med, mad, Some((reqs as f64, "req/s")));
+        };
+        assign_qps(&format!("assign qps: 0 parked waiters, {reqs} reqs"));
+
+        // pin the lone worker on a cancellable many-rep CLARA blocker,
+        // then queue a cheap job behind it for the waiters to park on
+        let sub = request(
+            h.addr,
+            "submit dataset=blobs_20000_8_5 k=5 seed=3 method=FasterCLARA-30000",
+        )
+        .unwrap();
+        let blocker =
+            sub.split_whitespace().find_map(|t| t.strip_prefix("job=")).unwrap().to_string();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let r = request(h.addr, &format!("poll job={blocker}")).unwrap();
+            if r.contains(" state=running ") || r.ends_with("state=running") {
+                break;
+            }
+            assert!(Instant::now() < deadline, "blocker never started running: {r}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let sub = request(h.addr, "submit dataset=blobs_300_4_3 k=3 seed=4").unwrap();
+        let parked =
+            sub.split_whitespace().find_map(|t| t.strip_prefix("job=")).unwrap().to_string();
+
+        let threads_before = thread_count();
+        let t0 = Instant::now();
+        let mut conns: Vec<BufReader<std::net::TcpStream>> = Vec::with_capacity(waiters);
+        let wait_line = format!("wait job={parked} timeout_ms=600000\n");
+        for _ in 0..waiters {
+            let mut s = std::net::TcpStream::connect(h.addr).unwrap();
+            s.write_all(wait_line.as_bytes()).unwrap();
+            conns.push(BufReader::new(s));
+        }
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            let s = request(h.addr, "stats").unwrap();
+            if stat_field(&s, " waiters=") >= waiters {
+                break;
+            }
+            assert!(Instant::now() < deadline, "waiters never all parked: {s}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let t_park = t0.elapsed().as_secs_f64();
+        report(
+            "conn",
+            &format!("park {waiters} idle waiters"),
+            t_park,
+            0.0,
+            Some((waiters as f64, "conn/s")),
+        );
+        if let (Some(before), Some(after)) = (threads_before, thread_count()) {
+            println!("  -> process threads: {before} before, {after} with {waiters} parked");
+            assert_eq!(before, after, "parked waiters must not cost OS threads");
+        }
+
+        assign_qps(&format!("assign qps: {waiters} parked waiters, {reqs} reqs"));
+
+        // one cancel of the queued job resolves every parked waiter
+        let t0 = Instant::now();
+        let c = request(h.addr, &format!("cancel job={parked}")).unwrap();
+        assert!(c.starts_with("ok "), "{c}");
+        let expect = format!("err cancelled job={parked}");
+        for conn in &mut conns {
+            let mut line = String::new();
+            conn.read_line(&mut line).unwrap();
+            debug_assert!(line.starts_with(&expect), "{line}");
+        }
+        let t_resolve = t0.elapsed().as_secs_f64();
+        report(
+            "conn",
+            &format!("resolve {waiters} parked waiters"),
+            t_resolve,
+            0.0,
+            Some((waiters as f64, "conn/s")),
+        );
+        drop(conns);
+        let c = request(h.addr, &format!("cancel job={blocker}")).unwrap();
+        assert!(c.starts_with("ok "), "{c}");
         h.shutdown();
     }
 

@@ -13,8 +13,9 @@ use crate::coordinator::state::SwapState;
 use crate::coordinator::KMedoidsResult;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use crate::solver::{CancelToken, CANCELLED};
 use crate::telemetry::{RunStats, Timer};
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// FasterCLARA configuration.
 #[derive(Clone, Debug)]
@@ -44,6 +45,21 @@ pub fn faster_clara(
     cfg: &ClaraConfig,
     backend: &dyn ComputeBackend,
 ) -> Result<KMedoidsResult> {
+    faster_clara_cancellable(x, cfg, backend, &CancelToken::none())
+}
+
+/// [`faster_clara`] with a cooperative cancellation token, checked
+/// between subsample repetitions (the natural CLARA granularity — one
+/// rep is one bounded FasterPAM run plus one full-dataset evaluation):
+/// a cancelled run fails with the [`CANCELLED`] marker error and
+/// discards its partial work.  An inert token takes the exact same
+/// path, so results stay bit-identical to [`faster_clara`].
+pub fn faster_clara_cancellable(
+    x: &Matrix,
+    cfg: &ClaraConfig,
+    backend: &dyn ComputeBackend,
+    cancel: &CancelToken,
+) -> Result<KMedoidsResult> {
     let n = x.rows;
     let k = cfg.k;
     assert!(k >= 2 && k < n);
@@ -56,6 +72,11 @@ pub fn faster_clara(
 
     let mut best: Option<(Vec<usize>, f64)> = None;
     for _ in 0..cfg.reps.max(1) {
+        // cancellation is honoured between reps; each rep is bounded
+        // work, so a cancel lands within one subsample's latency
+        if cancel.is_cancelled() {
+            bail!(CANCELLED);
+        }
         // FasterPAM on the subsample (search space restricted to it).
         let sub_idx = rng.sample_distinct(n, s);
         let sub = x.select_rows(&sub_idx);
@@ -107,7 +128,14 @@ impl crate::solver::Solver for ClaraSolver {
         spec: &crate::solver::SolveSpec,
         backend: &dyn ComputeBackend,
     ) -> Result<KMedoidsResult> {
-        faster_clara(x, &ClaraConfig::new(spec.k, self.reps, spec.seed), backend)
+        // the spec's token reaches the rep loop, so a served CLARA job
+        // cancels between subsamples instead of running every rep
+        faster_clara_cancellable(
+            x,
+            &ClaraConfig::new(spec.k, self.reps, spec.seed),
+            backend,
+            &spec.cancel,
+        )
     }
 }
 
@@ -140,6 +168,24 @@ mod tests {
         let r1 = faster_clara(&x, &ClaraConfig::new(5, 1, 7), &backend).unwrap();
         let r4 = faster_clara(&x, &ClaraConfig::new(5, 4, 7), &backend).unwrap();
         assert!(r4.est_objective <= r1.est_objective + 1e-9);
+    }
+
+    #[test]
+    fn cancelled_token_aborts_between_reps() {
+        let mut rng = Rng::new(6);
+        let x = synth::gen_gaussian_mixture(&mut rng, 200, 4, 4, 0.2, 1.0);
+        let backend = NativeBackend::new(Metric::L1);
+        let cfg = ClaraConfig::new(4, 5, 9);
+        let token = CancelToken::new();
+        token.cancel();
+        let err =
+            faster_clara_cancellable(&x, &cfg, &backend, &token).unwrap_err().to_string();
+        assert_eq!(err, CANCELLED);
+        // the inert token reproduces the plain entry point bit-for-bit
+        let a = faster_clara(&x, &cfg, &backend).unwrap();
+        let b = faster_clara_cancellable(&x, &cfg, &backend, &CancelToken::none()).unwrap();
+        assert_eq!(a.medoids, b.medoids);
+        assert_eq!(a.est_objective.to_bits(), b.est_objective.to_bits());
     }
 
     #[test]

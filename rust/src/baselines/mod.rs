@@ -26,7 +26,7 @@ pub mod random;
 
 pub use alternate::{alternate, AlternateSolver};
 pub use banditpam::{bandit_pam, BanditConfig, BanditPamSolver};
-pub use clara::{faster_clara, ClaraConfig, ClaraSolver};
+pub use clara::{faster_clara, faster_clara_cancellable, ClaraConfig, ClaraSolver};
 pub use fasterpam::{faster_pam, faster_pam_cancellable, FasterPamSolver};
 pub use kmeanspp::{kmc2, kmeanspp, ls_kmeanspp, KMeansPpSolver, Kmc2Solver, LsKMeansPpSolver};
 pub use random::{random_select, RandomSolver};

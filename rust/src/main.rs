@@ -11,6 +11,7 @@
 //! obpam bench    --table 3|5|7 | --fig 1|pareto  (thin wrapper; prefer `cargo bench`)
 //! obpam serve    [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 16] [--cache-cap 32]
 //!                [--budget UNITS] [--strict-budget] [--retain-cap N] [--model-cap N]
+//!                [--conn-cap N]
 //! obpam submit   [--addr HOST:PORT] key=value...   (async: returns job=j<id>)
 //! obpam poll     [--addr HOST:PORT] --job j3
 //! obpam wait     [--addr HOST:PORT] --job j3 [--timeout-ms N]
@@ -56,8 +57,10 @@
 //!
 //! `serve` knobs follow the same `0 = auto` convention: `--workers 0`
 //! auto-detects cores, `--queue-cap 0` scales with the workers,
-//! `--budget 0` takes the default cost-weighted admission budget and
-//! `--retain-cap 0` the default finished-job retention.
+//! `--budget 0` takes the default cost-weighted admission budget,
+//! `--retain-cap 0` the default finished-job retention and
+//! `--conn-cap 0` the default concurrent-connection bound (8192 — the
+//! evented core makes a connection a registry entry, not a thread).
 //! `--strict-budget` disables the lone-job idle-admit exception.
 //!
 //! The `submit` / `poll` / `wait` / `cancel` / `jobs` subcommands are
@@ -376,8 +379,9 @@ fn cmd_cluster(flags: &HashMap<String, String>, overrides: &[String]) -> Result<
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // `--workers 0` auto-detects cores and `--queue-cap 0` follows the
     // worker count, matching the `--threads 0` convention; `--budget 0`
-    // takes the default weighted-admission budget (4x MAX_JOB_COST) and
-    // `--retain-cap 0` the default finished-job retention (64).
+    // takes the default weighted-admission budget (4x MAX_JOB_COST),
+    // `--retain-cap 0` the default finished-job retention (64) and
+    // `--conn-cap 0` the default connection bound (8192).
     let cfg = obpam::server::ServerConfig {
         addr: flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".into()),
         workers: flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2),
@@ -387,6 +391,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         strict_budget: matches!(flags.get("strict-budget"), Some(v) if v != "false"),
         retain_cap: flags.get("retain-cap").and_then(|s| s.parse().ok()).unwrap_or(0),
         model_cap: flags.get("model-cap").and_then(|s| s.parse().ok()).unwrap_or(0),
+        conn_cap: flags.get("conn-cap").and_then(|s| s.parse().ok()).unwrap_or(0),
     };
     let handle = obpam::server::serve(cfg)?;
     println!("obpam server listening on {}", handle.addr);

@@ -1,0 +1,992 @@
+//! The evented accept core (protocol v8): one readiness-driven loop
+//! thread multiplexes every client connection over `poll(2)`, so an
+//! idle or parked connection costs a registry entry — never an OS
+//! thread.  This replaces v5–v7's thread-per-connection accept path.
+//!
+//! # Design
+//!
+//! * **Nonblocking discipline** — the listener, every accepted stream
+//!   and the self-pipe are nonblocking; the loop's only blocking call
+//!   is `poll(2)` itself, via the thin libc shim in [`sys`] (no async
+//!   runtime, no external crate).
+//! * **Per-connection state machines** — each [`Conn`] owns a read
+//!   buffer (bytes in, split on `\n`), a write buffer (reply bytes
+//!   out, drained as the socket accepts them) and a FIFO of
+//!   [`Pending`] requests.  Replies flush strictly in request order,
+//!   so **pipelining** works: a client may write multiple request
+//!   lines before reading any reply and receives the replies in
+//!   submission order, each with its own `queue_ms=`/`served_ms=`
+//!   trailer.  Reply bytes are identical to the v7 one-line-per-
+//!   connection shape — a v1 client that sends one line and reads one
+//!   line sees nothing new.
+//! * **On-loop vs on-worker verbs** — cheap verbs (`ping`, `submit`,
+//!   `poll`, `cancel`, `jobs`, `stats`, `promote`, `assign`, `models`,
+//!   `evict`) dispatch synchronously on the loop through
+//!   [`super::dispatch_line`] (the `assign` path reuses the per-model
+//!   [`super::models::AssignScratch`], so serving stays allocation-
+//!   free).  `cluster` and `submit`ted solves hand off to the solver-
+//!   worker fleet exactly as before; `wait`/`cluster` replies park as
+//!   [`PendingState::WaitJob`]/[`PendingState::ClusterJob`] instead of
+//!   blocking a thread, and `sleep` parks as a timer entry.
+//! * **Timer wheel** — caller timeouts (`wait timeout_ms=`), queued-job
+//!   deadlines (`deadline_ms=`, via [`super::jobs::JobRegistry::probe`]'s
+//!   shed instant) and `sleep` expiries all live in one ordered map;
+//!   the poll timeout is the distance to the nearest entry.  Stale
+//!   entries (request already resolved, connection gone) are skipped
+//!   when they fire.
+//! * **Self-pipe wakeup invariant** — job completion must never leave a
+//!   parked connection unresolved: every [`super::jobs::JobRegistry`]
+//!   state broadcast also fires the [`WakePipe`] waker installed at
+//!   startup, and the loop drains the pipe then resolves the ids from
+//!   `take_terminal_events()`.  Parking is race-free because the loop
+//!   probes the job *on the loop thread* before parking: a terminal
+//!   transition either lands before the probe (request resolves
+//!   immediately) or after it (the event is still queued for the next
+//!   drain, since only the loop drains events).
+//! * **Backpressure** — connections are admitted up to
+//!   [`super::ServerConfig::conn_cap`] (beyond it: `err queue full`,
+//!   close); `sleep` holds one of `queue_cap` diagnostic slots so the
+//!   v4 burst-backpressure contract (`err queue full` rejections under
+//!   a sleep burst) is preserved without any connection thread; a
+//!   writer that makes no progress for [`WRITE_STALL`] while bytes are
+//!   buffered is shed.  Read-closed connections with nothing in flight
+//!   are dropped immediately.
+//!
+//! Shutdown mirrors the old join semantics: once
+//! [`super::ServerHandle::shutdown`] sets the stop flag, the loop stops
+//! admitting work, keeps running until every pending reply has resolved
+//! and flushed (workers drain the job queue, so every parked request
+//! terminates), then exits and the handle joins it.
+
+use super::metrics::ConnCounters;
+use super::ServerState;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::raw::c_int;
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shed a connection whose write buffer made no progress for this long
+/// (the evented successor of the old per-thread write timeout).
+const WRITE_STALL: Duration = Duration::from_secs(10);
+
+/// Read-buffer bound: a request line may not exceed this (defensive —
+/// the old `read_line` path was unbounded; real lines are tiny, large
+/// `assign` batches are well under it).
+const LINE_CAP: usize = 4 << 20;
+
+/// Write-buffer bound per connection: a reader this far behind its own
+/// pipelined replies is shed rather than buffered without limit.
+const WBUF_CAP: usize = 16 << 20;
+
+/// Thin libc shim: `poll(2)` and a self-pipe, declared by hand so the
+/// event loop needs no external crate and no async runtime.
+mod sys {
+    use std::os::raw::{c_int, c_ulong};
+
+    /// `struct pollfd` from poll(2) — layout fixed by the C ABI.
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    const F_GETFL: c_int = 3;
+    const F_SETFL: c_int = 4;
+    const O_NONBLOCK: c_int = 0o4000;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+        fn pipe(fds: *mut c_int) -> c_int;
+        fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+        fn close(fd: c_int) -> c_int;
+        fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+    }
+
+    /// poll(2) over `fds` for up to `timeout_ms` (-1 = forever).  A
+    /// negative return (EINTR and friends) is treated as "no fd ready"
+    /// — the loop just re-polls.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: c_int) {
+        // SAFETY: `fds` is a valid, exclusively borrowed slice of
+        // repr(C) pollfd structs for the duration of the call; the
+        // kernel reads fd/events and writes revents within its bounds.
+        let _ = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
+    }
+
+    /// pipe(2) with both ends switched to `O_NONBLOCK`; returns
+    /// `(read_fd, write_fd)`.
+    pub fn nonblocking_pipe() -> std::io::Result<(c_int, c_int)> {
+        let mut fds = [0 as c_int; 2];
+        // SAFETY: `fds` is a valid 2-element int array the kernel
+        // fills with the two pipe descriptors on success.
+        if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        for fd in fds {
+            // SAFETY: `fd` was just returned by pipe(2) and is owned
+            // by this function; F_GETFL reads the status flags.
+            let flags = unsafe { fcntl(fd, F_GETFL, 0) };
+            // SAFETY: as above; F_SETFL only toggles status flags.
+            if flags < 0 || unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) } < 0 {
+                let err = std::io::Error::last_os_error();
+                close_fd(fds[0]);
+                close_fd(fds[1]);
+                return Err(err);
+            }
+        }
+        Ok((fds[0], fds[1]))
+    }
+
+    /// Best-effort one-byte write (the self-pipe wake).  A full pipe is
+    /// fine: the loop is already due to wake and drain it.
+    pub fn write_byte(fd: c_int) {
+        let b = [1u8];
+        // SAFETY: `b` is a valid 1-byte buffer for the call; `fd` is a
+        // live pipe write end owned by the caller's WakePipe.
+        let _ = unsafe { write(fd, b.as_ptr(), 1) };
+    }
+
+    /// Drain every buffered byte from a nonblocking read end; returns
+    /// whether at least one byte was read (a wakeup was consumed).
+    pub fn drain_fd(fd: c_int) -> bool {
+        let mut buf = [0u8; 64];
+        let mut any = false;
+        loop {
+            // SAFETY: `buf` is a valid buffer of the stated length for
+            // the call; `fd` is a live nonblocking pipe read end owned
+            // by the caller's WakePipe.
+            let n = unsafe { read(fd, buf.as_mut_ptr(), buf.len()) };
+            if n <= 0 {
+                return any; // 0 = closed, <0 = EAGAIN/EINTR: drained
+            }
+            any = true;
+        }
+    }
+
+    /// close(2); callers own the descriptor and close it at most once.
+    pub fn close_fd(fd: c_int) {
+        // SAFETY: `fd` is an owned, still-open descriptor (WakePipe
+        // closes each end exactly once, on drop).
+        let _ = unsafe { close(fd) };
+    }
+}
+
+/// The self-pipe: `wake()` (any thread) makes the loop's `poll(2)`
+/// return; the loop `drain()`s it before resolving job events.  Owns
+/// both descriptors and closes them on drop.
+pub(crate) struct WakePipe {
+    rfd: c_int,
+    wfd: c_int,
+}
+
+impl WakePipe {
+    fn new() -> std::io::Result<Self> {
+        let (rfd, wfd) = sys::nonblocking_pipe()?;
+        Ok(WakePipe { rfd, wfd })
+    }
+
+    /// Make the loop's poll return (called from worker threads through
+    /// the registry waker; write errors are ignored by design — a full
+    /// pipe already guarantees a pending wakeup).
+    pub(crate) fn wake(&self) {
+        sys::write_byte(self.wfd);
+    }
+
+    /// Consume buffered wakeups; `true` when at least one was pending.
+    fn drain(&self) -> bool {
+        sys::drain_fd(self.rfd)
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        sys::close_fd(self.rfd);
+        sys::close_fd(self.wfd);
+    }
+}
+
+/// Why a parked request is still unresolved (or its finished reply).
+enum PendingState {
+    /// Reply line fully formatted (trailer appended); waiting for its
+    /// turn in the connection's in-order flush.
+    Ready(Vec<u8>),
+    /// A `wait` parked on a job: resolved by the job's terminal event,
+    /// the caller's `timeout_ms=` timer, or the queued-job deadline
+    /// timer — whichever fires first.
+    WaitJob {
+        id: u64,
+        timeout_deadline: Option<Instant>,
+    },
+    /// A `cluster` solve handed to the worker fleet; resolved by the
+    /// job's terminal event (or its queued-deadline shed).
+    ClusterJob { id: u64 },
+    /// A `sleep ms=` diagnostic holding one of `queue_cap` slots until
+    /// its timer fires.
+    Sleep { ms: u64 },
+}
+
+/// One request a connection has submitted and not yet been answered.
+struct Pending {
+    /// Per-connection submission order; replies flush in `seq` order.
+    seq: u64,
+    state: PendingState,
+    /// Dispatch time — `served_ms=` measures from here to resolution,
+    /// so a parked `wait` reports its park time just like the blocking
+    /// path did.
+    started: Instant,
+    /// The request's connection-level dispatch wait, for replies whose
+    /// trailer carries it (timeouts, errors, `sleep`).
+    queue_ms: f64,
+}
+
+/// One multiplexed client connection.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    pending: VecDeque<Pending>,
+    next_seq: u64,
+    /// Requests parsed on this connection (the second and later ones
+    /// count as pipelined).
+    reqs: u64,
+    /// Peer sent EOF (or a blank line, the v7 close signal): no more
+    /// requests, the connection drops once its replies flush.
+    closed_read: bool,
+    /// Baseline for the next request's `queue_ms=`: accept time, then
+    /// reset after each parsed line.
+    dispatch_from: Instant,
+    /// Last instant the write buffer made progress (or was appended
+    /// to); a stall past [`WRITE_STALL`] sheds the connection.
+    last_progress: Instant,
+}
+
+/// Start the evented accept core; returns the loop's join handle.
+/// Installs the registry waker (job completion -> self-pipe -> poll
+/// wakeup) before the loop starts, so no terminal transition can
+/// predate the wakeup path.
+pub(crate) fn spawn(
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+    conn_cap: usize,
+    queue_cap: usize,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    listener.set_nonblocking(true)?;
+    let pipe = Arc::new(WakePipe::new()?);
+    let waker = pipe.clone();
+    state.jobs.set_waker(Arc::new(move || waker.wake()));
+    // tidy:allow(thread-spawn) — the evented accept core: the one
+    // long-lived loop thread, owned and joined by ServerHandle::shutdown.
+    Ok(std::thread::spawn(move || {
+        EventLoop {
+            listener,
+            state,
+            stop,
+            conn_cap,
+            queue_cap,
+            pipe,
+            registry: HashMap::new(),
+            next_conn: 0,
+            timers: BTreeMap::new(),
+            next_tick: 0,
+            waiters: HashMap::new(),
+            sleep_active: 0,
+        }
+        .run();
+    }))
+}
+
+/// What a fired timer found its pending request doing.
+enum Fired {
+    Sleep(u64, f64),
+    Wait(u64, Option<Instant>, f64),
+    Cluster(u64, f64),
+}
+
+struct EventLoop {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+    conn_cap: usize,
+    /// The `sleep` diagnostic's slot bound (the v4 burst-backpressure
+    /// contract: at most this many concurrent sleeps, the rest get
+    /// `err queue full`).
+    queue_cap: usize,
+    pipe: Arc<WakePipe>,
+    registry: HashMap<usize, Conn>,
+    next_conn: usize,
+    /// The timer wheel: fire instant (+ a unique tick breaking ties)
+    /// -> the parked request to revisit.  Entries are one-shot and may
+    /// be stale — firing checks the pending's live state.
+    timers: BTreeMap<(Instant, u64), (usize, u64)>,
+    next_tick: u64,
+    /// Job id -> parked requests to resolve on its terminal event.
+    waiters: HashMap<u64, Vec<(usize, u64)>>,
+    /// Live `sleep` slots (see `queue_cap`).
+    sleep_active: usize,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        loop {
+            self.process_terminal_events();
+            if self.stop.load(Ordering::SeqCst) && self.shutdown_drained() {
+                break;
+            }
+            let timeout = self.next_timeout();
+            let (accept_ready, pipe_ready, ready) = self.poll_ready(timeout);
+            if pipe_ready && self.pipe.drain() {
+                self.conns().record_wakeup();
+            }
+            self.process_terminal_events();
+            if accept_ready {
+                self.accept_ready();
+            }
+            for (id, readable, writable) in ready {
+                if writable {
+                    self.flush_conn(id);
+                }
+                if readable {
+                    self.handle_readable(id);
+                }
+            }
+            self.fire_timers();
+            self.shed_stalled();
+        }
+    }
+
+    fn conns(&self) -> &ConnCounters {
+        &self.state.conns
+    }
+
+    /// Poll timeout: distance to the nearest timer or write-stall
+    /// deadline, rounded up a millisecond; -1 (forever) when neither
+    /// exists — accept, readable bytes and the self-pipe wake us.
+    fn next_timeout(&self) -> c_int {
+        let mut deadline: Option<Instant> = self.timers.keys().next().map(|&(at, _)| at);
+        for conn in self.registry.values() {
+            if !conn.wbuf.is_empty() {
+                let stall = conn.last_progress + WRITE_STALL;
+                deadline = Some(deadline.map_or(stall, |d| d.min(stall)));
+            }
+        }
+        match deadline {
+            None => -1,
+            Some(at) => {
+                let ms = at.saturating_duration_since(Instant::now()).as_millis();
+                ms.saturating_add(1).min(60_000) as c_int
+            }
+        }
+    }
+
+    /// One poll(2) round: which of (listener, self-pipe, connections)
+    /// are ready.  Connections that are read-closed with an empty write
+    /// buffer are left out of the set — they are waiting on job events
+    /// or timers, not on IO (this also keeps a hung-up peer from
+    /// busy-spinning the loop via level-triggered POLLHUP).
+    fn poll_ready(&mut self, timeout_ms: c_int) -> (bool, bool, Vec<(usize, bool, bool)>) {
+        let mut fds = Vec::with_capacity(2 + self.registry.len());
+        fds.push(sys::PollFd { fd: self.listener.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+        fds.push(sys::PollFd { fd: self.pipe.rfd, events: sys::POLLIN, revents: 0 });
+        let mut ids = Vec::with_capacity(self.registry.len());
+        for (&id, conn) in &self.registry {
+            let mut events = 0i16;
+            if !conn.closed_read {
+                events |= sys::POLLIN;
+            }
+            if !conn.wbuf.is_empty() {
+                events |= sys::POLLOUT;
+            }
+            if events == 0 {
+                continue;
+            }
+            ids.push(id);
+            fds.push(sys::PollFd { fd: conn.stream.as_raw_fd(), events, revents: 0 });
+        }
+        sys::poll_fds(&mut fds, timeout_ms);
+        let accept_ready = fds[0].revents != 0;
+        let pipe_ready = fds[1].revents != 0;
+        let mut ready = Vec::new();
+        for (i, &id) in ids.iter().enumerate() {
+            let revents = fds[i + 2].revents;
+            if revents == 0 {
+                continue;
+            }
+            let readable = revents & (sys::POLLIN | sys::POLLHUP | sys::POLLERR) != 0;
+            let writable = revents & sys::POLLOUT != 0;
+            ready.push((id, readable, writable));
+        }
+        (accept_ready, pipe_ready, ready)
+    }
+
+    /// Resolve every request parked on a job that reached a terminal
+    /// state since the last drain.
+    fn process_terminal_events(&mut self) {
+        for id in self.state.jobs.take_terminal_events() {
+            if let Some(parked) = self.waiters.remove(&id) {
+                for (conn_id, seq) in parked {
+                    self.resolve_job_waiter(conn_id, seq);
+                }
+            }
+        }
+    }
+
+    /// Re-probe one parked request's job and resolve it if terminal.
+    /// Stale targets (request already resolved, connection gone) are
+    /// skipped.
+    fn resolve_job_waiter(&mut self, conn_id: usize, seq: u64) {
+        let target = self.registry.get(&conn_id).and_then(|conn| {
+            conn.pending.iter().find(|p| p.seq == seq).and_then(|p| match p.state {
+                PendingState::WaitJob { id, .. } => Some((id, false, p.queue_ms)),
+                PendingState::ClusterJob { id } => Some((id, true, p.queue_ms)),
+                _ => None,
+            })
+        });
+        let Some((id, is_cluster, req_queue_ms)) = target else { return };
+        match self.state.jobs.probe(id) {
+            None => {
+                // evicted before this connection read its reply — the
+                // same line the blocking paths produced
+                let reply = if is_cluster {
+                    format!("err job j{id} evicted before its reply was read")
+                } else {
+                    format!("err unknown job j{id}")
+                };
+                self.resolve(conn_id, seq, reply, req_queue_ms);
+            }
+            Some((v, _)) if v.state.is_terminal() => {
+                let reply = v.result.unwrap_or_else(|| format!("err job j{id} lost its result"));
+                self.resolve(conn_id, seq, reply, v.queue_ms);
+            }
+            Some(_) => {} // not terminal: spurious event, stay parked
+        }
+    }
+
+    /// Accept every pending connection: admitted up to `conn_cap`,
+    /// rejected with `err queue full` beyond it, dropped unread once
+    /// the stop flag is set (the shutdown dummy-connect lands here).
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((mut stream, _)) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        continue;
+                    }
+                    if self.registry.len() >= self.conn_cap {
+                        // accepted streams don't inherit the listener's
+                        // nonblocking flag, so this small write is safe
+                        let _ = writeln!(stream, "err queue full");
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let id = self.next_conn;
+                    self.next_conn += 1;
+                    let now = Instant::now();
+                    self.registry.insert(
+                        id,
+                        Conn {
+                            stream,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            pending: VecDeque::new(),
+                            next_seq: 0,
+                            reqs: 0,
+                            closed_read: false,
+                            dispatch_from: now,
+                            last_progress: now,
+                        },
+                    );
+                    self.conns().conn_opened();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break, // WouldBlock (or a transient accept error)
+            }
+        }
+    }
+
+    /// Drain readable bytes into the connection's buffer, then parse
+    /// and dispatch every complete line.
+    fn handle_readable(&mut self, conn_id: usize) {
+        let mut buf = [0u8; 8192];
+        let broken = loop {
+            let Some(conn) = self.registry.get_mut(&conn_id) else { return };
+            if conn.closed_read {
+                break false;
+            }
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.closed_read = true;
+                    break false;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&buf[..n]);
+                    if conn.rbuf.len() > LINE_CAP {
+                        break true; // no line this long is legitimate
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break false,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break true,
+            }
+        };
+        if broken {
+            self.drop_conn(conn_id);
+            return;
+        }
+        self.parse_requests(conn_id);
+        // flush handles the nothing-in-flight EOF drop too
+        self.flush_conn(conn_id);
+    }
+
+    /// Split the read buffer on newlines and dispatch each request.
+    fn parse_requests(&mut self, conn_id: usize) {
+        enum Next {
+            Line(String),
+            Blank,
+            Bad,
+            Incomplete,
+        }
+        loop {
+            let next = {
+                let Some(conn) = self.registry.get_mut(&conn_id) else { return };
+                match conn.rbuf.iter().position(|&b| b == b'\n') {
+                    None => Next::Incomplete,
+                    Some(pos) => {
+                        let raw: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                        match std::str::from_utf8(&raw) {
+                            Ok(s) if s.trim().is_empty() => Next::Blank,
+                            Ok(s) => Next::Line(s.trim().to_string()),
+                            Err(_) => Next::Bad,
+                        }
+                    }
+                }
+            };
+            match next {
+                Next::Incomplete => return,
+                // non-UTF-8 input: the old read_line path closed the
+                // connection without a reply; do the same
+                Next::Bad => {
+                    self.drop_conn(conn_id);
+                    return;
+                }
+                // a blank line closed the old per-connection path with
+                // no reply; treat it as the peer's end-of-requests
+                Next::Blank => {
+                    if let Some(conn) = self.registry.get_mut(&conn_id) {
+                        conn.closed_read = true;
+                        conn.rbuf.clear();
+                    }
+                    return;
+                }
+                Next::Line(line) => self.dispatch_request(conn_id, &line),
+            }
+        }
+    }
+
+    /// Dispatch one request line: park the verbs that used to block a
+    /// connection thread (`wait`, `cluster`, `sleep`), run everything
+    /// else synchronously on the loop through [`super::dispatch_line`].
+    fn dispatch_request(&mut self, conn_id: usize, line: &str) {
+        let (seq, started, queue_ms) = {
+            let Some(conn) = self.registry.get_mut(&conn_id) else { return };
+            let queue_ms = conn.dispatch_from.elapsed().as_secs_f64() * 1e3;
+            conn.dispatch_from = Instant::now();
+            conn.reqs += 1;
+            if conn.reqs > 1 {
+                self.state.conns.record_pipelined();
+            }
+            let seq = conn.next_seq;
+            conn.next_seq += 1;
+            (seq, Instant::now(), queue_ms)
+        };
+        // peek the verb to intercept the parking ones; a tokenize error
+        // falls through to dispatch_line, which reproduces the exact
+        // `err unterminated ...` reply
+        if let Ok(parts) = super::tokenize(line) {
+            match parts.first().map(String::as_str) {
+                Some("wait") => {
+                    self.state.verbs.record("wait");
+                    let kv = super::parse_kv(&parts[1..]);
+                    self.dispatch_wait(conn_id, seq, started, queue_ms, &kv);
+                    return;
+                }
+                Some("cluster") if self.state.jobs.has_workers() => {
+                    self.state.verbs.record("cluster");
+                    let kv = super::parse_kv(&parts[1..]);
+                    self.dispatch_cluster(conn_id, seq, started, queue_ms, &kv);
+                    return;
+                }
+                Some("sleep") => {
+                    self.state.verbs.record("sleep");
+                    let kv = super::parse_kv(&parts[1..]);
+                    self.dispatch_sleep(conn_id, seq, started, queue_ms, &kv);
+                    return;
+                }
+                _ => {}
+            }
+        }
+        let (reply, trailer_queue_ms) = super::dispatch_line(&self.state, line, queue_ms);
+        self.push_ready(conn_id, seq, started, reply, trailer_queue_ms);
+    }
+
+    /// The `wait` verb, evented: identical validation and replies to
+    /// [`super::handle_wait`], but parking is a registry entry plus
+    /// timers instead of a blocked condvar.
+    fn dispatch_wait(
+        &mut self,
+        conn_id: usize,
+        seq: u64,
+        started: Instant,
+        queue_ms: f64,
+        kv: &HashMap<String, String>,
+    ) {
+        let id = match super::parse_job_id(kv) {
+            Ok(id) => id,
+            Err(e) => {
+                self.push_ready(conn_id, seq, started, format!("err {e}"), queue_ms);
+                return;
+            }
+        };
+        let timeout: Option<u64> = match super::parse_key(kv, "timeout_ms") {
+            Ok(t) => t,
+            Err(e) => {
+                self.push_ready(conn_id, seq, started, format!("err {e}"), queue_ms);
+                return;
+            }
+        };
+        // kept for reply fidelity with handle_wait; unreachable under
+        // serve() (a serving state always has workers)
+        if timeout.is_none() && !self.state.jobs.has_workers() {
+            match self.state.jobs.poll(id) {
+                None => {
+                    self.push_ready(conn_id, seq, started, format!("err unknown job j{id}"), queue_ms);
+                    return;
+                }
+                Some(v) if !v.state.is_terminal() => {
+                    self.push_ready(
+                        conn_id,
+                        seq,
+                        started,
+                        "err wait needs timeout_ms= (no workers are draining jobs)".into(),
+                        queue_ms,
+                    );
+                    return;
+                }
+                Some(_) => {}
+            }
+        }
+        match self.state.jobs.probe(id) {
+            None => self.push_ready(conn_id, seq, started, format!("err unknown job j{id}"), queue_ms),
+            Some((v, _)) if v.state.is_terminal() => {
+                let reply = v.result.unwrap_or_else(|| format!("err job j{id} lost its result"));
+                self.push_ready(conn_id, seq, started, reply, v.queue_ms);
+            }
+            Some((_, shed_at)) => {
+                let timeout_deadline = timeout.map(|t| started + Duration::from_millis(t));
+                self.park(
+                    conn_id,
+                    seq,
+                    started,
+                    queue_ms,
+                    PendingState::WaitJob { id, timeout_deadline },
+                );
+                self.waiters.entry(id).or_default().push((conn_id, seq));
+                self.conns().waiter_parked();
+                if let Some(at) = timeout_deadline {
+                    self.arm_timer(at, conn_id, seq);
+                }
+                if let Some(at) = shed_at {
+                    self.arm_timer(at, conn_id, seq);
+                }
+            }
+        }
+    }
+
+    /// The `cluster` verb, evented: submit through the registry as
+    /// before ([`super::cluster_via_jobs`]' submit+wait pair), but the
+    /// unbounded wait parks on the loop.
+    fn dispatch_cluster(
+        &mut self,
+        conn_id: usize,
+        seq: u64,
+        started: Instant,
+        queue_ms: f64,
+        kv: &HashMap<String, String>,
+    ) {
+        match super::submit_job(&self.state, kv) {
+            Err(e) => self.push_ready(conn_id, seq, started, format!("err {e}"), queue_ms),
+            Ok((id, _cost)) => match self.state.jobs.probe(id) {
+                None => self.push_ready(
+                    conn_id,
+                    seq,
+                    started,
+                    format!("err job j{id} evicted before its reply was read"),
+                    queue_ms,
+                ),
+                Some((v, _)) if v.state.is_terminal() => {
+                    let reply =
+                        v.result.unwrap_or_else(|| format!("err job j{id} lost its result"));
+                    self.push_ready(conn_id, seq, started, reply, v.queue_ms);
+                }
+                Some((_, shed_at)) => {
+                    self.park(conn_id, seq, started, queue_ms, PendingState::ClusterJob { id });
+                    self.waiters.entry(id).or_default().push((conn_id, seq));
+                    self.conns().waiter_parked();
+                    if let Some(at) = shed_at {
+                        self.arm_timer(at, conn_id, seq);
+                    }
+                }
+            },
+        }
+    }
+
+    /// The `sleep` diagnostic, evented: a timer entry instead of a held
+    /// thread, bounded by `queue_cap` slots so the burst-backpressure
+    /// contract (`err queue full` beyond the cap) is preserved.
+    fn dispatch_sleep(
+        &mut self,
+        conn_id: usize,
+        seq: u64,
+        started: Instant,
+        queue_ms: f64,
+        kv: &HashMap<String, String>,
+    ) {
+        let ms: u64 = kv.get("ms").and_then(|s| s.parse().ok()).unwrap_or(0).min(10_000);
+        if self.sleep_active >= self.queue_cap {
+            self.push_ready(conn_id, seq, started, "err queue full".into(), queue_ms);
+            return;
+        }
+        self.sleep_active += 1;
+        self.park(conn_id, seq, started, queue_ms, PendingState::Sleep { ms });
+        self.arm_timer(started + Duration::from_millis(ms), conn_id, seq);
+    }
+
+    /// Fire every due timer entry; each revisits one parked request.
+    fn fire_timers(&mut self) {
+        let now = Instant::now();
+        loop {
+            let Some((&(at, tick), &(conn_id, seq))) = self.timers.iter().next() else { break };
+            if at > now {
+                break;
+            }
+            self.timers.remove(&(at, tick));
+            self.fire_timer(conn_id, seq, now);
+        }
+    }
+
+    fn fire_timer(&mut self, conn_id: usize, seq: u64, now: Instant) {
+        let fired = self.registry.get(&conn_id).and_then(|conn| {
+            conn.pending.iter().find(|p| p.seq == seq).and_then(|p| match &p.state {
+                PendingState::Sleep { ms } => Some(Fired::Sleep(*ms, p.queue_ms)),
+                PendingState::WaitJob { id, timeout_deadline } => {
+                    Some(Fired::Wait(*id, *timeout_deadline, p.queue_ms))
+                }
+                PendingState::ClusterJob { id } => Some(Fired::Cluster(*id, p.queue_ms)),
+                PendingState::Ready(_) => None,
+            })
+        });
+        match fired {
+            None => {} // stale: already resolved or connection gone
+            Some(Fired::Sleep(ms, q)) => {
+                self.sleep_active -= 1;
+                self.resolve(conn_id, seq, format!("ok slept_ms={ms}"), q);
+            }
+            Some(Fired::Wait(id, timeout_deadline, q)) => match self.state.jobs.probe(id) {
+                None => self.resolve(conn_id, seq, format!("err unknown job j{id}"), q),
+                Some((v, _)) if v.state.is_terminal() => {
+                    let reply =
+                        v.result.unwrap_or_else(|| format!("err job j{id} lost its result"));
+                    self.resolve(conn_id, seq, reply, v.queue_ms);
+                }
+                Some((v, _)) if timeout_deadline.is_some_and(|t| now >= t) => {
+                    let reply = format!("ok job=j{id} state={} timed_out=1", v.state.name());
+                    self.resolve(conn_id, seq, reply, q);
+                }
+                // the deadline timer fired but the job got picked up in
+                // time: it is running now, its terminal event resolves us
+                Some(_) => {}
+            },
+            Some(Fired::Cluster(id, q)) => match self.state.jobs.probe(id) {
+                None => self.resolve(
+                    conn_id,
+                    seq,
+                    format!("err job j{id} evicted before its reply was read"),
+                    q,
+                ),
+                Some((v, _)) if v.state.is_terminal() => {
+                    let reply =
+                        v.result.unwrap_or_else(|| format!("err job j{id} lost its result"));
+                    self.resolve(conn_id, seq, reply, v.queue_ms);
+                }
+                Some(_) => {}
+            },
+        }
+    }
+
+    fn arm_timer(&mut self, at: Instant, conn_id: usize, seq: u64) {
+        let tick = self.next_tick;
+        self.next_tick += 1;
+        self.timers.insert((at, tick), (conn_id, seq));
+    }
+
+    /// Park a request: it keeps its FIFO slot so later replies cannot
+    /// overtake it on the wire.
+    fn park(&mut self, conn_id: usize, seq: u64, started: Instant, queue_ms: f64, st: PendingState) {
+        if let Some(conn) = self.registry.get_mut(&conn_id) {
+            conn.pending.push_back(Pending { seq, state: st, started, queue_ms });
+        }
+    }
+
+    /// Append an already-answered request (trailer formatted now, so
+    /// `served_ms=` reflects the actual dispatch) and try to flush.
+    fn push_ready(
+        &mut self,
+        conn_id: usize,
+        seq: u64,
+        started: Instant,
+        reply: String,
+        trailer_queue_ms: f64,
+    ) {
+        let line = reply_line(&reply, trailer_queue_ms, started);
+        let Some(conn) = self.registry.get_mut(&conn_id) else { return };
+        conn.pending.push_back(Pending {
+            seq,
+            state: PendingState::Ready(line),
+            started,
+            queue_ms: trailer_queue_ms,
+        });
+        self.flush_conn(conn_id);
+    }
+
+    /// Transition a parked request to its finished reply (idempotent —
+    /// the first resolution wins) and flush in order.
+    fn resolve(&mut self, conn_id: usize, seq: u64, reply: String, trailer_queue_ms: f64) {
+        let was_waiter = {
+            let Some(conn) = self.registry.get_mut(&conn_id) else { return };
+            let Some(p) = conn.pending.iter_mut().find(|p| p.seq == seq) else { return };
+            let was_waiter = match p.state {
+                PendingState::Ready(_) => return, // already resolved
+                PendingState::WaitJob { .. } | PendingState::ClusterJob { .. } => true,
+                PendingState::Sleep { .. } => false,
+            };
+            p.state = PendingState::Ready(reply_line(&reply, trailer_queue_ms, p.started));
+            was_waiter
+        };
+        if was_waiter {
+            self.conns().waiter_resolved();
+        }
+        self.flush_conn(conn_id);
+    }
+
+    /// Move front-of-queue finished replies into the write buffer and
+    /// write as much as the socket accepts; drop the connection when it
+    /// is broken, hopelessly behind, or cleanly drained after EOF.
+    fn flush_conn(&mut self, conn_id: usize) {
+        let drop_now = {
+            let Some(conn) = self.registry.get_mut(&conn_id) else { return };
+            while matches!(conn.pending.front().map(|p| &p.state), Some(PendingState::Ready(_))) {
+                let p = conn.pending.pop_front().expect("front was just matched");
+                if let PendingState::Ready(bytes) = p.state {
+                    conn.wbuf.extend_from_slice(&bytes);
+                    conn.last_progress = Instant::now();
+                }
+            }
+            let mut broken = false;
+            while !conn.wbuf.is_empty() {
+                match conn.stream.write(&conn.wbuf) {
+                    Ok(0) => {
+                        broken = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.wbuf.drain(..n);
+                        conn.last_progress = Instant::now();
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        broken = true;
+                        break;
+                    }
+                }
+            }
+            broken
+                || conn.wbuf.len() > WBUF_CAP
+                || (conn.closed_read && conn.pending.is_empty() && conn.wbuf.is_empty())
+        };
+        if drop_now {
+            self.drop_conn(conn_id);
+        }
+    }
+
+    /// Remove a connection, returning its parked requests' gauge slots
+    /// (waiters, sleep slots).  Stale timer / waiter-index entries are
+    /// left behind and skipped when they surface.
+    fn drop_conn(&mut self, conn_id: usize) {
+        let Some(conn) = self.registry.remove(&conn_id) else { return };
+        for p in &conn.pending {
+            match p.state {
+                PendingState::WaitJob { .. } | PendingState::ClusterJob { .. } => {
+                    self.conns().waiter_resolved();
+                }
+                PendingState::Sleep { .. } => self.sleep_active -= 1,
+                PendingState::Ready(_) => {}
+            }
+        }
+        self.conns().conn_closed();
+    }
+
+    /// Shed connections whose write buffer has stalled past
+    /// [`WRITE_STALL`] — a slow reader costs a registry entry, not a
+    /// thread, but not an unbounded buffer either.
+    fn shed_stalled(&mut self) {
+        let now = Instant::now();
+        let stalled: Vec<usize> = self
+            .registry
+            .iter()
+            .filter(|(_, c)| {
+                !c.wbuf.is_empty() && now.duration_since(c.last_progress) >= WRITE_STALL
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in stalled {
+            self.drop_conn(id);
+        }
+    }
+
+    /// Shutdown drain: drop idle connections immediately, keep the ones
+    /// with unresolved or unflushed replies; `true` once none remain.
+    fn shutdown_drained(&mut self) -> bool {
+        let idle: Vec<usize> = self
+            .registry
+            .iter()
+            .filter(|(_, c)| c.pending.is_empty() && c.wbuf.is_empty())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in idle {
+            self.drop_conn(id);
+        }
+        self.registry.is_empty()
+    }
+}
+
+/// One finished wire reply: the v7 trailer appended, newline-terminated.
+fn reply_line(reply: &str, queue_ms: f64, started: Instant) -> Vec<u8> {
+    format!(
+        "{reply} queue_ms={queue_ms:.1} served_ms={:.1}\n",
+        started.elapsed().as_secs_f64() * 1e3
+    )
+    .into_bytes()
+}

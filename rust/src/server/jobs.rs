@@ -47,6 +47,11 @@
 //! map/queue edits, vastly cheaper than the solves around them.  Two
 //! condvars separate the wakeup targets: workers park on `queue_cv`
 //! for new jobs, `wait` callers park on `state_cv` for state changes.
+//! The evented accept core ([`crate::server::event`]) parks no thread:
+//! it installs a waker via [`JobRegistry::set_waker`] that is fired
+//! alongside every `state_cv` broadcast, and drains the terminal-
+//! transition ids with [`JobRegistry::take_terminal_events`] to resolve
+//! its parked connections.
 
 use super::metrics::JobCounters;
 use super::models::ModelSeed;
@@ -55,7 +60,7 @@ use crate::solver::CancelToken;
 use crate::sync_ext;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Where a job is in its lifecycle (see the module docs).
@@ -185,6 +190,9 @@ struct Inner {
     queue: VecDeque<u64>,
     /// Terminal job ids, coldest first (LRU retention order).
     finished: VecDeque<u64>,
+    /// Ids that reached a terminal state since the last
+    /// [`JobRegistry::take_terminal_events`] drain (event-loop feed).
+    events: Vec<u64>,
     shutdown: bool,
 }
 
@@ -207,6 +215,10 @@ pub struct JobRegistry {
     /// direct-library [`crate::server::ServerState`] without `serve`).
     workers: AtomicUsize,
     counters: JobCounters,
+    /// The event loop's self-pipe wakeup, fired alongside every
+    /// `state_cv` broadcast so parked connections resolve without a
+    /// blocked thread.  Unset for library states (no loop to wake).
+    waker: OnceLock<Arc<dyn Fn() + Send + Sync>>,
 }
 
 impl JobRegistry {
@@ -218,6 +230,7 @@ impl JobRegistry {
                 jobs: HashMap::new(),
                 queue: VecDeque::new(),
                 finished: VecDeque::new(),
+                events: Vec::new(),
                 shutdown: false,
             }),
             queue_cv: Condvar::new(),
@@ -227,7 +240,32 @@ impl JobRegistry {
             queue_cap: queue_cap.max(1),
             workers: AtomicUsize::new(0),
             counters: JobCounters::new(),
+            waker: OnceLock::new(),
         }
+    }
+
+    /// Install the event loop's waker; fired with every `state_cv`
+    /// broadcast.  First caller wins (one loop per registry).
+    pub(crate) fn set_waker(&self, waker: Arc<dyn Fn() + Send + Sync>) {
+        let _ = self.waker.set(waker);
+    }
+
+    /// Broadcast a job state change: wake parked `wait` threads and,
+    /// when an event loop is attached, fire its self-pipe waker.  Every
+    /// state transition routes through here — a terminal job must never
+    /// leave a parked connection unresolved.
+    fn notify_state(&self) {
+        self.state_cv.notify_all();
+        if let Some(wake) = self.waker.get() {
+            wake();
+        }
+    }
+
+    /// Drain the ids that reached a terminal state since the last
+    /// drain.  The event loop calls this after each waker fire and
+    /// resolves the connections parked on those jobs.
+    pub(crate) fn take_terminal_events(&self) -> Vec<u64> {
+        std::mem::take(&mut self.lock().events)
     }
 
     /// Lifetime counters (the `jobs.*` / `shed=` stats fields).
@@ -323,7 +361,7 @@ impl JobRegistry {
     fn pick_runnable(&self, inner: &mut Inner) -> Option<PickedJob> {
         while let Some(id) = inner.queue.pop_front() {
             if self.expire_if_due(inner, id) {
-                self.state_cv.notify_all();
+                self.notify_state();
                 continue;
             }
             let picked = {
@@ -340,7 +378,7 @@ impl JobRegistry {
                     queue_ms: waited,
                 }
             };
-            self.state_cv.notify_all();
+            self.notify_state();
             return Some(picked);
         }
         None
@@ -378,7 +416,7 @@ impl JobRegistry {
         }
         self.retire(&mut inner, id);
         drop(inner);
-        self.state_cv.notify_all();
+        self.notify_state();
     }
 
     /// Non-blocking snapshot of one job (`None`: unknown / evicted).
@@ -396,7 +434,7 @@ impl JobRegistry {
         }
         if expired {
             drop(inner);
-            self.state_cv.notify_all();
+            self.notify_state();
         }
         Some(view)
     }
@@ -410,7 +448,7 @@ impl JobRegistry {
         loop {
             let expired = self.expire_if_due(&mut inner, id);
             if expired {
-                self.state_cv.notify_all();
+                self.notify_state();
             }
             let Some(job) = inner.jobs.get(&id) else { return WaitOutcome::Unknown };
             let view = view_of(id, job);
@@ -440,6 +478,33 @@ impl JobRegistry {
                 None => sync_ext::wait_or_recover(&self.state_cv, inner),
             };
         }
+    }
+
+    /// Event-loop snapshot of one job: the [`JobView`] plus, for a
+    /// queued job with a deadline, the absolute instant it sheds — the
+    /// loop arms a timer-wheel entry there instead of parking a thread
+    /// in [`JobRegistry::wait`].  Applies lazy deadline expiry and
+    /// counts as an LRU touch on terminal jobs, exactly like
+    /// [`JobRegistry::poll`].
+    pub(crate) fn probe(&self, id: u64) -> Option<(JobView, Option<Instant>)> {
+        let mut inner = self.lock();
+        let expired = self.expire_if_due(&mut inner, id);
+        let (view, terminal, shed_at) = {
+            let job = inner.jobs.get(&id)?;
+            let shed_at = match (job.state, job.deadline) {
+                (JobState::Queued, Some(d)) => Some(job.submitted + d),
+                _ => None,
+            };
+            (view_of(id, job), job.state.is_terminal(), shed_at)
+        };
+        if terminal {
+            touch(&mut inner, id);
+        }
+        if expired {
+            drop(inner);
+            self.notify_state();
+        }
+        Some((view, shed_at))
     }
 
     /// Cancel a job: a queued one is terminal immediately (permit
@@ -480,7 +545,7 @@ impl JobRegistry {
                 self.counters.record_cancelled();
                 self.retire(&mut inner, id);
                 drop(inner);
-                self.state_cv.notify_all();
+                self.notify_state();
                 Some((JobState::Cancelled, true))
             }
             Effect::FlaggedRunning => Some((JobState::Running, true)),
@@ -527,7 +592,7 @@ impl JobRegistry {
         }
         if expired {
             drop(inner);
-            self.state_cv.notify_all();
+            self.notify_state();
         }
         looked
     }
@@ -546,7 +611,7 @@ impl JobRegistry {
         }
         if any {
             drop(inner);
-            self.state_cv.notify_all();
+            self.notify_state();
         }
     }
 
@@ -572,7 +637,7 @@ impl JobRegistry {
     pub fn shutdown(&self) {
         self.lock().shutdown = true;
         self.queue_cv.notify_all();
-        self.state_cv.notify_all();
+        self.notify_state();
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
@@ -619,6 +684,9 @@ impl JobRegistry {
         touch(inner, id);
         if !inner.finished.contains(&id) {
             inner.finished.push_back(id);
+            // every terminal transition passes through retire() exactly
+            // once, so this feed is complete and duplicate-free
+            inner.events.push(id);
         }
         while inner.finished.len() > self.retain_cap {
             if let Some(cold) = inner.finished.pop_front() {

@@ -22,6 +22,14 @@
 //! deadline expiries, and `stats reset` re-bases them alongside the
 //! method aggregates.
 //!
+//! [`ConnCounters`] instruments the protocol v8 evented accept core
+//! ([`crate::server::event`]): live gauges for open connections
+//! (`conns=`) and parked waiters (`waiters=`), plus counters for
+//! pipelined requests (`pipelined=`, requests after the first on one
+//! connection) and self-pipe wakeups (`wakeups=`).  The gauges track
+//! current occupancy, so `stats reset` zeroes only the two counters —
+//! resetting stats must not un-open a connection.
+//!
 //! One mutex over a small BTreeMap is plenty: the critical section is a
 //! map insert, vastly cheaper than the clustering job that precedes it,
 //! and the BTreeMap keeps the `stats` line deterministically ordered.
@@ -374,6 +382,83 @@ impl JobCounters {
     }
 }
 
+/// Connection instrumentation of the evented accept core (protocol v8
+/// `conns=` / `waiters=` / `pipelined=` / `wakeups=` stats fields).
+///
+/// `conns` and `waiters` are *live gauges* (current open connections /
+/// currently parked `wait`+`cluster` requests): [`ConnCounters::reset`]
+/// leaves them alone, since `stats reset` re-bases traffic counters but
+/// cannot close a connection.  `pipelined` (requests parsed after the
+/// first on one connection) and `wakeups` (self-pipe fires observed by
+/// the loop) are lifetime counters and do reset.  All atomics —
+/// recording is lock-free on the event loop.
+#[derive(Default)]
+pub struct ConnCounters {
+    conns: AtomicU64,
+    waiters: AtomicU64,
+    pipelined: AtomicU64,
+    wakeups: AtomicU64,
+}
+
+impl ConnCounters {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn conn_opened(&self) {
+        self.conns.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn conn_closed(&self) {
+        self.conns.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn waiter_parked(&self) {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn waiter_resolved(&self) {
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_pipelined(&self) {
+        self.pipelined.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn record_wakeup(&self) {
+        self.wakeups.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Currently open connections (gauge).
+    pub fn conns(&self) -> u64 {
+        self.conns.load(Ordering::SeqCst)
+    }
+
+    /// Currently parked in-flight requests — blocked `wait`s plus
+    /// `cluster` solves awaiting a worker (gauge).
+    pub fn waiters(&self) -> u64 {
+        self.waiters.load(Ordering::SeqCst)
+    }
+
+    /// Requests parsed after the first on one connection (counter).
+    pub fn pipelined(&self) -> u64 {
+        self.pipelined.load(Ordering::SeqCst)
+    }
+
+    /// Self-pipe wakeups the event loop observed (counter).
+    pub fn wakeups(&self) -> u64 {
+        self.wakeups.load(Ordering::SeqCst)
+    }
+
+    /// Zero the traffic counters (the `stats reset` wire command).  The
+    /// `conns`/`waiters` gauges track live occupancy and stay put.
+    pub fn reset(&self) {
+        self.pipelined.store(0, Ordering::SeqCst);
+        self.wakeups.store(0, Ordering::SeqCst);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -393,6 +478,25 @@ mod tests {
         assert_eq!(c.shed(), c.expired(), "shed= aliases deadline expiries");
         c.reset();
         assert_eq!((c.submitted(), c.done(), c.cancelled(), c.shed()), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn conn_counters_gauges_survive_reset() {
+        let c = ConnCounters::new();
+        c.conn_opened();
+        c.conn_opened();
+        c.conn_closed();
+        c.waiter_parked();
+        c.record_pipelined();
+        c.record_pipelined();
+        c.record_wakeup();
+        assert_eq!((c.conns(), c.waiters(), c.pipelined(), c.wakeups()), (1, 1, 2, 1));
+        c.reset();
+        assert_eq!((c.pipelined(), c.wakeups()), (0, 0), "counters re-base");
+        assert_eq!((c.conns(), c.waiters()), (1, 1), "live gauges survive reset");
+        c.waiter_resolved();
+        c.conn_closed();
+        assert_eq!((c.conns(), c.waiters()), (0, 0));
     }
 
     #[test]

@@ -1,11 +1,11 @@
-//! Clustering job server: a std::net TCP service with an asynchronous
-//! job registry (connection lifetime is decoupled from job lifetime),
-//! solver workers that drain *jobs* rather than connections,
-//! cost-weighted admission with deadlines, server-owned execution
-//! pools, and a sharded dataset cache that loads cold misses outside
-//! its locks.
+//! Clustering job server: a std::net TCP service with a readiness-driven
+//! evented connection core ([`event`]), an asynchronous job registry
+//! (connection lifetime is decoupled from job lifetime), solver workers
+//! that drain *jobs* rather than connections, cost-weighted admission
+//! with deadlines, server-owned execution pools, and a sharded dataset
+//! cache that loads cold misses outside its locks.
 //!
-//! # Line protocol v7 (one request line per connection, one reply line)
+//! # Line protocol v8 (newline-delimited requests, pipelining allowed)
 //!
 //! ```text
 //! -> cluster dataset=blobs_2000_8_5 k=5 method=FasterPAM seed=3 threads=4
@@ -29,10 +29,30 @@
 //! -> evict model=blobs
 //! <- ok evicted model=blobs queue_ms=0.0 served_ms=0.0
 //! -> stats
-//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 budget_total=... budget_used=... hist_le_ms=1,2,... jobs.submitted=9 ... shed=1 pools=2 models=1 method.FasterPAM.count=2 ... model.blobs.assign_count=2 ... queue_ms=0.0 served_ms=0.0
+//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 budget_total=... budget_used=... hist_le_ms=1,2,... jobs.submitted=9 ... shed=1 pools=2 models=1 conns=1 waiters=0 pipelined=3 wakeups=7 method.FasterPAM.count=2 ... model.blobs.assign_count=2 ... queue_ms=0.0 served_ms=0.0
 //! -> ping
 //! <- pong queue_ms=0.0 served_ms=0.0
 //! ```
+//!
+//! v8 over v7: **no reply byte changed** — the delta is connection
+//! semantics.  A connection is no longer one-request-one-reply: clients
+//! may keep it open and *pipeline* — write any number of request lines
+//! before reading replies — and replies come back strictly in request
+//! order, each carrying its own `queue_ms=`/`served_ms=` trailer (a v1
+//! client that writes one line and reads one line observes nothing
+//! new).  Underneath, the thread-per-connection accept path is replaced
+//! by the readiness-driven event loop in [`event`]: idle and parked
+//! connections cost a registry entry instead of an OS thread, `wait`ers
+//! park on a timer wheel and are woken by job completion through a
+//! self-pipe, and the cheap verbs (`assign`, `poll`, `models`, `stats`,
+//! `jobs`, ...) are answered directly on the loop.  New knobs/fields:
+//! [`ServerConfig::conn_cap`] bounds concurrent connections (beyond it:
+//! `err queue full`), and `stats` reports `conns=` / `waiters=` /
+//! `pipelined=` / `wakeups=` connection telemetry
+//! ([`metrics::ConnCounters`]; the gauges survive `stats reset`, the
+//! counters re-base).  A blank request line still ends the
+//! conversation, and `sleep` still occupies one of `queue_cap`
+//! diagnostic slots, preserving the v4 burst-backpressure contract.
 //!
 //! v7 over v6: the distance kernels carry a **compute profile**.
 //! `profile=` (`exact` | `fast`, default `fast` on the wire) selects
@@ -101,8 +121,9 @@
 //!   `state=done <full cluster reply body>` /
 //!   `state=failed|expired error=<message>` / `state=cancelled` once
 //!   terminal, `err unknown job j<id>` after eviction.
-//! * `wait job=j<id> [timeout_ms=N]` — block (condvar, no polling)
-//!   until the job is terminal or the timeout elapses.  A finished job
+//! * `wait job=j<id> [timeout_ms=N]` — park (a timer-wheel entry on
+//!   the event loop, no thread and no polling) until the job is
+//!   terminal or the timeout elapses.  A finished job
 //!   replies with its stored `cluster` reply verbatim; a failed one
 //!   with its stored `err ...`; a timeout with
 //!   `ok job=j<id> state=... timed_out=1`.
@@ -129,10 +150,11 @@
 //!   server) and one `verb.<name>=` request counter per wire verb
 //!   ([`metrics::VERBS`]); `stats reset` re-bases the job and verb
 //!   counters along with the method aggregates and cache counters.
-//! * `sleep ms=N` — diagnostic: hold this connection for `ms`
-//!   milliseconds (capped at 10 s) before replying `ok slept_ms=N`.
-//!   Used by the backpressure tests; it occupies a connection slot,
-//!   never a solver worker.
+//! * `sleep ms=N` — diagnostic: delay this request's reply by `ms`
+//!   milliseconds (capped at 10 s), then answer `ok slept_ms=N`.  Used
+//!   by the backpressure tests; it occupies one of `queue_cap`
+//!   diagnostic timer slots on the event loop — never a solver worker,
+//!   and (since v8) not a thread either.
 //!
 //! `cluster` keys (unchanged from v4, plus `deadline_ms=`):
 //!
@@ -166,12 +188,15 @@
 //!
 //! # Concurrency model
 //!
-//! * the accept loop admits connections against
-//!   [`ServerConfig::queue_cap`] (single-atomic reserve-or-reject, so a
-//!   burst can never overshoot) and hands each one to a short-lived
-//!   connection thread that parses, dispatches and replies.  A slow or
-//!   long-`wait`ing client therefore holds only its own socket — never
-//!   a solver worker, which was the v4 accept-path limitation;
+//! * the accept path is a single readiness-driven **event loop**
+//!   ([`event`]): nonblocking sockets multiplexed over `poll(2)`, one
+//!   per-connection state machine (read buffer, in-order pending
+//!   queue, write buffer) per client, admitted up to
+//!   [`ServerConfig::conn_cap`] (`err queue full` beyond it).  Cheap
+//!   verbs are answered on the loop; `wait`/`cluster` park as
+//!   timer-wheel entries and job completion wakes the loop through a
+//!   self-pipe.  A slow or long-`wait`ing client therefore costs a
+//!   registry entry — never a thread, and never a solver worker;
 //! * [`ServerConfig::workers`] long-lived solver workers (`0` = auto)
 //!   drain the [`JobRegistry`] queue: pick a job, shed it if its
 //!   deadline passed while queued, otherwise run the solve and publish
@@ -195,6 +220,7 @@
 //!   shard lock behind per-key in-flight markers.
 
 pub mod cache;
+pub(crate) mod event;
 pub mod jobs;
 pub mod metrics;
 pub mod models;
@@ -202,7 +228,8 @@ pub mod models;
 pub use cache::{CacheStats, DatasetCache};
 pub use jobs::{FittedLookup, JobGauges, JobRegistry, JobState, JobView, WaitOutcome};
 pub use metrics::{
-    JobCounters, MethodAgg, MethodMetrics, ModelAgg, ModelMetrics, VerbCounters, VERBS,
+    ConnCounters, JobCounters, MethodAgg, MethodMetrics, ModelAgg, ModelMetrics, VerbCounters,
+    VERBS,
 };
 pub use models::{AssignScratch, ModelGauges, ModelRecord, ModelRegistry, ModelSeed};
 
@@ -218,7 +245,7 @@ use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::num::NonZeroUsize;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -231,11 +258,12 @@ pub struct ServerConfig {
     /// auto-detect (`available_parallelism`), matching `Pool::new(0)` /
     /// `--threads 0`.
     pub workers: usize,
-    /// Max in-flight connections *and* max queued (not-yet-running)
-    /// jobs before backpressure; `0` = 4x the resolved worker count.
-    /// The two bounds compose: a one-shot `cluster` holds a connection
-    /// for its whole job, an async `submit` frees its connection
-    /// immediately but still counts against the job-queue bound.
+    /// Max queued (not-yet-running) jobs before backpressure, and the
+    /// event loop's bound on concurrent `sleep` diagnostic slots;
+    /// `0` = 4x the resolved worker count.  Since v8 connections are
+    /// bounded separately by [`ServerConfig::conn_cap`] — a parked
+    /// `cluster`/`wait` costs a registry entry, not a thread, so it no
+    /// longer competes with job admission.
     pub queue_cap: usize,
     /// Dataset-cache budget in datasets (split across shards, LRU).
     pub cache_cap: usize,
@@ -254,6 +282,11 @@ pub struct ServerConfig {
     /// How many promoted models the [`ModelRegistry`] retains for
     /// `assign` serving (LRU eviction); `0` = 32.
     pub model_cap: usize,
+    /// Max concurrent client connections the event loop admits before
+    /// rejecting with `err queue full`; `0` = 8192.  Distinct from
+    /// `queue_cap`: since v8 a connection is just a registry entry, so
+    /// the bound exists to cap memory, not threads.
+    pub conn_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -267,6 +300,7 @@ impl Default for ServerConfig {
             strict_budget: false,
             retain_cap: 0,
             model_cap: 0,
+            conn_cap: 0,
         }
     }
 }
@@ -314,6 +348,15 @@ impl ServerConfig {
             32
         } else {
             self.model_cap
+        }
+    }
+
+    /// `conn_cap` with `0` resolved to the default (8192 connections).
+    pub fn resolved_conn_cap(&self) -> usize {
+        if self.conn_cap == 0 {
+            8192
+        } else {
+            self.conn_cap
         }
     }
 }
@@ -600,6 +643,9 @@ pub struct ServerState {
     pub models: ModelRegistry,
     /// Per-model `assign` aggregates (the `model.<name>.*` stats fields).
     pub model_stats: ModelMetrics,
+    /// Connection telemetry from the event loop (the `conns=` /
+    /// `waiters=` / `pipelined=` / `wakeups=` stats fields).
+    pub conns: ConnCounters,
 }
 
 impl ServerState {
@@ -617,6 +663,7 @@ impl ServerState {
             verbs: VerbCounters::new(),
             models: ModelRegistry::new(cfg.resolved_model_cap()),
             model_stats: ModelMetrics::new(),
+            conns: ConnCounters::new(),
         }
     }
 
@@ -658,10 +705,11 @@ impl ServerHandle {
         // reject new submits, wake the workers (they drain the queue
         // and exit) and every blocked `wait` caller
         self.state.jobs.shutdown();
-        // unblock accept() with a dummy connection
+        // wake the event loop's poll with a dummy connection (dropped
+        // unread once the stop flag is observed)
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
-            let _ = t.join(); // joins the per-connection threads too
+            let _ = t.join(); // the loop drains in-flight replies first
         }
         for t in self.workers.drain(..) {
             let _ = t.join();
@@ -1523,6 +1571,7 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
             state.jobs.counters().reset();
             state.verbs.reset();
             state.model_stats.reset();
+            state.conns.reset();
             "ok".into()
         }
         Some("stats") => {
@@ -1534,7 +1583,7 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
                  budget_total={} budget_used={} hist_le_ms={} \
                  jobs.submitted={} jobs.done={} jobs.failed={} jobs.cancelled={} \
                  jobs.expired={} jobs.queued={} jobs.running={} jobs.retained={} \
-                 shed={} pools={} models={}",
+                 shed={} pools={} models={} conns={} waiters={} pipelined={} wakeups={}",
                 s.hits,
                 s.misses,
                 s.entries,
@@ -1552,6 +1601,10 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
                 c.shed(),
                 state.pools.widths(),
                 state.models.gauges().count,
+                state.conns.conns(),
+                state.conns.waiters(),
+                state.conns.pipelined(),
+                state.conns.wakeups(),
             );
             // per-verb request counters, VERBS (wire) order
             for (verb, n) in state.verbs.snapshot() {
@@ -1586,9 +1639,10 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
             }
             line
         }
-        // Diagnostic: hold this connection for `ms` (capped) — used by
-        // the backpressure tests; since v5 it occupies a connection
-        // slot, not a solver worker.
+        // Diagnostic: delay the reply by `ms` (capped) — used by the
+        // backpressure tests.  A serving wire intercepts `sleep` on the
+        // event loop (a timer entry, no thread held); this inline arm
+        // serves only the direct-library `handle_line` path.
         Some("sleep") => {
             let kv = parse_kv(&parts[1..]);
             let ms: u64 = kv.get("ms").and_then(|s| s.parse().ok()).unwrap_or(0).min(10_000);
@@ -1599,37 +1653,6 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
         None => "err empty request".into(),
     };
     (reply, queue_ms)
-}
-
-/// How long a connection thread waits for a client to send its request
-/// line (or accept the reply) before giving the slot back.  Without
-/// this, a handful of idle connections could pin every slot forever.
-const IO_TIMEOUT: Duration = Duration::from_secs(10);
-
-/// Serve one accepted connection: read a line, dispatch, reply.
-/// `accepted_at` is when the accept loop admitted the connection; the
-/// difference to dispatch is the reply's trailing `queue_ms=` field
-/// (near zero since v5 — jobs queue, connections do not).
-fn handle_connection(state: &ServerState, stream: TcpStream, accepted_at: Instant) {
-    let queue_ms = accepted_at.elapsed().as_secs_f64() * 1e3;
-    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
-    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
-    let Ok(clone) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(clone);
-    let mut line = String::new();
-    if reader.read_line(&mut line).is_ok() && !line.trim().is_empty() {
-        let started = Instant::now();
-        // the trailer's queue_ms= carries the served job's queue wait
-        // for cluster/wait replies (v4 semantics) and the connection
-        // dispatch wait otherwise
-        let (reply, trailer_queue_ms) = dispatch_line(state, line.trim(), queue_ms);
-        let mut s = stream;
-        let _ = writeln!(
-            s,
-            "{reply} queue_ms={trailer_queue_ms:.1} served_ms={:.1}",
-            started.elapsed().as_secs_f64() * 1e3
-        );
-    }
 }
 
 /// One picked job, executed on a solver worker.  Panics are caught so a
@@ -1689,7 +1712,6 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let inflight = Arc::new(AtomicUsize::new(0));
     let state = Arc::new(ServerState::new(&cfg));
     // the resolved_* accessors own the >= 1 invariant (0 means auto)
     let queue_cap = cfg.resolved_queue_cap();
@@ -1712,63 +1734,14 @@ pub fn serve(cfg: ServerConfig) -> std::io::Result<ServerHandle> {
         }));
     }
 
-    // The accept loop admits connections against `queue_cap` with a
-    // single-RMW reserve (no check-then-increment window) and hands
-    // each admitted one to a short-lived connection thread — so a slow
-    // client or a long `wait` blocks its own thread, never a worker.
-    let stop2 = stop.clone();
-    let inflight2 = inflight.clone();
-    let state2 = state.clone();
-    // tidy:allow(thread-spawn) — the accept loop: one long-lived thread
-    // owned and joined by ServerHandle::shutdown.
-    let accept_thread = std::thread::spawn(move || {
-        let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
-        for conn in listener.incoming() {
-            if stop2.load(Ordering::SeqCst) {
-                break;
-            }
-            let Ok(stream) = conn else { continue };
-            let admitted = inflight2
-                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
-                    if c < queue_cap {
-                        Some(c + 1)
-                    } else {
-                        None
-                    }
-                })
-                .is_ok();
-            if !admitted {
-                let mut s = stream;
-                let _ = writeln!(s, "err queue full");
-                continue;
-            }
-            conn_threads.retain(|h| !h.is_finished());
-            let state = state2.clone();
-            let slot = DecrementOnDrop(inflight2.clone());
-            let accepted_at = Instant::now();
-            // tidy:allow(thread-spawn) — per-connection threads, bounded
-            // by queue_cap admission and joined by the accept loop.
-            conn_threads.push(std::thread::spawn(move || {
-                let _slot = slot;
-                // a panicking dispatch must not poison the slot counter
-                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    handle_connection(&state, stream, accepted_at);
-                }));
-            }));
-        }
-        for h in conn_threads {
-            let _ = h.join();
-        }
-    });
+    // The accept path is the evented core: one readiness-driven loop
+    // thread multiplexes every connection over poll(2), parks waiters
+    // on its timer wheel, and answers cheap verbs inline — so a slow
+    // client or a long `wait` costs a registry entry, never a thread.
+    let accept_thread =
+        event::spawn(listener, state.clone(), stop.clone(), cfg.resolved_conn_cap(), queue_cap)?;
 
     Ok(ServerHandle { addr, state, stop, accept_thread: Some(accept_thread), workers })
-}
-
-struct DecrementOnDrop(Arc<AtomicUsize>);
-impl Drop for DecrementOnDrop {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
-    }
 }
 
 /// Blocking client call: one request line -> reply line.
@@ -2051,12 +2024,14 @@ mod tests {
         assert_eq!(auto.resolved_budget(), 4 * MAX_JOB_COST);
         assert_eq!(auto.resolved_retain_cap(), 64);
         assert_eq!(auto.resolved_model_cap(), 32);
+        assert_eq!(auto.resolved_conn_cap(), 8192);
         let fixed = ServerConfig {
             workers: 3,
             queue_cap: 7,
             budget: 99,
             retain_cap: 5,
             model_cap: 2,
+            conn_cap: 11,
             ..Default::default()
         };
         assert_eq!(fixed.resolved_workers(), 3);
@@ -2064,6 +2039,7 @@ mod tests {
         assert_eq!(fixed.resolved_budget(), 99);
         assert_eq!(fixed.resolved_retain_cap(), 5);
         assert_eq!(fixed.resolved_model_cap(), 2);
+        assert_eq!(fixed.resolved_conn_cap(), 11);
         // workers=0 actually serves (auto-detected pool)
         let h = serve(auto).unwrap();
         assert!(request(h.addr, "ping").unwrap().starts_with("pong"));

@@ -1,0 +1,485 @@
+//! The protocol v8 evented accept core from the outside: idle-waiter
+//! scaling at a constant server thread count, pipelined requests on a
+//! persistent connection, a slow client not stalling its neighbours,
+//! timer-wheel deadline sheds on an unbounded `wait`, connection-cap
+//! admission, connection telemetry in `stats`, CLARA cancellation
+//! releasing its admission permit, and byte-compat field walks for the
+//! v1–v7 reply shapes over the new loop.
+
+use obpam::server::{request, serve, ServerConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// Extract `key=<token>` from a reply line.
+fn field(reply: &str, key: &str) -> String {
+    reply
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix(&format!("{key}=")))
+        .unwrap_or_else(|| panic!("no {key}= in {reply:?}"))
+        .to_string()
+}
+
+/// Poll `job` on `addr` until its state leaves `queued` (worker pickup)
+/// or the attempts run out; returns the last observed state.
+fn poll_until_past_queued(addr: std::net::SocketAddr, job: &str) -> String {
+    for _ in 0..20_000 {
+        let r = request(addr, &format!("poll job={job}")).unwrap();
+        let state = field(&r, "state");
+        if state != "queued" {
+            return state;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    panic!("job {job} never left the queue");
+}
+
+/// The process's live thread count (`Threads:` in /proc/self/status) —
+/// the server runs in-process, so a per-connection thread anywhere
+/// would show up here.
+#[cfg(target_os = "linux")]
+fn thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap();
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("Threads: line in /proc/self/status")
+}
+
+/// Raise the soft fd limit toward the hard one (best effort) so a
+/// thousand concurrent sockets fit under a conservative default ulimit.
+#[cfg(target_os = "linux")]
+fn raise_fd_limit() {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    let mut lim = RLimit { cur: 0, max: 0 };
+    // SAFETY: `lim` is a valid repr(C) rlimit the kernel fills.
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return;
+    }
+    let want = 16_384.min(lim.max);
+    if lim.cur < want {
+        lim.cur = want;
+        // SAFETY: `lim` is a valid repr(C) rlimit; cur <= max by
+        // construction, so the call can only shrink-or-fail cleanly.
+        let _ = unsafe { setrlimit(RLIMIT_NOFILE, &lim) };
+    }
+}
+
+/// One persistent raw connection: write request lines yourself, read
+/// replies in order.
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn read_reply(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim().to_string()
+}
+
+/// The tentpole acceptance test: >= 1000 concurrent blocked `wait`
+/// connections at a *constant* process thread count, every one resolved
+/// by a single terminal transition through the self-pipe wakeup.
+#[cfg(target_os = "linux")]
+#[test]
+fn thousand_idle_waiters_at_constant_thread_count() {
+    const WAITERS: usize = 1000;
+    raise_fd_limit();
+    let h = serve(ServerConfig { workers: 1, queue_cap: 8, ..Default::default() }).unwrap();
+
+    // a long CLARA blocker occupies the lone worker (3000 subsample
+    // reps — many seconds of work, but cancellable between reps, so
+    // the test never pays the full solve); a cheap job queues behind
+    // it and cannot reach a terminal state while the waiters park
+    let blocker = request(
+        h.addr,
+        "submit dataset=blobs_20000_8_5 k=5 seed=3 method=FasterCLARA-3000",
+    )
+    .unwrap();
+    assert!(blocker.starts_with("ok job="), "{blocker}");
+    let blocker_id = field(&blocker, "job");
+    assert_eq!(poll_until_past_queued(h.addr, &blocker_id), "running");
+    let parked = request(h.addr, "submit dataset=blobs_300_4_3 k=3 seed=4").unwrap();
+    assert!(parked.starts_with("ok job="), "{parked}");
+    let parked_id = field(&parked, "job");
+
+    let baseline = thread_count();
+    let mut conns = Vec::with_capacity(WAITERS);
+    for _ in 0..WAITERS {
+        let (mut stream, reader) = connect(h.addr);
+        writeln!(stream, "wait job={parked_id} timeout_ms=600000").unwrap();
+        conns.push((stream, reader));
+    }
+    // stats round-trips on fresh connections prove cheap verbs are
+    // served while the waiters sit blocked; poll until the loop has
+    // parked every one (their request bytes may still be in flight)
+    let mut stats = String::new();
+    for _ in 0..20_000 {
+        stats = request(h.addr, "stats").unwrap();
+        if field(&stats, "waiters").parse::<usize>().unwrap() == WAITERS {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(field(&stats, "waiters").parse::<usize>().unwrap(), WAITERS, "{stats}");
+    assert!(
+        field(&stats, "conns").parse::<usize>().unwrap() >= WAITERS,
+        "every waiter holds a connection: {stats}"
+    );
+    assert_eq!(
+        thread_count(),
+        baseline,
+        "parking {WAITERS} waiters must not spawn a single thread"
+    );
+
+    // one terminal transition resolves all of them: cancel the queued
+    // job (deterministic — no cooperative race with a running solve);
+    // its stored result is the reply every waiter receives
+    let c = request(h.addr, &format!("cancel job={parked_id}")).unwrap();
+    assert!(c.contains("state=cancelled"), "{c}");
+    for (_, reader) in conns.iter_mut() {
+        let r = read_reply(reader);
+        assert!(r.starts_with(&format!("err cancelled job={parked_id}")), "{r}");
+        assert!(r.contains(" queue_ms=") && r.contains(" served_ms="), "{r}");
+    }
+    drop(conns);
+    // cancel the CLARA blocker too (the ROADMAP 5b token check lands
+    // between subsample reps) and confirm the budget fully drains
+    let c = request(h.addr, &format!("cancel job={blocker_id}")).unwrap();
+    assert!(
+        c.contains("cancel=requested") || c.contains("state=done") || c.contains("state=cancelled"),
+        "{c}"
+    );
+    let fin = request(h.addr, &format!("wait job={blocker_id} timeout_ms=600000")).unwrap();
+    assert!(
+        fin.starts_with(&format!("err cancelled job={blocker_id}")) || fin.starts_with("ok method="),
+        "{fin}"
+    );
+    assert_eq!(h.state.admission.used(), 0);
+    h.shutdown();
+}
+
+#[test]
+fn pipelined_submits_on_one_connection_reply_in_order() {
+    let h = serve(ServerConfig { workers: 2, ..Default::default() }).unwrap();
+    let (mut stream, mut reader) = connect(h.addr);
+    // one write, five requests: the loop must answer strictly in order
+    stream
+        .write_all(
+            b"ping\n\
+              submit dataset=blobs_300_4_3 k=3 seed=1\n\
+              submit dataset=blobs_300_4_3 k=3 seed=2\n\
+              submit dataset=blobs_300_4_3 k=3 seed=3\n\
+              jobs\n",
+        )
+        .unwrap();
+    let replies: Vec<String> = (0..5).map(|_| read_reply(&mut reader)).collect();
+    assert!(replies[0].starts_with("pong"), "{:?}", replies[0]);
+    for (i, r) in replies[1..4].iter().enumerate() {
+        assert!(r.starts_with(&format!("ok job=j{} cost=", i + 1)), "reply {i}: {r}");
+    }
+    assert!(replies[4].starts_with("ok queued="), "{:?}", replies[4]);
+
+    // the pipelined jobs all complete, on the same connection
+    for id in ["j1", "j2", "j3"] {
+        writeln!(stream, "wait job={id} timeout_ms=60000").unwrap();
+    }
+    for id in ["j1", "j2", "j3"] {
+        let r = read_reply(&mut reader);
+        assert!(r.starts_with("ok method="), "{id}: {r}");
+    }
+    let stats = request(h.addr, "stats").unwrap();
+    assert!(
+        field(&stats, "pipelined").parse::<u64>().unwrap() >= 7,
+        "2nd..8th request on one connection count as pipelined: {stats}"
+    );
+    h.shutdown();
+}
+
+#[test]
+fn slow_client_does_not_stall_other_connections() {
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    // a half-written request: under the old blocking loop this held a
+    // connection thread inside read_line; the evented loop just keeps
+    // the partial bytes buffered
+    let (mut slow, mut slow_reader) = connect(h.addr);
+    slow.write_all(b"sta").unwrap();
+    slow.flush().unwrap();
+
+    // meanwhile other clients are served promptly
+    for _ in 0..20 {
+        assert!(request(h.addr, "ping").unwrap().starts_with("pong"));
+    }
+    let r = request(h.addr, "cluster dataset=blobs_300_4_3 k=3 seed=1").unwrap();
+    assert!(r.starts_with("ok method="), "{r}");
+
+    // the slow client finishes its line and still gets a full reply
+    slow.write_all(b"ts\n").unwrap();
+    let stats = read_reply(&mut slow_reader);
+    assert!(stats.starts_with("ok cache_hits="), "{stats}");
+    h.shutdown();
+}
+
+#[test]
+fn unbounded_wait_is_resolved_by_the_deadline_timer() {
+    // one worker, occupied: a queued job with a 1 ms deadline is shed
+    // by the timer wheel while the `wait` has *no* timeout_ms= — only
+    // the deadline timer can resolve it (no worker ever touches it)
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    let big = request(h.addr, "submit dataset=blobs_20000_8_5 k=5 seed=3").unwrap();
+    let big_id = field(&big, "job");
+    assert_eq!(poll_until_past_queued(h.addr, &big_id), "running");
+
+    let cheap = request(h.addr, "submit dataset=blobs_300_4_3 k=3 seed=1 deadline_ms=1").unwrap();
+    let cheap_id = field(&cheap, "job");
+    let shed = request(h.addr, &format!("wait job={cheap_id}")).unwrap();
+    assert!(shed.starts_with(&format!("err deadline job={cheap_id} deadline_ms=1")), "{shed}");
+    assert!(shed.contains("queue_ms="), "{shed}");
+
+    let done = request(h.addr, &format!("wait job={big_id} timeout_ms=600000")).unwrap();
+    assert!(done.starts_with("ok method="), "{done}");
+    assert_eq!(h.state.admission.used(), 0);
+    let stats = request(h.addr, "stats").unwrap();
+    assert!(stats.contains(" shed=1 "), "{stats}");
+    h.shutdown();
+}
+
+#[test]
+fn wait_timeout_still_fires_from_the_timer_wheel() {
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    let big = request(h.addr, "submit dataset=blobs_20000_8_5 k=5 seed=3").unwrap();
+    let big_id = field(&big, "job");
+    assert_eq!(poll_until_past_queued(h.addr, &big_id), "running");
+    let queued = request(h.addr, "submit dataset=blobs_20000_8_5 k=5 seed=5").unwrap();
+    let queued_id = field(&queued, "job");
+
+    // the timeout elapses first: the v5 timed_out=1 reply, unchanged
+    // (state is queued unless the blocker finished under 30 ms)
+    let t = request(h.addr, &format!("wait job={queued_id} timeout_ms=30")).unwrap();
+    assert!(t.starts_with(&format!("ok job={queued_id} state=")), "{t}");
+    assert!(t.contains(" timed_out=1 "), "{t}");
+
+    let c = request(h.addr, &format!("cancel job={queued_id}")).unwrap();
+    assert!(c.starts_with(&format!("ok job={queued_id}")), "{c}");
+    let fin = request(h.addr, &format!("wait job={queued_id} timeout_ms=600000")).unwrap();
+    assert!(fin.starts_with("err cancelled") || fin.starts_with("ok method="), "{fin}");
+    let done = request(h.addr, &format!("wait job={big_id} timeout_ms=600000")).unwrap();
+    assert!(done.starts_with("ok method="), "{done}");
+    h.shutdown();
+}
+
+#[test]
+fn conn_cap_rejects_excess_connections() {
+    let h = serve(ServerConfig { workers: 1, conn_cap: 2, ..Default::default() }).unwrap();
+    let a = connect(h.addr);
+    let b = connect(h.addr);
+    // the third connection is rejected at accept, before any request
+    let (_, mut rejected) = connect(h.addr);
+    assert_eq!(read_reply(&mut rejected), "err queue full");
+    // admitted connections keep working
+    let (mut s, mut r) = (a.0, a.1);
+    writeln!(s, "ping").unwrap();
+    assert!(read_reply(&mut r).starts_with("pong"));
+    drop((s, r));
+    drop(b);
+    // freed slots are reusable (poll until the loop observes the EOFs)
+    for attempt in 0..2000 {
+        let (mut s, mut r) = connect(h.addr);
+        writeln!(s, "ping").unwrap();
+        if read_reply(&mut r).starts_with("pong") {
+            break;
+        }
+        assert!(attempt < 1999, "slot never freed after client disconnect");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    h.shutdown();
+}
+
+#[test]
+fn stats_reports_connection_telemetry_and_reset_keeps_gauges() {
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    // a persistent pipelining connection bumps the pipelined counter
+    let (mut stream, mut reader) = connect(h.addr);
+    stream.write_all(b"ping\nping\nping\n").unwrap();
+    for _ in 0..3 {
+        assert!(read_reply(&mut reader).starts_with("pong"));
+    }
+    let stats = request(h.addr, "stats").unwrap();
+    assert!(field(&stats, "conns").parse::<u64>().unwrap() >= 1, "{stats}");
+    assert!(field(&stats, "pipelined").parse::<u64>().unwrap() >= 2, "{stats}");
+
+    // a resolved waiter leaves the waiters gauge at zero and records at
+    // least one self-pipe wakeup
+    let sub = request(h.addr, "submit dataset=blobs_300_4_3 k=3 seed=1").unwrap();
+    let id = field(&sub, "job");
+    let done = request(h.addr, &format!("wait job={id} timeout_ms=60000")).unwrap();
+    assert!(done.starts_with("ok method="), "{done}");
+    let stats = request(h.addr, "stats").unwrap();
+    assert_eq!(field(&stats, "waiters"), "0", "{stats}");
+    assert!(field(&stats, "wakeups").parse::<u64>().unwrap() >= 1, "{stats}");
+
+    // reset re-bases the counters but must not zero the live gauges
+    assert!(request(h.addr, "stats reset").unwrap().starts_with("ok"));
+    let stats = request(h.addr, "stats").unwrap();
+    assert!(field(&stats, "conns").parse::<u64>().unwrap() >= 1, "gauge survives: {stats}");
+    assert_eq!(field(&stats, "pipelined"), "0", "counter re-based: {stats}");
+    assert_eq!(field(&stats, "wakeups"), "0", "counter re-based: {stats}");
+    drop((stream, reader));
+    h.shutdown();
+}
+
+#[test]
+fn clara_cancel_releases_its_admission_permit_over_tcp() {
+    // ROADMAP 5b (CLARA half): the spec's cancel token reaches the
+    // subsample loop, so a running FasterCLARA job cancels between reps
+    // and its permit returns to the admission budget
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    let sub =
+        request(h.addr, "submit dataset=blobs_20000_8_5 k=5 seed=3 method=FasterCLARA-50")
+            .unwrap();
+    assert!(sub.starts_with("ok job="), "{sub}");
+    let id = field(&sub, "job");
+    assert_eq!(poll_until_past_queued(h.addr, &id), "running");
+    let c = request(h.addr, &format!("cancel job={id}")).unwrap();
+    assert!(
+        c.contains("cancel=requested") || c.contains("state=done") || c.contains("state=cancelled"),
+        "{c}"
+    );
+    let fin = request(h.addr, &format!("wait job={id} timeout_ms=600000")).unwrap();
+    assert!(
+        fin.starts_with(&format!("err cancelled job={id}")) || fin.starts_with("ok method="),
+        "cancelled between reps or finished, nothing else: {fin}"
+    );
+    assert_eq!(h.state.admission.used(), 0, "terminal job must hold no budget");
+    h.shutdown();
+}
+
+#[test]
+fn v1_to_v7_replies_stay_byte_compatible_over_the_event_loop() {
+    let h = serve(ServerConfig { workers: 2, ..Default::default() }).unwrap();
+    // the historical request forms, all answered over one pipelined
+    // connection — the strongest version of the field-order walk
+    let forms = [
+        "cluster dataset=blobs_300_4_3 k=3 seed=5 sampler=unif strategy=steepest", // v1
+        "cluster dataset=blobs_300_4_3 k=3 seed=5 method=FasterCLARA-5",           // v2
+        "cluster dataset=blobs_300_4_3 k=3 seed=5 metric=l2 scale_features=minmax", // v3
+        "cluster dataset=blobs_400_4_3 k=4 seed=2 threads=2",                      // v4
+        "cluster dataset=blobs_300_4_3 k=3 seed=5 profile=exact",                  // v7
+    ];
+    let (mut stream, mut reader) = connect(h.addr);
+    for f in &forms {
+        writeln!(stream, "{f}").unwrap();
+    }
+    for name in ["v1", "v2", "v3", "v4", "v7"] {
+        let r = read_reply(&mut reader);
+        assert!(r.starts_with("ok method="), "{name}: {r}");
+        let mut pos = 0;
+        for f in [
+            "ok method=", " cache=", " medoids=", " objective=", " seconds=", " dissim=",
+            " swaps=", " source=", " cost=", " inertia=", " profile=", " queue_ms=",
+            " served_ms=",
+        ] {
+            let at = r[pos..]
+                .find(f)
+                .unwrap_or_else(|| panic!("{name}: {f:?} missing/misordered in {r:?}"));
+            pos += at + f.len();
+        }
+    }
+
+    // the v5 handle verbs and v6 serving verbs, same connection
+    writeln!(stream, "submit dataset=blobs_300_4_3 k=3 seed=7").unwrap();
+    let sub = read_reply(&mut reader);
+    assert!(sub.starts_with("ok job=j1 cost="), "{sub}");
+    writeln!(stream, "wait job=j1 timeout_ms=60000").unwrap();
+    let done = read_reply(&mut reader);
+    assert!(done.starts_with("ok method=OneBatch-nniw cache="), "{done}");
+    writeln!(stream, "poll job=j1").unwrap();
+    let polled = read_reply(&mut reader);
+    assert!(polled.starts_with("ok job=j1 state=done method=OneBatch-nniw"), "{polled}");
+    writeln!(stream, "promote job=j1 name=prod").unwrap();
+    let p = read_reply(&mut reader);
+    assert!(p.starts_with("ok model=prod job=j1 k=3 dim=4 metric=l1 inertia="), "{p}");
+    writeln!(stream, "assign model=prod point=0,0,0,0 point=5,5,5,5").unwrap();
+    let a = read_reply(&mut reader);
+    assert!(a.starts_with("ok model=prod n=2 labels="), "{a}");
+    assert_eq!(field(&a, "labels").split(',').count(), 2, "{a}");
+    assert_eq!(field(&a, "dists").split(',').count(), 2, "{a}");
+    writeln!(stream, "models").unwrap();
+    let m = read_reply(&mut reader);
+    assert!(m.starts_with("ok count=1 cap=32 promoted=1 evicted=0 model.prod.job=j1"), "{m}");
+    writeln!(stream, "evict model=prod").unwrap();
+    let e = read_reply(&mut reader);
+    assert!(e.starts_with("ok evicted model=prod"), "{e}");
+    writeln!(stream, "jobs").unwrap();
+    let jobs = read_reply(&mut reader);
+    assert!(jobs.starts_with("ok queued=0 running=0 retained="), "{jobs}");
+    h.shutdown();
+}
+
+/// A pipelined `sleep` burst beyond `queue_cap` is rejected with the v4
+/// error while the admitted sleeps resolve from the timer wheel — the
+/// burst-backpressure contract without a single held thread.
+#[test]
+fn sleep_slots_backpressure_within_one_connection() {
+    let h = serve(ServerConfig { workers: 1, queue_cap: 2, ..Default::default() }).unwrap();
+    let (mut stream, mut reader) = connect(h.addr);
+    for _ in 0..5 {
+        writeln!(stream, "sleep ms=200").unwrap();
+    }
+    let replies: Vec<String> = (0..5).map(|_| read_reply(&mut reader)).collect();
+    let served = replies.iter().filter(|r| r.starts_with("ok slept_ms=200")).count();
+    let rejected = replies.iter().filter(|r| r.starts_with("err queue full")).count();
+    assert_eq!(served + rejected, 5, "{replies:?}");
+    assert_eq!(served, 2, "exactly queue_cap sleeps admitted: {replies:?}");
+    h.shutdown();
+}
+
+/// Dropping a connection mid-`wait` must not leak its waiter gauge
+/// entry.
+#[test]
+fn disconnected_waiter_releases_its_gauge_slot() {
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    let big = request(h.addr, "submit dataset=blobs_20000_8_5 k=5 seed=3").unwrap();
+    let big_id = field(&big, "job");
+    assert_eq!(poll_until_past_queued(h.addr, &big_id), "running");
+    let queued = request(h.addr, "submit dataset=blobs_20000_8_5 k=5 seed=6").unwrap();
+    let queued_id = field(&queued, "job");
+
+    let (mut stream, _reader) = connect(h.addr);
+    writeln!(stream, "wait job={queued_id} timeout_ms=600000").unwrap();
+    // confirm the park landed, then vanish without reading the reply
+    for _ in 0..2000 {
+        if field(&request(h.addr, "stats").unwrap(), "waiters") == "1" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(field(&request(h.addr, "stats").unwrap(), "waiters"), "1");
+    drop((stream, _reader));
+    for _ in 0..2000 {
+        if field(&request(h.addr, "stats").unwrap(), "waiters") == "0" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(field(&request(h.addr, "stats").unwrap(), "waiters"), "0", "gauge leaked");
+
+    let c = request(h.addr, &format!("cancel job={queued_id}")).unwrap();
+    assert!(c.starts_with(&format!("ok job={queued_id}")), "{c}");
+    let fin = request(h.addr, &format!("wait job={queued_id} timeout_ms=600000")).unwrap();
+    assert!(fin.starts_with("err cancelled") || fin.starts_with("ok method="), "{fin}");
+    let done = request(h.addr, &format!("wait job={big_id} timeout_ms=600000")).unwrap();
+    assert!(done.starts_with("ok method="), "{done}");
+    h.shutdown();
+}
