@@ -22,6 +22,10 @@
 //!     thousands of concurrent idle `wait`ers held at constant server
 //!     thread count, and on-loop `assign` QPS with 0 vs N parked
 //!     waiters (the `conn` section);
+//!   * v9 out-of-core sweep: chunked `StreamSweep::argmin` over a
+//!     memory-resident store and over an on-disk `.npy` store vs the
+//!     resident fused kernel — the chunking + I/O tax of never
+//!     materialising the full matrix (the `stream` section);
 //!   * (feature `xla`) XLA pairwise/gains: Pallas kernel vs plain-XLA.
 //!
 //! Flags (after `--`): `--smoke` shrinks every exercised section to
@@ -307,6 +311,80 @@ fn main() {
                 metric.name()
             );
         }
+    }
+
+    // ---- v9 out-of-core: chunked stream sweep vs resident fused ---------
+    // The same n x m argmin three ways: the resident fused kernel (the
+    // floor), StreamSweep over a ResidentStore (pure chunking tax — the
+    // kernels are identical, only the row delivery differs) and
+    // StreamSweep over an on-disk NpyStore (chunking + file I/O, the
+    // shape a streamed `npy:` solve actually runs).  Results are
+    // bit-identical across all three by construction; this measures
+    // only what the indirection costs.
+    if run("stream") {
+        use obpam::data::store::{NpyStore, ResidentStore};
+        use obpam::data::STREAM_CHUNK_ROWS;
+        use obpam::dissim::{DissimCounter, StreamSweep};
+        let (n, m, p) = if smoke { (2_000, 32, 16) } else { (40_000, 256, 64) };
+        let x = rand_matrix(&mut rng, n, p);
+        let b = rand_matrix(&mut rng, m, p);
+        let gpairs = (n * m) as f64 / 1e9;
+        let gbytes = ((n * p + m * p + n * m) * 4) as f64 / 1e9;
+        let (warm, iters) = if smoke { (0, 1) } else { (1, 5) };
+        let path = std::env::temp_dir().join(format!("obpam_bench_stream_{}.npy", std::process::id()));
+        obpam::data::npy::write_npy(&path, &x).unwrap();
+        let d = DissimCounter::new(Metric::L1);
+        for threads in [1, cores] {
+            let pool = Pool::new(threads);
+            let backend = NativeBackend::with_pool(Metric::L1, pool.clone());
+            let (t_res, mad_r) = time_median(warm, iters, || {
+                std::hint::black_box(backend.pairwise_argmin(&x, &b).unwrap());
+            });
+            report(
+                "stream",
+                &format!("resident fused argmin n={n} m={m} p={p} t={threads}"),
+                t_res,
+                mad_r,
+                Some((gpairs, "Gpair/s")),
+            );
+            let mut sweep = StreamSweep::new(STREAM_CHUNK_ROWS);
+            let mut store = ResidentStore::new(x.clone());
+            let (t_mem, mad_m) = time_median(warm, iters, || {
+                let out =
+                    sweep.argmin(&d, &mut store, &b, &pool, ComputeProfile::Exact).unwrap();
+                std::hint::black_box(out);
+            });
+            report(
+                "stream",
+                &format!("stream argmin (memory) n={n} m={m} p={p} t={threads}"),
+                t_mem,
+                mad_m,
+                Some((gpairs, "Gpair/s")),
+            );
+            let mut npy_store = NpyStore::open(&path).unwrap();
+            let (t_npy, mad_n) = time_median(warm, iters, || {
+                let out =
+                    sweep.argmin(&d, &mut npy_store, &b, &pool, ComputeProfile::Exact).unwrap();
+                std::hint::black_box(out);
+            });
+            report(
+                "stream",
+                &format!("stream argmin (npy disk) n={n} m={m} p={p} t={threads}"),
+                t_npy,
+                mad_n,
+                Some((gpairs, "Gpair/s")),
+            );
+            println!(
+                "  -> chunking tax {:.2}x, disk tax {:.2}x, {:.2} GB/s swept from npy",
+                t_mem / t_res.max(1e-12),
+                t_npy / t_res.max(1e-12),
+                gbytes / t_npy.max(1e-12)
+            );
+            if threads == cores {
+                break;
+            }
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     let heavy =

@@ -24,7 +24,9 @@ use crate::coordinator::KMedoidsResult;
 use crate::dissim::DissimCounter;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use crate::solver::{CancelToken, CANCELLED};
 use crate::telemetry::{RunStats, Timer};
+use anyhow::{bail, Result};
 use std::collections::HashMap;
 
 /// BanditPAM++ configuration.
@@ -40,12 +42,18 @@ pub struct BanditConfig {
     pub delta: f64,
     /// PRNG seed.
     pub seed: u64,
+    /// Cooperative cancellation: checked between BUILD selections and
+    /// between SWAP rounds; a cancelled run fails with
+    /// [`crate::solver::CANCELLED`] and discards its partial work.  The
+    /// inert default costs nothing and never fires, so the selection
+    /// sequence is bit-identical with or without a live token.
+    pub cancel: CancelToken,
 }
 
 impl BanditConfig {
     /// Paper-flavoured defaults for `k` with `T` swap rounds.
     pub fn new(k: usize, max_swaps: usize, seed: u64) -> Self {
-        BanditConfig { k, max_swaps, batch: 100, delta: 0.01, seed }
+        BanditConfig { k, max_swaps, batch: 100, delta: 0.01, seed, cancel: CancelToken::none() }
     }
 }
 
@@ -108,7 +116,7 @@ fn ci_sigma(sum: f64, sumsq: f64, count: usize, delta: f64, horizon: usize) -> f
 }
 
 /// Run BanditPAM++-style k-medoids.
-pub fn bandit_pam(x: &Matrix, cfg: &BanditConfig, d: &DissimCounter) -> KMedoidsResult {
+pub fn bandit_pam(x: &Matrix, cfg: &BanditConfig, d: &DissimCounter) -> Result<KMedoidsResult> {
     let n = x.rows;
     let k = cfg.k;
     assert!(k >= 2 && k < n);
@@ -120,6 +128,9 @@ pub fn bandit_pam(x: &Matrix, cfg: &BanditConfig, d: &DissimCounter) -> KMedoids
     let mut med: Vec<usize> = Vec::with_capacity(k);
     let mut dmin = vec![f32::INFINITY; n];
     for _sel in 0..k {
+        if cfg.cancel.is_cancelled() {
+            bail!(CANCELLED);
+        }
         // race over candidates minimising E_i[min(dmin_i, d(i, c))]
         let mut live: Vec<usize> = (0..n).filter(|i| !med.contains(i)).collect();
         let mut sum = vec![0.0f64; n];
@@ -175,6 +186,9 @@ pub fn bandit_pam(x: &Matrix, cfg: &BanditConfig, d: &DissimCounter) -> KMedoids
     let mut cache = RefCache::new();
     let mut swaps = 0u64;
     for _round in 0..cfg.max_swaps {
+        if cfg.cancel.is_cancelled() {
+            bail!(CANCELLED);
+        }
         // per-candidate gain sums for each slot; count shared per candidate
         let cand: Vec<usize> = (0..n).filter(|i| !med.contains(i)).collect();
         let mut live: Vec<(usize, usize)> = Vec::with_capacity(cand.len() * k);
@@ -262,7 +276,7 @@ pub fn bandit_pam(x: &Matrix, cfg: &BanditConfig, d: &DissimCounter) -> KMedoids
     }
     obj /= n as f64;
 
-    KMedoidsResult {
+    Ok(KMedoidsResult {
         medoids: med,
         est_objective: obj,
         stats: RunStats {
@@ -270,7 +284,7 @@ pub fn bandit_pam(x: &Matrix, cfg: &BanditConfig, d: &DissimCounter) -> KMedoids
             dissim_count: d.count() - count0,
             swap_count: swaps,
         },
-    }
+    })
 }
 
 /// [`crate::solver::Solver`] adapter for [`bandit_pam`].
@@ -291,7 +305,11 @@ impl crate::solver::Solver for BanditPamSolver {
         backend: &dyn crate::backend::ComputeBackend,
     ) -> anyhow::Result<KMedoidsResult> {
         let d = DissimCounter::with_counters(backend.metric(), backend.counters());
-        Ok(bandit_pam(x, &BanditConfig::new(spec.k, self.swaps, spec.seed), &d))
+        let cfg = BanditConfig {
+            cancel: spec.cancel.clone(),
+            ..BanditConfig::new(spec.k, self.swaps, spec.seed)
+        };
+        bandit_pam(x, &cfg, &d)
     }
 }
 
@@ -310,7 +328,7 @@ mod tests {
     fn build_only_t0_is_valid_and_decent() {
         let x = blob(150, 1);
         let d = DissimCounter::new(Metric::L1);
-        let r = bandit_pam(&x, &BanditConfig::new(3, 0, 2), &d);
+        let r = bandit_pam(&x, &BanditConfig::new(3, 0, 2), &d).unwrap();
         r.validate(150, 3);
         // greedy BUILD should beat random by a margin on clustered data
         let mut rng = Rng::new(3);
@@ -331,9 +349,9 @@ mod tests {
     fn swap_rounds_never_hurt() {
         let x = blob(120, 4);
         let d0 = DissimCounter::new(Metric::L1);
-        let r0 = bandit_pam(&x, &BanditConfig::new(3, 0, 5), &d0);
+        let r0 = bandit_pam(&x, &BanditConfig::new(3, 0, 5), &d0).unwrap();
         let d5 = DissimCounter::new(Metric::L1);
-        let r5 = bandit_pam(&x, &BanditConfig::new(3, 5, 5), &d5);
+        let r5 = bandit_pam(&x, &BanditConfig::new(3, 5, 5), &d5).unwrap();
         r5.validate(120, 3);
         assert!(r5.est_objective <= r0.est_objective * 1.02);
     }
@@ -342,9 +360,32 @@ mod tests {
     fn dissim_cost_grows_with_swap_rounds() {
         let x = blob(150, 6);
         let d0 = DissimCounter::new(Metric::L1);
-        bandit_pam(&x, &BanditConfig::new(3, 0, 7), &d0);
+        bandit_pam(&x, &BanditConfig::new(3, 0, 7), &d0).unwrap();
         let d5 = DissimCounter::new(Metric::L1);
-        bandit_pam(&x, &BanditConfig::new(3, 5, 7), &d5);
+        bandit_pam(&x, &BanditConfig::new(3, 5, 7), &d5).unwrap();
         assert!(d5.count() >= d0.count(), "{} vs {}", d5.count(), d0.count());
+    }
+
+    #[test]
+    fn live_uncancelled_token_is_bit_identical_to_inert() {
+        // the cancellation hook must not perturb the selection sequence
+        let x = blob(130, 9);
+        let inert = bandit_pam(&x, &BanditConfig::new(3, 2, 8), &DissimCounter::new(Metric::L1))
+            .unwrap();
+        let cfg = BanditConfig { cancel: CancelToken::new(), ..BanditConfig::new(3, 2, 8) };
+        let live = bandit_pam(&x, &cfg, &DissimCounter::new(Metric::L1)).unwrap();
+        assert_eq!(inert.medoids, live.medoids);
+        assert_eq!(inert.est_objective.to_bits(), live.est_objective.to_bits());
+        assert_eq!(inert.stats.dissim_count, live.stats.dissim_count);
+    }
+
+    #[test]
+    fn cancelled_token_aborts_with_the_marker_error() {
+        let x = blob(120, 10);
+        let token = CancelToken::new();
+        token.cancel();
+        let cfg = BanditConfig { cancel: token, ..BanditConfig::new(3, 2, 8) };
+        let err = bandit_pam(&x, &cfg, &DissimCounter::new(Metric::L1)).unwrap_err().to_string();
+        assert_eq!(err, CANCELLED);
     }
 }

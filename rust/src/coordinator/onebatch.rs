@@ -9,7 +9,8 @@ use super::sampler::{self, Batch, SamplerKind};
 use super::state::SwapState;
 use super::KMedoidsResult;
 use crate::backend::ComputeBackend;
-use crate::dissim::{ComputeProfile, DissimCounter};
+use crate::data::{RowStore, STREAM_CHUNK_ROWS};
+use crate::dissim::{ComputeProfile, DissimCounter, StreamSweep};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 use crate::runtime::Pool;
@@ -201,6 +202,123 @@ pub fn one_batch_pam(
                 }
                 // a chunk of k swaps per "pass"; a short chunk means the
                 // engine hit its tolerance -> converged
+                if engine::steepest_loop(backend, &d, &mut state, cfg.k, &counters)? < cfg.k {
+                    break;
+                }
+            }
+        }
+    }
+
+    Ok(KMedoidsResult {
+        medoids: state.med.clone(),
+        est_objective: state.est_objective(),
+        stats: RunStats {
+            seconds: timer.secs(),
+            dissim_count: counters.dissim() - dissim0,
+            swap_count: counters.swaps() - swaps0,
+        },
+    })
+}
+
+/// Run OneBatchPAM over a [`RowStore`] (the out-of-core entry point).
+///
+/// Resident stores delegate to [`one_batch_pam`] outright.  Streaming
+/// stores run the identical algorithm with every full-data pass chunked
+/// through a [`StreamSweep`]: the `m` batch rows are gathered once (the
+/// only resident feature slice) and the `n x m` matrix D — which *is*
+/// resident, OneBatch's working state — is built chunk-at-a-time, after
+/// which the swap search runs unchanged on D.  RNG consumption and
+/// float-op order match the resident path exactly, so for a fixed seed
+/// the medoids are bit-identical to loading the same bytes resident, at
+/// any chunk size or thread width.
+pub fn one_batch_pam_store(
+    store: &mut dyn RowStore,
+    cfg: &OneBatchConfig,
+    backend: &dyn ComputeBackend,
+) -> Result<KMedoidsResult> {
+    if let Some(x) = store.as_matrix() {
+        return one_batch_pam(x, cfg, backend);
+    }
+    let (n, p) = store.dims();
+    assert!(cfg.k >= 2 && cfg.k < n, "need 2 <= k < n");
+    let timer = Timer::start();
+    debug_assert_eq!(
+        cfg.profile,
+        backend.profile(),
+        "config profile must match the backend that computes the distances"
+    );
+    let counters = backend.counters();
+    let dissim0 = counters.dissim();
+    let swaps0 = counters.swaps();
+    let mut rng = Rng::new(cfg.seed);
+
+    // --- Batch construction (streamed) ---------------------------------
+    let counted = DissimCounter::with_counters(backend.metric(), counters.clone());
+    let m = cfg.m.unwrap_or_else(|| sampler::default_batch_size(n, cfg.k));
+    let batch: Batch = sampler::sample_store(cfg.sampler, store, m, &counted, &mut rng)?;
+    let mut bdata = vec![0.0f32; batch.indices.len() * p];
+    store.gather_rows(&batch.indices, &mut bdata)?;
+    let b = Matrix::from_vec(batch.indices.len(), p, bdata);
+
+    // The single O(n m p) distance computation, driven chunk-at-a-time.
+    // Same fused / unfused split as the resident path: NNIW-without-mask
+    // reduces each output row while cache-hot; Debias masks *before* any
+    // argmin on the assembled (resident) D.
+    let pool = cfg.pool.clone().unwrap_or_else(|| Pool::new(cfg.threads));
+    let mut sweep = StreamSweep::new(STREAM_CHUNK_ROWS);
+    let (d, w) = if batch.want_nniw && !batch.mask_self {
+        let (d, idx, _) = sweep.argmin(&counted, store, &b, &pool, cfg.profile)?;
+        let mut counts = vec![0.0f32; d.cols];
+        for &j in &idx {
+            counts[j] += 1.0;
+        }
+        (d, counts)
+    } else {
+        let mut d = sweep.matrix(&counted, store, &b, &pool, cfg.profile)?;
+        if batch.mask_self {
+            sampler::mask_self_distances(&mut d, &batch);
+        }
+        let mut w = batch.weights.clone();
+        if batch.want_nniw {
+            let (idx, _) = backend.argmin_rows(&d)?;
+            let mut counts = vec![0.0f32; d.cols];
+            for &j in &idx {
+                counts[j] += 1.0;
+            }
+            w = counts;
+        }
+        (d, w)
+    };
+
+    // --- Random init + swap search: unchanged, D is resident -----------
+    let med = rng.sample_distinct(n, cfg.k);
+    let mut state = SwapState::init(&d, med, w, n);
+    match cfg.strategy {
+        SwapStrategy::Eager => {
+            let mut order: Vec<usize> = (0..n).collect();
+            for _ in 0..cfg.max_passes {
+                if cfg.cancel.is_cancelled() {
+                    bail!(CANCELLED);
+                }
+                let swaps = engine::eager_pass(
+                    &d,
+                    &mut state,
+                    cfg.eps,
+                    &mut rng,
+                    &counters,
+                    &pool,
+                    &mut order,
+                );
+                if swaps == 0 {
+                    break;
+                }
+            }
+        }
+        SwapStrategy::Steepest => {
+            for _ in 0..cfg.max_passes {
+                if cfg.cancel.is_cancelled() {
+                    bail!(CANCELLED);
+                }
                 if engine::steepest_loop(backend, &d, &mut state, cfg.k, &counters)? < cfg.k {
                     break;
                 }
@@ -439,6 +557,75 @@ mod tests {
             let r = run(&cfg, &x);
             assert_eq!(r.medoids, serial.medoids, "round {round}");
         }
+    }
+
+    fn npy_store_of(x: &Matrix, name: &str) -> crate::data::store::NpyStore {
+        let dir = std::env::temp_dir().join(format!("obpam_ob_{}_{}", std::process::id(), name));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(format!("{name}.npy"));
+        crate::data::npy::write_npy(&path, x).unwrap();
+        crate::data::store::NpyStore::open(&path).unwrap()
+    }
+
+    #[test]
+    fn streaming_solve_is_bit_identical_to_resident() {
+        // every sampler x both strategies: the npy-backed streaming run
+        // must reproduce the resident medoids, objective bits, and
+        // dissimilarity count exactly
+        let x = blobs(220, 31);
+        for sampler in SamplerKind::all() {
+            for strategy in [SwapStrategy::Eager, SwapStrategy::Steepest] {
+                let cfg = OneBatchConfig {
+                    k: 4,
+                    sampler,
+                    strategy,
+                    m: Some(40),
+                    seed: 7,
+                    ..Default::default()
+                };
+                let backend = NativeBackend::new(Metric::L1);
+                let resident = one_batch_pam(&x, &cfg, &backend).unwrap();
+                let mut store = npy_store_of(&x, &format!("bit_{}_{}", sampler.name(), strategy.name()));
+                let backend2 = NativeBackend::new(Metric::L1);
+                let streamed = one_batch_pam_store(&mut store, &cfg, &backend2).unwrap();
+                let tag = format!("{}/{}", sampler.name(), strategy.name());
+                assert_eq!(resident.medoids, streamed.medoids, "{tag}");
+                assert_eq!(
+                    resident.est_objective.to_bits(),
+                    streamed.est_objective.to_bits(),
+                    "{tag}"
+                );
+                assert_eq!(resident.stats.dissim_count, streamed.stats.dissim_count, "{tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_solve_is_thread_invariant() {
+        let x = blobs(260, 33);
+        let base = OneBatchConfig { k: 4, m: Some(50), seed: 13, ..Default::default() };
+        let backend = NativeBackend::new(Metric::L1);
+        let serial = one_batch_pam(&x, &base, &backend).unwrap();
+        for threads in [1, 4] {
+            let cfg = OneBatchConfig { threads, ..base.clone() };
+            let mut store = npy_store_of(&x, &format!("thr{threads}"));
+            let backend = NativeBackend::new(Metric::L1);
+            let r = one_batch_pam_store(&mut store, &cfg, &backend).unwrap();
+            assert_eq!(r.medoids, serial.medoids, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn store_entry_point_delegates_for_resident_stores() {
+        let x = blobs(150, 35);
+        let cfg = OneBatchConfig { k: 3, m: Some(30), seed: 5, ..Default::default() };
+        let backend = NativeBackend::new(Metric::L1);
+        let direct = one_batch_pam(&x, &cfg, &backend).unwrap();
+        let mut store = crate::data::store::ResidentStore::new(x);
+        let backend2 = NativeBackend::new(Metric::L1);
+        let via = one_batch_pam_store(&mut store, &cfg, &backend2).unwrap();
+        assert_eq!(direct.medoids, via.medoids);
+        assert_eq!(direct.est_objective.to_bits(), via.est_objective.to_bits());
     }
 
     #[test]

@@ -14,9 +14,11 @@
 //!   batch uniformly, then grow it by D-sampling points that are far from
 //!   the current batch, so sparse/distant regions get covered.
 
+use crate::data::{RowStore, STREAM_CHUNK_ROWS};
 use crate::dissim::{DissimCounter, BIG};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use anyhow::Result;
 
 /// Which batch variant to run (paper Table 3's OneBatchPAM rows).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -188,6 +190,114 @@ pub fn sample(kind: SamplerKind, x: &Matrix, m: usize, d: &DissimCounter, rng: &
     }
 }
 
+/// Streaming twin of [`sample`]: the same batch, bit for bit, drawn
+/// over a [`RowStore`] instead of a resident matrix.
+///
+/// RNG consumption and float-op order are identical to [`sample`] for
+/// every variant: the uniform family touches no data at all, `Prog`
+/// replays each per-point min sweep through
+/// [`DissimCounter::min_into_store`] (same strict `<`, same ascending
+/// row order), and `Lwcs` accumulates its mean and q-distribution over
+/// ascending chunks — so a resident store delegates outright and a
+/// streaming store reproduces the resident batch exactly.
+pub fn sample_store(
+    kind: SamplerKind,
+    store: &mut dyn RowStore,
+    m: usize,
+    d: &DissimCounter,
+    rng: &mut Rng,
+) -> Result<Batch> {
+    if let Some(x) = store.as_matrix() {
+        return Ok(sample(kind, x, m, d, rng));
+    }
+    let (n, p) = store.dims();
+    let m = m.min(n);
+    Ok(match kind {
+        SamplerKind::Unif | SamplerKind::Debias | SamplerKind::Nniw => Batch {
+            indices: rng.sample_distinct(n, m),
+            weights: vec![1.0; m],
+            mask_self: kind == SamplerKind::Debias,
+            want_nniw: kind == SamplerKind::Nniw,
+        },
+        SamplerKind::Prog => {
+            let seed_m = (m / 2).max(1);
+            let mut chosen = rng.sample_distinct(n, seed_m);
+            let mut in_batch = vec![false; n];
+            let mut dmin = vec![f32::INFINITY; n];
+            for &j in &chosen {
+                in_batch[j] = true;
+            }
+            let mut chunk = vec![0.0f32; STREAM_CHUNK_ROWS.min(n).max(1) * p];
+            let mut point = vec![0.0f32; p];
+            for idx in 0..chosen.len() {
+                store.gather_rows(&chosen[idx..idx + 1], &mut point)?;
+                d.min_into_store(store, &point, &mut dmin, &mut chunk)?;
+            }
+            while chosen.len() < m {
+                let weights: Vec<f64> = dmin
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| if in_batch[i] { 0.0 } else { v as f64 })
+                    .collect();
+                let c = rng.weighted(&weights);
+                if in_batch[c] {
+                    break; // all remaining mass is zero (duplicates)
+                }
+                in_batch[c] = true;
+                chosen.push(c);
+                store.gather_rows(&chosen[chosen.len() - 1..], &mut point)?;
+                d.min_into_store(store, &point, &mut dmin, &mut chunk)?;
+            }
+            let mlen = chosen.len();
+            Batch { indices: chosen, weights: vec![1.0; mlen], mask_self: false, want_nniw: true }
+        }
+        SamplerKind::Lwcs => {
+            // mean point, accumulated chunk-by-chunk in the same
+            // ascending row order as the resident pass
+            let mut mean = vec![0.0f32; p];
+            let mut chunk = vec![0.0f32; STREAM_CHUNK_ROWS.min(n).max(1) * p];
+            let mut row0 = 0usize;
+            while row0 < n {
+                let xs = store.read_chunk(row0, &mut chunk)?;
+                let rows = xs.len() / p;
+                for i in 0..rows {
+                    for (mj, v) in mean.iter_mut().zip(&xs[i * p..(i + 1) * p]) {
+                        *mj += v;
+                    }
+                }
+                row0 += rows;
+            }
+            for v in &mut mean {
+                *v /= n as f32;
+            }
+            let d2: Vec<f64> = d
+                .store_to_point(store, &mean, &mut chunk)?
+                .into_iter()
+                .map(|v| {
+                    let v = v as f64;
+                    v * v
+                })
+                .collect();
+            let total: f64 = d2.iter().sum::<f64>().max(1e-30);
+            let q: Vec<f64> = d2
+                .iter()
+                .map(|&v| 0.5 / n as f64 + 0.5 * v / total)
+                .collect();
+            let mut weight_of: std::collections::HashMap<usize, f64> = Default::default();
+            let mut order: Vec<usize> = Vec::new();
+            for _ in 0..m {
+                let i = rng.weighted(&q);
+                if !weight_of.contains_key(&i) {
+                    order.push(i);
+                }
+                *weight_of.entry(i).or_insert(0.0) += 1.0 / (m as f64 * q[i]);
+            }
+            let weights: Vec<f32> = order.iter().map(|i| weight_of[i] as f32).collect();
+            Batch { indices: order, weights, mask_self: false, want_nniw: false }
+        }
+    })
+}
+
 /// Apply the debias mask in place: `d[sigma(j), j] = BIG`.
 pub fn mask_self_distances(d: &mut Matrix, batch: &Batch) {
     for (j, &i) in batch.indices.iter().enumerate() {
@@ -302,6 +412,69 @@ mod tests {
         for (j, &i) in b.indices.iter().enumerate() {
             assert_eq!(d.get(i, j), BIG);
         }
+    }
+
+    /// Streaming store over a resident matrix that refuses `as_matrix`
+    /// and caps every chunk at `max_rows`, forcing arbitrary seams.
+    struct Forced {
+        x: Matrix,
+        max_rows: usize,
+    }
+
+    impl RowStore for Forced {
+        fn dims(&self) -> (usize, usize) {
+            (self.x.rows, self.x.cols)
+        }
+
+        fn read_chunk<'a>(&'a mut self, row0: usize, buf: &'a mut [f32]) -> Result<&'a [f32]> {
+            let (n, p) = (self.x.rows, self.x.cols);
+            let fit = (buf.len() / p).min(self.max_rows).min(n - row0).max(1);
+            let src = &self.x.data[row0 * p..(row0 + fit) * p];
+            buf[..src.len()].copy_from_slice(src);
+            Ok(&buf[..src.len()])
+        }
+
+        fn gather_rows(&mut self, ids: &[usize], out: &mut [f32]) -> Result<()> {
+            crate::data::store::gather_from_matrix(&self.x, ids, out)
+        }
+    }
+
+    #[test]
+    fn sample_store_matches_resident_sample_at_every_seam() {
+        // every variant, several forced chunk seams: identical indices,
+        // weights (bit for bit), flags, and counter totals
+        let n = 90;
+        let x = blob(n, 4, 21);
+        for kind in SamplerKind::all() {
+            for max_rows in [1, 3, 37, n] {
+                let dr = counter(Metric::L2);
+                let mut rr = Rng::new(9);
+                let resident = sample(kind, &x, 24, &dr, &mut rr);
+                let ds = counter(Metric::L2);
+                let mut rs = Rng::new(9);
+                let mut store = Forced { x: x.clone(), max_rows };
+                let streamed = sample_store(kind, &mut store, 24, &ds, &mut rs).unwrap();
+                assert_eq!(resident.indices, streamed.indices, "{} @{max_rows}", kind.name());
+                assert_eq!(resident.weights, streamed.weights, "{} @{max_rows}", kind.name());
+                assert_eq!(resident.mask_self, streamed.mask_self);
+                assert_eq!(resident.want_nniw, streamed.want_nniw);
+                assert_eq!(dr.count(), ds.count(), "{} @{max_rows}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sample_store_delegates_for_resident_stores() {
+        let x = blob(60, 3, 22);
+        let d = counter(Metric::L1);
+        let mut rng = Rng::new(23);
+        let direct = sample(SamplerKind::Prog, &x, 12, &d, &mut rng);
+        let mut store = crate::data::store::ResidentStore::new(x);
+        let d2 = counter(Metric::L1);
+        let mut rng2 = Rng::new(23);
+        let via = sample_store(SamplerKind::Prog, &mut store, 12, &d2, &mut rng2).unwrap();
+        assert_eq!(direct.indices, via.indices);
+        assert_eq!(d.count(), d2.count());
     }
 
     #[test]

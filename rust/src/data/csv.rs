@@ -12,13 +12,82 @@ use std::path::Path;
 
 /// Load a numeric CSV file into a [`Dataset`].
 pub fn load_csv(path: &Path) -> Result<Dataset> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
+    load_csv_hinted(path, None)
+}
+
+/// [`load_csv`] with an optional row-count hint (the `?rows=` URI
+/// query).  With a hint the file is streamed line-by-line into a
+/// buffer pre-sized to `rows * p` after the first numeric row — no
+/// whole-file string and no `Vec` growth-by-doubling; without one it
+/// falls back to the slurp-and-parse path.  Both paths report the same
+/// errors with the same line numbers.
+pub fn load_csv_hinted(path: &Path, rows_hint: Option<usize>) -> Result<Dataset> {
     let name = path
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "csv".into());
-    parse_csv(&text, &name)
+    let Some(hint) = rows_hint else {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        return parse_csv(&text, &name);
+    };
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    stream_csv(std::io::BufReader::new(file), &name, hint)
+}
+
+/// Streaming twin of [`parse_csv`]: same separator / header / comment
+/// rules and the same error strings, but rows land directly in one
+/// flat buffer pre-sized from the row hint.
+fn stream_csv<R: std::io::BufRead>(reader: R, name: &str, rows_hint: usize) -> Result<Dataset> {
+    let mut data: Vec<f32> = Vec::new();
+    let mut p = 0usize;
+    let mut n = 0usize;
+    let mut content_lines = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.with_context(|| format!("reading {name}"))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        content_lines += 1;
+        let start = data.len();
+        let mut bad = None;
+        for f in line
+            .split(|c: char| c == ',' || c == ';' || c.is_whitespace())
+            .filter(|f| !f.is_empty())
+        {
+            match f.parse::<f32>() {
+                Ok(v) => data.push(v),
+                Err(e) => {
+                    bad = Some(e);
+                    break;
+                }
+            }
+        }
+        match bad {
+            None => {
+                let len = data.len() - start;
+                if p == 0 {
+                    p = len;
+                    data.reserve_exact(rows_hint.saturating_mul(p).saturating_sub(data.len()));
+                } else if len != p {
+                    bail!("line {}: expected {} fields, got {}", lineno + 1, p, len);
+                }
+                n += 1;
+            }
+            Some(_) if content_lines == 1 => data.truncate(start), // the one allowed header
+            Some(e) => bail!(
+                "line {}: {} (only the first line may be a non-numeric header)",
+                lineno + 1,
+                e
+            ),
+        }
+    }
+    if n == 0 {
+        bail!("no numeric rows in {name}");
+    }
+    Ok(Dataset { name: name.into(), x: Matrix::from_vec(n, p, data) })
 }
 
 /// Parse CSV text (exposed for tests).
@@ -110,6 +179,44 @@ mod tests {
     fn garbage_after_numeric_rows_errors_with_line_number() {
         let err = parse_csv("1,2\n3,4\noops,zap\n", "t").unwrap_err().to_string();
         assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn streamed_parse_matches_slurped_parse() {
+        // every fixture (good and bad) must behave identically on the
+        // hinted streaming path — same data, same errors, same line
+        // numbers
+        for text in [
+            "a,b\n# c\n1,2\n3,4\n",
+            "1;2 3\n4,5,6\n",
+            "1,2\n3\n",
+            "only,text\n",
+            "a,b\nx,y\n1,2\n",
+            "1,2\n3,4\noops,zap\n",
+            "# generated\n\na,b\n1,2\n3,4\n",
+        ] {
+            let slurped = parse_csv(text, "t");
+            let streamed = stream_csv(std::io::Cursor::new(text), "t", 2);
+            match (slurped, streamed) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!((a.n(), a.p()), (b.n(), b.p()), "{text:?}");
+                    assert_eq!(a.x.data, b.x.data, "{text:?}");
+                }
+                (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string(), "{text:?}"),
+                (a, b) => panic!("{text:?}: slurped {a:?} vs streamed {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_buffer_is_presized_by_the_hint() {
+        let text: String = (0..100).map(|i| format!("{i},{i}\n")).collect();
+        let d = stream_csv(std::io::Cursor::new(text), "t", 100).unwrap();
+        assert_eq!((d.n(), d.p()), (100, 2));
+        // an exact hint pre-sizes the flat buffer after the first row:
+        // no growth-by-doubling slack (doubling would land on 256)
+        let cap = d.x.data.capacity();
+        assert!((200..256).contains(&cap), "capacity {cap} shows doubling growth");
     }
 
     #[test]

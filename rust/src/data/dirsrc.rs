@@ -1,0 +1,399 @@
+//! `dir:` source — a directory of numbered CSV / `.npy` shards plus a
+//! `manifest` row-count line, concatenated in shard order.
+//!
+//! Layout: `<dir>/manifest` holds the total row count (one numeric
+//! line; blank lines and `#` comments allowed), and every `*.csv` /
+//! `*.npy` entry is a shard.  Shards are ordered by a natural
+//! (numeric-aware) name sort, so `shard2.csv` precedes `shard10.csv`.
+//! The manifest row count must equal the summed shard rows — a
+//! mismatch (shards added, dropped, or truncated after the manifest
+//! was written) is an error at open, never a silent short read.
+//!
+//! [`DirStore`] streams the concatenation: at most one shard is
+//! resident at a time (CSV shards parse whole; `.npy` shards stream
+//! through positioned reads), so the `dir:` peak is one shard, not the
+//! dataset.
+
+use super::npy::NpyReader;
+use super::store::RowStore;
+use super::Dataset;
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::cmp::Ordering;
+use std::path::{Path, PathBuf};
+
+/// Natural order: digit runs compare numerically, everything else
+/// byte-wise, so `shard2` < `shard10`.
+fn natural_cmp(a: &str, b: &str) -> Ordering {
+    let (ab, bb) = (a.as_bytes(), b.as_bytes());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < ab.len() && j < bb.len() {
+        if ab[i].is_ascii_digit() && bb[j].is_ascii_digit() {
+            let (si, sj) = (i, j);
+            while i < ab.len() && ab[i].is_ascii_digit() {
+                i += 1;
+            }
+            while j < bb.len() && bb[j].is_ascii_digit() {
+                j += 1;
+            }
+            let ra = a[si..i].trim_start_matches('0');
+            let rb = b[sj..j].trim_start_matches('0');
+            let ord = ra.len().cmp(&rb.len()).then_with(|| ra.cmp(rb));
+            if ord != Ordering::Equal {
+                return ord;
+            }
+        } else {
+            match ab[i].cmp(&bb[j]) {
+                Ordering::Equal => {
+                    i += 1;
+                    j += 1;
+                }
+                ord => return ord,
+            }
+        }
+    }
+    (ab.len() - i).cmp(&(bb.len() - j))
+}
+
+/// One shard file: CSV text or `.npy` binary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ShardKind {
+    Csv,
+    Npy,
+}
+
+#[derive(Debug)]
+struct ShardInfo {
+    path: PathBuf,
+    kind: ShardKind,
+    /// First global row this shard holds.
+    row0: usize,
+    /// Rows in this shard.
+    rows: usize,
+}
+
+/// The currently-open shard (at most one resident at a time).
+#[derive(Debug)]
+enum CurShard {
+    Csv { idx: usize, x: Matrix },
+    Npy { idx: usize, reader: NpyReader },
+}
+
+impl CurShard {
+    fn idx(&self) -> usize {
+        match self {
+            CurShard::Csv { idx, .. } | CurShard::Npy { idx, .. } => *idx,
+        }
+    }
+}
+
+/// Read the `manifest` row-count line.
+fn read_manifest(dir: &Path) -> Result<usize> {
+    let path = dir.join("manifest");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("{}: missing manifest (one line: total row count)", dir.display()))?;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        return line
+            .parse::<usize>()
+            .with_context(|| format!("{}: manifest line '{line}' is not a row count", path.display()));
+    }
+    bail!("{}: manifest holds no row count", path.display());
+}
+
+/// The shard files of a `dir:` source in natural order (exposed so the
+/// source fingerprint can cover every shard's size+mtime).
+pub fn shard_paths(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut shards: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading directory {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            matches!(p.extension().and_then(|e| e.to_str()), Some("csv") | Some("npy"))
+        })
+        .collect();
+    shards.sort_by(|a, b| {
+        natural_cmp(&a.file_name().unwrap_or_default().to_string_lossy(),
+                    &b.file_name().unwrap_or_default().to_string_lossy())
+    });
+    if shards.is_empty() {
+        bail!("{}: no .csv/.npy shards", dir.display());
+    }
+    Ok(shards)
+}
+
+/// First numeric row's field count of a CSV shard (cheap `p` probe;
+/// same separator/header/comment rules as [`super::csv::parse_csv`]).
+fn csv_peek_cols(path: &Path) -> Result<usize> {
+    use std::io::BufRead;
+    let file = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut content_lines = 0usize;
+    for line in std::io::BufReader::new(file).lines() {
+        let line = line.with_context(|| format!("reading {}", path.display()))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        content_lines += 1;
+        let fields: Vec<&str> = line
+            .split(|c: char| c == ',' || c == ';' || c.is_whitespace())
+            .filter(|f| !f.is_empty())
+            .collect();
+        if fields.iter().all(|f| f.parse::<f32>().is_ok()) {
+            return Ok(fields.len());
+        }
+        if content_lines > 1 {
+            bail!("{}: no numeric row found near the top", path.display());
+        }
+    }
+    bail!("{}: no numeric rows", path.display());
+}
+
+/// Cheap `(n, p)` probe for admission pricing: the manifest row count
+/// plus the first shard's width — no shard data is read.  The full
+/// row-count reconciliation happens at [`DirStore::open`].
+pub fn probe_dims(dir: &Path) -> Result<(usize, usize)> {
+    let rows = read_manifest(dir)?;
+    let first = &shard_paths(dir)?[0];
+    let cols = match first.extension().and_then(|e| e.to_str()) {
+        Some("npy") => super::npy::read_header(first)?.cols,
+        _ => csv_peek_cols(first)?,
+    };
+    Ok((rows, cols))
+}
+
+/// Streaming store over a shard directory.
+#[derive(Debug)]
+pub struct DirStore {
+    dir: PathBuf,
+    shards: Vec<ShardInfo>,
+    rows: usize,
+    cols: usize,
+    cur: Option<CurShard>,
+}
+
+impl DirStore {
+    /// Scan the directory: order shards, size each one, and reconcile
+    /// against the manifest.
+    pub fn open(dir: &Path) -> Result<DirStore> {
+        let manifest_rows = read_manifest(dir)?;
+        let paths = shard_paths(dir)?;
+        let mut shards = Vec::with_capacity(paths.len());
+        let mut cols = 0usize;
+        let mut row0 = 0usize;
+        for path in paths {
+            let (kind, rows, p) = match path.extension().and_then(|e| e.to_str()) {
+                Some("npy") => {
+                    let h = super::npy::read_header(&path)?;
+                    (ShardKind::Npy, h.rows, h.cols)
+                }
+                _ => {
+                    let d = super::csv::load_csv(&path)?;
+                    (ShardKind::Csv, d.n(), d.p())
+                }
+            };
+            if cols == 0 {
+                cols = p;
+            } else if p != cols {
+                bail!(
+                    "{}: shard {} is {p}-wide but earlier shards are {cols}-wide",
+                    dir.display(),
+                    path.display()
+                );
+            }
+            shards.push(ShardInfo { path, kind, row0, rows });
+            row0 += rows;
+        }
+        if row0 != manifest_rows {
+            bail!(
+                "{}: manifest says {manifest_rows} rows but the {} shards hold {row0}",
+                dir.display(),
+                shards.len()
+            );
+        }
+        Ok(DirStore { dir: dir.to_path_buf(), shards, rows: row0, cols, cur: None })
+    }
+
+    /// Index of the shard holding global `row`.
+    fn shard_of(&self, row: usize) -> usize {
+        debug_assert!(row < self.rows);
+        self.shards.partition_point(|s| s.row0 + s.rows <= row)
+    }
+
+    /// Make shard `idx` the open one (dropping any other — one shard
+    /// resident at most).
+    fn ensure_open(&mut self, idx: usize) -> Result<()> {
+        if self.cur.as_ref().is_some_and(|c| c.idx() == idx) {
+            return Ok(());
+        }
+        let info = &self.shards[idx];
+        self.cur = Some(match info.kind {
+            ShardKind::Csv => {
+                let d = super::csv::load_csv(&info.path)?;
+                if d.n() != info.rows || d.p() != self.cols {
+                    bail!(
+                        "{}: shard {} changed shape since scan ({}x{} now, {}x{} at open)",
+                        self.dir.display(),
+                        info.path.display(),
+                        d.n(),
+                        d.p(),
+                        info.rows,
+                        self.cols
+                    );
+                }
+                CurShard::Csv { idx, x: d.x }
+            }
+            ShardKind::Npy => CurShard::Npy { idx, reader: NpyReader::open(&info.path)? },
+        });
+        Ok(())
+    }
+}
+
+impl RowStore for DirStore {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn read_chunk<'a>(&'a mut self, row0: usize, buf: &'a mut [f32]) -> Result<&'a [f32]> {
+        let p = self.cols;
+        assert!(row0 < self.rows, "row0 {row0} out of range (n={})", self.rows);
+        assert!(buf.len() >= p, "chunk buffer smaller than one row");
+        let idx = self.shard_of(row0);
+        self.ensure_open(idx)?;
+        let local = row0 - self.shards[idx].row0;
+        // chunks never cross a shard boundary: a short chunk at the
+        // seam keeps every shard's bits flowing from exactly one reader
+        match self.cur.as_mut().expect("ensure_open filled cur") {
+            CurShard::Csv { x, .. } => {
+                let rows = (buf.len() / p).min(x.rows - local);
+                Ok(&x.data[local * p..(local + rows) * p])
+            }
+            CurShard::Npy { reader, .. } => {
+                let rows = reader.read_rows(local, buf)?;
+                Ok(&buf[..rows * p])
+            }
+        }
+    }
+
+    fn gather_rows(&mut self, ids: &[usize], out: &mut [f32]) -> Result<()> {
+        let p = self.cols;
+        assert_eq!(out.len(), ids.len() * p, "gather buffer must hold ids.len() * p values");
+        // group by shard so each shard is opened at most once per
+        // gather, while the output keeps the caller's id order
+        let mut order: Vec<usize> = (0..ids.len()).collect();
+        order.sort_by_key(|&slot| ids[slot]);
+        for &slot in &order {
+            let id = ids[slot];
+            anyhow::ensure!(id < self.rows, "gather row {id} out of range (n={})", self.rows);
+            let idx = self.shard_of(id);
+            self.ensure_open(idx)?;
+            let local = id - self.shards[idx].row0;
+            let dst = &mut out[slot * p..(slot + 1) * p];
+            match self.cur.as_mut().expect("ensure_open filled cur") {
+                CurShard::Csv { x, .. } => dst.copy_from_slice(x.row(local)),
+                CurShard::Npy { reader, .. } => reader.read_row(local, dst)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Load the whole concatenation as a resident [`Dataset`] (full-matrix
+/// methods need this; the OneBatch path streams instead).
+pub fn load_dir(dir: &Path) -> Result<Dataset> {
+    let mut store = DirStore::open(dir)?;
+    let (n, p) = store.dims();
+    let mut data = vec![0f32; n * p];
+    let mut buf = vec![0f32; super::store::STREAM_CHUNK_ROWS.max(1) * p];
+    let mut row0 = 0usize;
+    while row0 < n {
+        let chunk = store.read_chunk(row0, &mut buf)?;
+        let rows = chunk.len() / p;
+        data[row0 * p..(row0 + rows) * p].copy_from_slice(chunk);
+        row0 += rows;
+    }
+    let name = dir
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dir".into());
+    Ok(Dataset { name, x: Matrix::from_vec(n, p, data) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("obpam_dir_{}_{}", std::process::id(), name));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// 7x2 dataset split across a CSV shard and an npy shard, with the
+    /// natural-order trap (shard2 vs shard10).
+    fn build_mixed(dir: &Path) -> Matrix {
+        let all: Vec<f32> = (0..14).map(|v| v as f32).collect();
+        std::fs::write(dir.join("shard2.csv"), "0,1\n2,3\n4,5\n").unwrap();
+        let tail = Matrix::from_vec(4, 2, all[6..].to_vec());
+        super::super::npy::write_npy(&dir.join("shard10.npy"), &tail).unwrap();
+        std::fs::write(dir.join("manifest"), "7\n").unwrap();
+        Matrix::from_vec(7, 2, all)
+    }
+
+    #[test]
+    fn natural_order_and_concatenation() {
+        assert_eq!(natural_cmp("shard2.csv", "shard10.npy"), Ordering::Less);
+        assert_eq!(natural_cmp("a01", "a1"), Ordering::Greater, "ties break on the raw run");
+        let dir = scratch("concat");
+        let want = build_mixed(&dir);
+        assert_eq!(probe_dims(&dir).unwrap(), (7, 2));
+        let d = load_dir(&dir).unwrap();
+        assert_eq!(d.x.data, want.data);
+        // chunked sweep with a 2-row buffer crosses the shard seam
+        let mut s = DirStore::open(&dir).unwrap();
+        let mut buf = vec![0f32; 2 * 2];
+        let mut got = Vec::new();
+        let mut row0 = 0;
+        while row0 < 7 {
+            let c = s.read_chunk(row0, &mut buf).unwrap();
+            row0 += c.len() / 2;
+            got.extend_from_slice(c);
+        }
+        assert_eq!(got, want.data);
+        // gather across shards preserves id order
+        let mut out = vec![0f32; 3 * 2];
+        s.gather_rows(&[6, 0, 3], &mut out).unwrap();
+        assert_eq!(out, vec![12.0, 13.0, 0.0, 1.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn manifest_mismatch_and_missing_are_rejected() {
+        let dir = scratch("mismatch");
+        build_mixed(&dir);
+        std::fs::write(dir.join("manifest"), "9\n").unwrap();
+        let err = DirStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("manifest says 9 rows"), "{err}");
+
+        std::fs::remove_file(dir.join("manifest")).unwrap();
+        let err = DirStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("manifest"), "{err}");
+
+        let dir = scratch("empty");
+        std::fs::write(dir.join("manifest"), "0\n").unwrap();
+        let err = DirStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("no .csv/.npy shards"), "{err}");
+    }
+
+    #[test]
+    fn ragged_shard_widths_are_rejected() {
+        let dir = scratch("ragged");
+        std::fs::write(dir.join("shard1.csv"), "1,2\n").unwrap();
+        std::fs::write(dir.join("shard2.csv"), "1,2,3\n").unwrap();
+        std::fs::write(dir.join("manifest"), "2\n").unwrap();
+        let err = DirStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("-wide"), "{err}");
+    }
+}

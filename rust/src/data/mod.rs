@@ -1,17 +1,24 @@
 //! Dataset abstraction, loaders and synthetic generators.
 //!
 //! Data enters the system through [`DataSource`] — a parsed URI
-//! (`synth:abalone`, `file:/data/points.csv`, bare names aliasing
-//! `synth:`) with one `load()` entry point — so every surface (CLI,
-//! bench grid, server) addresses generated and loaded datasets the same
-//! way.  [`FeatureScaling`] names the optional preprocessing step
-//! applied after loading.
+//! (`synth:abalone`, `file:/data/points.csv`, `npy:/data/points.npy`,
+//! `dir:/data/shards`, bare names aliasing `synth:`) with one `load()`
+//! entry point — so every surface (CLI, bench grid, server) addresses
+//! generated and loaded datasets the same way.  [`FeatureScaling`]
+//! names the optional preprocessing step applied after loading.
+//! Streaming sources (`npy:`, `dir:`) additionally open as a
+//! [`RowStore`] ([`DataSource::open_store`]) so the OneBatch path can
+//! sweep them chunk-by-chunk without a resident matrix.
 
 pub mod csv;
+pub mod dirsrc;
+pub mod npy;
 pub mod source;
+pub mod store;
 pub mod synth;
 
 pub use source::DataSource;
+pub use store::{RowStore, STREAM_CHUNK_ROWS};
 
 use crate::linalg::Matrix;
 

@@ -1,0 +1,376 @@
+//! Minimal `.npy` (NumPy binary format) reader and writer.
+//!
+//! Supports exactly what the out-of-core path needs: v1.0/v2.0 headers,
+//! C-order (`fortran_order: False`) 2-D arrays of little-endian `<f4`
+//! or `<f8`.  Reads are mmap-free: the header is parsed once, then data
+//! rows are fetched with pread-style positioned reads ([`NpyReader::
+//! read_rows`]) so a chunk of rows can be pulled through a small
+//! reusable buffer without the file ever being resident.  `f64` files
+//! are cast element-wise to `f32` on read (the crate-wide feature type).
+//!
+//! The writer ([`write_npy`]) emits v1.0 `<f4` C-order files with the
+//! standard 64-byte-aligned header, so round-tripping through `obpam
+//! gen --format npy` is bit-exact.
+
+use super::Dataset;
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+
+/// The six magic bytes every `.npy` file starts with.
+pub const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Element type of an `.npy` file we accept.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// `<f4` — little-endian float32 (read verbatim).
+    F32,
+    /// `<f8` — little-endian float64 (cast to `f32` on read).
+    F64,
+}
+
+impl Dtype {
+    /// Bytes per element.
+    pub fn item_size(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    /// The numpy `descr` spelling.
+    pub fn descr(self) -> &'static str {
+        match self {
+            Dtype::F32 => "<f4",
+            Dtype::F64 => "<f8",
+        }
+    }
+}
+
+/// Parsed `.npy` header: shape, element type, and where the data starts.
+#[derive(Clone, Copy, Debug)]
+pub struct NpyHeader {
+    /// Number of rows (first shape axis).
+    pub rows: usize,
+    /// Number of columns (second shape axis).
+    pub cols: usize,
+    /// Element type.
+    pub dtype: Dtype,
+    /// Byte offset of the first data element.
+    pub data_offset: u64,
+}
+
+impl NpyHeader {
+    /// Total data bytes the file must hold past [`Self::data_offset`].
+    pub fn data_bytes(&self) -> u64 {
+        (self.rows as u64) * (self.cols as u64) * (self.dtype.item_size() as u64)
+    }
+}
+
+/// Extract the value text following `'key':` in the header dict.
+fn dict_field<'a>(dict: &'a str, key: &str, path: &Path) -> Result<&'a str> {
+    let pat = format!("'{key}'");
+    let at = dict
+        .find(&pat)
+        .with_context(|| format!("{}: npy header has no {key} field", path.display()))?;
+    let rest = dict[at + pat.len()..].trim_start();
+    let rest = rest
+        .strip_prefix(':')
+        .with_context(|| format!("{}: malformed npy header near {key}", path.display()))?;
+    Ok(rest.trim_start())
+}
+
+/// Parse the header of an open `.npy` file.  Rejects bad magic,
+/// unsupported versions/dtypes, Fortran order, non-2-D shapes, and
+/// files too short to hold the advertised data (truncation).
+pub fn parse_header(file: &File, path: &Path) -> Result<NpyHeader> {
+    let mut head = [0u8; 12];
+    // magic(6) + major(1) + minor(1) + len(2 or 4)
+    file.read_exact_at(&mut head[..10])
+        .with_context(|| format!("{}: file too short for an npy header", path.display()))?;
+    if &head[..6] != MAGIC {
+        bail!("{}: bad npy magic (not a .npy file)", path.display());
+    }
+    let (major, minor) = (head[6], head[7]);
+    let (dict_len, dict_at) = match major {
+        1 => (u16::from_le_bytes([head[8], head[9]]) as usize, 10u64),
+        2 => {
+            file.read_exact_at(&mut head[8..12], 8)
+                .with_context(|| format!("{}: file too short for a v2 npy header", path.display()))?;
+            (u32::from_le_bytes([head[8], head[9], head[10], head[11]]) as usize, 12u64)
+        }
+        _ => bail!("{}: unsupported npy version {major}.{minor} (need 1.x or 2.x)", path.display()),
+    };
+    let mut dict_raw = vec![0u8; dict_len];
+    file.read_exact_at(&mut dict_raw, dict_at)
+        .with_context(|| format!("{}: truncated npy header dict", path.display()))?;
+    let dict = String::from_utf8_lossy(&dict_raw);
+
+    let descr = dict_field(&dict, "descr", path)?;
+    let descr = descr
+        .strip_prefix('\'')
+        .and_then(|r| r.split('\'').next())
+        .with_context(|| format!("{}: malformed npy descr", path.display()))?;
+    let dtype = match descr {
+        "<f4" => Dtype::F32,
+        "<f8" => Dtype::F64,
+        other => bail!("{}: unsupported npy dtype '{other}' (need <f4 or <f8)", path.display()),
+    };
+
+    let fortran = dict_field(&dict, "fortran_order", path)?;
+    if fortran.starts_with("True") {
+        bail!("{}: fortran-order npy arrays are not supported (need C order)", path.display());
+    } else if !fortran.starts_with("False") {
+        bail!("{}: malformed npy fortran_order field", path.display());
+    }
+
+    let shape = dict_field(&dict, "shape", path)?;
+    let shape = shape
+        .strip_prefix('(')
+        .and_then(|r| r.split(')').next())
+        .with_context(|| format!("{}: malformed npy shape", path.display()))?;
+    let dims: Vec<usize> = shape
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().with_context(|| format!("{}: bad npy shape axis '{t}'", path.display())))
+        .collect::<Result<_>>()?;
+    if dims.len() != 2 {
+        bail!("{}: npy shape {shape:?} is {}-D (need a 2-D (n, p) array)", path.display(), dims.len());
+    }
+    let (rows, cols) = (dims[0], dims[1]);
+    if rows == 0 || cols == 0 {
+        bail!("{}: empty npy array (shape ({rows}, {cols}))", path.display());
+    }
+
+    let header = NpyHeader { rows, cols, dtype, data_offset: dict_at + dict_len as u64 };
+    let need = header.data_offset + header.data_bytes();
+    let have = file
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    if have < need {
+        bail!(
+            "{}: truncated npy (shape ({rows}, {cols}) {} needs {need} bytes, file has {have})",
+            path.display(),
+            dtype.descr(),
+        );
+    }
+    Ok(header)
+}
+
+/// Parse just the header of a `.npy` file on disk (cheap: ~a hundred
+/// bytes of I/O — the pre-admission dimension probe).
+pub fn read_header(path: &Path) -> Result<NpyHeader> {
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    parse_header(&file, path)
+}
+
+/// Chunked row reader over an open `.npy` file.  Holds the file handle
+/// plus a reusable raw-byte scratch so steady-state sweeps allocate
+/// nothing.
+#[derive(Debug)]
+pub struct NpyReader {
+    file: File,
+    /// Parsed header (shape, dtype, data offset).
+    pub header: NpyHeader,
+    raw: Vec<u8>,
+}
+
+impl NpyReader {
+    /// Open a `.npy` file and parse its header.
+    pub fn open(path: &Path) -> Result<NpyReader> {
+        let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let header = parse_header(&file, path)?;
+        Ok(NpyReader { file, header, raw: Vec::new() })
+    }
+
+    /// Read consecutive rows starting at `row0` into the front of
+    /// `out`, decoding to `f32`.  Reads `min(out.len() / cols, rows -
+    /// row0)` whole rows via one positioned read; returns the row
+    /// count.  `out` must hold at least one row.
+    pub fn read_rows(&mut self, row0: usize, out: &mut [f32]) -> Result<usize> {
+        let (n, p) = (self.header.rows, self.header.cols);
+        assert!(row0 < n, "row0 {row0} out of range (n={n})");
+        assert!(out.len() >= p, "chunk buffer smaller than one row");
+        let rows = (out.len() / p).min(n - row0);
+        let isz = self.header.dtype.item_size();
+        let nbytes = rows * p * isz;
+        self.raw.resize(nbytes, 0);
+        let off = self.header.data_offset + (row0 * p * isz) as u64;
+        self.file
+            .read_exact_at(&mut self.raw[..nbytes], off)
+            .with_context(|| format!("npy read of rows {row0}..{} failed", row0 + rows))?;
+        match self.header.dtype {
+            Dtype::F32 => {
+                for (dst, src) in out[..rows * p].iter_mut().zip(self.raw.chunks_exact(4)) {
+                    *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+                }
+            }
+            Dtype::F64 => {
+                for (dst, src) in out[..rows * p].iter_mut().zip(self.raw.chunks_exact(8)) {
+                    *dst = f64::from_le_bytes([
+                        src[0], src[1], src[2], src[3], src[4], src[5], src[6], src[7],
+                    ]) as f32;
+                }
+            }
+        }
+        Ok(rows)
+    }
+
+    /// Read one row by index into `out[..cols]`.
+    pub fn read_row(&mut self, row: usize, out: &mut [f32]) -> Result<()> {
+        let p = self.header.cols;
+        let got = self.read_rows(row, &mut out[..p])?;
+        debug_assert_eq!(got, 1);
+        Ok(())
+    }
+}
+
+/// Load a whole `.npy` file as a resident [`Dataset`] (the non-
+/// streaming path; full-matrix methods need this).
+pub fn load_npy(path: &Path) -> Result<Dataset> {
+    let mut r = NpyReader::open(path)?;
+    let (n, p) = (r.header.rows, r.header.cols);
+    let mut data = vec![0f32; n * p];
+    let mut row0 = 0usize;
+    // read through a bounded window so the raw-byte scratch stays small
+    // even for f64 files (the decoded matrix is the only n*p buffer)
+    let window = super::store::STREAM_CHUNK_ROWS.max(1) * p;
+    while row0 < n {
+        let end = (row0 * p + window).min(n * p);
+        let got = r.read_rows(row0, &mut data[row0 * p..end])?;
+        row0 += got;
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "npy".into());
+    Ok(Dataset { name, x: Matrix::from_vec(n, p, data) })
+}
+
+/// Write a matrix as a v1.0 C-order `<f4` `.npy` file with the
+/// standard 64-byte-aligned header.
+pub fn write_npy(path: &Path, x: &Matrix) -> Result<()> {
+    let dict = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': ({}, {}), }}",
+        x.rows, x.cols
+    );
+    // magic(6) + version(2) + len(2) + dict + padding + '\n', total a
+    // multiple of 64 bytes
+    let base = 10 + dict.len() + 1;
+    let total = base.div_ceil(64) * 64;
+    let dict_len = total - 10;
+    let mut out = Vec::with_capacity(total + x.data.len() * 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&[1, 0]);
+    out.extend_from_slice(&(dict_len as u16).to_le_bytes());
+    out.extend_from_slice(dict.as_bytes());
+    out.resize(total - 1, b' ');
+    out.push(b'\n');
+    for v in &x.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(&out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("obpam_npy_{}_{}", std::process::id(), name));
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(format!("{name}.npy"))
+    }
+
+    #[test]
+    fn write_read_round_trip_is_bit_exact() {
+        let x = Matrix::from_vec(3, 2, vec![1.5, -2.0, 0.25, 4.0, 1e-7, 9.0]);
+        let path = tmp("roundtrip");
+        write_npy(&path, &x).unwrap();
+        let h = read_header(&path).unwrap();
+        assert_eq!((h.rows, h.cols, h.dtype), (3, 2, Dtype::F32));
+        let d = load_npy(&path).unwrap();
+        assert_eq!(d.x.data, x.data);
+        // chunked reads see the same bits, chunk by chunk
+        let mut r = NpyReader::open(&path).unwrap();
+        let mut buf = vec![0f32; 2 * 2];
+        assert_eq!(r.read_rows(0, &mut buf).unwrap(), 2);
+        assert_eq!(&buf, &x.data[..4]);
+        assert_eq!(r.read_rows(2, &mut buf).unwrap(), 1);
+        assert_eq!(&buf[..2], &x.data[4..]);
+    }
+
+    #[test]
+    fn f64_files_cast_to_f32() {
+        // hand-build a v2.0 <f8 file
+        let path = tmp("f64");
+        let dict = "{'descr': '<f8', 'fortran_order': False, 'shape': (2, 2), }";
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&[2, 0]);
+        out.extend_from_slice(&(dict.len() as u32 + 1).to_le_bytes());
+        out.extend_from_slice(dict.as_bytes());
+        out.push(b'\n');
+        for v in [1.0f64, 2.5, -3.0, 0.125] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &out).unwrap();
+        let d = load_npy(&path).unwrap();
+        assert_eq!(d.x.data, vec![1.0f32, 2.5, -3.0, 0.125]);
+    }
+
+    #[test]
+    fn bad_magic_truncation_and_fortran_are_rejected() {
+        let path = tmp("badmagic");
+        std::fs::write(&path, b"NOTNPY00rest").unwrap();
+        let err = read_header(&path).unwrap_err().to_string();
+        assert!(err.contains("bad npy magic"), "{err}");
+
+        let x = Matrix::from_vec(4, 3, (0..12).map(|v| v as f32).collect());
+        let path = tmp("trunc");
+        write_npy(&path, &x).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let err = read_header(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated npy"), "{err}");
+
+        let path = tmp("fortran");
+        let dict = "{'descr': '<f4', 'fortran_order': True, 'shape': (1, 1), }";
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&[1, 0]);
+        out.extend_from_slice(&(dict.len() as u16 + 1).to_le_bytes());
+        out.extend_from_slice(dict.as_bytes());
+        out.push(b'\n');
+        out.extend_from_slice(&1.0f32.to_le_bytes());
+        std::fs::write(&path, &out).unwrap();
+        let err = read_header(&path).unwrap_err().to_string();
+        assert!(err.contains("fortran-order"), "{err}");
+    }
+
+    #[test]
+    fn non_2d_and_bad_dtype_are_rejected() {
+        for (name, dict) in [
+            ("oned", "{'descr': '<f4', 'fortran_order': False, 'shape': (4,), }"),
+            ("int", "{'descr': '<i8', 'fortran_order': False, 'shape': (2, 2), }"),
+        ] {
+            let path = tmp(name);
+            let mut out = Vec::new();
+            out.extend_from_slice(MAGIC);
+            out.extend_from_slice(&[1, 0]);
+            out.extend_from_slice(&(dict.len() as u16 + 1).to_le_bytes());
+            out.extend_from_slice(dict.as_bytes());
+            out.push(b'\n');
+            out.resize(out.len() + 64, 0);
+            std::fs::write(&path, &out).unwrap();
+            assert!(read_header(&path).is_err(), "{name} should be rejected");
+        }
+    }
+}

@@ -7,6 +7,12 @@
 //!   (`synth:abalone`, `synth:blobs_2000_8_5`);
 //! * `file:<path>` — a numeric CSV on disk, optionally carrying a row
 //!   hint for admission control (`file:/data/gas.csv?rows=416153`);
+//! * `npy:<path>` — a binary `.npy` array on disk; dims come from the
+//!   ~100-byte header, so no hint is needed and the source can also be
+//!   *streamed* chunk-by-chunk ([`DataSource::open_store`]);
+//! * `dir:<path>` — a directory of numbered CSV/`.npy` shards plus a
+//!   `manifest` row-count line, concatenated in natural shard order
+//!   (also streamable);
 //! * a bare name (`abalone`, `blobs_2000_8_5`) — protocol-v2 back-compat
 //!   alias for `synth:<name>`.
 //!
@@ -22,10 +28,11 @@
 //! grid runner and the server — call sites no longer pick between
 //! `synth::try_generate` and `load_csv` by hand.
 
-use super::csv::load_csv;
-use super::{synth, Dataset};
+use super::csv::load_csv_hinted;
+use super::store::{NpyStore, ResidentStore, RowStore};
+use super::{dirsrc, npy, synth, Dataset};
 use anyhow::{bail, Context, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// Where the bytes come from.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -34,6 +41,10 @@ enum SourceKind {
     Synth(String),
     /// Numeric CSV on disk.
     File(PathBuf),
+    /// Binary `.npy` array on disk (streamable).
+    Npy(PathBuf),
+    /// Directory of numbered CSV/`.npy` shards + manifest (streamable).
+    Dir(PathBuf),
 }
 
 /// A parsed dataset URI; see the module docs for the accepted forms.
@@ -90,10 +101,28 @@ impl DataSource {
             }
             return Ok(DataSource { kind: SourceKind::File(PathBuf::from(path)), rows_hint });
         }
+        if let Some(rest) = s.strip_prefix("npy:") {
+            if rest.is_empty() {
+                bail!("npy: needs a path (e.g. npy:/data/points.npy)");
+            }
+            if rest.contains('?') {
+                bail!("npy: sources take no query string (dims come from the header; got '{s}')");
+            }
+            return Ok(DataSource { kind: SourceKind::Npy(PathBuf::from(rest)), rows_hint: None });
+        }
+        if let Some(rest) = s.strip_prefix("dir:") {
+            if rest.is_empty() {
+                bail!("dir: needs a path (e.g. dir:/data/shards)");
+            }
+            if rest.contains('?') {
+                bail!("dir: sources take no query string (dims come from the manifest; got '{s}')");
+            }
+            return Ok(DataSource { kind: SourceKind::Dir(PathBuf::from(rest)), rows_hint: None });
+        }
         // bare names alias synth: (protocol-v2 back-compat); anything
         // with an unrecognised scheme prefix is rejected, not guessed at
         if let Some((scheme, _)) = s.split_once(':') {
-            bail!("unknown dataset scheme '{scheme}:' in '{s}' (use synth:, file:, or a bare synth name)");
+            bail!("unknown dataset scheme '{scheme}:' in '{s}' (use synth:, file:, npy:, dir:, or a bare synth name)");
         }
         Ok(DataSource { kind: SourceKind::Synth(s.to_string()), rows_hint: None })
     }
@@ -107,6 +136,8 @@ impl DataSource {
                 Some(n) => format!("file:{}?rows={n}", path.display()),
                 None => format!("file:{}", path.display()),
             },
+            SourceKind::Npy(path) => format!("npy:{}", path.display()),
+            SourceKind::Dir(path) => format!("dir:{}", path.display()),
         }
     }
 
@@ -120,12 +151,12 @@ impl DataSource {
     /// exist (yet) — by the time a cache admits one, the load has to
     /// resolve it anyway.
     pub fn identity(&self) -> String {
+        let canonical = |p: &Path| std::fs::canonicalize(p).unwrap_or_else(|_| p.to_path_buf());
         match &self.kind {
             SourceKind::Synth(name) => format!("synth:{name}"),
-            SourceKind::File(path) => {
-                let p = std::fs::canonicalize(path).unwrap_or_else(|_| path.clone());
-                format!("file:{}", p.display())
-            }
+            SourceKind::File(path) => format!("file:{}", canonical(path).display()),
+            SourceKind::Npy(path) => format!("npy:{}", canonical(path).display()),
+            SourceKind::Dir(path) => format!("dir:{}", canonical(path).display()),
         }
     }
 
@@ -134,17 +165,29 @@ impl DataSource {
     pub fn name(&self) -> String {
         match &self.kind {
             SourceKind::Synth(name) => name.clone(),
-            SourceKind::File(path) => path
+            SourceKind::File(path) | SourceKind::Npy(path) => path
                 .file_stem()
                 .map(|s| s.to_string_lossy().into_owned())
                 .unwrap_or_else(|| "csv".into()),
+            SourceKind::Dir(path) => path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "dir".into()),
         }
     }
 
-    /// Is this a `file:` source?  (File bytes are independent of the
-    /// generation knobs, so cache layers normalise scale/seed away.)
+    /// Is this an on-disk source (`file:` / `npy:` / `dir:`)?  Disk
+    /// bytes are independent of the generation knobs, so cache layers
+    /// normalise scale/seed away.
     pub fn is_file(&self) -> bool {
-        matches!(self.kind, SourceKind::File(_))
+        !matches!(self.kind, SourceKind::Synth(_))
+    }
+
+    /// Can this source be streamed chunk-by-chunk without a resident
+    /// matrix (`npy:` / `dir:`)?  Streamed solves bypass the dataset
+    /// cache by design: the whole point is to never hold `n x p`.
+    pub fn is_stream(&self) -> bool {
+        matches!(self.kind, SourceKind::Npy(_) | SourceKind::Dir(_))
     }
 
     /// Stable cache fingerprint over the source's [`DataSource::identity`]
@@ -168,22 +211,18 @@ impl DataSource {
     /// cache) avoid resolving the path twice per request.
     pub fn fingerprint_of(&self, identity: &str) -> Result<u64> {
         let mut h = fnv1a(identity.as_bytes());
-        if let SourceKind::File(path) = &self.kind {
-            let meta = std::fs::metadata(path)
-                .with_context(|| format!("stat {}", path.display()))?;
-            let mtime_ns = meta
-                .modified()
-                .ok()
-                .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
-                .map(|d| d.as_nanos() as u64)
-                .unwrap_or(0);
-            h = h
-                .rotate_left(17)
-                .wrapping_mul(0x100000001b3)
-                .wrapping_add(meta.len())
-                .rotate_left(17)
-                .wrapping_mul(0x100000001b3)
-                .wrapping_add(mtime_ns);
+        match &self.kind {
+            SourceKind::Synth(_) => {}
+            SourceKind::File(path) | SourceKind::Npy(path) => h = mix_file_meta(h, path)?,
+            SourceKind::Dir(path) => {
+                // every shard's size+mtime folds in, in shard order, so
+                // touching, resizing or renumbering any shard (or the
+                // manifest) moves the fingerprint
+                h = mix_file_meta(h, &path.join("manifest"))?;
+                for shard in dirsrc::shard_paths(path)? {
+                    h = mix_file_meta(h, &shard)?;
+                }
+            }
         }
         Ok(h)
     }
@@ -197,6 +236,21 @@ impl DataSource {
         match &self.kind {
             SourceKind::Synth(name) => synth::expected_rows(name, scale),
             SourceKind::File(_) => self.rows_hint,
+            SourceKind::Npy(_) | SourceKind::Dir(_) => self.expected_dims().map(|(n, _)| n),
+        }
+    }
+
+    /// `(n, p)` for sources whose dimensions are knowable without
+    /// loading the data: the `.npy` header (~100 bytes) or the `dir:`
+    /// manifest plus one shard-width probe.  `None` for synth / `file:`
+    /// sources (and for stream sources whose probe fails — the load
+    /// will surface the real error).  This is what prices
+    /// `resident_bytes` before any bulk I/O.
+    pub fn expected_dims(&self) -> Option<(usize, usize)> {
+        match &self.kind {
+            SourceKind::Npy(path) => npy::read_header(path).ok().map(|h| (h.rows, h.cols)),
+            SourceKind::Dir(path) => dirsrc::probe_dims(path).ok(),
+            SourceKind::Synth(_) | SourceKind::File(_) => None,
         }
     }
 
@@ -206,7 +260,7 @@ impl DataSource {
     pub fn paper_large_scale(&self) -> bool {
         match &self.kind {
             SourceKind::Synth(name) => synth::large_scale_names().contains(&name.as_str()),
-            SourceKind::File(_) => false,
+            SourceKind::File(_) | SourceKind::Npy(_) | SourceKind::Dir(_) => false,
         }
     }
 
@@ -216,9 +270,43 @@ impl DataSource {
     pub fn load(&self, scale: f64, seed: u64) -> Result<Dataset> {
         match &self.kind {
             SourceKind::Synth(name) => synth::try_generate(name, scale, seed),
-            SourceKind::File(path) => load_csv(path),
+            SourceKind::File(path) => load_csv_hinted(path, self.rows_hint),
+            SourceKind::Npy(path) => npy::load_npy(path),
+            SourceKind::Dir(path) => dirsrc::load_dir(path),
         }
     }
+
+    /// Open the source as a [`RowStore`].  Stream sources (`npy:` /
+    /// `dir:`) open without materialising anything; synth / `file:`
+    /// sources load resident and wrap — so callers can be written
+    /// against stores uniformly while only true streams pay chunk I/O.
+    pub fn open_store(&self, scale: f64, seed: u64) -> Result<Box<dyn RowStore + Send>> {
+        match &self.kind {
+            SourceKind::Npy(path) => Ok(Box::new(NpyStore::open(path)?)),
+            SourceKind::Dir(path) => Ok(Box::new(dirsrc::DirStore::open(path)?)),
+            SourceKind::Synth(_) | SourceKind::File(_) => {
+                Ok(Box::new(ResidentStore::new(self.load(scale, seed)?.x)))
+            }
+        }
+    }
+}
+
+/// Fold one file's size and mtime into a fingerprint (the `file:`
+/// staleness rule, shared by `npy:` and every `dir:` shard).
+fn mix_file_meta(h: u64, path: &Path) -> Result<u64> {
+    let meta = std::fs::metadata(path).with_context(|| format!("stat {}", path.display()))?;
+    let mtime_ns = meta
+        .modified()
+        .ok()
+        .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    Ok(h.rotate_left(17)
+        .wrapping_mul(0x100000001b3)
+        .wrapping_add(meta.len())
+        .rotate_left(17)
+        .wrapping_mul(0x100000001b3)
+        .wrapping_add(mtime_ns))
 }
 
 impl std::fmt::Display for DataSource {
@@ -296,9 +384,65 @@ mod tests {
             "file:/x.csv?rows=abc",
             "file:/x.csv?bogus=1",
             "synth:abalone?rows=5",
+            "npy:",
+            "npy:/x.npy?rows=5",
+            "dir:",
+            "dir:/shards?rows=5",
         ] {
             assert!(DataSource::parse(bad).is_err(), "{bad:?} should not parse");
         }
+    }
+
+    #[test]
+    fn npy_and_dir_sources_parse_and_round_trip() {
+        for uri in ["npy:/data/points.npy", "dir:/data/shards"] {
+            let src = DataSource::parse(uri).unwrap();
+            assert_eq!(src.canon(), uri);
+            assert_eq!(DataSource::parse(&src.canon()).unwrap(), src);
+            assert!(src.is_file(), "disk sources skip scale/seed normalisation");
+            assert!(src.is_stream(), "npy:/dir: are the streamable kinds");
+            assert!(!src.paper_large_scale());
+        }
+        assert_eq!(DataSource::parse("npy:/data/points.npy").unwrap().name(), "points");
+        assert_eq!(DataSource::parse("dir:/data/shards").unwrap().name(), "shards");
+        assert!(!DataSource::parse("file:/x.csv").unwrap().is_stream());
+        assert!(!DataSource::parse("abalone").unwrap().is_stream());
+    }
+
+    #[test]
+    fn npy_expected_dims_and_fingerprint_track_the_file() {
+        let dir = std::env::temp_dir().join("obpam_source_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("dims_{}.npy", std::process::id()));
+        let x = crate::linalg::Matrix::from_vec(6, 3, (0..18).map(|v| v as f32).collect());
+        npy::write_npy(&path, &x).unwrap();
+        let src = DataSource::parse(&format!("npy:{}", path.display())).unwrap();
+        assert_eq!(src.expected_dims(), Some((6, 3)));
+        assert_eq!(src.expected_rows(0.5), Some(6), "file bytes do not scale");
+        let f1 = src.fingerprint().unwrap();
+        assert_eq!(src.fingerprint().unwrap(), f1);
+        let grown = crate::linalg::Matrix::from_vec(7, 3, (0..21).map(|v| v as f32).collect());
+        npy::write_npy(&path, &grown).unwrap();
+        assert_ne!(src.fingerprint().unwrap(), f1, "rewritten file -> new fingerprint");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dir_fingerprint_covers_every_shard() {
+        let dir = std::env::temp_dir()
+            .join(format!("obpam_source_dirfp_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("shard1.csv"), "1,2\n3,4\n").unwrap();
+        std::fs::write(dir.join("shard2.csv"), "5,6\n").unwrap();
+        std::fs::write(dir.join("manifest"), "3\n").unwrap();
+        let src = DataSource::parse(&format!("dir:{}", dir.display())).unwrap();
+        assert_eq!(src.expected_dims(), Some((3, 2)));
+        let f1 = src.fingerprint().unwrap();
+        // growing the *last* shard must move the fingerprint
+        std::fs::write(dir.join("shard2.csv"), "5,6\n7,8\n").unwrap();
+        assert_ne!(src.fingerprint().unwrap(), f1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

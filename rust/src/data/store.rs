@@ -1,0 +1,209 @@
+//! Row stores: the out-of-core data layer.
+//!
+//! A [`RowStore`] yields feature rows two ways — consecutive chunks
+//! ([`RowStore::read_chunk`], the streaming-sweep order) and arbitrary
+//! gathers ([`RowStore::gather_rows`], the one O(m·p) batch
+//! materialization) — without promising the full n×p matrix ever
+//! exists in memory.  Three impls:
+//!
+//! * [`ResidentStore`] — wraps a loaded [`Matrix`]; `read_chunk`
+//!   returns internal slices (zero-copy) and [`RowStore::as_matrix`]
+//!   exposes the matrix so resident solves take today's exact code
+//!   path, bit for bit.
+//! * [`NpyStore`] — chunked positioned reads over an `npy:` file via
+//!   [`super::npy::NpyReader`]; only one chunk buffer of rows is ever
+//!   decoded.
+//! * [`super::dirsrc::DirStore`] — shard-ordered concatenation of a
+//!   `dir:` source, one shard resident at a time at most.
+//!
+//! The contract the streaming OneBatch path relies on (see
+//! INVARIANTS.md): `read_chunk(row0, buf)` returns at least one row
+//! when `row0 < n`, rows are returned in ascending order with no gaps
+//! or repeats across a sweep, and the returned bits for any row are
+//! identical on every read — which makes a chunked sweep a pure
+//! re-association of the resident sweep and keeps the two bit-identical
+//! at every chunk size and thread width.
+
+use crate::linalg::Matrix;
+use anyhow::Result;
+use std::path::Path;
+
+/// Rows per streaming chunk.  Shared by [`StreamSweep`](crate::dissim)
+/// sweeps and admission pricing (`chunk_bytes = STREAM_CHUNK_ROWS * p *
+/// 4`), so the bytes a streaming job is billed for are the bytes it
+/// actually holds.
+pub const STREAM_CHUNK_ROWS: usize = 4096;
+
+/// A source of `n` feature rows of width `p`, readable in consecutive
+/// chunks or arbitrary gathers.
+pub trait RowStore {
+    /// `(n, p)`: row count and feature dimension.
+    fn dims(&self) -> (usize, usize);
+
+    /// Yield consecutive rows starting at `row0` as a flat `rows * p`
+    /// slice.  Reads `min(buf.len() / p, n - row0)` rows — at least one
+    /// when `row0 < n` and `buf` holds a row.  A resident store returns
+    /// an internal slice (ignoring `buf`); a streaming store decodes
+    /// into `buf` and returns the filled prefix.
+    fn read_chunk<'a>(&'a mut self, row0: usize, buf: &'a mut [f32]) -> Result<&'a [f32]>;
+
+    /// Gather arbitrary rows *in the order given* (batch column order
+    /// is seed-determined and must be preserved) into `out`, which must
+    /// hold exactly `ids.len() * p` values.
+    fn gather_rows(&mut self, ids: &[usize], out: &mut [f32]) -> Result<()>;
+
+    /// The resident matrix, when this store is one (`None` for
+    /// streaming stores).  Lets the coordinator route resident stores
+    /// through the unchanged in-memory path.
+    fn as_matrix(&self) -> Option<&Matrix> {
+        None
+    }
+}
+
+/// Gather rows out of a resident matrix in id order (shared by
+/// [`ResidentStore`] and tests).
+pub fn gather_from_matrix(x: &Matrix, ids: &[usize], out: &mut [f32]) -> Result<()> {
+    let p = x.cols;
+    assert_eq!(out.len(), ids.len() * p, "gather buffer must hold ids.len() * p values");
+    for (slot, &id) in ids.iter().enumerate() {
+        anyhow::ensure!(id < x.rows, "gather row {id} out of range (n={})", x.rows);
+        out[slot * p..(slot + 1) * p].copy_from_slice(x.row(id));
+    }
+    Ok(())
+}
+
+/// A loaded matrix presented as a [`RowStore`] (zero-copy chunks).
+#[derive(Debug)]
+pub struct ResidentStore {
+    x: Matrix,
+}
+
+impl ResidentStore {
+    /// Wrap a loaded matrix.
+    pub fn new(x: Matrix) -> ResidentStore {
+        ResidentStore { x }
+    }
+
+    /// Take the matrix back out.
+    pub fn into_matrix(self) -> Matrix {
+        self.x
+    }
+}
+
+impl RowStore for ResidentStore {
+    fn dims(&self) -> (usize, usize) {
+        (self.x.rows, self.x.cols)
+    }
+
+    fn read_chunk<'a>(&'a mut self, row0: usize, buf: &'a mut [f32]) -> Result<&'a [f32]> {
+        let (n, p) = (self.x.rows, self.x.cols);
+        assert!(row0 < n, "row0 {row0} out of range (n={n})");
+        assert!(buf.len() >= p, "chunk buffer smaller than one row");
+        let rows = (buf.len() / p).min(n - row0);
+        Ok(&self.x.data[row0 * p..(row0 + rows) * p])
+    }
+
+    fn gather_rows(&mut self, ids: &[usize], out: &mut [f32]) -> Result<()> {
+        gather_from_matrix(&self.x, ids, out)
+    }
+
+    fn as_matrix(&self) -> Option<&Matrix> {
+        Some(&self.x)
+    }
+}
+
+/// A `.npy` file presented as a [`RowStore`]: chunked positioned reads,
+/// nothing resident beyond the caller's chunk buffer.
+#[derive(Debug)]
+pub struct NpyStore {
+    reader: super::npy::NpyReader,
+    row: Vec<f32>,
+}
+
+impl NpyStore {
+    /// Open an `.npy` file for streaming.
+    pub fn open(path: &Path) -> Result<NpyStore> {
+        let reader = super::npy::NpyReader::open(path)?;
+        Ok(NpyStore { reader, row: Vec::new() })
+    }
+}
+
+impl RowStore for NpyStore {
+    fn dims(&self) -> (usize, usize) {
+        (self.reader.header.rows, self.reader.header.cols)
+    }
+
+    fn read_chunk<'a>(&'a mut self, row0: usize, buf: &'a mut [f32]) -> Result<&'a [f32]> {
+        let rows = self.reader.read_rows(row0, buf)?;
+        let p = self.reader.header.cols;
+        Ok(&buf[..rows * p])
+    }
+
+    fn gather_rows(&mut self, ids: &[usize], out: &mut [f32]) -> Result<()> {
+        let (n, p) = self.dims();
+        assert_eq!(out.len(), ids.len() * p, "gather buffer must hold ids.len() * p values");
+        self.row.resize(p, 0.0);
+        for (slot, &id) in ids.iter().enumerate() {
+            anyhow::ensure!(id < n, "gather row {id} out of range (n={n})");
+            self.reader.read_row(id, &mut self.row)?;
+            out[slot * p..(slot + 1) * p].copy_from_slice(&self.row);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_matrix() -> Matrix {
+        Matrix::from_vec(5, 2, (0..10).map(|v| v as f32).collect())
+    }
+
+    #[test]
+    fn resident_chunks_are_zero_copy_and_bounded_by_buf() {
+        let mut s = ResidentStore::new(demo_matrix());
+        assert_eq!(s.dims(), (5, 2));
+        let mut buf = vec![0f32; 2 * 2];
+        let c = s.read_chunk(0, &mut buf).unwrap();
+        assert_eq!(c, &[0.0, 1.0, 2.0, 3.0]);
+        let mut buf = vec![0f32; 2 * 2];
+        let c = s.read_chunk(4, &mut buf).unwrap();
+        assert_eq!(c, &[8.0, 9.0], "tail chunk is the short remainder");
+        assert!(s.as_matrix().is_some());
+    }
+
+    #[test]
+    fn gather_preserves_id_order() {
+        let mut s = ResidentStore::new(demo_matrix());
+        let mut out = vec![0f32; 3 * 2];
+        s.gather_rows(&[4, 0, 2], &mut out).unwrap();
+        assert_eq!(out, vec![8.0, 9.0, 0.0, 1.0, 4.0, 5.0]);
+        let mut out = vec![0f32; 2];
+        assert!(s.gather_rows(&[9], &mut out).is_err(), "out-of-range id");
+    }
+
+    #[test]
+    fn npy_store_sweep_matches_resident() {
+        let x = demo_matrix();
+        let dir = std::env::temp_dir().join(format!("obpam_store_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("sweep.npy");
+        super::super::npy::write_npy(&path, &x).unwrap();
+        let mut s = NpyStore::open(&path).unwrap();
+        assert_eq!(s.dims(), (5, 2));
+        // a 2-row chunked sweep reassembles the exact matrix
+        let mut got = Vec::new();
+        let mut buf = vec![0f32; 2 * 2];
+        let mut row0 = 0;
+        while row0 < 5 {
+            let c = s.read_chunk(row0, &mut buf).unwrap();
+            row0 += c.len() / 2;
+            got.extend_from_slice(c);
+        }
+        assert_eq!(got, x.data);
+        let mut out = vec![0f32; 2 * 2];
+        s.gather_rows(&[3, 1], &mut out).unwrap();
+        assert_eq!(out, vec![6.0, 7.0, 2.0, 3.0]);
+    }
+}

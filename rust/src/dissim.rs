@@ -220,6 +220,58 @@ impl DissimCounter {
         }
     }
 
+    /// Streaming twin of [`DissimCounter::rows_to_point`]: one chunked
+    /// ascending pass over `store` through the caller's chunk buffer.
+    /// Rows are visited in the same order with the same per-row
+    /// `Metric::eval` call, so the output bits match the resident pass.
+    pub fn store_to_point(
+        &self,
+        store: &mut dyn crate::data::RowStore,
+        point: &[f32],
+        chunk: &mut [f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let (n, p) = store.dims();
+        self.counters.add_dissim(n as u64);
+        let mut out = Vec::with_capacity(n);
+        let mut row0 = 0usize;
+        while row0 < n {
+            let xs = store.read_chunk(row0, chunk)?;
+            let rows = xs.len() / p;
+            for i in 0..rows {
+                out.push(self.metric.eval(&xs[i * p..(i + 1) * p], point));
+            }
+            row0 += rows;
+        }
+        Ok(out)
+    }
+
+    /// Streaming twin of [`DissimCounter::min_into_rows`] (same strict
+    /// `<` update, same ascending row order, chunked through `chunk`).
+    pub fn min_into_store(
+        &self,
+        store: &mut dyn crate::data::RowStore,
+        point: &[f32],
+        dmin: &mut [f32],
+        chunk: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let (n, p) = store.dims();
+        debug_assert_eq!(dmin.len(), n);
+        self.counters.add_dissim(n as u64);
+        let mut row0 = 0usize;
+        while row0 < n {
+            let xs = store.read_chunk(row0, chunk)?;
+            let rows = xs.len() / p;
+            for (i, slot) in dmin[row0..row0 + rows].iter_mut().enumerate() {
+                let v = self.metric.eval(&xs[i * p..(i + 1) * p], point);
+                if v < *slot {
+                    *slot = v;
+                }
+            }
+            row0 += rows;
+        }
+        Ok(())
+    }
+
     /// Total dissimilarity computations so far.
     pub fn count(&self) -> u64 {
         self.counters.dissim()
@@ -377,6 +429,173 @@ where
     collected.sort_by_key(|(row0, _)| *row0);
     let reduced = collected.into_iter().flat_map(|(_, acc)| acc).collect();
     (out, reduced)
+}
+
+/// Chunked twins of the fused sweeps, driven by a [`RowStore`] instead
+/// of a resident `&Matrix`.  One [`KernelPlan`] is prepared from the
+/// resident batch (serial transpose + norms — the same bits as the
+/// resident path), then feature rows flow through a reusable
+/// `chunk_rows x p` buffer: each loaded chunk is filled, swept and
+/// reduced while cache-hot, and the full `n x p` matrix never exists.
+///
+/// Bit-identity argument: [`KernelPlan::fill_row`] is row-local (every
+/// output cell's float-op sequence depends only on `(x_row, plan)`),
+/// and the per-row reductions are [`crate::linalg::argmin`] /
+/// [`crate::linalg::top2_min`] on the finished row — so chunking is a
+/// pure re-association of the resident sweep and the output is
+/// identical at every chunk size *and* thread width
+/// (rust/tests/out_of_core.rs pins this end to end).
+pub struct StreamSweep {
+    chunk_rows: usize,
+    chunk: Vec<f32>,
+    tile: Vec<f32>,
+}
+
+impl StreamSweep {
+    /// A sweep buffer holding `chunk_rows` feature rows at a time
+    /// (callers outside tests pass [`crate::data::STREAM_CHUNK_ROWS`]).
+    pub fn new(chunk_rows: usize) -> StreamSweep {
+        assert!(chunk_rows >= 1, "need at least one row per chunk");
+        StreamSweep { chunk_rows, chunk: Vec::new(), tile: Vec::new() }
+    }
+
+    /// Chunked twin of [`cross_matrix_pool_profiled`]: the full `n x m`
+    /// distance matrix (which *is* resident — OneBatch's O(n·m) state)
+    /// from a streamed `x`.
+    pub fn matrix(
+        &mut self,
+        d: &DissimCounter,
+        store: &mut dyn crate::data::RowStore,
+        b: &Matrix,
+        pool: &Pool,
+        profile: ComputeProfile,
+    ) -> anyhow::Result<Matrix> {
+        let (out, _) = self.reduce(d, store, b, pool, profile, |_| ())?;
+        Ok(out)
+    }
+
+    /// Chunked twin of [`cross_argmin_pool`].
+    pub fn argmin(
+        &mut self,
+        d: &DissimCounter,
+        store: &mut dyn crate::data::RowStore,
+        b: &Matrix,
+        pool: &Pool,
+        profile: ComputeProfile,
+    ) -> anyhow::Result<(Matrix, Vec<usize>, Vec<f32>)> {
+        assert!(b.rows >= 1, "argmin needs a non-empty batch");
+        let (out, reduced) = self.reduce(d, store, b, pool, profile, crate::linalg::argmin)?;
+        let (idx, val) = reduced.into_iter().unzip();
+        Ok((out, idx, val))
+    }
+
+    /// Assignment-only sweep: per-row `(argmin, min)` against `b`
+    /// without retaining any `n x m` matrix — distances land in a
+    /// `chunk_rows x m` tile that is reduced and overwritten chunk by
+    /// chunk (the streaming final-fit pass).
+    pub fn assign(
+        &mut self,
+        d: &DissimCounter,
+        store: &mut dyn crate::data::RowStore,
+        b: &Matrix,
+        pool: &Pool,
+        profile: ComputeProfile,
+    ) -> anyhow::Result<(Vec<usize>, Vec<f32>)> {
+        assert!(b.rows >= 1, "assign needs a non-empty batch");
+        let (n, p) = store.dims();
+        assert_eq!(p, b.cols, "feature dims differ");
+        d.counters.add_dissim((n * b.rows) as u64);
+        let m = b.rows;
+        let plan = KernelPlan::new(d.metric, profile, b);
+        self.chunk.resize(self.chunk_rows * p, 0.0);
+        self.tile.resize(self.chunk_rows * m, 0.0);
+        let mut idx = Vec::with_capacity(n);
+        let mut val = Vec::with_capacity(n);
+        let mut row0 = 0usize;
+        while row0 < n {
+            let xs = store.read_chunk(row0, &mut self.chunk)?;
+            let rows = xs.len() / p;
+            debug_assert!(rows >= 1, "RowStore contract: a chunk holds at least one row");
+            let parts: Mutex<Vec<(usize, Vec<(usize, f32)>)>> = Mutex::new(Vec::new());
+            {
+                let plan = &plan;
+                let parts = &parts;
+                pool.for_each_row_chunk(&mut self.tile[..rows * m], rows, m, |r0, dchunk| {
+                    let mut acc = Vec::with_capacity(dchunk.len() / m);
+                    for (di, full_row) in dchunk.chunks_mut(m).enumerate() {
+                        plan.fill_row(&xs[(r0 + di) * p..(r0 + di + 1) * p], full_row);
+                        acc.push(crate::linalg::argmin(full_row));
+                    }
+                    sync_ext::lock_or_recover(parts).push((r0, acc));
+                });
+            }
+            let mut collected = std::mem::take(&mut *sync_ext::lock_or_recover(&parts));
+            collected.sort_by_key(|(r0, _)| *r0);
+            for (_, acc) in collected {
+                for (i, v) in acc {
+                    idx.push(i);
+                    val.push(v);
+                }
+            }
+            row0 += rows;
+        }
+        Ok((idx, val))
+    }
+
+    /// The shared chunked engine (mirror of [`cross_reduce`]): one plan
+    /// for the whole sweep, rows filled and reduced chunk by chunk in
+    /// ascending row order.
+    fn reduce<R, G>(
+        &mut self,
+        d: &DissimCounter,
+        store: &mut dyn crate::data::RowStore,
+        b: &Matrix,
+        pool: &Pool,
+        profile: ComputeProfile,
+        reduce: G,
+    ) -> anyhow::Result<(Matrix, Vec<R>)>
+    where
+        R: Send,
+        G: Fn(&[f32]) -> R + Sync,
+    {
+        let (n, p) = store.dims();
+        assert_eq!(p, b.cols, "feature dims differ");
+        d.counters.add_dissim((n * b.rows) as u64);
+        let m = b.rows;
+        let mut out = Matrix::zeros(n, m);
+        if n == 0 || m == 0 {
+            return Ok((out, Vec::new()));
+        }
+        let plan = KernelPlan::new(d.metric, profile, b);
+        self.chunk.resize(self.chunk_rows * p, 0.0);
+        let mut reduced: Vec<R> = Vec::with_capacity(n);
+        let mut row0 = 0usize;
+        while row0 < n {
+            let xs = store.read_chunk(row0, &mut self.chunk)?;
+            let rows = xs.len() / p;
+            debug_assert!(rows >= 1, "RowStore contract: a chunk holds at least one row");
+            let parts: Mutex<Vec<(usize, Vec<R>)>> = Mutex::new(Vec::new());
+            {
+                let plan = &plan;
+                let reduce = &reduce;
+                let parts = &parts;
+                let dchunk = &mut out.data[row0 * m..(row0 + rows) * m];
+                pool.for_each_row_chunk(dchunk, rows, m, |r0, chunk| {
+                    let mut acc = Vec::with_capacity(chunk.len() / m);
+                    for (di, full_row) in chunk.chunks_mut(m).enumerate() {
+                        plan.fill_row(&xs[(r0 + di) * p..(r0 + di + 1) * p], full_row);
+                        acc.push(reduce(full_row));
+                    }
+                    sync_ext::lock_or_recover(parts).push((r0, acc));
+                });
+            }
+            let mut collected = std::mem::take(&mut *sync_ext::lock_or_recover(&parts));
+            collected.sort_by_key(|(r0, _)| *r0);
+            reduced.extend(collected.into_iter().flat_map(|(_, acc)| acc));
+            row0 += rows;
+        }
+        Ok((out, reduced))
+    }
 }
 
 /// Column-block width of the transposed kernels: small enough that one
@@ -685,6 +904,53 @@ mod tests {
             let fast = cross_matrix_pool_profiled(&d, &x, &b, &pool, ComputeProfile::Fast);
             assert_eq!(exact.data, fast.data);
         }
+    }
+
+    #[test]
+    fn stream_sweep_matches_resident_at_every_chunk_size() {
+        use crate::data::store::ResidentStore;
+        let pools = [Pool::serial(), Pool::new(3)];
+        for metric in [Metric::L1, Metric::SqL2, Metric::Cosine] {
+            let (x, b) = random_pair(13, 37, 9, 5);
+            for profile in [ComputeProfile::Exact, ComputeProfile::Fast] {
+                for pool in &pools {
+                    let d = DissimCounter::new(metric);
+                    let (want, widx, wval) = cross_argmin_pool(&d, &x, &b, pool, profile);
+                    // chunk sizes below, at and above n, plus 1-row
+                    for chunk_rows in [1, 3, 37, 100] {
+                        let mut store = ResidentStore::new(x.clone());
+                        let mut sweep = StreamSweep::new(chunk_rows);
+                        let (got, idx, val) =
+                            sweep.argmin(&d, &mut store, &b, pool, profile).unwrap();
+                        assert_eq!(got.data, want.data, "{metric:?} {profile:?} c={chunk_rows}");
+                        assert_eq!(idx, widx);
+                        let bits =
+                            |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                        assert_eq!(bits(&val), bits(&wval));
+                        let (aidx, aval) =
+                            sweep.assign(&d, &mut store, &b, pool, profile).unwrap();
+                        assert_eq!(aidx, widx, "assign-only sweep drifted");
+                        assert_eq!(bits(&aval), bits(&wval));
+                        let mat = sweep.matrix(&d, &mut store, &b, pool, profile).unwrap();
+                        assert_eq!(mat.data, want.data);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_sweep_counts_like_the_resident_sweep() {
+        use crate::data::store::ResidentStore;
+        let pool = Pool::serial();
+        let (x, b) = random_pair(5, 12, 9, 4);
+        let d = DissimCounter::new(Metric::L1);
+        let mut store = ResidentStore::new(x);
+        let mut sweep = StreamSweep::new(4);
+        let _ = sweep.argmin(&d, &mut store, &b, &pool, ComputeProfile::Exact).unwrap();
+        assert_eq!(d.count(), 12 * 9);
+        let _ = sweep.assign(&d, &mut store, &b, &pool, ComputeProfile::Exact).unwrap();
+        assert_eq!(d.count(), 2 * 12 * 9);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod quality;
 
+use crate::data::{RowStore, STREAM_CHUNK_ROWS};
 use crate::dissim::DissimCounter;
 use crate::linalg::Matrix;
 
@@ -26,6 +27,48 @@ pub fn objective(x: &Matrix, medoids: &[usize], d: &DissimCounter) -> f64 {
         total += best as f64;
     }
     total / n as f64
+}
+
+/// [`objective`] over a [`RowStore`]: the exact full-data objective
+/// accumulated chunk-at-a-time, for solves whose dataset is never
+/// resident.  `medoid_rows` is the `k x p` matrix gathered from the
+/// store in medoid order (what [`crate::solver::FittedModel`] carries).
+/// Rows are visited in ascending order and the per-row minimum runs the
+/// same strict-`<` scan over the same operands as the resident loop, so
+/// the f64 accumulation is bit-identical to [`objective`] on the
+/// materialized matrix.
+pub fn objective_store(
+    store: &mut dyn RowStore,
+    medoid_rows: &Matrix,
+    d: &DissimCounter,
+) -> anyhow::Result<f64> {
+    let (n, p) = store.dims();
+    anyhow::ensure!(
+        medoid_rows.cols == p,
+        "medoid rows are {}-wide but the store serves {}-wide rows",
+        medoid_rows.cols,
+        p
+    );
+    let mut chunk = vec![0.0f32; STREAM_CHUNK_ROWS.min(n).max(1) * p];
+    let mut total = 0.0f64;
+    let mut row0 = 0usize;
+    while row0 < n {
+        let xs = store.read_chunk(row0, &mut chunk)?;
+        let rows = xs.len() / p;
+        for i in 0..rows {
+            let xi = &xs[i * p..(i + 1) * p];
+            let mut best = f32::INFINITY;
+            for j in 0..medoid_rows.rows {
+                let v = d.eval(xi, medoid_rows.row(j));
+                if v < best {
+                    best = v;
+                }
+            }
+            total += best as f64;
+        }
+        row0 += rows;
+    }
+    Ok(total / n as f64)
 }
 
 /// One algorithm's measurement on one workload.
@@ -125,6 +168,23 @@ mod tests {
         let o2 = objective(&x, &[0, 1], &d);
         let o3 = objective(&x, &[0, 1, 2], &d);
         assert!(o3 <= o2 + 1e-9);
+    }
+
+    #[test]
+    fn objective_store_is_bit_identical_to_resident() {
+        let mut rng = Rng::new(9);
+        let x = Matrix::from_vec(130, 5, (0..650).map(|_| rng.f32()).collect());
+        let medoids = [3usize, 41, 97];
+        for metric in [Metric::L1, Metric::L2, Metric::SqL2] {
+            let d = DissimCounter::new(metric);
+            let resident = objective(&x, &medoids, &d);
+            let medoid_rows = x.select_rows(&medoids);
+            let mut store = crate::data::store::ResidentStore::new(x.clone());
+            // drive the chunk loop, not the as_matrix shortcut: the
+            // function reads through read_chunk regardless
+            let streamed = objective_store(&mut store, &medoid_rows, &d).unwrap();
+            assert_eq!(resident.to_bits(), streamed.to_bits(), "{}", metric.name());
+        }
     }
 
     #[test]

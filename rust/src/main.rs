@@ -10,8 +10,8 @@
 //!                [--threads T] [--profile exact|fast] [--config file.toml]
 //! obpam bench    --table 3|5|7 | --fig 1|pareto  (thin wrapper; prefer `cargo bench`)
 //! obpam serve    [--addr 127.0.0.1:7878] [--workers 2] [--queue-cap 16] [--cache-cap 32]
-//!                [--budget UNITS] [--strict-budget] [--retain-cap N] [--model-cap N]
-//!                [--conn-cap N]
+//!                [--budget UNITS] [--byte-budget BYTES] [--strict-budget]
+//!                [--retain-cap N] [--model-cap N] [--conn-cap N]
 //! obpam submit   [--addr HOST:PORT] key=value...   (async: returns job=j<id>)
 //! obpam poll     [--addr HOST:PORT] --job j3
 //! obpam wait     [--addr HOST:PORT] --job j3 [--timeout-ms N]
@@ -22,13 +22,18 @@
 //!                [--profile exact|fast] point=v1,v2,...
 //! obpam models   [--addr HOST:PORT]
 //! obpam evict    [--addr HOST:PORT] --model mymodel
-//! obpam gen      --list | --dataset SOURCE [--scale S] [--out file.csv]
+//! obpam gen      --list | --dataset SOURCE [--scale S] [--out file.csv|file.npy]
+//!                [--format csv|npy]
+//! obpam inspect  <uri> [--k K] [--method M] [--m N]  (dims/dtype/fingerprint/cost,
+//!                header-only — no rows are read)
 //! obpam artifacts-check   (requires the `xla` build feature)
 //! ```
 //!
 //! `--dataset` (config key `run.dataset`) is a [`DataSource`] URI:
 //! `synth:<name>` generates a catalogue dataset, `file:<path>` loads a
-//! numeric CSV, and a bare name aliases `synth:` — so
+//! numeric CSV, `npy:<path>` / `dir:<path>` read binary `.npy` arrays
+//! (single file / sharded directory — the out-of-core sources the
+//! server can stream), and a bare name aliases `synth:` — so
 //! `obpam cluster --dataset file:/data/points.csv --metric l2` clusters
 //! loaded data through exactly the same path as the synthetic
 //! reproductions.  `--scale-features minmax` min-max scales features
@@ -119,7 +124,7 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: obpam <cluster|serve|submit|poll|wait|cancel|jobs|promote|assign|models|evict|gen|artifacts-check> [--flags]\n\
+        "usage: obpam <cluster|serve|submit|poll|wait|cancel|jobs|promote|assign|models|evict|gen|inspect|artifacts-check> [--flags]\n\
          see `cargo doc` or README.md for details"
     );
     std::process::exit(2)
@@ -136,6 +141,7 @@ fn main() -> Result<()> {
         "submit" | "poll" | "wait" | "cancel" | "jobs" => cmd_client(cmd, &flags, &rest),
         "promote" | "assign" | "models" | "evict" => cmd_client(cmd, &flags, &rest),
         "gen" => cmd_gen(&flags),
+        "inspect" => cmd_inspect(&flags, &rest),
         "artifacts-check" => cmd_artifacts_check(),
         _ => usage(),
     }
@@ -380,6 +386,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // `--workers 0` auto-detects cores and `--queue-cap 0` follows the
     // worker count, matching the `--threads 0` convention; `--budget 0`
     // takes the default weighted-admission budget (4x MAX_JOB_COST),
+    // `--byte-budget 0` the default resident-byte ceiling (8 GiB),
     // `--retain-cap 0` the default finished-job retention (64) and
     // `--conn-cap 0` the default connection bound (8192).
     let cfg = obpam::server::ServerConfig {
@@ -388,6 +395,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         queue_cap: flags.get("queue-cap").and_then(|s| s.parse().ok()).unwrap_or(16),
         cache_cap: flags.get("cache-cap").and_then(|s| s.parse().ok()).unwrap_or(32),
         budget: flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(0),
+        byte_budget: flags.get("byte-budget").and_then(|s| s.parse().ok()).unwrap_or(0),
         strict_budget: matches!(flags.get("strict-budget"), Some(v) if v != "false"),
         retain_cap: flags.get("retain-cap").and_then(|s| s.parse().ok()).unwrap_or(0),
         model_cap: flags.get("model-cap").and_then(|s| s.parse().ok()).unwrap_or(0),
@@ -428,7 +436,24 @@ fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
         bail!("--scale does not apply to file: sources (got --scale {scale})");
     }
     let data = src.load(scale, seed)?;
+    // --format picks the writer; without it the --out extension decides
+    // (.npy -> npy, anything else -> csv).  npy round-trips f32 exactly,
+    // so `gen --format npy` + an `npy:` solve is bit-identical to the
+    // synth source it came from.
+    let format = match flags.get("format").map(String::as_str) {
+        Some("csv") => "csv",
+        Some("npy") => "npy",
+        Some(other) => bail!("unknown --format {other} (csv|npy)"),
+        None => match flags.get("out") {
+            Some(p) if p.ends_with(".npy") => "npy",
+            _ => "csv",
+        },
+    };
     match flags.get("out") {
+        Some(path) if format == "npy" => {
+            obpam::data::npy::write_npy(std::path::Path::new(path), &data.x)?;
+            println!("wrote {} rows x {} cols to {path} (npy <f4)", data.n(), data.p());
+        }
         Some(path) => {
             let mut out = String::new();
             for i in 0..data.n() {
@@ -439,7 +464,80 @@ fn cmd_gen(flags: &HashMap<String, String>) -> Result<()> {
             std::fs::write(path, out)?;
             println!("wrote {} rows x {} cols to {path}", data.n(), data.p());
         }
+        None if flags.contains_key("format") => bail!("--format needs --out"),
         None => println!("generated {}: n={} p={}", dataset, data.n(), data.p()),
+    }
+    Ok(())
+}
+
+/// `obpam inspect <uri>` — the pre-flight probe: dims, dtype,
+/// fingerprint and the priced admission cost of solving the source,
+/// all from headers/metadata only (no row is ever read, so inspecting
+/// a 100 GB `npy:` is instant).
+fn cmd_inspect(flags: &HashMap<String, String>, rest: &[String]) -> Result<()> {
+    let uri = rest
+        .first()
+        .cloned()
+        .or_else(|| flags.get("dataset").cloned())
+        .context("usage: obpam inspect <uri> [--k K] [--method M] [--m N]")?;
+    let src = DataSource::parse(&uri)?;
+    let k: usize = flags.get("k").map(|s| s.parse()).transpose().context("--k")?.unwrap_or(10);
+    let m: Option<usize> = match flags.get("m").map(String::as_str) {
+        None | Some("auto") => None,
+        Some(s) => Some(s.parse().context("--m")?),
+    };
+    let method = match flags.get("method") {
+        None => MethodSpec::default(),
+        Some(s) => match MethodSpec::parse(s) {
+            Some(spec) => spec,
+            None => bail!("unknown --method {s}"),
+        },
+    };
+    let identity = src.identity();
+    println!("source: {}", src.canon());
+    println!("identity: {identity}");
+    println!("fingerprint: {:#018x}", src.fingerprint_of(&identity)?);
+    // dtype comes straight off the npy header(s); dir: also counts shards
+    let canon = src.canon();
+    if let Some(path) = canon.strip_prefix("npy:") {
+        let h = obpam::data::npy::read_header(std::path::Path::new(path))?;
+        println!("dtype: {}", h.dtype.descr());
+    } else if let Some(dirp) = canon.strip_prefix("dir:") {
+        let shards = obpam::data::dirsrc::shard_paths(std::path::Path::new(dirp))?;
+        // dtype only reads off binary shards; CSV shards are text f32
+        match shards.iter().find(|p| p.extension().is_some_and(|e| e == "npy")) {
+            Some(first_npy) => {
+                let h = obpam::data::npy::read_header(first_npy)?;
+                println!("dtype: {} (npy shards)  shards: {}", h.dtype.descr(), shards.len());
+            }
+            None => println!("dtype: f32 (csv shards)  shards: {}", shards.len()),
+        }
+    }
+    let scale: f64 = flags.get("scale").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+    match src.expected_dims() {
+        Some((n, p)) => {
+            println!("dims: {n} x {p}");
+            println!("resident feature bytes: {}", (n as u64) * (p as u64) * 4);
+            let cost = method.cost_with_dims(n, p, k, m);
+            println!(
+                "cost ({} k={k}): units={} bytes={}{}",
+                method.label(),
+                cost.units,
+                cost.resident_bytes,
+                if cost.admissible() { "" } else { "  [over the full-matrix limit]" }
+            );
+            if let Some(s) = method.streaming_cost(n, p, k, m) {
+                println!("cost (streaming): units={} bytes={}", s.units, s.resident_bytes);
+            }
+        }
+        None => match src.expected_rows(scale) {
+            Some(n) => {
+                let cost = method.cost(n, k, m);
+                println!("dims: {n} x ? (width unknown before load)");
+                println!("cost ({} k={k}): units={}", method.label(), cost.units);
+            }
+            None => println!("dims: unknown before load"),
+        },
     }
     Ok(())
 }

@@ -76,6 +76,12 @@ struct ShardSlot {
 pub struct DatasetCache {
     shards: Vec<ShardSlot>,
     per_shard_cap: usize,
+    /// Largest matrix (in feature bytes, `n * p * 4`) the cache will
+    /// load and pin; `0` = unmetered.  The server passes its resolved
+    /// byte budget, so an oversized `file:`/`npy:` load fails with a
+    /// priced `bytes=` error instead of OOM-ing the process — streamed
+    /// solves never touch the cache at all (protocol v9).
+    byte_limit: u64,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -96,6 +102,17 @@ impl DatasetCache {
     /// evenly across [`SHARDS`] shards (rounded up, at least one entry
     /// per shard), each evicting least-recently-used first.
     pub fn new(cap: usize) -> Self {
+        Self::with_byte_limit(cap, 0)
+    }
+
+    /// [`DatasetCache::new`] with a residency ceiling: any single load
+    /// whose feature bytes (`n * p * 4`) exceed `byte_limit` fails with
+    /// a priced `bytes=` error instead of being cached (`0` =
+    /// unmetered).  Sources that publish their shape up front
+    /// (`npy:`/`dir:`) are refused before any row is read; others
+    /// (synth, `file:` CSV) are measured after the load and refused
+    /// before the matrix is pinned.
+    pub fn with_byte_limit(cap: usize, byte_limit: u64) -> Self {
         DatasetCache {
             shards: (0..SHARDS)
                 .map(|_| ShardSlot {
@@ -104,9 +121,22 @@ impl DatasetCache {
                 })
                 .collect(),
             per_shard_cap: cap.div_ceil(SHARDS).max(1),
+            byte_limit,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
+    }
+
+    /// Refuses a load whose resident footprint exceeds the byte limit.
+    fn check_bytes(&self, identity: &str, bytes: u64) -> Result<()> {
+        anyhow::ensure!(
+            self.byte_limit == 0 || bytes <= self.byte_limit,
+            "dataset {identity} needs bytes={bytes} resident, over the cache byte \
+             limit of {} (raise --byte-budget, or stream it via npy:/dir: with \
+             method=onebatch)",
+            self.byte_limit
+        );
+        Ok(())
     }
 
     /// Fetch the prepared matrix for `(src, scale, seed, scaling)`,
@@ -125,6 +155,12 @@ impl DatasetCache {
         // fingerprint — one path resolution per request, even on hits)
         let identity = src.identity();
         let fingerprint = src.fingerprint_of(&identity)?;
+        // shape-publishing sources (npy:/dir:) are priced from their
+        // headers before a single row is read; the rest are measured
+        // after the load, below
+        if let Some((n, p)) = src.expected_dims() {
+            self.check_bytes(&identity, (n as u64).saturating_mul(p as u64).saturating_mul(4))?;
+        }
         // file bytes are independent of the generation knobs: normalise
         // them out so a scale/seed sweep over one CSV is one entry
         let (kscale, kseed) = if src.is_file() { (1.0, 0) } else { (scale, seed) };
@@ -172,6 +208,9 @@ impl DatasetCache {
         guard.loading.retain(|k| k != &key);
         slot.loaded_cv.notify_all();
         let x = loaded?;
+        // refuse to pin an over-budget matrix: the error escapes before
+        // the insert, the Arc drops with it, and nothing is cached
+        self.check_bytes(&key.source, (x.data.len() as u64).saturating_mul(4))?;
         // a fingerprint change (edited file) makes old entries for this
         // same provenance unreachable — evict them now instead of letting
         // dead matrices squat in the LRU and inflate `entries`
@@ -502,5 +541,43 @@ mod tests {
         assert!(get(&cache, "doesnotexist", 1.0, 0).is_err());
         assert!(get(&cache, "file:/definitely/not/here.csv", 1.0, 0).is_err());
         assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0, entries: 0 });
+    }
+
+    #[test]
+    fn byte_limit_refuses_oversized_loads() {
+        // blobs_200_4_3 is 200*4*4 = 3200 feature bytes; synth shapes
+        // are not knowable pre-load, so this exercises the post-load
+        // refusal: the matrix is measured, rejected, and never pinned
+        let cache = DatasetCache::with_byte_limit(8, 1000);
+        let err = get(&cache, "blobs_200_4_3", 1.0, 7).unwrap_err().to_string();
+        assert!(err.contains("bytes=3200"), "{err}");
+        assert!(err.contains("cache byte limit"), "{err}");
+        assert_eq!(cache.stats(), CacheStats::default(), "refusals cache and count nothing");
+        // a dataset under the limit (50*4*4 = 800 bytes) still loads
+        let (x, hit) = get(&cache, "blobs_50_4_2", 1.0, 7).unwrap();
+        assert!(!hit);
+        assert_eq!(x.rows, 50);
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn npy_over_limit_is_refused_before_any_row_is_read() {
+        let dir = std::env::temp_dir().join("obpam_cache_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("bytelimit_{}.npy", std::process::id()));
+        let mut rng = crate::rng::Rng::new(5);
+        let x = Matrix::from_vec(100, 6, (0..600).map(|_| rng.f32()).collect());
+        crate::data::npy::write_npy(&path, &x).unwrap();
+        // truncate the payload: the byte-limit refusal must fire on the
+        // header's shape alone, before the loader would ever reach its
+        // own "truncated npy" error
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 64]).unwrap();
+        let cache = DatasetCache::with_byte_limit(8, 1000);
+        let err =
+            get(&cache, &format!("npy:{}", path.display()), 1.0, 0).unwrap_err().to_string();
+        assert!(err.contains("bytes=2400"), "{err}");
+        assert_eq!(cache.stats(), CacheStats::default());
+        std::fs::remove_file(&path).ok();
     }
 }

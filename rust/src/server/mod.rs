@@ -5,11 +5,13 @@
 //! with deadlines, server-owned execution pools, and a sharded dataset
 //! cache that loads cold misses outside its locks.
 //!
-//! # Line protocol v8 (newline-delimited requests, pipelining allowed)
+//! # Line protocol v9 (newline-delimited requests, pipelining allowed)
 //!
 //! ```text
 //! -> cluster dataset=blobs_2000_8_5 k=5 method=FasterPAM seed=3 threads=4
-//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 source=synth:blobs_2000_8_5 cost=4000000 inertia=0.1234 profile=fast queue_ms=0.2 served_ms=50.1
+//! <- ok method=FasterPAM cache=miss medoids=4,17,... objective=0.1234 seconds=0.05 dissim=123456 swaps=9 source=synth:blobs_2000_8_5 cost=4000000 inertia=0.1234 profile=fast bytes=80016000 queue_ms=0.2 served_ms=50.1
+//! -> cluster dataset=npy:/data/features.npy k=5 seed=3
+//! <- ok method=OneBatch-nniw cache=stream medoids=... objective=... seconds=... dissim=... swaps=... source=npy:/data/features.npy cost=61200 inertia=... profile=fast bytes=147456 queue_ms=0.0 served_ms=88.2
 //! -> submit dataset=blobs_2000_8_5 k=5 seed=3 deadline_ms=5000
 //! <- ok job=j7 cost=61200 queue_ms=0.0 served_ms=0.1
 //! -> poll job=j7
@@ -29,10 +31,45 @@
 //! -> evict model=blobs
 //! <- ok evicted model=blobs queue_ms=0.0 served_ms=0.0
 //! -> stats
-//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 budget_total=... budget_used=... hist_le_ms=1,2,... jobs.submitted=9 ... shed=1 pools=2 models=1 conns=1 waiters=0 pipelined=3 wakeups=7 method.FasterPAM.count=2 ... model.blobs.assign_count=2 ... queue_ms=0.0 served_ms=0.0
+//! <- ok cache_hits=12 cache_misses=3 cache_entries=3 budget_total=... budget_used=... mem_total=... mem_used=... hist_le_ms=1,2,... jobs.submitted=9 ... shed=1 pools=2 models=1 conns=1 waiters=0 pipelined=3 wakeups=7 method.FasterPAM.count=2 ... model.blobs.assign_count=2 ... queue_ms=0.0 served_ms=0.0
 //! -> ping
 //! <- pong queue_ms=0.0 served_ms=0.0
 //! ```
+//!
+//! v9 over v8: **out-of-core data sources and byte-aware admission**.
+//! Every v8 reply prefix is byte-identical; the only change to existing
+//! replies is a trailing `bytes=` field on `cluster`/`wait`
+//! done-replies (the peak resident bytes the job's admission permit
+//! held) and the `mem_total=`/`mem_used=` gauges on `stats`.  The new
+//! surface:
+//!
+//! * `dataset=npy:<path>` — stream a NumPy `.npy` array (v1.0/v2.0
+//!   header, C-order `<f4`/`<f8`) straight from disk, and
+//!   `dataset=dir:<path>` — a directory of numbered CSV or `.npy`
+//!   shards with a `manifest` row count ([`DataSource`] grammar).
+//! * OneBatch methods over `npy:`/`dir:` run **out of core**: the
+//!   `m x p` batch slice is gathered once and every fused sweep reads
+//!   the source chunk-at-a-time through a [`crate::data::RowStore`]
+//!   ([`solver::solve_fitted_store`]) — the full `n x p` matrix is
+//!   never resident, the dataset cache is bypassed (`cache=stream` in
+//!   the reply), and the medoids/objective bits equal the resident
+//!   solve of the same bytes at every thread width.  Non-OneBatch
+//!   methods over a stream source load resident through the cache and
+//!   must fit the byte budget.
+//! * **admission is two-axis**: jobs are priced in work units *and*
+//!   peak resident bytes ([`JobCost::resident_bytes`] — full-matrix
+//!   methods price `n*p*4 + n*n*4`, a streaming OneBatch only its
+//!   batch slice plus one chunk buffer, [`MethodSpec::streaming_cost`]).
+//!   Both axes reserve from the [`AdmissionBudget`]
+//!   ([`ServerConfig::byte_budget`], `--byte-budget` on the CLI) under
+//!   the same RAII permit; a job over either axis gets
+//!   `err over budget ...` / `err over byte budget: bytes=...`, and
+//!   the lone-job idle exception / `strict_budget` rule applies to
+//!   bytes exactly as it does to units.
+//! * the dataset cache refuses to *load* a matrix larger than the byte
+//!   budget ([`DatasetCache::with_byte_limit`]) — an oversized
+//!   `file:`/`npy:` load fails with its priced `bytes=` instead of
+//!   OOM-ing the server; streams never enter the cache by design.
 //!
 //! v8 over v7: **no reply byte changed** — the delta is connection
 //! semantics.  A connection is no longer one-request-one-reply: clients
@@ -274,8 +311,14 @@ pub struct ServerConfig {
     /// Disable the lone-job idle exception of the admission budget:
     /// when `true`, a job whose cost exceeds the budget is rejected
     /// even when nothing else is in flight.  Default `false` preserves
-    /// the v4 behaviour (`--strict-budget` on the CLI).
+    /// the v4 behaviour (`--strict-budget` on the CLI).  Applies to
+    /// both admission axes (work units and resident bytes).
     pub strict_budget: bool,
+    /// Byte axis of the admission budget: the total peak resident bytes
+    /// ([`JobCost::resident_bytes`]) concurrently-admitted jobs may
+    /// pin, and the ceiling the dataset cache refuses loads above;
+    /// `0` = 8 GiB (`--byte-budget` on the CLI).
+    pub byte_budget: u64,
     /// How many *finished* jobs the registry retains for later
     /// `poll`/`wait` calls (LRU eviction); `0` = 64.
     pub retain_cap: usize,
@@ -298,6 +341,7 @@ impl Default for ServerConfig {
             cache_cap: 32,
             budget: 0,
             strict_budget: false,
+            byte_budget: 0,
             retain_cap: 0,
             model_cap: 0,
             conn_cap: 0,
@@ -330,6 +374,15 @@ impl ServerConfig {
             4 * MAX_JOB_COST
         } else {
             self.budget
+        }
+    }
+
+    /// `byte_budget` with `0` resolved to the default (8 GiB).
+    pub fn resolved_byte_budget(&self) -> u64 {
+        if self.byte_budget == 0 {
+            8 << 30
+        } else {
+            self.byte_budget
         }
     }
 
@@ -373,10 +426,22 @@ impl ServerConfig {
 /// lone-job exception can be disabled ([`AdmissionBudget::with_strict`]
 /// / [`ServerConfig::strict_budget`]) for deployments that prefer a
 /// hard ceiling.
+///
+/// Since v9 the budget is **two-axis**: alongside work units, every
+/// permit may hold peak resident *bytes* ([`JobCost::resident_bytes`])
+/// against a separate `byte_total` ceiling
+/// ([`AdmissionBudget::with_limits`] / [`ServerConfig::byte_budget`]).
+/// The byte axis follows the unit axis's rules exactly — single-RMW
+/// reservation, saturating release, the lone-job idle exception, and
+/// `strict` disabling it — and a `byte_total` of `0` leaves the axis
+/// unmetered (the pre-v9 constructors), so unit-only callers are
+/// unchanged.
 pub struct AdmissionBudget {
     total: u64,
+    byte_total: u64,
     strict: bool,
     used: AtomicU64,
+    bytes_used: AtomicU64,
     /// Debug-build flow counter: units ever reserved (admits plus the
     /// `new` side of every reprice).
     #[cfg(debug_assertions)]
@@ -385,33 +450,73 @@ pub struct AdmissionBudget {
     /// the `old` side of every reprice).
     #[cfg(debug_assertions)]
     released_flow: AtomicU64,
+    /// Debug-build flow counter: bytes ever reserved.
+    #[cfg(debug_assertions)]
+    reserved_bytes_flow: AtomicU64,
+    /// Debug-build flow counter: bytes ever released.
+    #[cfg(debug_assertions)]
+    released_bytes_flow: AtomicU64,
+}
+
+/// Which axis of the two-axis [`AdmissionBudget`] rejected an
+/// admission, carrying the *other* holders' load on that axis (what the
+/// unit-only API reported as a bare `u64`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The work-unit axis rejected; the payload is the units in use.
+    Units(u64),
+    /// The byte axis rejected; the payload is the bytes in use.
+    Bytes(u64),
 }
 
 impl AdmissionBudget {
     /// Budget of `total` work units with the lone-job idle exception
-    /// enabled (the v4 behaviour).
+    /// enabled (the v4 behaviour) and an unmetered byte axis.
     pub fn new(total: u64) -> Self {
-        AdmissionBudget::with_strict(total, false)
+        AdmissionBudget::with_limits(total, 0, false)
     }
 
     /// Budget of `total` work units; `strict` disables the lone-job
     /// idle exception, so an over-budget job is rejected even when the
-    /// budget is idle.
+    /// budget is idle.  The byte axis is unmetered.
     pub fn with_strict(total: u64, strict: bool) -> Self {
+        AdmissionBudget::with_limits(total, 0, strict)
+    }
+
+    /// Two-axis budget: `total` work units plus `byte_total` peak
+    /// resident bytes (`0` = the byte axis is unmetered).  `strict`
+    /// applies to both axes.
+    pub fn with_limits(total: u64, byte_total: u64, strict: bool) -> Self {
         AdmissionBudget {
             total: total.max(1),
+            byte_total,
             strict,
             used: AtomicU64::new(0),
+            bytes_used: AtomicU64::new(0),
             #[cfg(debug_assertions)]
             reserved_flow: AtomicU64::new(0),
             #[cfg(debug_assertions)]
             released_flow: AtomicU64::new(0),
+            #[cfg(debug_assertions)]
+            reserved_bytes_flow: AtomicU64::new(0),
+            #[cfg(debug_assertions)]
+            released_bytes_flow: AtomicU64::new(0),
         }
     }
 
     /// Total work units.
     pub fn total(&self) -> u64 {
         self.total
+    }
+
+    /// Total byte budget (`0` = the byte axis is unmetered).
+    pub fn byte_total(&self) -> u64 {
+        self.byte_total
+    }
+
+    /// Bytes currently held by in-flight jobs (the `mem_used=` gauge).
+    pub fn bytes_used(&self) -> u64 {
+        self.bytes_used.load(Ordering::SeqCst)
     }
 
     /// Is the lone-job idle exception disabled?
@@ -433,9 +538,28 @@ impl AdmissionBudget {
         (self.reserved_flow.load(Ordering::SeqCst), self.released_flow.load(Ordering::SeqCst))
     }
 
+    /// Debug-build flow counters for the byte axis: `(bytes ever
+    /// reserved, bytes ever released)` — balanced exactly when no
+    /// permit is outstanding, like [`AdmissionBudget::debug_units_flow`].
+    #[cfg(debug_assertions)]
+    pub fn debug_bytes_flow(&self) -> (u64, u64) {
+        (
+            self.reserved_bytes_flow.load(Ordering::SeqCst),
+            self.released_bytes_flow.load(Ordering::SeqCst),
+        )
+    }
+
     /// Would `units` be admitted alongside `others` already-held units?
     fn fits(&self, others: u64, units: u64) -> bool {
         (others == 0 && !self.strict) || others.saturating_add(units) <= self.total
+    }
+
+    /// Would `bytes` be admitted alongside `others` already-held bytes?
+    /// An unmetered axis (`byte_total == 0`) admits everything.
+    fn fits_bytes(&self, others: u64, bytes: u64) -> bool {
+        self.byte_total == 0
+            || (others == 0 && !self.strict)
+            || others.saturating_add(bytes) <= self.byte_total
     }
 
     /// Reserve `units` (single-RMW, no check-then-increment window) or
@@ -493,10 +617,101 @@ impl AdmissionBudget {
         self.released_flow.fetch_add(units, Ordering::SeqCst);
     }
 
+    /// [`AdmissionBudget::reserve`] on the byte axis.
+    fn reserve_bytes(&self, bytes: u64) -> Result<(), u64> {
+        self.bytes_used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
+                if self.fits_bytes(used, bytes) {
+                    Some(used.saturating_add(bytes))
+                } else {
+                    None
+                }
+            })
+            .map(|_| {
+                #[cfg(debug_assertions)]
+                self.reserved_bytes_flow.fetch_add(bytes, Ordering::SeqCst);
+            })
+    }
+
+    /// [`AdmissionBudget::exchange`] on the byte axis.
+    fn exchange_bytes(&self, old: u64, new: u64) -> Result<(), u64> {
+        self.bytes_used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
+                let others = used.saturating_sub(old);
+                if self.fits_bytes(others, new) {
+                    Some(others.saturating_add(new))
+                } else {
+                    None
+                }
+            })
+            .map(|_| {
+                #[cfg(debug_assertions)]
+                {
+                    self.reserved_bytes_flow.fetch_add(new, Ordering::SeqCst);
+                    self.released_bytes_flow.fetch_add(old, Ordering::SeqCst);
+                }
+            })
+            .map_err(|used| used.saturating_sub(old))
+    }
+
+    /// [`AdmissionBudget::release`] on the byte axis.
+    fn release_bytes(&self, bytes: u64) {
+        let _ = self
+            .bytes_used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
+                Some(used.saturating_sub(bytes))
+            });
+        #[cfg(debug_assertions)]
+        self.released_bytes_flow.fetch_add(bytes, Ordering::SeqCst);
+    }
+
+    /// Unchecked unit swap used only to *roll back* a hold this caller
+    /// already owned (restoring a prior reservation is not subject to
+    /// the fit check — it was admitted when first reserved).
+    fn force_exchange(&self, old: u64, new: u64) {
+        let _ = self
+            .used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |used| {
+                Some(used.saturating_sub(old).saturating_add(new))
+            });
+        #[cfg(debug_assertions)]
+        {
+            self.reserved_flow.fetch_add(new, Ordering::SeqCst);
+            self.released_flow.fetch_add(old, Ordering::SeqCst);
+        }
+    }
+
+    /// Reserve `(units, bytes)` as one admission, or report which axis
+    /// rejected.  Two-phase: units first, bytes second, with the unit
+    /// hold rolled back if the byte axis refuses — so a failed admit
+    /// holds nothing.  (The phases are not one atom: a concurrent
+    /// idle-exception admit may be refused during the window where the
+    /// units are held and the bytes are not — it fails safe, never
+    /// over-admits.)
+    fn reserve_costed(&self, units: u64, bytes: u64) -> Result<(), AdmitError> {
+        self.reserve(units).map_err(AdmitError::Units)?;
+        if let Err(held) = self.reserve_bytes(bytes) {
+            self.release(units);
+            return Err(AdmitError::Bytes(held));
+        }
+        Ok(())
+    }
+
     /// Reserve `units` behind a borrowed RAII permit, or fail with the
     /// units currently in use.
     pub fn try_admit(&self, units: u64) -> Result<AdmissionPermit<'_>, u64> {
-        self.reserve(units).map(|_| AdmissionPermit { budget: self, units })
+        self.reserve(units).map(|_| AdmissionPermit { budget: self, units, bytes: 0 })
+    }
+
+    /// Reserve `(units, bytes)` behind a borrowed RAII permit, or
+    /// report the axis that rejected.
+    pub fn try_admit_costed(
+        &self,
+        units: u64,
+        bytes: u64,
+    ) -> Result<AdmissionPermit<'_>, AdmitError> {
+        self.reserve_costed(units, bytes)
+            .map(|_| AdmissionPermit { budget: self, units, bytes })
     }
 }
 
@@ -507,6 +722,7 @@ impl AdmissionBudget {
 pub struct AdmissionPermit<'a> {
     budget: &'a AdmissionBudget,
     units: u64,
+    bytes: u64,
 }
 
 impl AdmissionPermit<'_> {
@@ -515,9 +731,14 @@ impl AdmissionPermit<'_> {
         self.units
     }
 
+    /// The bytes this permit reserved (the reply's `bytes=` field).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
     /// Atomically swap this permit's reservation for `new_units` (see
     /// [`AdmissionBudget::exchange`] for the guarantees); on failure
-    /// the old reservation is kept.
+    /// the old reservation is kept.  The byte hold is unchanged.
     pub fn reprice(&mut self, new_units: u64) -> Result<(), u64> {
         self.budget.exchange(self.units, new_units).map(|_| self.units = new_units)
     }
@@ -526,6 +747,7 @@ impl AdmissionPermit<'_> {
 impl Drop for AdmissionPermit<'_> {
     fn drop(&mut self) {
         self.budget.release(self.units);
+        self.budget.release_bytes(self.bytes);
     }
 }
 
@@ -537,12 +759,26 @@ impl Drop for AdmissionPermit<'_> {
 pub struct JobPermit {
     budget: Arc<AdmissionBudget>,
     units: u64,
+    bytes: u64,
 }
 
 impl JobPermit {
     /// Reserve `units` from `budget`, or fail with the units in use.
     pub fn admit(budget: &Arc<AdmissionBudget>, units: u64) -> Result<JobPermit, u64> {
-        budget.reserve(units).map(|_| JobPermit { budget: budget.clone(), units })
+        budget.reserve(units).map(|_| JobPermit { budget: budget.clone(), units, bytes: 0 })
+    }
+
+    /// Reserve `(units, bytes)` from `budget`, or report the axis that
+    /// rejected (the v9 two-axis admission every priced job goes
+    /// through).
+    pub fn admit_costed(
+        budget: &Arc<AdmissionBudget>,
+        units: u64,
+        bytes: u64,
+    ) -> Result<JobPermit, AdmitError> {
+        budget
+            .reserve_costed(units, bytes)
+            .map(|_| JobPermit { budget: budget.clone(), units, bytes })
     }
 
     /// The units this permit reserved (the reply's `cost=` field).
@@ -550,17 +786,40 @@ impl JobPermit {
         self.units
     }
 
+    /// The bytes this permit reserved (the reply's `bytes=` field).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
     /// Atomically swap this permit's reservation for `new_units` (see
     /// [`AdmissionBudget::exchange`]); on failure the old reservation
-    /// is kept and the other holders' units are returned.
+    /// is kept and the other holders' units are returned.  The byte
+    /// hold is unchanged.
     pub fn reprice(&mut self, new_units: u64) -> Result<(), u64> {
         self.budget.exchange(self.units, new_units).map(|_| self.units = new_units)
+    }
+
+    /// Reprice both axes: the unit swap lands first, then the byte
+    /// swap; if the byte axis refuses, the unit swap is rolled back to
+    /// the old hold (restoring a prior reservation bypasses the fit
+    /// check — it was admitted when first reserved) and the permit is
+    /// unchanged.
+    pub fn reprice_costed(&mut self, new_units: u64, new_bytes: u64) -> Result<(), AdmitError> {
+        self.budget.exchange(self.units, new_units).map_err(AdmitError::Units)?;
+        if let Err(held) = self.budget.exchange_bytes(self.bytes, new_bytes) {
+            self.budget.force_exchange(new_units, self.units);
+            return Err(AdmitError::Bytes(held));
+        }
+        self.units = new_units;
+        self.bytes = new_bytes;
+        Ok(())
     }
 }
 
 impl Drop for JobPermit {
     fn drop(&mut self) {
         self.budget.release(self.units);
+        self.budget.release_bytes(self.bytes);
     }
 }
 
@@ -652,10 +911,11 @@ impl ServerState {
     /// Fresh state sized from the config.
     pub fn new(cfg: &ServerConfig) -> Self {
         ServerState {
-            cache: DatasetCache::new(cfg.cache_cap),
+            cache: DatasetCache::with_byte_limit(cfg.cache_cap, cfg.resolved_byte_budget()),
             methods: MethodMetrics::new(),
-            admission: Arc::new(AdmissionBudget::with_strict(
+            admission: Arc::new(AdmissionBudget::with_limits(
                 cfg.resolved_budget(),
+                cfg.resolved_byte_budget(),
                 cfg.strict_budget,
             )),
             jobs: JobRegistry::new(cfg.resolved_retain_cap(), cfg.resolved_queue_cap()),
@@ -794,15 +1054,47 @@ fn over_budget(cost: JobCost, used: u64, budget: &AdmissionBudget) -> String {
     )
 }
 
-/// Price one job at `n` rows and apply the feasibility ceiling
+/// The byte-axis twin of [`over_budget`]: the priced resident footprint
+/// does not fit the byte budget.
+fn over_byte_budget(cost: JobCost, used: u64, budget: &AdmissionBudget) -> String {
+    format!(
+        "over byte budget: bytes={} exceeds the {} free of {} resident bytes (in use {used})",
+        cost.resident_bytes,
+        budget.byte_total().saturating_sub(used),
+        budget.byte_total(),
+    )
+}
+
+/// Route an [`AdmitError`] to the axis-appropriate error string.
+fn admit_rejected(cost: JobCost, err: AdmitError, budget: &AdmissionBudget) -> String {
+    match err {
+        AdmitError::Units(used) => over_budget(cost, used, budget),
+        AdmitError::Bytes(used) => over_byte_budget(cost, used, budget),
+    }
+}
+
+/// Price one job at `(n, p)` and apply the feasibility ceiling
 /// ([`JobCost::admissible`] — the old `FULL_MATRIX_LIMIT` rule).
+/// `streaming` selects the out-of-core OneBatch price
+/// ([`MethodSpec::streaming_cost`]: batch slice + one chunk buffer)
+/// over the resident one; `p = 0` prices the feature matrix at zero
+/// width (synth and hint-only `file:` sources, whose column count is
+/// unknown before the load).
 fn checked_cost(
     method: &MethodSpec,
     n: usize,
+    p: usize,
     k: usize,
     m: Option<usize>,
+    streaming: bool,
 ) -> Result<JobCost, String> {
-    let cost = method.cost(n, k, m);
+    let cost = if streaming {
+        method
+            .streaming_cost(n, p, k, m)
+            .unwrap_or_else(|| method.cost_with_dims(n, p, k, m))
+    } else {
+        method.cost_with_dims(n, p, k, m)
+    };
     if !cost.admissible() {
         return Err(format!(
             "method {} infeasible at n={n} (limit {FULL_MATRIX_LIMIT}, cost={})",
@@ -813,20 +1105,22 @@ fn checked_cost(
     Ok(cost)
 }
 
-/// The admission decision for one job at `n` rows: price it, apply the
-/// feasibility ceiling, and reserve the units from the budget.  Shared
-/// by the predicted (pre-I/O) and post-load paths so the two can never
-/// diverge.
+/// The admission decision for one job at `(n, p)`: price it, apply the
+/// feasibility ceiling, and reserve the units *and bytes* from the
+/// budget.  Shared by the predicted (pre-I/O) and post-load paths so
+/// the two can never diverge.
 fn price_and_admit(
     state: &ServerState,
     method: &MethodSpec,
     n: usize,
+    p: usize,
     k: usize,
     m: Option<usize>,
+    streaming: bool,
 ) -> Result<JobPermit, String> {
-    let cost = checked_cost(method, n, k, m)?;
-    JobPermit::admit(&state.admission, cost.units)
-        .map_err(|used| over_budget(cost, used, &state.admission))
+    let cost = checked_cost(method, n, p, k, m, streaming)?;
+    JobPermit::admit_costed(&state.admission, cost.units, cost.resident_bytes)
+        .map_err(|e| admit_rejected(cost, e, &state.admission))
 }
 
 /// A fully validated clustering request, ready to run: everything a
@@ -846,6 +1140,16 @@ pub(crate) struct JobRequest {
     max_passes: Option<usize>,
     deadline_ms: Option<u64>,
     cancel: CancelToken,
+}
+
+impl JobRequest {
+    /// Does this request run the out-of-core path — a streamable
+    /// source (`npy:`/`dir:`) under a OneBatch method?  Everything
+    /// else loads resident (non-OneBatch methods need the full
+    /// matrix; synth/`file:` sources have no chunked reader).
+    fn streams(&self) -> bool {
+        self.src.is_stream() && matches!(self.method, MethodSpec::OneBatch { .. })
+    }
 }
 
 /// What a queued job carries through the registry: the validated
@@ -941,6 +1245,20 @@ fn parse_cluster(kv: &HashMap<String, String>) -> Result<JobRequest, String> {
     if max_passes == Some(0) {
         return Err("max_passes must be >= 1".into());
     }
+    // a streamed OneBatch solve never holds the full matrix, so there
+    // is nothing for a feature-scaling pass to rewrite — reject rather
+    // than silently load resident (the same no-silent-drop rule as
+    // scale= on file: sources)
+    if src.is_stream()
+        && matches!(method, MethodSpec::OneBatch { .. })
+        && scaling != FeatureScaling::None
+    {
+        return Err(
+            "scale_features= needs the dataset resident and cannot apply to a streamed \
+             npy:/dir: OneBatch solve"
+                .into(),
+        );
+    }
     // v5: an end-to-end queue-wait deadline, validated at submit
     let deadline_ms: Option<u64> = parse_key(kv, "deadline_ms")?;
     if deadline_ms == Some(0) {
@@ -966,15 +1284,24 @@ fn parse_cluster(kv: &HashMap<String, String>) -> Result<JobRequest, String> {
 }
 
 /// Price the request *before* paying for a load or touching the cache —
-/// the size is predictable for every catalogue source and for files
-/// carrying a `?rows=` hint, so both the per-job feasibility ceiling
+/// the size is predictable for every catalogue source, for files
+/// carrying a `?rows=` hint, and for `npy:`/`dir:` sources (a ~100 byte
+/// header / manifest probe), so the per-job feasibility ceiling
 /// (the old FULL_MATRIX_LIMIT rule, now a special case of pricing) and
-/// the weighted budget apply with zero I/O.  Unpredictable sources
-/// return `None` and are priced right after their load, inside
-/// [`run_cluster`].
+/// the two-axis weighted budget apply with no bulk I/O.  Unpredictable
+/// sources return `None` and are priced right after their load, inside
+/// [`run_cluster`].  The column width feeds the byte axis where it is
+/// knowable (`npy:`/`dir:` headers); synth and hint-only `file:`
+/// sources price features at zero width and settle post-load.
 fn admit_request(state: &ServerState, req: &JobRequest) -> Result<Option<JobPermit>, String> {
-    match req.src.expected_rows(req.scale) {
-        Some(n) => price_and_admit(state, &req.method, n, req.k, req.m).map(Some),
+    let (rows, p) = match req.src.expected_dims() {
+        Some((n, p)) => (Some(n), p),
+        None => (req.src.expected_rows(req.scale), 0),
+    };
+    match rows {
+        Some(n) => {
+            price_and_admit(state, &req.method, n, p, req.k, req.m, req.streams()).map(Some)
+        }
         None => Ok(None),
     }
 }
@@ -992,6 +1319,11 @@ fn run_cluster(
     queue_ms: f64,
     job_id: Option<u64>,
 ) -> Result<String, String> {
+    if req.streams() {
+        // v9: OneBatch over npy:/dir: never materializes n x p — it
+        // bypasses the dataset cache and solves through a RowStore
+        return run_cluster_streaming(state, req, permit, queue_ms, job_id);
+    }
     let expected = req.src.expected_rows(req.scale);
     let (x, hit) = state
         .cache
@@ -1000,23 +1332,27 @@ fn run_cluster(
     if x.rows <= req.k + 1 {
         return Err(format!("dataset too small (n={}) for k={}", x.rows, req.k));
     }
-    if expected != Some(x.rows) {
-        // the prediction was absent (hint-less file, unknown synth name)
-        // or wrong (a client-supplied ?rows= hint is never validated
-        // against the loaded bytes): reprice at the actual row count so
-        // a lying hint cannot smuggle a full-matrix job past the
-        // feasibility ceiling or hold a too-small reservation
+    if expected != Some(x.rows) || permit.as_ref().is_some_and(|p| p.bytes() == 0) {
+        // the prediction was absent (hint-less file, unknown synth
+        // name) or wrong (a client-supplied ?rows= hint is never
+        // validated against the loaded bytes), or the pre-load price
+        // could not see the column width (zero byte hold): reprice at
+        // the actual shape so a lying hint cannot smuggle a
+        // full-matrix job past the feasibility ceiling or hold a
+        // too-small reservation on either axis
         match permit.as_mut() {
             // atomic swap — no window where this job's units read as
             // released (which would let an oversized job in through the
             // budget's idle exception while this one is still in flight)
             Some(p) => {
-                let cost = checked_cost(&req.method, x.rows, req.k, req.m)?;
-                p.reprice(cost.units)
-                    .map_err(|used| over_budget(cost, used, &state.admission))?;
+                let cost = checked_cost(&req.method, x.rows, x.cols, req.k, req.m, false)?;
+                p.reprice_costed(cost.units, cost.resident_bytes)
+                    .map_err(|e| admit_rejected(cost, e, &state.admission))?;
             }
             None => {
-                permit = Some(price_and_admit(state, &req.method, x.rows, req.k, req.m)?);
+                permit = Some(price_and_admit(
+                    state, &req.method, x.rows, x.cols, req.k, req.m, false,
+                )?);
             }
         }
     }
@@ -1080,11 +1416,11 @@ fn run_cluster(
         );
     }
     let meds: Vec<String> = r.medoids.iter().map(|m| m.to_string()).collect();
-    // v7: `profile=` appended after the v6 `inertia=` trailer, so every
-    // v1-v6 prefix stays byte-identical (jobs_api.rs / model_serving.rs
-    // pin the field order)
+    // v7: `profile=` appended after the v6 `inertia=` trailer; v9
+    // appends `bytes=` after it — every v1-v8 prefix stays
+    // byte-identical (jobs_api.rs / model_serving.rs pin field order)
     Ok(format!(
-        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={} source={} cost={} inertia={inertia:.6} profile={}",
+        "ok method={} cache={} medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={} source={} cost={} inertia={inertia:.6} profile={} bytes={}",
         spec.method.label(),
         if hit { "hit" } else { "miss" },
         meds.join(","),
@@ -1094,6 +1430,104 @@ fn run_cluster(
         req.src.canon(),
         permit.units(),
         req.profile.name(),
+        permit.bytes(),
+    ))
+}
+
+/// The out-of-core twin of [`run_cluster`]: OneBatch over an
+/// `npy:`/`dir:` source solved through a [`crate::data::RowStore`].
+/// The dataset cache is bypassed (nothing resident to cache — the
+/// reply says `cache=stream`), the admission permit holds the
+/// streaming byte price (batch slice + one chunk buffer,
+/// [`MethodSpec::streaming_cost`]) instead of the full matrix, and the
+/// medoids / objective / inertia bits equal the resident solve of the
+/// same bytes (rust/tests/out_of_core.rs pins this end to end).
+fn run_cluster_streaming(
+    state: &ServerState,
+    req: &JobRequest,
+    mut permit: Option<JobPermit>,
+    queue_ms: f64,
+    job_id: Option<u64>,
+) -> Result<String, String> {
+    let expected = req.src.expected_dims();
+    let mut store = req.src.open_store(req.scale, req.seed).map_err(|e| e.to_string())?;
+    let (n, p) = store.dims();
+    if n <= req.k + 1 {
+        return Err(format!("dataset too small (n={n}) for k={}", req.k));
+    }
+    if expected != Some((n, p)) {
+        // the pre-admission header probe failed (permit is None) or
+        // raced a rewrite: (re)price at the opened store's true shape
+        let cost = checked_cost(&req.method, n, p, req.k, req.m, true)?;
+        match permit.as_mut() {
+            Some(pmt) => pmt
+                .reprice_costed(cost.units, cost.resident_bytes)
+                .map_err(|e| admit_rejected(cost, e, &state.admission))?,
+            None => {
+                permit = Some(
+                    JobPermit::admit_costed(&state.admission, cost.units, cost.resident_bytes)
+                        .map_err(|e| admit_rejected(cost, e, &state.admission))?,
+                );
+            }
+        }
+    }
+    let permit = permit.expect("job priced and admitted");
+    if let Some(id) = job_id {
+        state.jobs.set_cost(id, permit.units());
+    }
+
+    let pool = state.pools.get(req.threads);
+    let mut spec = SolveSpec::new(req.method.clone(), req.k, req.seed);
+    spec.metric = req.metric;
+    spec.threads = req.threads;
+    spec.m = req.m;
+    if let Some(e) = req.eps {
+        spec.eps = e;
+    }
+    if let Some(p) = req.max_passes {
+        spec.max_passes = p;
+    }
+    spec.cancel = req.cancel.clone();
+    spec.pool = Some(pool.clone());
+    spec.profile = req.profile;
+    let backend = NativeBackend::with_pool(req.metric, pool).with_profile(req.profile);
+    let solve_started = Instant::now();
+    let (r, fitted) =
+        solver::solve_fitted_store(store.as_mut(), &spec, &backend).map_err(|e| e.to_string())?;
+    // the exact full-data objective, accumulated chunk-at-a-time in the
+    // same row order as eval::objective — bit-identical to the resident
+    // evaluation of the same bytes
+    let obj = eval::objective_store(store.as_mut(), &fitted.medoid_rows, &DissimCounter::new(req.metric))
+        .map_err(|e| e.to_string())?;
+    let inertia = fitted.inertia;
+    state.methods.record(
+        &spec.method.label(),
+        solve_started.elapsed().as_secs_f64() * 1e3,
+        r.stats.dissim_count,
+        queue_ms,
+    );
+    if let Some(id) = job_id {
+        state.jobs.set_fitted(
+            id,
+            ModelSeed {
+                model: Arc::new(fitted.without_training_arrays()),
+                method: spec.method.label(),
+                source: req.src.canon(),
+            },
+        );
+    }
+    let meds: Vec<String> = r.medoids.iter().map(|m| m.to_string()).collect();
+    Ok(format!(
+        "ok method={} cache=stream medoids={} objective={obj:.6} seconds={:.4} dissim={} swaps={} source={} cost={} inertia={inertia:.6} profile={} bytes={}",
+        spec.method.label(),
+        meds.join(","),
+        r.stats.seconds,
+        r.stats.dissim_count,
+        r.stats.swap_count,
+        req.src.canon(),
+        permit.units(),
+        req.profile.name(),
+        permit.bytes(),
     ))
 }
 
@@ -1580,7 +2014,7 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
             let c = state.jobs.counters();
             let mut line = format!(
                 "ok cache_hits={} cache_misses={} cache_entries={} \
-                 budget_total={} budget_used={} hist_le_ms={} \
+                 budget_total={} budget_used={} mem_total={} mem_used={} hist_le_ms={} \
                  jobs.submitted={} jobs.done={} jobs.failed={} jobs.cancelled={} \
                  jobs.expired={} jobs.queued={} jobs.running={} jobs.retained={} \
                  shed={} pools={} models={} conns={} waiters={} pipelined={} wakeups={}",
@@ -1589,6 +2023,8 @@ fn dispatch_line(state: &ServerState, line: &str, queue_ms: f64) -> (String, f64
                 s.entries,
                 state.admission.total(),
                 state.admission.used(),
+                state.admission.byte_total(),
+                state.admission.bytes_used(),
                 metrics::hist_edges_wire(),
                 c.submitted(),
                 c.done(),
@@ -2022,6 +2458,7 @@ mod tests {
         assert!(auto.resolved_workers() >= 1);
         assert_eq!(auto.resolved_queue_cap(), auto.resolved_workers() * 4);
         assert_eq!(auto.resolved_budget(), 4 * MAX_JOB_COST);
+        assert_eq!(auto.resolved_byte_budget(), 8 << 30);
         assert_eq!(auto.resolved_retain_cap(), 64);
         assert_eq!(auto.resolved_model_cap(), 32);
         assert_eq!(auto.resolved_conn_cap(), 8192);
@@ -2029,6 +2466,7 @@ mod tests {
             workers: 3,
             queue_cap: 7,
             budget: 99,
+            byte_budget: 123,
             retain_cap: 5,
             model_cap: 2,
             conn_cap: 11,
@@ -2037,6 +2475,7 @@ mod tests {
         assert_eq!(fixed.resolved_workers(), 3);
         assert_eq!(fixed.resolved_queue_cap(), 7);
         assert_eq!(fixed.resolved_budget(), 99);
+        assert_eq!(fixed.resolved_byte_budget(), 123);
         assert_eq!(fixed.resolved_retain_cap(), 5);
         assert_eq!(fixed.resolved_model_cap(), 2);
         assert_eq!(fixed.resolved_conn_cap(), 11);
@@ -2137,6 +2576,9 @@ mod tests {
         let stats = handle_line(&st, "stats");
         assert!(stats.contains(" budget_total="), "{stats}");
         assert!(stats.contains(" budget_used=0 "), "{stats}");
+        // v9: the byte axis rides along as mem_total=/mem_used=
+        assert!(stats.contains(" mem_total="), "{stats}");
+        assert!(stats.contains(" mem_used=0 "), "{stats}");
         assert!(stats.contains(" hist_le_ms=1,2,5,"), "{stats}");
         assert!(stats.contains("method.OneBatch-nniw.ms_hist="), "{stats}");
         assert!(stats.contains("method.OneBatch-nniw.queue_hist="), "{stats}");
@@ -2577,5 +3019,106 @@ mod tests {
         assert!(handle_line(&st, "stats reset").starts_with("ok"));
         let s = handle_line(&st, "stats");
         assert!(!s.contains(" model.b."), "{s}");
+    }
+
+    #[test]
+    fn byte_axis_admits_reprices_and_releases() {
+        let b = AdmissionBudget::with_limits(100, 1000, false);
+        assert_eq!(b.byte_total(), 1000);
+        let p1 = b.try_admit_costed(10, 600).unwrap();
+        assert_eq!((p1.units(), p1.bytes()), (10, 600));
+        assert_eq!((b.used(), b.bytes_used()), (10, 600));
+        // byte axis rejects alongside p1's hold; the unit half of the
+        // failed admit is rolled back, so nothing leaks
+        assert_eq!(b.try_admit_costed(10, 500).unwrap_err(), AdmitError::Bytes(600));
+        assert_eq!((b.used(), b.bytes_used()), (10, 600), "failed admit holds nothing");
+        // the unit axis rejects first, before bytes are touched
+        assert_eq!(b.try_admit_costed(95, 10).unwrap_err(), AdmitError::Units(10));
+        drop(p1);
+        assert_eq!((b.used(), b.bytes_used()), (0, 0));
+        // the lone-job idle exception applies to bytes too...
+        let big = b.try_admit_costed(1, 5000).unwrap();
+        assert_eq!(b.try_admit_costed(1, 1).unwrap_err(), AdmitError::Bytes(5000));
+        drop(big);
+        // ...unless strict, which hard-ceilings both axes
+        let s = Arc::new(AdmissionBudget::with_limits(100, 1000, true));
+        assert_eq!(JobPermit::admit_costed(&s, 1, 5000).unwrap_err(), AdmitError::Bytes(0));
+        let mut jp = JobPermit::admit_costed(&s, 50, 900).unwrap();
+        // a reprice refused on the byte axis keeps both old holds
+        assert_eq!(jp.reprice_costed(60, 1200).unwrap_err(), AdmitError::Bytes(0));
+        assert_eq!((jp.units(), jp.bytes()), (50, 900));
+        assert_eq!((s.used(), s.bytes_used()), (50, 900));
+        assert!(jp.reprice_costed(60, 1000).is_ok());
+        assert_eq!((s.used(), s.bytes_used()), (60, 1000));
+        drop(jp);
+        assert_eq!((s.used(), s.bytes_used()), (0, 0));
+        #[cfg(debug_assertions)]
+        {
+            let (reserved, released) = s.debug_bytes_flow();
+            assert_eq!(reserved, released, "every reserved byte must be released");
+        }
+    }
+
+    #[test]
+    fn streaming_cluster_serves_out_of_core_and_matches_resident_bits() {
+        let x = crate::data::synth::generate("blobs_320_6_4", 1.0, 11).x;
+        let path =
+            std::env::temp_dir().join(format!("obpam_srv_stream_{}.npy", std::process::id()));
+        crate::data::npy::write_npy(&path, &x).unwrap();
+        let st = fresh_state();
+        let r = handle_line(&st, &format!("cluster dataset=npy:{} k=4 seed=3", path.display()));
+        assert!(r.starts_with("ok method=OneBatch-nniw cache=stream medoids="), "{r}");
+        assert!(r.contains(" bytes="), "{r}");
+        assert!(r.contains(" inertia="), "{r}");
+        // streamed solves bypass the dataset cache entirely
+        assert_eq!(st.cache.stats(), CacheStats::default());
+        assert_eq!((st.admission.used(), st.admission.bytes_used()), (0, 0));
+        // the streamed medoids and objective are the resident solve's
+        // bits for the same bytes (the wire default profile is fast)
+        let mut spec = SolveSpec::new(MethodSpec::default(), 4, 3);
+        spec.profile = ComputeProfile::Fast;
+        let backend = NativeBackend::new(Metric::L1).with_profile(ComputeProfile::Fast);
+        let lib = solver::solve(&x, &spec, &backend).unwrap();
+        let wire: Vec<usize> = r
+            .split("medoids=")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .split(',')
+            .map(|t| t.parse().unwrap())
+            .collect();
+        assert_eq!(wire, lib.medoids);
+        let obj = eval::objective(&x, &lib.medoids, &DissimCounter::new(Metric::L1));
+        assert!(r.contains(&format!(" objective={obj:.6} ")), "{r}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn full_matrix_over_byte_budget_is_rejected_with_bytes_price() {
+        let x = crate::data::synth::generate("blobs_600_8_5", 1.0, 7).x;
+        let path =
+            std::env::temp_dir().join(format!("obpam_srv_bytebudget_{}.npy", std::process::id()));
+        crate::data::npy::write_npy(&path, &x).unwrap();
+        let st = ServerState::new(&ServerConfig {
+            byte_budget: 400_000,
+            strict_budget: true,
+            ..Default::default()
+        });
+        // a full-matrix method must pin n*p + n*n resident: priced over
+        // the byte budget and refused before any bulk I/O
+        let r = handle_line(
+            &st,
+            &format!("cluster dataset=npy:{} k=5 method=FasterPAM", path.display()),
+        );
+        assert!(r.starts_with("err over byte budget: bytes="), "{r}");
+        assert_eq!(st.cache.stats(), CacheStats::default(), "no load for a rejected job");
+        // the same dataset still serves out of core under the same
+        // budget: the streaming price is the batch slice + one chunk
+        let r = handle_line(&st, &format!("cluster dataset=npy:{} k=5", path.display()));
+        assert!(r.starts_with("ok method=OneBatch-nniw cache=stream "), "{r}");
+        assert_eq!(st.admission.bytes_used(), 0, "permit released at job end");
+        let _ = std::fs::remove_file(&path);
     }
 }

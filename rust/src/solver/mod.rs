@@ -38,9 +38,12 @@ use crate::baselines::{
     AlternateSolver, BanditPamSolver, ClaraSolver, FasterPamSolver, KMeansPpSolver, Kmc2Solver,
     LsKMeansPpSolver, RandomSolver,
 };
-use crate::coordinator::onebatch::{OneBatchSolver, SwapStrategy};
+use crate::coordinator::onebatch::{
+    one_batch_pam_store, OneBatchConfig, OneBatchSolver, SwapStrategy,
+};
 use crate::coordinator::{KMedoidsResult, SamplerKind};
-use crate::dissim::{ComputeProfile, Metric};
+use crate::data::{RowStore, STREAM_CHUNK_ROWS};
+use crate::dissim::{ComputeProfile, DissimCounter, Metric, StreamSweep};
 use crate::linalg::Matrix;
 use crate::runtime::Pool;
 use anyhow::Result;
@@ -219,6 +222,14 @@ pub struct JobCost {
     /// methods the paper marks "Na" at large scale
     /// (`!feasible_large_scale()`).
     pub quadratic: bool,
+    /// Peak resident bytes the solve pins while it runs: the feature
+    /// matrix plus the method's working state (full-matrix methods add
+    /// `n*n*4`; resident OneBatch adds its `n*m` matrix; a *streaming*
+    /// OneBatch run prices only the gathered `m x p` batch slice plus
+    /// one chunk buffer — see [`MethodSpec::streaming_cost`]).  Priced
+    /// by [`MethodSpec::cost_with_dims`]; the dimension-less
+    /// [`MethodSpec::cost`] prices the feature matrix at zero width.
+    pub resident_bytes: u64,
 }
 
 impl JobCost {
@@ -362,6 +373,107 @@ pub fn solve_fitted(
     Ok((r, model))
 }
 
+/// [`solve`] over a [`RowStore`]: resident stores dispatch through the
+/// regular path zero-copy; streaming stores run the OneBatch
+/// out-of-core coordinator, bit-identical to the resident solve for a
+/// fixed seed.  Non-OneBatch methods need the full matrix and fail on
+/// a streaming store — serving surfaces price them for resident
+/// admission instead.
+pub fn solve_store(
+    store: &mut dyn RowStore,
+    spec: &SolveSpec,
+    backend: &dyn ComputeBackend,
+) -> Result<KMedoidsResult> {
+    if let Some(x) = store.as_matrix() {
+        return solve(x, spec, backend);
+    }
+    anyhow::ensure!(
+        backend.metric() == spec.metric,
+        "spec metric '{}' does not match backend metric '{}'",
+        spec.metric.name(),
+        backend.metric().name()
+    );
+    anyhow::ensure!(
+        backend.profile() == spec.profile,
+        "spec profile '{}' does not match backend profile '{}'",
+        spec.profile.name(),
+        backend.profile().name()
+    );
+    anyhow::ensure!(!spec.cancel.is_cancelled(), CANCELLED);
+    let MethodSpec::OneBatch { sampler, strategy } = &spec.method else {
+        anyhow::bail!(
+            "method {} needs the dataset resident and cannot run over a streaming source",
+            spec.method.label()
+        );
+    };
+    let cfg = OneBatchConfig {
+        k: spec.k,
+        sampler: *sampler,
+        m: spec.m,
+        max_passes: spec.max_passes,
+        strategy: *strategy,
+        eps: spec.eps,
+        seed: spec.seed,
+        threads: spec.threads,
+        cancel: spec.cancel.clone(),
+        pool: spec.pool.clone(),
+        profile: spec.profile,
+    };
+    let r = one_batch_pam_store(store, &cfg, backend)?;
+    r.validate(store.dims().0, spec.k);
+    Ok(r)
+}
+
+/// [`fit_model`] over a [`RowStore`]: the medoid rows are gathered from
+/// the store and the final assignment pass streams chunk-at-a-time
+/// ([`StreamSweep::assign`]), so no `n x p` buffer is ever materialized.
+/// Output bits match the resident fit of the same data.
+pub fn fit_model_store(
+    store: &mut dyn RowStore,
+    r: &KMedoidsResult,
+    spec: &SolveSpec,
+    backend: &dyn ComputeBackend,
+) -> Result<FittedModel> {
+    if let Some(x) = store.as_matrix() {
+        return fit_model(x, r, spec.metric, backend);
+    }
+    anyhow::ensure!(
+        backend.metric() == spec.metric,
+        "fit metric '{}' does not match backend metric '{}'",
+        spec.metric.name(),
+        backend.metric().name()
+    );
+    let (n, p) = store.dims();
+    let mut rows = vec![0.0f32; r.medoids.len() * p];
+    store.gather_rows(&r.medoids, &mut rows)?;
+    let medoid_rows = Matrix::from_vec(r.medoids.len(), p, rows);
+    let counted = DissimCounter::with_counters(spec.metric, backend.counters());
+    let pool = spec.pool.clone().unwrap_or_else(|| Pool::new(spec.threads));
+    let mut sweep = StreamSweep::new(STREAM_CHUNK_ROWS);
+    let (labels, dist) = sweep.assign(&counted, store, &medoid_rows, &pool, spec.profile)?;
+    let inertia = dist.iter().map(|&d| d as f64).sum::<f64>() / n.max(1) as f64;
+    Ok(FittedModel {
+        medoid_rows,
+        medoids: r.medoids.clone(),
+        metric: spec.metric,
+        inertia,
+        labels: Some(labels),
+        dist_to_nearest: Some(dist),
+    })
+}
+
+/// [`solve_fitted`] over a [`RowStore`] — the serving entry point for
+/// out-of-core jobs.
+pub fn solve_fitted_store(
+    store: &mut dyn RowStore,
+    spec: &SolveSpec,
+    backend: &dyn ComputeBackend,
+) -> Result<(KMedoidsResult, FittedModel)> {
+    let r = solve_store(store, spec, backend)?;
+    let model = fit_model_store(store, &r, spec, backend)?;
+    Ok((r, model))
+}
+
 /// Run `spec.method` on `x` and validate the result invariants
 /// (`k` unique in-range medoids).  The backend's metric must agree with
 /// `spec.metric` — surfaces build the backend from the spec.
@@ -427,6 +539,13 @@ pub enum MethodSpec {
         /// Swap engine.
         strategy: SwapStrategy,
     },
+}
+
+/// Effective OneBatch batch size for pricing: the explicit override or
+/// the paper default, clamped to `n` exactly like the coordinator does.
+fn onebatch_m_eff(n: usize, k: usize, m: Option<usize>) -> u64 {
+    m.unwrap_or_else(|| crate::coordinator::sampler::default_batch_size(n.max(2), k))
+        .min(n.max(1)) as u64
 }
 
 impl Default for MethodSpec {
@@ -545,18 +664,34 @@ impl MethodSpec {
     /// prices `reps` subsample matrices; the seeding family prices its
     /// `O(nk)`-ish passes.  See [`JobCost`] for what the price is for.
     pub fn cost(&self, n: usize, k: usize, m: Option<usize>) -> JobCost {
+        self.cost_with_dims(n, 0, k, m)
+    }
+
+    /// [`MethodSpec::cost`] with the feature width known: the same work
+    /// units plus an honest `resident_bytes` price — the `n x p` feature
+    /// matrix at 4 bytes a cell plus the method's working state
+    /// (full-matrix methods pin `n x n`, a resident OneBatch pins its
+    /// `n x m`, FasterCLARA one subsample matrix).
+    pub fn cost_with_dims(&self, n: usize, p: usize, k: usize, m: Option<usize>) -> JobCost {
         let n64 = n as u64;
         let k64 = k.max(1) as u64;
+        let feat = n64.saturating_mul(p as u64).saturating_mul(4);
         match self {
-            MethodSpec::Random => JobCost { units: n64.max(1), quadratic: false },
-            MethodSpec::FasterPam | MethodSpec::Alternate => {
-                JobCost { units: n64.saturating_mul(n64), quadratic: true }
+            MethodSpec::Random => {
+                JobCost { units: n64.max(1), quadratic: false, resident_bytes: feat }
             }
+            MethodSpec::FasterPam | MethodSpec::Alternate => JobCost {
+                units: n64.saturating_mul(n64),
+                quadratic: true,
+                resident_bytes: feat.saturating_add(n64.saturating_mul(n64).saturating_mul(4)),
+            },
             // BanditPAM++ re-samples distances every swap round; its
             // serving cost scales with the full matrix it keeps touching
-            MethodSpec::BanditPam { .. } => {
-                JobCost { units: n64.saturating_mul(n64), quadratic: true }
-            }
+            MethodSpec::BanditPam { .. } => JobCost {
+                units: n64.saturating_mul(n64),
+                quadratic: true,
+                resident_bytes: feat.saturating_add(n64.saturating_mul(n64).saturating_mul(4)),
+            },
             MethodSpec::FasterClara { reps } => {
                 // `reps` FasterPAM runs on subsamples of `80 + 4k` rows,
                 // plus the final full-data assignment
@@ -564,28 +699,56 @@ impl MethodSpec {
                 let units = ((*reps).max(1) as u64)
                     .saturating_mul(s.saturating_mul(s))
                     .saturating_add(n64.saturating_mul(k64));
-                JobCost { units: units.max(1), quadratic: false }
+                JobCost {
+                    units: units.max(1),
+                    quadratic: false,
+                    // one subsample matrix at a time, whatever `reps` is
+                    resident_bytes: feat.saturating_add(s.saturating_mul(s).saturating_mul(4)),
+                }
             }
             MethodSpec::Kmc2 { chain } => {
                 // one O(n) proposal distribution + k chains of length L
                 let units = n64.saturating_add(k64.saturating_mul(*chain as u64));
-                JobCost { units: units.max(1), quadratic: false }
+                JobCost { units: units.max(1), quadratic: false, resident_bytes: feat }
             }
-            MethodSpec::KMeansPp => {
-                JobCost { units: n64.saturating_mul(k64).max(1), quadratic: false }
-            }
+            MethodSpec::KMeansPp => JobCost {
+                units: n64.saturating_mul(k64).max(1),
+                quadratic: false,
+                resident_bytes: feat,
+            },
             MethodSpec::LsKMeansPp { steps } => {
                 let units = n64.saturating_mul(k64.saturating_add(*steps as u64));
-                JobCost { units: units.max(1), quadratic: false }
+                JobCost { units: units.max(1), quadratic: false, resident_bytes: feat }
             }
             MethodSpec::OneBatch { .. } => {
                 // the single O(n m) pairwise pass dominates (Algorithm 1)
-                let m_eff = m
-                    .unwrap_or_else(|| crate::coordinator::sampler::default_batch_size(n.max(2), k))
-                    .min(n.max(1)) as u64;
-                JobCost { units: n64.saturating_mul(m_eff).max(1), quadratic: false }
+                let m_eff = onebatch_m_eff(n, k, m);
+                JobCost {
+                    units: n64.saturating_mul(m_eff).max(1),
+                    quadratic: false,
+                    resident_bytes: feat.saturating_add(n64.saturating_mul(m_eff).saturating_mul(4)),
+                }
             }
         }
+    }
+
+    /// Price of running this method *streaming* over an out-of-core
+    /// [`RowStore`], or `None` for methods that need the dataset
+    /// resident.  Only the OneBatch family streams: its peak resident
+    /// set is the gathered `m x p` batch slice plus one chunk buffer —
+    /// the `n x m` matrix D it assembles is already what the units axis
+    /// charges for (one unit per cell), so the byte axis prices only
+    /// the feature-side footprint that streaming actually bounds.
+    pub fn streaming_cost(&self, n: usize, p: usize, k: usize, m: Option<usize>) -> Option<JobCost> {
+        if !matches!(self, MethodSpec::OneBatch { .. }) {
+            return None;
+        }
+        let base = self.cost_with_dims(n, p, k, m);
+        let p64 = p as u64;
+        let m_eff = onebatch_m_eff(n, k, m);
+        let chunk = (STREAM_CHUNK_ROWS as u64).saturating_mul(p64).saturating_mul(4);
+        let bytes = m_eff.saturating_mul(p64).saturating_mul(4).saturating_add(chunk);
+        Some(JobCost { resident_bytes: bytes, ..base })
     }
 
     /// The full 18-row method grid of Table 3.
@@ -802,6 +965,78 @@ mod tests {
                 assert!(c.units > 0, "{} at n={n}", m.label());
             }
         }
+    }
+
+    #[test]
+    fn cost_with_dims_prices_resident_bytes() {
+        let (n, p, k) = (10_000usize, 16usize, 8usize);
+        let feat = (n * p * 4) as u64;
+        // full-matrix methods pin features + the n x n matrix
+        let fp = MethodSpec::FasterPam.cost_with_dims(n, p, k, None);
+        assert_eq!(fp.resident_bytes, feat + (n as u64 * n as u64 * 4));
+        // seeding family pins only the features
+        assert_eq!(MethodSpec::KMeansPp.cost_with_dims(n, p, k, None).resident_bytes, feat);
+        // resident OneBatch adds its n x m matrix
+        let ob = MethodSpec::default().cost_with_dims(n, p, k, Some(200));
+        assert_eq!(ob.resident_bytes, feat + (n as u64 * 200 * 4));
+        // the dimension-less spelling prices features at zero width but
+        // keeps the units identical
+        let blind = MethodSpec::default().cost(n, k, Some(200));
+        assert_eq!(blind.units, ob.units);
+        assert_eq!(blind.resident_bytes, (n as u64 * 200 * 4));
+    }
+
+    #[test]
+    fn streaming_cost_prices_batch_plus_chunk_only() {
+        let (n, p, k, m) = (1_000_000usize, 32usize, 10usize, 400usize);
+        let ob = MethodSpec::default().streaming_cost(n, p, k, Some(m)).unwrap();
+        let chunk = (STREAM_CHUNK_ROWS * p * 4) as u64;
+        assert_eq!(ob.resident_bytes, (m * p * 4) as u64 + chunk);
+        // same units as the resident price, n-independent byte price
+        assert_eq!(ob.units, MethodSpec::default().cost(n, k, Some(m)).units);
+        assert!(ob.resident_bytes < MethodSpec::default().cost_with_dims(n, p, k, Some(m)).resident_bytes / 100);
+        // only the OneBatch family streams
+        assert!(MethodSpec::FasterPam.streaming_cost(n, p, k, None).is_none());
+        assert!(MethodSpec::KMeansPp.streaming_cost(n, p, k, None).is_none());
+    }
+
+    #[test]
+    fn streaming_solve_and_fit_match_resident_bits() {
+        let mut rng = Rng::new(31);
+        let x = synth::gen_gaussian_mixture(&mut rng, 180, 4, 3, 0.15, 1.0);
+        let spec = SolveSpec { m: Some(40), ..SolveSpec::new(MethodSpec::default(), 3, 9) };
+        let backend = NativeBackend::new(Metric::L1);
+        let (rr, rm) = solve_fitted(&x, &spec, &backend).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("obpam_solver_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("fit.npy");
+        crate::data::npy::write_npy(&path, &x).unwrap();
+        let mut store = crate::data::store::NpyStore::open(&path).unwrap();
+        let backend2 = NativeBackend::new(Metric::L1);
+        let (sr, sm) = solve_fitted_store(&mut store, &spec, &backend2).unwrap();
+
+        assert_eq!(rr.medoids, sr.medoids);
+        assert_eq!(rm.inertia.to_bits(), sm.inertia.to_bits());
+        assert_eq!(rm.labels, sm.labels);
+        assert_eq!(rm.dist_to_nearest, sm.dist_to_nearest);
+        assert_eq!(rm.medoid_rows.data, sm.medoid_rows.data);
+    }
+
+    #[test]
+    fn streaming_solve_rejects_full_matrix_methods() {
+        let mut rng = Rng::new(32);
+        let x = synth::gen_gaussian_mixture(&mut rng, 120, 4, 3, 0.15, 1.0);
+        let dir = std::env::temp_dir().join(format!("obpam_solver_fm_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("fm.npy");
+        crate::data::npy::write_npy(&path, &x).unwrap();
+        let mut store = crate::data::store::NpyStore::open(&path).unwrap();
+        let spec = SolveSpec::new(MethodSpec::FasterPam, 3, 1);
+        let err = solve_store(&mut store, &spec, &NativeBackend::new(Metric::L1))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot run over a streaming source"), "{err}");
     }
 
     #[test]

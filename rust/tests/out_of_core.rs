@@ -1,0 +1,304 @@
+//! Protocol v9 out-of-core serving from the outside: streamed
+//! `npy:`/`dir:` OneBatch solves that never materialize the `n x p`
+//! matrix, priced on the byte axis of the two-axis admission budget.
+//!
+//! The headline acceptance run (CI drives this under an
+//! `OBPAM_THREADS` matrix of 1 and 4): a dataset whose resident
+//! feature matrix **exceeds** the configured `--byte-budget` still
+//! serves through the streaming path, bit-identical to the resident
+//! solve of the same bytes, while a full-matrix method over the same
+//! dataset is rejected at admission with a `bytes=`-priced error.
+//! Alongside it: `dir:`/`npy:`/`synth:` tri-source bit-identity
+//! (including an f32 round-trip through a CSV shard), malformed-source
+//! errors, byte-budget non-starvation under a held streaming permit,
+//! and the BanditPAM cancel-releases-permit regression over real TCP.
+
+use obpam::backend::NativeBackend;
+use obpam::data::npy::write_npy;
+use obpam::data::synth;
+use obpam::dissim::{ComputeProfile, DissimCounter, Metric};
+use obpam::linalg::Matrix;
+use obpam::server::{handle_line, request, serve, CacheStats, ServerConfig, ServerState};
+use obpam::solver::{self, MethodSpec, SolveSpec};
+use std::path::PathBuf;
+
+/// Thread width under test (CI matrix: 1 and 4).
+fn threads() -> usize {
+    std::env::var("OBPAM_THREADS").ok().and_then(|s| s.parse().ok()).unwrap_or(2)
+}
+
+fn fresh_state() -> ServerState {
+    ServerState::new(&ServerConfig::default())
+}
+
+/// A per-test scratch directory under the system temp dir.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("obpam_ooc_{}_{}", std::process::id(), name));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn medoids_of(reply: &str) -> String {
+    reply.split("medoids=").nth(1).unwrap().split_whitespace().next().unwrap().to_string()
+}
+
+/// Extract `key=<token>` from a reply line.
+fn field(reply: &str, key: &str) -> String {
+    reply
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix(&format!("{key}=")))
+        .unwrap_or_else(|| panic!("no {key}= in {reply:?}"))
+        .to_string()
+}
+
+/// The v9 acceptance criterion end to end, over real TCP: the dataset's
+/// `n x p` feature matrix (20000 x 8 x 4 = 640 kB) exceeds the 400 kB
+/// byte budget, so it can never be resident — yet OneBatch streams it
+/// (batch slice + one chunk buffer fit with room to spare) and returns
+/// the resident solve's exact bits, while FasterPAM over the same bytes
+/// is refused at admission with the full-matrix byte price.
+#[test]
+fn streaming_solve_exceeding_byte_budget_matches_resident_bits() {
+    let t = threads();
+    let x = synth::generate("blobs_20000_8_5", 1.0, 7).x;
+    let dir = scratch("accept");
+    let path = dir.join("big.npy");
+    write_npy(&path, &x).unwrap();
+
+    const BUDGET: u64 = 400_000;
+    let feat_bytes = (x.rows as u64) * (x.cols as u64) * 4;
+    assert!(feat_bytes > BUDGET, "the dataset must not fit resident: {feat_bytes}");
+    let h = serve(ServerConfig {
+        byte_budget: BUDGET,
+        strict_budget: true, // no lone-job idle exception on either axis
+        ..Default::default()
+    })
+    .unwrap();
+
+    // the streamed OneBatch solve is admitted: its price is the m x p
+    // batch slice plus one chunk buffer, not the n x p matrix
+    let r = request(
+        h.addr,
+        &format!("cluster dataset=npy:{} k=5 seed=7 m=300 threads={t}", path.display()),
+    )
+    .unwrap();
+    assert!(r.starts_with("ok method=OneBatch-nniw cache=stream medoids="), "{r}");
+    let streaming = MethodSpec::default().streaming_cost(x.rows, x.cols, 5, Some(300)).unwrap();
+    assert!(streaming.resident_bytes <= BUDGET, "streaming price must fit the budget");
+    assert_eq!(field(&r, "bytes"), streaming.resident_bytes.to_string(), "{r}");
+
+    // a full-matrix method over the same dataset needs n*p + n*n
+    // resident: rejected at admission, priced in bytes, before any load
+    let rej = request(
+        h.addr,
+        &format!("cluster dataset=npy:{} k=5 method=FasterPAM threads={t}", path.display()),
+    )
+    .unwrap();
+    assert!(rej.starts_with("err over byte budget: bytes="), "{rej}");
+    let full = MethodSpec::FasterPam.cost_with_dims(x.rows, x.cols, 5, None);
+    assert!(rej.contains(&format!("bytes={}", full.resident_bytes)), "{rej}");
+
+    // the streamed medoids and objective are the resident solve's bits
+    // for the same bytes (wire defaults: profile=fast, metric=l1; the
+    // serial twin also pins thread-width independence under the matrix)
+    let mut spec = SolveSpec::new(MethodSpec::default(), 5, 7);
+    spec.m = Some(300);
+    spec.profile = ComputeProfile::Fast;
+    let backend = NativeBackend::new(Metric::L1).with_profile(ComputeProfile::Fast);
+    let lib = solver::solve(&x, &spec, &backend).unwrap();
+    let lib_medoids: Vec<String> = lib.medoids.iter().map(|m| m.to_string()).collect();
+    assert_eq!(medoids_of(&r), lib_medoids.join(","), "{r}");
+    let obj = obpam::eval::objective(&x, &lib.medoids, &DissimCounter::new(Metric::L1));
+    assert!(r.contains(&format!(" objective={obj:.6} ")), "{r}");
+
+    // nothing was cached (streams bypass the cache; the rejected job
+    // never loaded) and every reservation was released
+    let stats = request(h.addr, "stats").unwrap();
+    assert!(stats.starts_with("ok cache_hits=0 cache_misses=0"), "{stats}");
+    assert!(stats.contains(&format!(" mem_total={BUDGET} mem_used=0 ")), "{stats}");
+    assert!(stats.contains(" budget_used=0 "), "{stats}");
+    h.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `synth:`, `npy:` and `dir:` spellings of the same 600 x 8 bytes
+/// produce identical medoids, objective and inertia — including a CSV
+/// shard round-trip (`{v}` Display prints the shortest string that
+/// parses back to the same f32, so text shards lose nothing).
+#[test]
+fn dir_npy_and_synth_sources_agree_bit_for_bit() {
+    let t = threads();
+    let x = synth::generate("blobs_600_8_5", 1.0, 3).x;
+    let dir = scratch("trisource");
+    let npy_path = dir.join("whole.npy");
+    write_npy(&npy_path, &x).unwrap();
+    // shard dir: rows 0..250 as headerless CSV text, rows 250..600 as
+    // binary npy, natural-ordered behind a 600-row manifest
+    let shards = dir.join("shards");
+    std::fs::create_dir_all(&shards).unwrap();
+    let mut csv = String::new();
+    for i in 0..250 {
+        let row: Vec<String> = x.row(i).iter().map(|v| format!("{v}")).collect();
+        csv.push_str(&row.join(","));
+        csv.push('\n');
+    }
+    std::fs::write(shards.join("shard1.csv"), csv).unwrap();
+    let tail = Matrix::from_vec(350, 8, x.data[250 * 8..].to_vec());
+    write_npy(&shards.join("shard2.npy"), &tail).unwrap();
+    std::fs::write(shards.join("manifest"), "600\n").unwrap();
+
+    let st = fresh_state();
+    let synth_r =
+        handle_line(&st, &format!("cluster dataset=blobs_600_8_5 k=5 seed=3 threads={t}"));
+    let npy_r = handle_line(
+        &st,
+        &format!("cluster dataset=npy:{} k=5 seed=3 threads={t}", npy_path.display()),
+    );
+    let dir_r = handle_line(
+        &st,
+        &format!("cluster dataset=dir:{} k=5 seed=3 threads={t}", shards.display()),
+    );
+    assert!(synth_r.starts_with("ok "), "{synth_r}");
+    assert!(synth_r.contains("cache=miss"), "resident synth load: {synth_r}");
+    for (tag, r) in [("npy", &npy_r), ("dir", &dir_r)] {
+        assert!(r.starts_with("ok "), "{tag}: {r}");
+        assert!(r.contains("cache=stream"), "{tag} must stream: {r}");
+        assert_eq!(medoids_of(&synth_r), medoids_of(r), "{tag}: {r}");
+        assert_eq!(field(&synth_r, "objective"), field(r, "objective"), "{tag}: {r}");
+        assert_eq!(field(&synth_r, "inertia"), field(r, "inertia"), "{tag}: {r}");
+    }
+    // only the resident synth run touched the cache
+    let s = st.cache.stats();
+    assert_eq!((s.hits, s.misses, s.entries), (0, 1, 1));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Malformed streams fail with source-shaped errors, never a solve over
+/// garbage bytes: a non-npy file, an npy whose payload was truncated
+/// after its (valid) header was probed, and a shard dir whose manifest
+/// disagrees with the rows its shards actually hold.
+#[test]
+fn malformed_stream_sources_error_cleanly() {
+    let st = fresh_state();
+    let dir = scratch("malformed");
+
+    let bogus = dir.join("bogus.npy");
+    std::fs::write(&bogus, b"this is not numpy data at all").unwrap();
+    let r = handle_line(&st, &format!("cluster dataset=npy:{} k=3", bogus.display()));
+    assert!(r.starts_with("err"), "{r}");
+    assert!(r.contains("npy magic"), "{r}");
+
+    // a valid header over a cut-short payload: the cheap pre-admission
+    // probe succeeds, the sweep hits EOF mid-row
+    let cut = dir.join("cut.npy");
+    let x = synth::generate("blobs_100_4_3", 1.0, 1).x;
+    write_npy(&cut, &x).unwrap();
+    let len = std::fs::metadata(&cut).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&cut).unwrap();
+    f.set_len(len - 700).unwrap();
+    drop(f);
+    let r = handle_line(&st, &format!("cluster dataset=npy:{} k=3 seed=1", cut.display()));
+    assert!(r.starts_with("err"), "{r}");
+    assert!(r.contains("truncated npy"), "{r}");
+
+    // manifest/shard disagreement is an open error, never a short read
+    let shards = dir.join("shards");
+    std::fs::create_dir_all(&shards).unwrap();
+    std::fs::write(shards.join("shard1.csv"), "0,1\n2,3\n4,5\n").unwrap();
+    std::fs::write(shards.join("manifest"), "9\n").unwrap();
+    let r = handle_line(&st, &format!("cluster dataset=dir:{} k=2", shards.display()));
+    assert!(r.starts_with("err"), "{r}");
+    assert!(r.contains("manifest says 9 rows"), "{r}");
+
+    // none of the failures loaded, cached, or leaked a reservation
+    assert_eq!(st.cache.stats(), CacheStats::default());
+    assert_eq!((st.admission.used(), st.admission.bytes_used()), (0, 0));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A huge streamed dataset cannot starve the byte budget: its hold is
+/// the batch slice + one chunk buffer (constant in `n`), so small
+/// resident jobs keep fitting next to it, a genuinely over-budget
+/// full-matrix job is refused with both prices in the error, and the
+/// release restores the full budget.
+#[test]
+fn held_streaming_permit_does_not_starve_small_resident_jobs() {
+    let st = ServerState::new(&ServerConfig {
+        byte_budget: 1_000_000,
+        strict_budget: true,
+        ..Default::default()
+    });
+    // the streaming price of a 1M x 8 dataset: 32 MB resident, ~140 kB
+    // streamed — hold it as a long-running streamed job would
+    let huge = MethodSpec::default().streaming_cost(1_000_000, 8, 5, Some(300)).unwrap();
+    assert!(huge.resident_bytes < 200_000, "streaming price is n-independent");
+    let hold = st.admission.try_admit_costed(huge.units, huge.resident_bytes).unwrap();
+
+    // a small resident job fits beside the stream's hold
+    let r = handle_line(&st, "cluster dataset=blobs_300_4_3 k=3 seed=1");
+    assert!(r.starts_with("ok "), "{r}");
+
+    // a full-matrix job over the remaining headroom is refused, priced
+    // at its pre-load bytes (synth width is unknown before the load, so
+    // the prediction prices features at zero width; the n*n*4 distance
+    // matrix dominates and already does not fit beside the hold)
+    let pre = MethodSpec::FasterPam.cost_with_dims(480, 0, 4, None);
+    let rej = handle_line(&st, "cluster dataset=blobs_480_8_4 k=4 method=FasterPAM");
+    assert!(
+        rej.starts_with(&format!("err over byte budget: bytes={}", pre.resident_bytes)),
+        "{rej}"
+    );
+    assert!(rej.contains(&format!("(in use {})", huge.resident_bytes)), "{rej}");
+
+    // releasing the stream's hold restores the budget and the same job
+    // admits (the nonzero pre-load hold is kept — only a zero byte
+    // hold or a wrong row prediction triggers the post-load reprice)
+    drop(hold);
+    assert_eq!((st.admission.used(), st.admission.bytes_used()), (0, 0));
+    let ok = handle_line(&st, "cluster dataset=blobs_480_8_4 k=4 method=FasterPAM");
+    assert!(ok.starts_with("ok method=FasterPAM "), "{ok}");
+    assert_eq!(field(&ok, "bytes"), pre.resident_bytes.to_string(), "{ok}");
+    assert_eq!((st.admission.used(), st.admission.bytes_used()), (0, 0));
+}
+
+/// Cancelling a *running* BanditPAM job over TCP releases its admission
+/// permit on both axes — the v9 regression for the between-rounds
+/// cancel checks (before them, a cancelled BanditPAM ran to completion
+/// holding its quadratic reservation the whole way).
+#[test]
+fn cancelled_running_banditpam_releases_admission_permit_over_tcp() {
+    let h = serve(ServerConfig { workers: 1, ..Default::default() }).unwrap();
+    let sub = request(h.addr, "submit dataset=blobs_20000_8_5 k=5 seed=3 method=BanditPAM++-2")
+        .unwrap();
+    assert!(sub.starts_with("ok job="), "{sub}");
+    let id = field(&sub, "job");
+    // wait for worker pickup so the cancel lands on a running solve
+    let mut state = String::new();
+    for _ in 0..20_000 {
+        let r = request(h.addr, &format!("poll job={id}")).unwrap();
+        state = field(&r, "state");
+        if state != "queued" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(state, "running", "BanditPAM at n=20000 outlives the poll loop");
+    let c = request(h.addr, &format!("cancel job={id}")).unwrap();
+    // cooperative cancellation: the request lands between batch rounds,
+    // unless the job beat it to a terminal state
+    assert!(
+        c.contains("cancel=requested") || c.contains("state=done") || c.contains("state=cancelled"),
+        "{c}"
+    );
+    let fin = request(h.addr, &format!("wait job={id} timeout_ms=600000")).unwrap();
+    assert!(
+        fin.starts_with(&format!("err cancelled job={id}")) || fin.starts_with("ok method="),
+        "cancelled or finished, nothing else: {fin}"
+    );
+    // terminal on either path — the quadratic unit hold and the
+    // resident byte hold are both gone
+    assert_eq!(h.state.admission.used(), 0, "units released at terminal state");
+    assert_eq!(h.state.admission.bytes_used(), 0, "bytes released at terminal state");
+    h.shutdown();
+}

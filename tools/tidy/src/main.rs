@@ -20,9 +20,12 @@
 //! * `lock-discipline` — no raw `.lock().unwrap()` / `.expect()` (nor
 //!   inline `unwrap_or_else(|e| e.into_inner())` poison recovery)
 //!   outside `sync_ext`, which owns the recover-don't-propagate policy.
-//! * `data-source` — no direct `synth::try_generate` / `load_csv`
-//!   calls outside `rust/src/data/`: all dataset access goes through
-//!   URI-addressed `DataSource`s.
+//! * `data-source` — no direct `synth::try_generate` / `load_csv` /
+//!   `load_npy` / npy parsing (`parse_header`, `NpyReader::open`) /
+//!   raw `File::open` calls outside `rust/src/data/`: all dataset
+//!   access goes through URI-addressed `DataSource`s and `RowStore`s.
+//!   The published header probe `npy::read_header` is the sanctioned
+//!   pre-admission API and stays callable anywhere.
 //! * `relaxed-ordering` — no `Ordering::Relaxed` outside the
 //!   stat-counter allowlist (`telemetry.rs`, `server/cache.rs`):
 //!   admission and registry atomics synchronise real state and must
@@ -475,15 +478,21 @@ pub fn lint_file(rel: &str, content: &str) -> Vec<Violation> {
         if rel.starts_with("rust/src/")
             && !rel.starts_with("rust/src/data/")
             && !in_test
-            && (nostr.contains("try_generate(") || nostr.contains("load_csv("))
+            && (nostr.contains("try_generate(")
+                || nostr.contains("load_csv(")
+                || nostr.contains("load_npy(")
+                || nostr.contains("parse_header(")
+                || nostr.contains("NpyReader::open")
+                || nostr.contains("File::open("))
             && !is_allowed(&lines, i, "data-source")
         {
             out.push(Violation {
                 file: rel.into(),
                 line: lineno,
                 lint: "data-source",
-                msg: "direct synth::try_generate / load_csv call — dataset access goes \
-                      through a URI-addressed DataSource (rust/src/data/source.rs)"
+                msg: "direct dataset access (try_generate / load_csv / load_npy / npy \
+                      parsing / raw File::open) — route it through a URI-addressed \
+                      DataSource or RowStore (rust/src/data/)"
                     .into(),
             });
         }
@@ -855,6 +864,29 @@ mod tests {
         assert!(v.iter().all(|v| v.lint == "data-source"));
         assert_eq!(lints_of("rust/src/data/source.rs", src), Vec::<&str>::new());
         assert_eq!(lints_of("rust/tests/foo.rs", src), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn raw_file_and_npy_parsing_are_flagged_outside_data() {
+        let src = "let f = std::fs::File::open(path)?;\n\
+                   let d = load_npy(path)?;\n\
+                   let r = NpyReader::open(path)?;\n\
+                   let h = parse_header(&f, path)?;\n";
+        let v = lint_file("rust/src/server/mod.rs", src);
+        assert_eq!(v.len(), 4, "{v:?}");
+        assert!(v.iter().all(|v| v.lint == "data-source"));
+        // the data layer itself, tests and benches are exempt
+        assert_eq!(lints_of("rust/src/data/npy.rs", src), Vec::<&str>::new());
+        assert_eq!(lints_of("rust/tests/foo.rs", src), Vec::<&str>::new());
+        assert_eq!(lints_of("rust/benches/foo.rs", src), Vec::<&str>::new());
+        // the published header probe is the sanctioned pre-admission
+        // API — callable from the CLI and the server
+        let ok = "let h = obpam::data::npy::read_header(std::path::Path::new(p))?;\n";
+        assert_eq!(lints_of("rust/src/main.rs", ok), Vec::<&str>::new());
+        // an annotated escape hatch still works
+        let allowed = "// tidy:allow(data-source) — probing a non-dataset file\n\
+                       let f = std::fs::File::open(path)?;\n";
+        assert_eq!(lints_of("rust/src/server/mod.rs", allowed), Vec::<&str>::new());
     }
 
     // ---- relaxed-ordering ----
